@@ -1,0 +1,78 @@
+//! BCA walkthrough (paper §VI): profile OPT-1.3B across batch sizes,
+//! solve Eq. 2 under strict and relaxed SLOs, and print the memory plan
+//! that frees GPU memory for concurrent workloads.
+//!
+//!     cargo run --release --example bca_advisor [-- --quick]
+
+use memgap::bca::{self, BcaProfile, Constraints};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::figures::{bca_figs, FigOpts};
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::ModelSpec;
+use memgap::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let opts = if args.bool_or("quick", false) {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    let spec = ModelSpec::opt_1_3b();
+    let base = OfflineConfig::new(spec.clone(), 1);
+    let grid = bca_figs::profile_grid(&opts);
+
+    println!("profiling {} across max-batch grid {:?} ...", spec.name, grid);
+    let profile = BcaProfile::measure(&base, &grid, opts.requests())?;
+    println!(
+        "\n{:>9} {:>9} {:>12} {:>9} {:>8} {:>11}",
+        "max_batch", "avg", "tok/s", "ITL ms", "KV %", "T/(B*T1)"
+    );
+    let t1 = profile.t1();
+    for p in &profile.points {
+        println!(
+            "{:>9} {:>9.1} {:>12.0} {:>9.2} {:>8.1} {:>11.3}",
+            p.max_batch,
+            p.avg_batch,
+            p.throughput_tps,
+            p.itl * 1e3,
+            100.0 * p.kv_usage,
+            p.throughput_tps / (p.avg_batch.max(1.0) * t1)
+        );
+    }
+
+    for (name, c) in [
+        ("STRICT (2x ITL@32)", Constraints::strict(&profile)),
+        ("RELAXED (4x ITL@32)", Constraints::relaxed(&profile)),
+    ] {
+        println!("\n--- {name}: SLO {:.2} ms, eps {} ---", c.slo_itl * 1e3, c.epsilon);
+        match bca::recommend(&profile, c) {
+            Some(r) => {
+                println!("B_opt              : {}", r.b_opt);
+                println!(
+                    "throughput vs MAX  : {:.1} %",
+                    100.0 * r.throughput_vs_max
+                );
+                println!(
+                    "ITL vs MAX         : -{:.1} %",
+                    100.0 * r.itl_reduction_vs_max
+                );
+                let plan = bca::memory_plan(&GpuSpec::h100_64g(), &spec, r.point.kv_usage);
+                println!(
+                    "memory plan        : weights {:.1} GB | KV used {:.1} GB | FREED {:.1} GB ({:.0} % of card) | other {:.1} GB",
+                    plan.weights_gb,
+                    plan.kv_used_gb,
+                    plan.kv_freed_gb,
+                    100.0 * plan.freed_frac(),
+                    plan.other_gb
+                );
+                println!(
+                    "replicas that fit  : {}",
+                    (1.0 / plan.engine_mem_fraction().max(0.05)) as usize
+                );
+            }
+            None => println!("no feasible batch size under these constraints"),
+        }
+    }
+    Ok(())
+}

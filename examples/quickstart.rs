@@ -1,0 +1,40 @@
+//! Quickstart: simulate serving OPT-1.3B on an H100 in ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds a vLLM-like engine over the analytical H100 backend, submits
+//! 2x96 ShareGPT-mean requests and prints the serving metrics — the
+//! paper's offline-mode methodology (§IV/§V) in miniature.
+
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::models::spec::ModelSpec;
+
+fn main() -> anyhow::Result<()> {
+    // vLLM-like engine: OPT-1.3B, max batch 96 (the paper's strict-SLO
+    // B_opt), paged KV cache sized from the 64 GB H100 budget.
+    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 96);
+    cfg.num_requests = 192; // two full waves
+    let report = cfg.run()?;
+
+    println!("== memgap quickstart: OPT-1.3B @ max batch 96 on simulated H100 ==");
+    println!("completed      : {}", report.metrics.completed);
+    println!(
+        "throughput     : {:.0} tokens/s",
+        report.metrics.throughput_tps
+    );
+    println!("mean ITL       : {:.2} ms", report.metrics.mean_itl * 1e3);
+    println!("mean E2E       : {:.2} s", report.metrics.mean_e2e);
+    println!(
+        "peak KV usage  : {:.1} % of the cache",
+        100.0 * report.peak_kv_usage
+    );
+    println!(
+        "CPU-gap share  : {:.1} % of wall time",
+        100.0 * report.metrics.cpu_time_frac
+    );
+    println!(
+        "decode/prefill : {:.2} s / {:.2} s",
+        report.decode_time, report.prefill_time
+    );
+    Ok(())
+}

@@ -1,0 +1,290 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the
+rust runtime (``rust/src/runtime``) is self-contained afterwards.
+
+Emits, under ``artifacts/``:
+
+- ``decode_b{B}.hlo.txt``       — one decode step per batch bucket B
+- ``prefill_b{B}_s{S}.hlo.txt`` — prefill per (batch, padded-seq) bucket
+- ``weights.bin``               — f32 little-endian tensors, WEIGHT_ORDER
+- ``manifest.json``             — model config, weight index, executable
+                                  index with the exact input signature the
+                                  rust side must honour
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering uses ``return_tuple=True``; the rust side unwraps with
+``decompose_tuple``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Bucket ladders. The coordinator pads a running batch up to the nearest
+# bucket; anything larger is split across steps by the scheduler.
+DECODE_BUCKETS: Sequence[int] = (1, 2, 4, 8)
+PREFILL_BUCKETS: Sequence[Tuple[int, int]] = ((1, 64), (2, 64), (4, 64), (8, 64))
+
+PRESETS: Dict[str, M.ModelConfig] = {
+    # End-to-end example model (~7.9M params).
+    "tiny-opt": M.ModelConfig(
+        name="tiny-opt",
+        n_layers=4,
+        d_model=256,
+        n_heads=8,
+        vocab_size=8192,
+        max_seq=512,
+        block_size=16,
+        num_blocks=256,
+        max_blocks_per_seq=16,
+    ),
+    # Fast preset for CI / pytest round-trip tests (~0.2M params).
+    "micro-opt": M.ModelConfig(
+        name="micro-opt",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        vocab_size=512,
+        max_seq=128,
+        block_size=8,
+        num_blocks=64,
+        max_blocks_per_seq=8,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Tuple[int, ...], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _cache_specs(cfg: M.ModelConfig) -> List[jax.ShapeDtypeStruct]:
+    shape = (cfg.n_layers, cfg.n_heads, cfg.num_slots, cfg.head_dim)
+    return [_spec(shape, jnp.float32), _spec(shape, jnp.float32)]
+
+
+def _weight_specs(cfg: M.ModelConfig) -> List[jax.ShapeDtypeStruct]:
+    shapes = M.weight_shapes(cfg)
+    return [_spec(shapes[n], jnp.float32) for n in M.WEIGHT_ORDER]
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    """Lower one decode step for a batch bucket to HLO text."""
+
+    def fn(tokens, block_tables, context_lens, slot_mapping, k_cache, v_cache, *weights):
+        params = dict(zip(M.WEIGHT_ORDER, weights))
+        return M.decode_step(
+            params, cfg, tokens, block_tables, context_lens, slot_mapping, k_cache, v_cache
+        )
+
+    specs = [
+        _spec((batch,), jnp.int32),  # tokens
+        _spec((batch, cfg.max_blocks_per_seq), jnp.int32),  # block_tables
+        _spec((batch,), jnp.int32),  # context_lens
+        _spec((batch,), jnp.int32),  # slot_mapping
+        *_cache_specs(cfg),
+        *_weight_specs(cfg),
+    ]
+    # Donate the KV caches: XLA updates them in place instead of copying
+    # the whole slab per layer scatter (EXPERIMENTS.md §Perf, L2).
+    return to_hlo_text(jax.jit(fn, donate_argnums=(4, 5)).lower(*specs))
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, seq: int) -> str:
+    """Lower a prefill bucket to HLO text."""
+
+    def fn(tokens, prompt_lens, slot_mapping, k_cache, v_cache, *weights):
+        params = dict(zip(M.WEIGHT_ORDER, weights))
+        return M.prefill(params, cfg, tokens, prompt_lens, slot_mapping, k_cache, v_cache)
+
+    specs = [
+        _spec((batch, seq), jnp.int32),  # tokens
+        _spec((batch,), jnp.int32),  # prompt_lens
+        _spec((batch, seq), jnp.int32),  # slot_mapping
+        *_cache_specs(cfg),
+        *_weight_specs(cfg),
+    ]
+    return to_hlo_text(jax.jit(fn, donate_argnums=(3, 4)).lower(*specs))
+
+
+def dump_weights(cfg: M.ModelConfig, out_dir: pathlib.Path, seed: int) -> List[dict]:
+    """Write weights.bin; return the manifest tensor index."""
+    params = M.init_params(cfg, seed=seed)
+    index: List[dict] = []
+    offset = 0
+    with open(out_dir / "weights.bin", "wb") as f:
+        for name in M.WEIGHT_ORDER:
+            arr = np.asarray(params[name], dtype=np.float32)
+            raw = arr.tobytes(order="C")
+            f.write(raw)
+            index.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "dtype": "f32",
+                    "offset_bytes": offset,
+                    "size_bytes": len(raw),
+                }
+            )
+            offset += len(raw)
+    return index
+
+
+def make_golden(cfg: M.ModelConfig, seed: int, n_prompts: int = 3, n_steps: int = 8) -> dict:
+    """Greedy-decode a few fixed prompts with the *python* model.
+
+    The rust integration test (rust/tests/integration_pjrt.rs) replays
+    the same prompts through the compiled executables and asserts
+    token-exact agreement — the cross-language correctness signal for
+    the whole AOT bridge.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed + 1234)
+    prompts = [
+        list(map(int, rng.integers(1, cfg.vocab_size, int(n))))
+        for n in rng.integers(4, min(24, cfg.max_seq // 2), n_prompts)
+    ]
+    params = M.init_params(cfg, seed=seed)
+    expected = []
+    for p in prompts:
+        toks = list(p)
+        gen = []
+        for _ in range(n_steps):
+            logits = M.ref_forward(
+                params, cfg, jnp.asarray(np.asarray(toks, np.int32)[None])
+            )
+            nxt = int(jnp.argmax(logits[0, -1]))
+            gen.append(nxt)
+            toks.append(nxt)
+        expected.append(gen)
+    return {"prompts": prompts, "steps": n_steps, "expected": expected}
+
+
+DECODE_INPUTS = ["tokens", "block_tables", "context_lens", "slot_mapping", "k_cache", "v_cache"]
+PREFILL_INPUTS = ["tokens", "prompt_lens", "slot_mapping", "k_cache", "v_cache"]
+OUTPUTS = ["logits", "k_cache", "v_cache"]
+
+
+def build(
+    cfg: M.ModelConfig,
+    out_dir: pathlib.Path,
+    *,
+    seed: int = 0,
+    decode_buckets: Sequence[int] = DECODE_BUCKETS,
+    prefill_buckets: Sequence[Tuple[int, int]] = PREFILL_BUCKETS,
+) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    executables = []
+    for b in decode_buckets:
+        fname = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b)
+        (out_dir / fname).write_text(text)
+        executables.append(
+            {
+                "kind": "decode",
+                "batch": b,
+                "file": fname,
+                "inputs": DECODE_INPUTS + list(M.WEIGHT_ORDER),
+                "outputs": OUTPUTS,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+    for b, s in prefill_buckets:
+        fname = f"prefill_b{b}_s{s}.hlo.txt"
+        text = lower_prefill(cfg, b, s)
+        (out_dir / fname).write_text(text)
+        executables.append(
+            {
+                "kind": "prefill",
+                "batch": b,
+                "seq": s,
+                "file": fname,
+                "inputs": PREFILL_INPUTS + list(M.WEIGHT_ORDER),
+                "outputs": OUTPUTS,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    weights = dump_weights(cfg, out_dir, seed)
+    golden = make_golden(cfg, seed)
+    (out_dir / "golden.json").write_text(json.dumps(golden, indent=2))
+    print(f"  wrote golden.json ({len(golden['prompts'])} prompts)")
+    manifest = {
+        "format_version": 1,
+        "model": cfg.to_json(),
+        "seed": seed,
+        "weights": {"file": "weights.bin", "tensors": weights},
+        "executables": executables,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  wrote manifest.json ({len(executables)} executables)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--preset", default="tiny-opt", choices=sorted(PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--pallas-matmul",
+        action="store_true",
+        help="route linear-layer GEMMs through the Pallas kernel too "
+        "(fidelity mode; ~40x slower on CPU — see EXPERIMENTS.md §Perf)",
+    )
+    ap.add_argument(
+        "--decode-buckets",
+        type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=DECODE_BUCKETS,
+    )
+    ap.add_argument(
+        "--prefill-buckets",
+        type=lambda s: tuple(
+            (int(b), int(sq)) for b, sq in (p.split("x") for p in s.split(","))
+        ),
+        default=PREFILL_BUCKETS,
+        help="comma-separated BxS pairs, e.g. 1x64,4x64",
+    )
+    args = ap.parse_args()
+    if args.pallas_matmul:
+        M.USE_PALLAS_MATMUL = True
+    cfg = PRESETS[args.preset]
+    out_dir = pathlib.Path(args.out)
+    print(f"AOT-lowering {cfg.name} -> {out_dir}")
+    build(
+        cfg,
+        out_dir,
+        seed=args.seed,
+        decode_buckets=args.decode_buckets,
+        prefill_buckets=args.prefill_buckets,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+- ``paged_attention`` — decode-step attention over a paged KV cache (the
+  DRAM-bound kernel the paper identifies as the large-batch bottleneck).
+- ``flash_attention`` — tiled causal attention for the prefill phase.
+- ``matmul`` — blocked GEMM for projections / FFN.
+- ``ref`` — pure-jnp oracles for all of the above.
+
+Every kernel runs ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); each module also exposes ``io_bytes``/``flops`` analytic
+cost functions mirrored by ``rust/src/gpusim/kernels.rs``.
+"""
+
+from . import flash_attention, matmul, paged_attention, ref  # noqa: F401
+
+__all__ = ["flash_attention", "matmul", "paged_attention", "ref"]

@@ -1,0 +1,170 @@
+"""L1 Pallas kernel: tiled causal attention for the prefill phase.
+
+FlashAttention-style schedule expressed for TPU: the grid iterates
+(batch, head, q-block); each program holds one Q tile in VMEM and streams
+K/V tiles HBM->VMEM, maintaining the online-softmax running state in
+VMEM scratch. This is the direct analogue of the CUDA threadblock tiling
+the paper profiles — ``BlockSpec`` plays the role of the threadblock
+HBM<->shared-memory schedule (DESIGN.md §Hardware-Adaptation).
+
+The causal structure is exploited at block granularity: K blocks entirely
+above the diagonal are skipped (the fori_loop upper bound is the last
+block visible to this Q tile), which is the same work-skipping
+FlashAttention performs.
+
+``interpret=True`` always (CPU PJRT cannot run Mosaic custom-calls).
+Correctness: python/tests/test_flash_attention.py sweeps shapes/dtypes
+against ``ref.ref_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, H, block_q, D]
+    k_ref,  # [1, H, T, D]
+    v_ref,  # [1, H, T, D]
+    o_ref,  # [1, H, block_q, D]
+    *,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    kv_len: int,
+    scale: float,
+    causal: bool,
+):
+    h, d = q_ref.shape[1], q_ref.shape[-1]
+    qi = pl.program_id(1)
+    # All heads in one program (amortizes interpret-mode grid overhead,
+    # EXPERIMENTS.md §Perf L1); the per-head IO schedule is unchanged.
+    q = q_ref[0].astype(jnp.float32) * scale  # [H, bq, D]
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [bq]
+    offset = kv_len - seq_len  # causal offset for cached prefixes
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry  # [H,bq], [H,bq], [H,bq,D]
+        k = pl.load(k_ref, (0, slice(None), pl.ds(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, slice(None), pl.ds(j * block_k, block_k), slice(None)))
+        s = jnp.einsum("hqd,hkd->hqk", q, k.astype(jnp.float32))  # [H,bq,bk]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)  # [bk]
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None] + offset)
+        s = jnp.where(mask[None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=2))  # [H,bq]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :, None])  # [H,bq,bk]
+        l_new = l_prev * alpha + p.sum(axis=2)
+        acc_new = acc_prev * alpha[:, :, None] + jnp.einsum(
+            "hqk,hkd->hqd", p, v.astype(jnp.float32)
+        )
+        return m_new, l_new, acc_new
+
+    n_k_blocks = (kv_len + block_k - 1) // block_k
+    if causal:
+        # Last K block this Q tile can see: query row (qi+1)*bq - 1 attends
+        # up to key index row + offset.
+        last_visible = (qi + 1) * block_q - 1 + offset
+        n_visible = jnp.minimum((last_visible + block_k) // block_k, n_k_blocks)
+    else:
+        n_visible = n_k_blocks
+
+    m0 = jnp.full((h, block_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h, block_q), jnp.float32)
+    acc0 = jnp.zeros((h, block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_visible, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, :, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, S, H, D]
+    k: jnp.ndarray,  # [B, T, H, D]
+    v: jnp.ndarray,  # [B, T, H, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 32,
+    block_k: int = 32,
+) -> jnp.ndarray:
+    """Tiled multi-head attention. Returns [B, S, H, D]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    # Pad sequence dims up to multiples of the tile sizes.
+    s_pad = (s + block_q - 1) // block_q * block_q
+    t_pad = (t + block_k - 1) // block_k * block_k
+    qt = jnp.moveaxis(q, 2, 1)  # [B, H, S, D]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if s_pad != s:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if t_pad != t:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=s,
+        kv_len=t,
+        scale=scale,
+        causal=causal,
+    )
+    grid = (b, s_pad // block_q)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, block_q, d), lambda i, k_: (i, 0, k_, 0)),
+            pl.BlockSpec((1, h, t_pad, d), lambda i, k_: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, t_pad, d), lambda i, k_: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, block_q, d), lambda i, k_: (i, 0, k_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        interpret=True,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :s, :], 1, 2)  # [B, S, H, D]
+
+
+# ----------------------------------------------------------------------
+# Analytic cost model (mirrored by rust/src/gpusim/kernels.rs)
+# ----------------------------------------------------------------------
+
+
+def io_bytes(
+    batch: int,
+    seq: int,
+    kv: int,
+    heads: int,
+    head_dim: int,
+    *,
+    block_q: int = 32,
+    dtype_bytes: int = 2,
+) -> int:
+    """HBM traffic of the tiled kernel: Q/O once, K/V once per Q tile."""
+    n_q_tiles = (seq + block_q - 1) // block_q
+    qo = 2 * batch * heads * seq * head_dim * dtype_bytes
+    kv_traffic = 2 * batch * heads * kv * head_dim * dtype_bytes * n_q_tiles
+    return qo + kv_traffic
+
+
+def flops(batch: int, seq: int, kv: int, heads: int, head_dim: int, *, causal: bool = True) -> int:
+    """QK^T + PV FLOPs; causal halves the score work."""
+    pairs = seq * kv
+    if causal:
+        pairs = pairs // 2 + seq // 2
+    return 4 * batch * heads * pairs * head_dim

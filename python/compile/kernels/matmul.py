@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: blocked matmul (the projection / FFN GEMMs).
+
+The paper's Figure 1 contrasts matmul kernels — whose arithmetic
+intensity *grows* with batch size because the weight tile is amortized
+over more rows — with attention kernels whose AI is constant. This kernel
+is the matmul half of that comparison and the GEMM used by the L2 model's
+linear layers.
+
+TPU mapping: the grid tiles the output (M/bm, N/bn); each program keeps
+an f32 accumulator tile in VMEM and streams A-row / B-column panels
+HBM->VMEM, feeding the MXU-shaped ``jnp.dot``. ``interpret=True`` always.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, block_k: int, k_dim: int):
+    # a_ref [bm, K], b_ref [K, bn], o_ref [bm, bn]
+    bm, _ = a_ref.shape
+    _, bn = b_ref.shape
+
+    def body(i, acc):
+        a = pl.load(a_ref, (slice(None), pl.ds(i * block_k, block_k)))
+        b = pl.load(b_ref, (pl.ds(i * block_k, block_k), slice(None)))
+        return acc + jnp.dot(
+            a.astype(jnp.float32), b.astype(jnp.float32), precision="highest"
+        )
+
+    n_k = k_dim // block_k
+    acc = jax.lax.fori_loop(0, n_k, body, jnp.zeros((bm, bn), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul(
+    a: jnp.ndarray,  # [M, K]
+    b: jnp.ndarray,  # [K, N]
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+) -> jnp.ndarray:
+    """Blocked matmul with f32 accumulation. Returns [M, N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+
+    def pad_to(x, axis, mult):
+        size = x.shape[axis]
+        pad = (size + mult - 1) // mult * mult - size
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    ap = pad_to(pad_to(a, 0, block_m), 1, block_k)
+    bp = pad_to(pad_to(b, 0, block_k), 1, block_n)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+
+    kernel = functools.partial(_matmul_kernel, block_k=block_k, k_dim=kp)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# ----------------------------------------------------------------------
+# Analytic cost model (mirrored by rust/src/gpusim/kernels.rs)
+# ----------------------------------------------------------------------
+
+
+def io_bytes(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+    dtype_bytes: int = 2,
+) -> int:
+    """HBM traffic: each A panel read once per N tile, B per M tile, O once.
+
+    For the decode GEMV case (m = batch, n = d_out) this reduces to
+    ``weights + batch * (k + n)`` — the weight term dominates at small
+    batch, which is why matmul AI grows with batch (paper Fig. 1).
+    """
+    n_m = (m + block_m - 1) // block_m
+    n_n = (n + block_n - 1) // block_n
+    a_traffic = m * k * n_n * dtype_bytes
+    b_traffic = k * n * n_m * dtype_bytes
+    o_traffic = m * n * dtype_bytes
+    return a_traffic + b_traffic + o_traffic
+
+
+def flops(m: int, k: int, n: int) -> int:
+    return 2 * m * k * n

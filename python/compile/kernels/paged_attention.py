@@ -1,0 +1,163 @@
+"""L1 Pallas kernel: paged decode attention (the paper's hot spot).
+
+One decode step computes, for every sequence in the batch, attention of a
+single query token against that sequence's KV history stored in a *paged*
+cache (vLLM PagedAttention layout): physical KV blocks of ``block_size``
+token slots, indirected through a per-sequence block table. The paper
+(§V-C) shows this kernel is the large-batch bottleneck: its arithmetic
+intensity is ~1 FLOP/byte independent of batch size, so it pins DRAM read
+bandwidth while the MXU/SMs idle.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernels the
+paper profiles (xFormers / FlashAttention) stage KV tiles through shared
+memory per threadblock; here each grid program (one per (sequence, head))
+streams the sequence's KV blocks HBM->VMEM and keeps the *online softmax*
+running state (m, l, acc) in VMEM scratch, which is exactly the
+FlashAttention-style IO schedule expressed with Pallas. The KV caches are
+handed to the kernel unblocked (per-head slab) because the block table
+indirection is data-dependent; ``pl.load`` with dynamic slices expresses
+the HBM->VMEM gather. ``interpret=True`` always: the CPU PJRT plugin
+cannot run Mosaic custom-calls (see /opt/xla-example/README.md).
+
+Cost model hooks: ``io_bytes`` / ``flops`` report the kernel's analytic
+HBM traffic and FLOP count; `rust/src/gpusim/kernels.rs` mirrors these
+formulas (they are asserted equal in python/tests/test_costmodel.py via
+golden values).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    # inputs
+    q_ref,  # [1, H, D]            queries for seq b (all heads)
+    kc_ref,  # [H, num_slots, D]   full K cache
+    vc_ref,  # [H, num_slots, D]   full V cache
+    bt_ref,  # [1, max_blocks]     block table row for seq b
+    len_ref,  # [1]                context length for seq b
+    # outputs
+    o_ref,  # [1, H, D]
+    *,
+    block_size: int,
+    max_blocks: int,
+    scale: float,
+):
+    h, d = q_ref.shape[-2], q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale  # [H, D]
+    ctx_len = len_ref[0]
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry  # [H], [H], [H, D]
+        phys = bt_ref[0, i]
+        start = phys * block_size
+        # HBM -> VMEM: one KV block, all heads (grid is one program per
+        # sequence; processing heads together amortizes program overhead
+        # — §Perf L1, same IO schedule as the per-head variant).
+        k = pl.load(kc_ref, (slice(None), pl.ds(start, block_size), slice(None)))
+        v = pl.load(vc_ref, (slice(None), pl.ds(start, block_size), slice(None)))
+        # [H, bs]
+        s = jnp.einsum("hd,htd->ht", q, k.astype(jnp.float32))
+        pos = i * block_size + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where(pos[None, :] < ctx_len, s, NEG_INF)
+        # Online softmax update (FlashAttention recurrence), per head.
+        m_new = jnp.maximum(m_prev, s.max(axis=1))  # [H]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])  # [H, bs]
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.einsum(
+            "ht,htd->hd", p, v.astype(jnp.float32)
+        )
+        return m_new, l_new, acc_new
+
+    # Only blocks that can contain valid tokens need visiting; the grid is
+    # static so we loop over the sequence's used blocks and mask the tail.
+    n_used = (ctx_len + block_size - 1) // block_size
+    m0 = jnp.full((h,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h,), jnp.float32)
+    acc0 = jnp.zeros((h, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_used, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # [B, H, D]
+    k_cache: jnp.ndarray,  # [H, num_slots, D]
+    v_cache: jnp.ndarray,  # [H, num_slots, D]
+    block_tables: jnp.ndarray,  # [B, max_blocks] int32
+    context_lens: jnp.ndarray,  # [B] int32
+    *,
+    block_size: int,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Decode-step paged attention. Returns [B, H, D].
+
+    Grid is (B,): one program per sequence, streaming that sequence's KV
+    blocks (all heads together) through VMEM with an online-softmax
+    accumulator. Heads-per-program amortizes grid overhead ~Hx in
+    interpret mode and matches vLLM's per-sequence work partitioning
+    (EXPERIMENTS.md §Perf, L1).
+    """
+    b, h, d = q.shape
+    num_slots = k_cache.shape[1]
+    max_blocks = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    assert num_slots % block_size == 0
+
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        block_size=block_size,
+        max_blocks=max_blocks,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),  # q
+            pl.BlockSpec((h, num_slots, d), lambda i: (0, 0, 0)),  # k cache
+            pl.BlockSpec((h, num_slots, d), lambda i: (0, 0, 0)),  # v cache
+            pl.BlockSpec((1, max_blocks), lambda i: (i, 0)),  # block table
+            pl.BlockSpec((1,), lambda i: (i,)),  # ctx len
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k_cache, v_cache, block_tables, context_lens)
+
+
+# ----------------------------------------------------------------------
+# Analytic cost model (mirrored by rust/src/gpusim/kernels.rs)
+# ----------------------------------------------------------------------
+
+
+def io_bytes(
+    batch: int, heads: int, head_dim: int, ctx_lens, *, block_size: int, dtype_bytes: int = 2
+) -> int:
+    """HBM bytes moved by one decode-attention call.
+
+    Per sequence: K+V blocks covering ctx_len (rounded up to block_size),
+    all heads, plus Q read and O write. Block tables / lengths are noise.
+    """
+    total = 0
+    for ctx in ctx_lens:
+        padded = ((ctx + block_size - 1) // block_size) * block_size
+        total += 2 * heads * padded * head_dim * dtype_bytes  # K + V
+    total += 2 * batch * heads * head_dim * dtype_bytes  # Q read + O write
+    return total
+
+
+def flops(batch: int, heads: int, head_dim: int, ctx_lens) -> int:
+    """FLOPs of one decode-attention call: qK^T and pV, 2 MACs each."""
+    total = 0
+    for ctx in ctx_lens:
+        total += 4 * heads * ctx * head_dim
+    return total

@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These references are the correctness ground truth: pytest (see
+``python/tests``) sweeps shapes/dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))``. They are also imported by
+``model.py`` when building the non-paged reference model used by the
+end-to-end model tests.
+
+Everything here is deliberately written in the most direct jnp style —
+no tiling, no online softmax — so a mismatch always points at the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite; matches the kernels' masking constant
+
+
+def ref_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle, accumulating in f32."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def ref_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Multi-head attention oracle.
+
+    Shapes: q [B, S, H, D], k/v [B, T, H, D] -> out [B, S, H, D].
+    ``causal`` masks position j > i + (T - S) (standard causal offset so a
+    query block at the end of a longer key sequence sees its prefix).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # [B, H, S, T]
+    scores = jnp.einsum("bshd,bthd->bhst", qf, kf) * scale
+    if causal:
+        offset = t - s
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(t)[None, :]
+        mask = kj <= qi + offset
+        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def gather_kv(
+    cache: jnp.ndarray,
+    block_table: jnp.ndarray,
+    *,
+    block_size: int,
+    max_len: int,
+) -> jnp.ndarray:
+    """Gather one sequence's K or V rows from a paged cache.
+
+    cache [H, num_slots, D] (slots = blocks * block_size), block_table
+    [max_blocks] of physical block ids -> [H, max_len, D] where row ``i``
+    comes from slot ``block_table[i // bs] * bs + i % bs``.
+    """
+    positions = jnp.arange(max_len)
+    phys = block_table[positions // block_size] * block_size + positions % block_size
+    return cache[:, phys, :]
+
+
+def ref_paged_decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    context_lens: jnp.ndarray,
+    *,
+    block_size: int,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Decode-step attention oracle over a paged KV cache.
+
+    q [B, H, D]; k_cache/v_cache [H, num_slots, D]; block_tables
+    [B, max_blocks]; context_lens [B] -> out [B, H, D].
+
+    Each query attends to its sequence's first ``context_lens[b]`` cached
+    positions, gathered through the block table (vLLM PagedAttention
+    semantics).
+    """
+    b, h, d = q.shape
+    max_blocks = block_tables.shape[1]
+    max_len = max_blocks * block_size
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    outs = []
+    for i in range(b):
+        k = gather_kv(k_cache, block_tables[i], block_size=block_size, max_len=max_len)
+        v = gather_kv(v_cache, block_tables[i], block_size=block_size, max_len=max_len)
+        # [H, max_len]
+        scores = (
+            jnp.einsum("hd,htd->ht", q[i].astype(jnp.float32), k.astype(jnp.float32))
+            * scale
+        )
+        mask = jnp.arange(max_len)[None, :] < context_lens[i]
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        probs = probs / probs.sum(axis=-1, keepdims=True)
+        outs.append(jnp.einsum("ht,htd->hd", probs, v.astype(jnp.float32)))
+    return jnp.stack(outs).astype(q.dtype)

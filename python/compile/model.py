@@ -1,0 +1,308 @@
+"""L2: OPT-style decoder-only transformer over a paged KV cache.
+
+This is the JAX compute graph the rust coordinator drives. Two entry
+points are AOT-lowered per (batch/seq) bucket by ``aot.py``:
+
+- ``prefill(...)``  — process whole (padded) prompts with the Pallas
+  flash-attention kernel, scatter the produced K/V into the paged cache
+  through ``slot_mapping``, return last-prompt-token logits.
+- ``decode_step(...)`` — one autoregressive step for a batch: write the
+  current token's K/V into the cache, run the Pallas paged-attention
+  kernel (the paper's hot spot), return next-token logits.
+
+The paged-cache contract matches ``rust/src/kvcache``: the cache is a
+slab of ``num_blocks * block_size`` token slots per layer/head; rust owns
+the block tables and slot mappings; *block 0 is reserved as a dummy
+scratch block* so padded batch rows can harmlessly write to slot 0.
+
+Architecture (OPT family, the paper's main subjects): learned positional
+embeddings, pre-LayerNorm blocks, ReLU FFN with 4x expansion, tied
+embedding/LM head. All linear projections go through the Pallas blocked
+``matmul`` kernel so the L1 kernels lower into the same HLO the rust
+runtime executes.
+
+Weights are everywhere float32 (CPU PJRT path); the H100 simulator in
+rust models the paper's fp16 deployments independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+from .kernels.matmul import matmul as pallas_matmul
+from .kernels.paged_attention import paged_decode_attention
+
+# Perf knob (EXPERIMENTS.md §Perf, L2): the attention kernels — the
+# paper's hot spot — are ALWAYS the Pallas implementations; the linear
+# projections default to XLA's native dot, which the CPU backend executes
+# ~40x faster than an interpret-mode Pallas loop nest. Set
+# MEMGAP_PALLAS_MATMUL=1 (or aot.py --pallas-matmul) to route the GEMMs
+# through the Pallas kernel as well (kernel-in-the-loop fidelity mode).
+USE_PALLAS_MATMUL = os.environ.get("MEMGAP_PALLAS_MATMUL", "0") == "1"
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    if USE_PALLAS_MATMUL:
+        return pallas_matmul(a, b)
+    return jnp.matmul(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (mirrored by rust models::spec)."""
+
+    name: str = "tiny-opt"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 8
+    vocab_size: int = 8192
+    ffn_mult: int = 4
+    max_seq: int = 512
+    # paged KV cache geometry
+    block_size: int = 16
+    num_blocks: int = 256  # total physical blocks (block 0 reserved)
+    max_blocks_per_seq: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_blocks * self.block_size
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.d_ffn, self.vocab_size, self.n_layers
+        per_layer = 4 * d * d + 4 * d + 2 * d * f + d + f + 4 * d
+        return v * d + self.max_seq * d + L * per_layer + 2 * d
+
+    def to_json(self) -> Dict[str, Any]:
+        out = dataclasses.asdict(self)
+        out["head_dim"] = self.head_dim
+        out["d_ffn"] = self.d_ffn
+        out["num_slots"] = self.num_slots
+        out["param_count"] = self.param_count()
+        return out
+
+
+# Deterministic weight ordering shared with artifacts/weights.bin and the
+# rust runtime (runtime/weights.rs). Layer tensors are stacked on axis 0.
+WEIGHT_ORDER: List[str] = [
+    "embed",  # [V, d]
+    "pos_embed",  # [max_seq, d]
+    "ln1_g", "ln1_b",  # [L, d]
+    "wq", "wk", "wv", "wo",  # [L, d, d]
+    "bq", "bk", "bv", "bo",  # [L, d]
+    "ln2_g", "ln2_b",  # [L, d]
+    "w1", "b1",  # [L, d, f], [L, f]
+    "w2", "b2",  # [L, f, d], [L, d]
+    "lnf_g", "lnf_b",  # [d]
+]
+
+
+def weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, f, v, L, s = cfg.d_model, cfg.d_ffn, cfg.vocab_size, cfg.n_layers, cfg.max_seq
+    return {
+        "embed": (v, d),
+        "pos_embed": (s, d),
+        "ln1_g": (L, d), "ln1_b": (L, d),
+        "wq": (L, d, d), "wk": (L, d, d), "wv": (L, d, d), "wo": (L, d, d),
+        "bq": (L, d), "bk": (L, d), "bv": (L, d), "bo": (L, d),
+        "ln2_g": (L, d), "ln2_b": (L, d),
+        "w1": (L, d, f), "b1": (L, f),
+        "w2": (L, f, d), "b2": (L, d),
+        "lnf_g": (d,), "lnf_b": (d,),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """GPT-2-style init: N(0, 0.02) matrices, zero biases, unit LN gains."""
+    shapes = weight_shapes(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(WEIGHT_ORDER))
+    params: Dict[str, jnp.ndarray] = {}
+    for key, name in zip(keys, WEIGHT_ORDER):
+        shape = shapes[name]
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b") or name.startswith("b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            scale = 0.02
+            if name in ("wo", "w2"):  # residual-branch scaling
+                scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+            params[name] = scale * jax.random.normal(key, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """[..., d_in] @ [d_in, d_out] through the Pallas matmul kernel."""
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    out = matmul(flat, w) + b
+    return out.reshape(lead + (w.shape[1],))
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads)
+
+
+def _scatter_kv(
+    cache: jnp.ndarray,  # [H, slots, Dh]
+    new: jnp.ndarray,  # [H, N, Dh]
+    slots: jnp.ndarray,  # [N] int32
+) -> jnp.ndarray:
+    return cache.at[:, slots, :].set(new)
+
+
+def decode_step(
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B] int32
+    block_tables: jnp.ndarray,  # [B, MB] int32
+    context_lens: jnp.ndarray,  # [B] int32, INCLUDING the current token
+    slot_mapping: jnp.ndarray,  # [B] int32, slot for the current token's K/V
+    k_cache: jnp.ndarray,  # [L, H, slots, Dh]
+    v_cache: jnp.ndarray,  # [L, H, slots, Dh]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (logits [B, V], k_cache', v_cache')."""
+    b = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    positions = jnp.clip(context_lens - 1, 0, cfg.max_seq - 1)
+
+    x = params["embed"][tokens] + params["pos_embed"][positions]  # [B, d]
+    for l in range(cfg.n_layers):
+        res = x
+        xn = _layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = _linear(xn, params["wq"][l], params["bq"][l]) * (1.0 / math.sqrt(dh))
+        k = _linear(xn, params["wk"][l], params["bk"][l])
+        v = _linear(xn, params["wv"][l], params["bv"][l])
+        # [B, d] -> [H, B, Dh] for the cache scatter.
+        k_h = k.reshape(b, h, dh).transpose(1, 0, 2)
+        v_h = v.reshape(b, h, dh).transpose(1, 0, 2)
+        k_cache = k_cache.at[l].set(_scatter_kv(k_cache[l], k_h, slot_mapping))
+        v_cache = v_cache.at[l].set(_scatter_kv(v_cache[l], v_h, slot_mapping))
+        attn = paged_decode_attention(
+            q.reshape(b, h, dh),
+            k_cache[l],
+            v_cache[l],
+            block_tables,
+            context_lens,
+            block_size=cfg.block_size,
+            scale=1.0,  # q pre-scaled above
+        )  # [B, H, Dh]
+        x = res + _linear(
+            attn.reshape(b, cfg.d_model), params["wo"][l], params["bo"][l]
+        )
+        res = x
+        xn = _layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        hdn = jax.nn.relu(_linear(xn, params["w1"][l], params["b1"][l]))
+        x = res + _linear(hdn, params["w2"][l], params["b2"][l])
+
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = matmul(x, params["embed"].T)  # tied LM head, [B, V]
+    return logits, k_cache, v_cache
+
+
+def prefill(
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B, S] int32 (padded with 0 past prompt_lens)
+    prompt_lens: jnp.ndarray,  # [B] int32
+    slot_mapping: jnp.ndarray,  # [B, S] int32 (pads -> slot 0, the dummy block)
+    k_cache: jnp.ndarray,  # [L, H, slots, Dh]
+    v_cache: jnp.ndarray,  # [L, H, slots, Dh]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Process prompts, fill the cache, return last-token logits [B, V].
+
+    Padded positions attend causally so real tokens never see them (pads
+    sit *after* the prompt), and their K/V lands in the reserved dummy
+    block, so the cache stays clean.
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    positions = jnp.clip(jnp.arange(s, dtype=jnp.int32), 0, cfg.max_seq - 1)
+
+    x = params["embed"][tokens] + params["pos_embed"][positions][None, :, :]
+    flat_slots = slot_mapping.reshape(-1)  # [B*S]
+    for l in range(cfg.n_layers):
+        res = x
+        xn = _layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = _linear(xn, params["wq"][l], params["bq"][l])
+        k = _linear(xn, params["wk"][l], params["bk"][l])
+        v = _linear(xn, params["wv"][l], params["bv"][l])
+        qh = _split_heads(q, h)  # [B, S, H, Dh]
+        kh = _split_heads(k, h)
+        vh = _split_heads(v, h)
+        # Scatter this layer's K/V into the paged cache.
+        k_flat = kh.reshape(b * s, h, dh).transpose(1, 0, 2)  # [H, B*S, Dh]
+        v_flat = vh.reshape(b * s, h, dh).transpose(1, 0, 2)
+        k_cache = k_cache.at[l].set(_scatter_kv(k_cache[l], k_flat, flat_slots))
+        v_cache = v_cache.at[l].set(_scatter_kv(v_cache[l], v_flat, flat_slots))
+        attn = flash_attention(qh, kh, vh, causal=True)  # [B, S, H, Dh]
+        x = res + _linear(
+            attn.reshape(b, s, cfg.d_model), params["wo"][l], params["bo"][l]
+        )
+        res = x
+        xn = _layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        hdn = jax.nn.relu(_linear(xn, params["w1"][l], params["b1"][l]))
+        x = res + _linear(hdn, params["w2"][l], params["b2"][l])
+
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    # Gather each sequence's last real token.
+    last = jnp.clip(prompt_lens - 1, 0, s - 1)  # [B]
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]  # [B, d]
+    logits = matmul(x_last, params["embed"].T)  # [B, V]
+    return logits, k_cache, v_cache
+
+
+def ref_forward(
+    params: Dict[str, jnp.ndarray], cfg: ModelConfig, tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Non-paged oracle: full-sequence forward returning [B, S, V] logits.
+
+    Uses plain jnp ops end-to-end (no Pallas, no cache) — the ground truth
+    for prefill/decode equivalence tests.
+    """
+    from .kernels.ref import ref_attention
+
+    b, s = tokens.shape
+    h = cfg.n_heads
+    x = params["embed"][tokens] + params["pos_embed"][jnp.arange(s)][None]
+    for l in range(cfg.n_layers):
+        res = x
+        xn = _layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = xn @ params["wq"][l] + params["bq"][l]
+        k = xn @ params["wk"][l] + params["bk"][l]
+        v = xn @ params["wv"][l] + params["bv"][l]
+        attn = ref_attention(
+            _split_heads(q, h), _split_heads(k, h), _split_heads(v, h), causal=True
+        )
+        x = res + attn.reshape(b, s, cfg.d_model) @ params["wo"][l] + params["bo"][l]
+        res = x
+        xn = _layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        x = (
+            res
+            + jax.nn.relu(xn @ params["w1"][l] + params["b1"][l]) @ params["w2"][l]
+            + params["b2"][l]
+        )
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T

@@ -1,0 +1,99 @@
+"""AOT pipeline: manifest schema, HLO text validity, weights layout."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = aot.PRESETS["micro-opt"]
+    manifest = aot.build(
+        cfg, out, seed=0, decode_buckets=(1, 2), prefill_buckets=((1, 16),)
+    )
+    return cfg, out, manifest
+
+
+def test_manifest_schema(built):
+    cfg, out, manifest = built
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert manifest["format_version"] == 1
+    m = manifest["model"]
+    assert m["name"] == cfg.name
+    assert m["head_dim"] == cfg.head_dim
+    assert m["num_slots"] == cfg.num_blocks * cfg.block_size
+    kinds = {(e["kind"], e.get("batch"), e.get("seq")) for e in manifest["executables"]}
+    assert ("decode", 1, None) in kinds
+    assert ("decode", 2, None) in kinds
+    assert ("prefill", 1, 16) in kinds
+
+
+def test_hlo_text_is_parseable_entry(built):
+    _, out, manifest = built
+    for e in manifest["executables"]:
+        text = (out / e["file"]).read_text()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # return_tuple=True: root of the entry computation is a tuple of 3.
+        assert "tuple(" in text.replace(") tuple", " tuple")
+
+
+def test_weights_bin_layout(built):
+    cfg, out, manifest = built
+    tensors = manifest["weights"]["tensors"]
+    names = [t["name"] for t in tensors]
+    assert names == list(M.WEIGHT_ORDER)
+    data = (out / "weights.bin").read_bytes()
+    assert len(data) == sum(t["size_bytes"] for t in tensors)
+    assert len(data) == 4 * cfg.param_count()
+    # Offsets are contiguous and sorted.
+    off = 0
+    for t in tensors:
+        assert t["offset_bytes"] == off
+        assert t["size_bytes"] == 4 * int(np.prod(t["shape"]))
+        off += t["size_bytes"]
+
+
+def test_weights_reproducible_from_seed(built):
+    cfg, out, manifest = built
+    params = M.init_params(cfg, seed=manifest["seed"])
+    data = (out / "weights.bin").read_bytes()
+    t = manifest["weights"]["tensors"][0]  # embed
+    got = np.frombuffer(
+        data[t["offset_bytes"] : t["offset_bytes"] + t["size_bytes"]], np.float32
+    ).reshape(t["shape"])
+    np.testing.assert_array_equal(got, np.asarray(params["embed"]))
+
+
+def test_input_signature_matches_contract(built):
+    _, _, manifest = built
+    for e in manifest["executables"]:
+        base = aot.DECODE_INPUTS if e["kind"] == "decode" else aot.PREFILL_INPUTS
+        assert e["inputs"] == base + list(M.WEIGHT_ORDER)
+        assert e["outputs"] == ["logits", "k_cache", "v_cache"]
+
+
+def test_executables_deterministic_sha(built):
+    cfg, out, manifest = built
+    for e in manifest["executables"]:
+        import hashlib
+
+        text = (out / e["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+
+def test_parameter_count_in_hlo(built):
+    """Each executable must declare exactly base-inputs + 21 weights params."""
+    _, out, manifest = built
+    for e in manifest["executables"]:
+        text = (out / e["file"]).read_text()
+        entry = text.split("ENTRY")[-1]
+        n_params = entry.count("parameter(")
+        assert n_params == len(e["inputs"])

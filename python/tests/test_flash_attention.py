@@ -1,0 +1,85 @@
+"""Pallas flash (tiled) attention vs the jnp oracle, hypothesis-swept."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def _qkv(b, s, t, h, d, dtype=jnp.float32):
+    def r(shape):
+        return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype=dtype)
+
+    return r((b, s, h, d)), r((b, t, h, d)), r((b, t, h, d))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(1, 50),
+    h=st.integers(1, 3),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_self_attention_matches_ref(b, s, h, d, causal):
+    q, k, v = _qkv(b, s, s, h, d)
+    got = fa.flash_attention(q, k, v, causal=causal)
+    want = ref.ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(1, 24),
+    extra=st.integers(1, 40),
+    d=st.sampled_from([8, 16]),
+)
+def test_cross_length_causal_offset(s, extra, d):
+    """Query block shorter than KV (cached prefix): offset masking."""
+    t = s + extra
+    q, k, v = _qkv(2, s, t, 2, d)
+    got = fa.flash_attention(q, k, v, causal=True)
+    want = ref.ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 8), (8, 32), (32, 8), (64, 64)])
+def test_tile_size_invariance(block_q, block_k):
+    q, k, v = _qkv(2, 45, 45, 2, 16)
+    got = fa.flash_attention(q, k, v, causal=True, block_q=block_q, block_k=block_k)
+    want = ref.ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_single_token_equals_softmax_v():
+    """S=1, causal: output must be V row 0 exactly (softmax over 1 key)."""
+    q, k, v = _qkv(1, 1, 1, 2, 16)
+    got = fa.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got)[0, 0], np.asarray(v)[0, 0], rtol=1e-6)
+
+
+def test_scale_override():
+    q, k, v = _qkv(1, 12, 12, 2, 16)
+    got = fa.flash_attention(q, k, v, causal=False, scale=0.5)
+    want = ref.ref_attention(q, k, v, causal=False, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_close_to_f32_ref():
+    q, k, v = _qkv(1, 33, 33, 2, 16, dtype=jnp.bfloat16)
+    got = np.asarray(fa.flash_attention(q, k, v, causal=True), dtype=np.float32)
+    want = np.asarray(ref.ref_attention(q, k, v, causal=True), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_cost_model_prefill_is_compute_leaning():
+    """Prefill attention AI grows with seq len (paper: prefill compute-bound)."""
+    h, d = 32, 64
+    ai_small = fa.flops(1, 64, 64, h, d) / fa.io_bytes(1, 64, 64, h, d)
+    ai_large = fa.flops(1, 2048, 2048, h, d) / fa.io_bytes(1, 2048, 2048, h, d)
+    assert ai_large > ai_small

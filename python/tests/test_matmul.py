@@ -1,0 +1,82 @@
+"""Pallas blocked matmul vs the jnp oracle, hypothesis-swept."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+)
+def test_matmul_matches_ref_f32(m, k, n):
+    a = _rand((m, k), jnp.float32)
+    b = _rand((k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(mm.matmul(a, b)),
+        np.asarray(ref.ref_matmul(a, b)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+)
+def test_matmul_matches_ref_bf16(m, k, n):
+    a = _rand((m, k), jnp.bfloat16)
+    b = _rand((k, n), jnp.bfloat16)
+    got = np.asarray(mm.matmul(a, b), dtype=np.float32)
+    want = np.asarray(ref.ref_matmul(a, b), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("block", [8, 16, 32, 64])
+def test_matmul_block_size_invariance(block):
+    a = _rand((50, 37), jnp.float32)
+    b = _rand((37, 41), jnp.float32)
+    got = mm.matmul(a, b, block_m=block, block_n=block, block_k=block)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.ref_matmul(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_identity():
+    a = _rand((17, 17), jnp.float32)
+    eye = jnp.eye(17, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(mm.matmul(a, eye)), np.asarray(a), rtol=1e-6)
+
+
+def test_matmul_zero():
+    a = _rand((9, 13), jnp.float32)
+    z = jnp.zeros((13, 5), jnp.float32)
+    assert np.all(np.asarray(mm.matmul(a, z)) == 0.0)
+
+
+def test_cost_model_gemv_vs_gemm_ai():
+    """Matmul arithmetic intensity must grow with batch (paper Fig. 1)."""
+    d = 2048
+    ai = []
+    for b in (1, 32, 512):
+        ai.append(mm.flops(b, d, d) / mm.io_bytes(b, d, d))
+    # AI grows with batch up to the tile-bound ceiling, then flattens.
+    assert ai[0] < ai[1]
+    assert ai[2] >= 0.9 * ai[1]
+    # GEMV AI is ~1 FLOP/byte at fp16, deep in the memory-bound regime.
+    assert ai[0] < 2.0

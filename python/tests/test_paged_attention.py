@@ -1,0 +1,135 @@
+"""Pallas paged decode attention vs the jnp oracle (the paper's hot spot)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import paged_attention as pa
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _setup(b, h, d, block_size, num_blocks, max_blocks, ctx_lens, dtype=jnp.float32):
+    slots = num_blocks * block_size
+
+    def r(shape):
+        return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype=dtype)
+
+    q = r((b, h, d))
+    kc = r((h, slots, d))
+    vc = r((h, slots, d))
+    # Random (possibly shared) physical blocks — the oracle only reads the
+    # first ctx_len positions, so collisions are harmless for reads.
+    bt = jnp.asarray(RNG.integers(0, num_blocks, size=(b, max_blocks)), dtype=jnp.int32)
+    cl = jnp.asarray(np.asarray(ctx_lens, dtype=np.int32))
+    return q, kc, vc, bt, cl
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 3),
+    d=st.sampled_from([8, 16, 32]),
+    block_size=st.sampled_from([4, 8, 16]),
+    data=st.data(),
+)
+def test_matches_ref(b, h, d, block_size, data):
+    max_blocks = 6
+    num_blocks = 16
+    max_len = max_blocks * block_size
+    ctx_lens = data.draw(
+        st.lists(st.integers(1, max_len), min_size=b, max_size=b)
+    )
+    q, kc, vc, bt, cl = _setup(b, h, d, block_size, num_blocks, max_blocks, ctx_lens)
+    got = pa.paged_decode_attention(q, kc, vc, bt, cl, block_size=block_size)
+    want = ref.ref_paged_decode_attention(q, kc, vc, bt, cl, block_size=block_size)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_ctx_len_one_reads_single_slot():
+    """ctx=1: output must equal V at the first slot of the first block."""
+    b, h, d, bs = 1, 2, 16, 8
+    q, kc, vc, bt, cl = _setup(b, h, d, bs, 8, 4, [1])
+    got = pa.paged_decode_attention(q, kc, vc, bt, cl, block_size=bs)
+    slot = int(bt[0, 0]) * bs
+    np.testing.assert_allclose(
+        np.asarray(got)[0], np.asarray(vc)[:, slot, :], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_partial_tail_block_masking():
+    """A ctx that ends mid-block must ignore the block's tail slots."""
+    b, h, d, bs = 2, 2, 16, 8
+    q, kc, vc, bt, cl = _setup(b, h, d, bs, 8, 4, [5, 13])
+    got = pa.paged_decode_attention(q, kc, vc, bt, cl, block_size=bs)
+    want = ref.ref_paged_decode_attention(q, kc, vc, bt, cl, block_size=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    # Corrupting slots beyond ctx_len must not change the result.
+    kc2 = kc.at[:, int(bt[0, 0]) * bs + 5 :, :].set(1e6)
+    got2 = pa.paged_decode_attention(q, kc2, vc, bt, cl, block_size=bs)
+    np.testing.assert_allclose(np.asarray(got2)[0], np.asarray(got)[0], rtol=2e-5)
+
+
+def test_block_table_indirection():
+    """Permuting physical blocks while fixing the table is a no-op."""
+    b, h, d, bs, nb, mb = 1, 1, 8, 4, 8, 4
+    q, kc, vc, _, cl = _setup(b, h, d, bs, nb, mb, [16])
+    bt1 = jnp.asarray([[0, 1, 2, 3]], dtype=jnp.int32)
+    out1 = pa.paged_decode_attention(q, kc, vc, bt1, cl, block_size=bs)
+
+    # Move logical block i to physical block perm[i]; permute cache rows.
+    perm = np.array([5, 2, 7, 0], dtype=np.int32)
+    kc2 = np.array(kc)
+    vc2 = np.array(vc)
+    for logical, phys in enumerate(perm):
+        kc2[:, phys * bs : (phys + 1) * bs, :] = np.asarray(kc)[
+            :, logical * bs : (logical + 1) * bs, :
+        ]
+        vc2[:, phys * bs : (phys + 1) * bs, :] = np.asarray(vc)[
+            :, logical * bs : (logical + 1) * bs, :
+        ]
+    bt2 = jnp.asarray(perm[None, :])
+    out2 = pa.paged_decode_attention(
+        q, jnp.asarray(kc2), jnp.asarray(vc2), bt2, cl, block_size=bs
+    )
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-5, atol=2e-5)
+
+
+def test_uniform_values_give_value_mean():
+    """With identical V everywhere, output is V regardless of scores."""
+    b, h, d, bs = 2, 2, 8, 4
+    q, kc, _, bt, cl = _setup(b, h, d, bs, 8, 4, [7, 16])
+    vc = jnp.ones_like(kc) * 3.5
+    got = pa.paged_decode_attention(q, kc, vc, bt, cl, block_size=bs)
+    np.testing.assert_allclose(np.asarray(got), 3.5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    b, h, d, bs = 2, 2, 16, 8
+    q, kc, vc, bt, cl = _setup(b, h, d, bs, 8, 4, [9, 21], dtype=dtype)
+    got = np.asarray(
+        pa.paged_decode_attention(q, kc, vc, bt, cl, block_size=bs), dtype=np.float32
+    )
+    want = np.asarray(
+        ref.ref_paged_decode_attention(q, kc, vc, bt, cl, block_size=bs),
+        dtype=np.float32,
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_cost_model_constant_arithmetic_intensity():
+    """The paper's central claim: decode-attention AI is ~constant in B."""
+    h, d, bs = 32, 64, 16
+    ais = []
+    for b in (1, 32, 512):
+        ctx = [338] * b
+        ai = pa.flops(b, h, d, ctx) / pa.io_bytes(b, h, d, ctx, block_size=bs)
+        ais.append(ai)
+    # All within a few percent of each other, and in the paper's 0.5..1.5 band.
+    assert max(ais) / min(ais) < 1.1
+    assert 0.25 <= min(ais) and max(ais) <= 2.0

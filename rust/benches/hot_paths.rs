@@ -1,0 +1,166 @@
+//! `cargo bench --bench hot_paths` — L3 micro-benchmarks on the
+//! coordinator's hot loop (the §Perf targets in EXPERIMENTS.md):
+//!
+//! - simulate one decode step (the inner loop of every figure);
+//! - scheduler decision at large queue depth;
+//! - KV allocator admit/append/free churn;
+//! - decode batch assembly (block tables + slot mappings);
+//! - a full small engine run (simulated);
+//! - MPS co-scheduling of long traces;
+//! - PJRT decode step (only when artifacts are built).
+
+use std::time::Duration;
+
+use memgap::backend::{Backend, SeqBatchEntry, StepBatch, SimBackend};
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
+use memgap::gpusim::{simulate_decode_step, GpuSpec};
+use memgap::kvcache::KvCacheManager;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::util::bench::{bench, header, quick};
+use memgap::workload::{generate, WorkloadConfig};
+
+fn main() {
+    println!("{}", header());
+    let gpu = GpuSpec::h100_64g();
+    let spec = ModelSpec::opt_1_3b();
+
+    // 1. Simulator: one decode step at MAX batch.
+    let ctx = vec![499usize; 512];
+    let r = quick("sim_decode_step_b512_opt13b", || {
+        simulate_decode_step(&gpu, &spec, AttentionBackendKind::XFormers, &ctx, 16)
+    });
+    println!("{}", r.report());
+
+    // 2. KV allocator churn: admit + grow + free 512 sequences.
+    let r = quick("kv_churn_512_seqs", || {
+        let mut kv = KvCacheManager::new(40_000, 16, 128);
+        for id in 0..512u64 {
+            kv.admit(id, 161).unwrap();
+        }
+        for _ in 0..64 {
+            for id in 0..512u64 {
+                kv.append_token(id).unwrap();
+            }
+        }
+        for id in 0..512u64 {
+            kv.free(id).unwrap();
+        }
+        kv.allocator().peak_allocated_blocks()
+    });
+    println!("{}", r.report());
+
+    // 3. Decode batch assembly at B=512 (block tables + slots).
+    let mut kv = KvCacheManager::new(40_000, 16, 128);
+    for id in 0..512u64 {
+        kv.admit(id, 400).unwrap();
+    }
+    let r = quick("decode_batch_assembly_b512", || {
+        let entries: Vec<SeqBatchEntry> = (0..512u64)
+            .map(|id| {
+                let ctx = kv.tokens_of(id).unwrap();
+                SeqBatchEntry {
+                    seq: id,
+                    tokens: vec![1],
+                    context_len: ctx,
+                    block_table: kv.block_table(id).unwrap().to_vec(),
+                    slot_mapping: vec![kv.slot_for(id, ctx - 1).unwrap()],
+                }
+            })
+            .collect();
+        entries.len()
+    });
+    println!("{}", r.report());
+
+    // 4. Full engine run: 128 ShareGPT-like requests at B=64.
+    let reqs = generate(&WorkloadConfig::sharegpt(128, 0));
+    let r = bench(
+        "engine_run_128reqs_b64",
+        1,
+        10,
+        Duration::from_secs(30),
+        || {
+            let backend = SimBackend::new(
+                gpu.clone(),
+                spec.clone(),
+                AttentionBackendKind::XFormers,
+            );
+            let mut engine = Engine::new(backend, EngineConfig::new(64, 32 * 1024, 16));
+            engine.submit(&reqs);
+            engine.run_to_completion().unwrap().steps
+        },
+    );
+    println!("{}", r.report());
+
+    // 5. MPS co-scheduling: 4 replicas x 2000 segments.
+    let trace: Vec<Segment> = (0..1000)
+        .flat_map(|i| {
+            [
+                Segment::Cpu {
+                    duration: 0.001 + (i % 7) as f64 * 1e-4,
+                },
+                Segment::Gpu {
+                    duration: 0.004,
+                    dram_demand: 0.4 + (i % 5) as f64 * 0.1,
+                },
+            ]
+        })
+        .collect();
+    let traces = vec![trace; 4];
+    let r = quick("mps_coschedule_4x2000segs", || {
+        run_shared(&traces, SharePolicy::Mps).makespan
+    });
+    println!("{}", r.report());
+
+    // 6. PJRT real decode step (skipped without artifacts).
+    if memgap::runtime::artifacts_available() {
+        let dir = memgap::runtime::default_artifacts_dir();
+        let mut backend = memgap::runtime::PjrtBackend::load(&dir).expect("load artifacts");
+        let (blocks, bs, mbs) = backend.kv_geometry();
+        let mut kv = KvCacheManager::new(blocks, bs, mbs);
+        for id in 0..8u64 {
+            kv.admit(id, 32).unwrap();
+        }
+        let entries: Vec<SeqBatchEntry> = (0..8u64)
+            .map(|id| SeqBatchEntry {
+                seq: id,
+                tokens: vec![17],
+                context_len: 32,
+                block_table: kv.block_table(id).unwrap().to_vec(),
+                slot_mapping: vec![kv.slot_for(id, 31).unwrap()],
+            })
+            .collect();
+        let batch = StepBatch { entries };
+        let r = bench(
+            "pjrt_decode_step_b8_tiny_opt",
+            2,
+            20,
+            Duration::from_secs(30),
+            || backend.decode(&batch).unwrap().next_tokens.len(),
+        );
+        println!("{}", r.report());
+        let prompt: Vec<i32> = (1..33).collect();
+        kv.admit(100, prompt.len()).unwrap();
+        let pbatch = StepBatch {
+            entries: vec![SeqBatchEntry {
+                seq: 100,
+                tokens: prompt.clone(),
+                context_len: prompt.len(),
+                block_table: kv.block_table(100).unwrap().to_vec(),
+                slot_mapping: (0..prompt.len())
+                    .map(|p| kv.slot_for(100, p).unwrap())
+                    .collect(),
+            }],
+        };
+        let r = bench(
+            "pjrt_prefill_b1_s32_tiny_opt",
+            2,
+            20,
+            Duration::from_secs(30),
+            || backend.prefill(&pbatch).unwrap().next_tokens.len(),
+        );
+        println!("{}", r.report());
+    } else {
+        println!("pjrt_*  SKIPPED (run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,40 @@
+//! `cargo bench --bench paper_tables` — one end-to-end benchmark per
+//! paper table/figure: each regenerates a reduced version of the
+//! artefact through the full stack and reports the wall time, proving
+//! the whole harness stays fast enough to iterate on.
+//!
+//! (criterion is outside the offline vendor set; the in-tree
+//! `util::bench` harness reports mean/p50/p95/min.)
+
+use std::time::Duration;
+
+use memgap::figures::{self, FigOpts};
+use memgap::util::bench::{bench, header};
+
+fn main() {
+    let opts = FigOpts::quick();
+    println!("{}", header());
+    let mut failures = 0;
+    for id in figures::ALL_IDS {
+        let r = bench(
+            &format!("regen_{id}"),
+            1,
+            5,
+            Duration::from_secs(60),
+            || match figures::generate(id, &opts) {
+                Ok(tables) => tables.len(),
+                Err(e) => {
+                    eprintln!("{id} failed: {e}");
+                    0
+                }
+            },
+        );
+        println!("{}", r.report());
+        if r.samples == 0 {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,41 @@
+//! `figures` — regenerate every table and figure of the paper.
+//!
+//!   cargo run --release --bin figures -- --all [--quick] [--out results]
+//!   cargo run --release --bin figures -- --fig table4
+
+use anyhow::{bail, Result};
+
+use memgap::figures::{self, FigOpts};
+use memgap::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let opts = if args.bool_or("quick", false) {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    let out = std::path::PathBuf::from(args.get_or("out", "results"));
+    let ids: Vec<&str> = if args.bool_or("all", false) {
+        figures::ALL_IDS.to_vec()
+    } else if let Some(f) = args.get("fig") {
+        vec![f]
+    } else {
+        bail!(
+            "pass --all or --fig <id>; known ids: {:?}",
+            figures::ALL_IDS
+        );
+    };
+    let t0 = std::time::Instant::now();
+    let tables = figures::run_to_dir(&ids, &opts, &out)?;
+    for t in &tables {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!(
+        "wrote {} tables to {} in {:.1}s",
+        tables.len(),
+        out.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

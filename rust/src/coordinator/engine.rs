@@ -1,0 +1,665 @@
+//! The serving engine: one replica's step loop over a [`Backend`].
+//!
+//! Responsibilities per iteration (mirroring vLLM's `LLMEngine.step`):
+//! 1. move arrived requests into the waiting queue;
+//! 2. ask the [`Scheduler`] for a decision;
+//! 3. build the [`StepBatch`] — block tables and slot mappings from the
+//!    KV manager — and run it on the backend;
+//! 4. advance the (virtual or wall) clock by the step's CPU gap + GPU
+//!    time, bookkeep tokens/finishes, free blocks, record metrics;
+//! 5. preempt-by-recompute when a decode step runs out of KV blocks.
+//!
+//! The same engine drives the H100 simulator (figures) and the PJRT CPU
+//! runtime (end-to-end example); only the backend differs.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, SeqBatchEntry, StepBatch, StepOutput};
+use crate::coordinator::request::{RequestState, RunningSeq};
+use crate::coordinator::scheduler::{
+    ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
+};
+use crate::gpusim::mps::Segment;
+use crate::gpusim::step::StepSim;
+use crate::kvcache::KvCacheManager;
+use crate::metrics::{MetricsCollector, RunMetrics};
+use crate::workload::Request;
+
+/// Engine configuration (one replica).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_num_seqs: usize,
+    pub max_batched_tokens: usize,
+    pub policy: SchedulerPolicy,
+    /// Physical KV blocks (incl. reserved block 0).
+    pub kv_blocks: usize,
+    pub block_size: usize,
+    pub max_blocks_per_seq: usize,
+    /// Capture per-step kernel sims for timelines (memory-heavy; the
+    /// figure harness enables it only where needed).
+    pub record_steps: bool,
+}
+
+impl EngineConfig {
+    pub fn new(max_num_seqs: usize, kv_blocks: usize, block_size: usize) -> Self {
+        Self {
+            max_num_seqs,
+            max_batched_tokens: 4096,
+            policy: SchedulerPolicy::PrefillPriority,
+            kv_blocks,
+            block_size,
+            max_blocks_per_seq: 2048 / block_size,
+            record_steps: false,
+        }
+    }
+}
+
+/// Final report of a run.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub metrics: RunMetrics,
+    /// Peak KV usage (fraction of usable blocks) — Figs 3/12, Table IV.
+    pub peak_kv_usage: f64,
+    pub preemptions: u64,
+    pub steps: usize,
+    pub prefill_time: f64,
+    pub decode_time: f64,
+    /// Kernel-level step sims when `record_steps` (Figs 5/7).
+    pub recorded: Vec<StepSim>,
+    /// CPU/GPU burst trace for the replication executor (Fig 13).
+    pub segments: Vec<Segment>,
+}
+
+/// A completed sequence with its generated tokens (drained via
+/// [`Engine::take_finished`]; the online server and the e2e example
+/// return these to clients).
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    /// Full history: prompt then generated ids.
+    pub token_ids: Vec<i32>,
+    pub generated: usize,
+    pub finished_at: f64,
+}
+
+/// One serving engine instance.
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    cfg: EngineConfig,
+    scheduler: Scheduler,
+    kv: KvCacheManager,
+    clock: f64,
+    pending: Vec<Request>, // not yet arrived (sorted by arrival desc)
+    waiting: VecDeque<RunningSeq>,
+    running: Vec<RunningSeq>,
+    metrics: MetricsCollector,
+    preemptions: u64,
+    steps: usize,
+    prefill_time: f64,
+    decode_time: f64,
+    recorded: Vec<StepSim>,
+    segments: Vec<Segment>,
+    finished: Vec<FinishedSeq>,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+        let kv = KvCacheManager::new(cfg.kv_blocks, cfg.block_size, cfg.max_blocks_per_seq);
+        let scheduler = Scheduler::new(SchedulerConfig {
+            max_num_seqs: cfg.max_num_seqs,
+            max_batched_tokens: cfg.max_batched_tokens,
+            policy: cfg.policy,
+        });
+        Self {
+            backend,
+            cfg,
+            scheduler,
+            kv,
+            clock: 0.0,
+            pending: Vec::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            metrics: MetricsCollector::new(),
+            preemptions: 0,
+            steps: 0,
+            prefill_time: 0.0,
+            decode_time: 0.0,
+            recorded: Vec::new(),
+            segments: Vec::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Drain completed sequences (online server / e2e example).
+    pub fn take_finished(&mut self) -> Vec<FinishedSeq> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn kv(&self) -> &KvCacheManager {
+        &self.kv
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.waiting.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Submit a workload trace (any arrival times).
+    pub fn submit(&mut self, reqs: &[Request]) {
+        let vocab = self.backend.spec().vocab;
+        for r in reqs {
+            self.metrics.on_admit(r.id, r.arrival, r.prompt_tokens);
+            self.pending.push(r.clone());
+        }
+        // Sorted descending so pop() yields earliest arrival.
+        self.pending
+            .sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+        let _ = vocab;
+    }
+
+    fn absorb_arrivals(&mut self) {
+        let vocab = self.backend.spec().vocab;
+        while let Some(r) = self.pending.last() {
+            if r.arrival <= self.clock {
+                let r = self.pending.pop().unwrap();
+                self.waiting.push_back(RunningSeq::from_request(&r, vocab));
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Run until all submitted requests complete. Returns the report.
+    pub fn run_to_completion(mut self) -> Result<EngineReport> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.finish())
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn finish(self) -> EngineReport {
+        EngineReport {
+            metrics: self.metrics.finish(self.clock),
+            peak_kv_usage: self.kv.peak_usage(),
+            preemptions: self.preemptions,
+            steps: self.steps,
+            prefill_time: self.prefill_time,
+            decode_time: self.decode_time,
+            recorded: self.recorded,
+            segments: self.segments,
+        }
+    }
+
+    /// One engine iteration. Returns false if idle with nothing pending.
+    pub fn step(&mut self) -> Result<bool> {
+        self.absorb_arrivals();
+        match self.scheduler.decide(&self.waiting, &self.running, &self.kv) {
+            ScheduleDecision::Prefill { queue_idx } => {
+                let batch_seqs = self.take_waiting(&queue_idx)?;
+                self.run_prefill(batch_seqs)?;
+                Ok(true)
+            }
+            ScheduleDecision::Decode => {
+                self.run_decode()?;
+                Ok(true)
+            }
+            ScheduleDecision::Mixed { queue_idx, .. } => {
+                let batch_seqs = self.take_waiting(&queue_idx)?;
+                self.run_mixed(batch_seqs)?;
+                Ok(true)
+            }
+            ScheduleDecision::Idle => {
+                // Jump to the next arrival, if any.
+                if let Some(r) = self.pending.last() {
+                    self.clock = self.clock.max(r.arrival);
+                    self.absorb_arrivals();
+                    return Ok(true);
+                }
+                Ok(false)
+            }
+        }
+    }
+
+    fn take_waiting(&mut self, queue_idx: &[usize]) -> Result<Vec<RunningSeq>> {
+        // Indices are an FCFS prefix by scheduler construction.
+        debug_assert!(queue_idx.windows(2).all(|w| w[1] == w[0] + 1));
+        debug_assert_eq!(queue_idx.first().copied().unwrap_or(0), 0);
+        let mut out = Vec::with_capacity(queue_idx.len());
+        for _ in queue_idx {
+            out.push(self.waiting.pop_front().expect("scheduler gave bad index"));
+        }
+        Ok(out)
+    }
+
+    /// Build the prefill batch entries and admit sequences into the KV
+    /// cache. Infallible given the scheduler checked capacity.
+    fn admit_and_entries(&mut self, seqs: &[RunningSeq]) -> Result<Vec<SeqBatchEntry>> {
+        let tables = self.backend.needs_tables();
+        let mut entries = Vec::with_capacity(seqs.len());
+        for s in seqs {
+            let len = s.prefill_len();
+            self.kv.admit(s.id, len)?;
+            let (table, slot_mapping) = if tables {
+                (
+                    self.kv.block_table(s.id).unwrap().to_vec(),
+                    (0..len)
+                        .map(|p| self.kv.slot_for(s.id, p).unwrap())
+                        .collect(),
+                )
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            entries.push(SeqBatchEntry {
+                seq: s.id,
+                tokens: s.token_ids.clone(),
+                context_len: len,
+                block_table: table,
+                slot_mapping,
+            });
+        }
+        Ok(entries)
+    }
+
+    fn run_prefill(&mut self, mut seqs: Vec<RunningSeq>) -> Result<()> {
+        let entries = self.admit_and_entries(&seqs)?;
+        let batch = StepBatch { entries };
+        let out = self.exec_batched(&batch, Phase::Prefill)?;
+        self.after_step(&out, batch.len(), Phase::Prefill);
+        // First token of each sequence. Its KV slot is reserved lazily by
+        // ensure_decode_capacity before the step that feeds it.
+        for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
+            s.state = RequestState::Running;
+            s.push_token(tok);
+            self.metrics.on_token(s.id, self.clock);
+        }
+        self.retire_or_keep(seqs);
+        Ok(())
+    }
+
+    fn decode_entries(&self) -> Vec<SeqBatchEntry> {
+        // The simulator only consumes context lengths; skip the block
+        // table / slot clones for it (§Perf L3).
+        let tables = self.backend.needs_tables();
+        self.running
+            .iter()
+            .map(|s| {
+                let ctx = s.context_len();
+                let pos = ctx - 1; // slot of the token fed this step
+                SeqBatchEntry {
+                    seq: s.id,
+                    tokens: vec![*s.token_ids.last().unwrap()],
+                    context_len: ctx,
+                    block_table: if tables {
+                        self.kv.block_table(s.id).unwrap().to_vec()
+                    } else {
+                        Vec::new()
+                    },
+                    slot_mapping: if tables {
+                        vec![self.kv.slot_for(s.id, pos).unwrap()]
+                    } else {
+                        Vec::new()
+                    },
+                }
+            })
+            .collect()
+    }
+
+    fn run_decode(&mut self) -> Result<()> {
+        // Reserve the *next* token's block for every running sequence,
+        // preempting the newest arrivals if the pool runs dry (vLLM's
+        // recompute policy).
+        self.ensure_decode_capacity();
+        if self.running.is_empty() {
+            return Ok(());
+        }
+        let batch = StepBatch {
+            entries: self.decode_entries(),
+        };
+        let out = self.exec_batched(&batch, Phase::Decode)?;
+        self.after_step(&out, batch.len(), Phase::Decode);
+        let mut seqs = std::mem::take(&mut self.running);
+        for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
+            s.push_token(tok);
+            self.metrics.on_token(s.id, self.clock);
+        }
+        self.retire_or_keep(seqs);
+        Ok(())
+    }
+
+    fn run_mixed(&mut self, mut pre_seqs: Vec<RunningSeq>) -> Result<()> {
+        self.ensure_decode_capacity();
+        let pre_entries = self.admit_and_entries(&pre_seqs)?;
+        let pre = StepBatch {
+            entries: pre_entries,
+        };
+        let dec = StepBatch {
+            entries: self.decode_entries(),
+        };
+        let out = self.backend.mixed(&pre, &dec)?;
+        self.after_step(&out, pre.len() + dec.len(), Phase::Mixed);
+        // Convention: next_tokens lists decodes first, then prefills.
+        let mut seqs = std::mem::take(&mut self.running);
+        for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
+            s.push_token(tok);
+            self.metrics.on_token(s.id, self.clock);
+        }
+        for (s, &tok) in pre_seqs.iter_mut().zip(&out.next_tokens[dec.len()..]) {
+            s.state = RequestState::Running;
+            s.push_token(tok);
+            self.metrics.on_token(s.id, self.clock);
+        }
+        self.retire_or_keep(seqs);
+        self.retire_or_keep(pre_seqs);
+        Ok(())
+    }
+
+    /// Bring every running sequence's KV reservation up to its context
+    /// length (the token generated last step needs a slot this step),
+    /// preempting the newest arrivals when the pool runs dry (vLLM's
+    /// recompute policy). Sequences that hit the per-sequence block cap
+    /// are force-finished (context-window exhaustion).
+    fn ensure_decode_capacity(&mut self) {
+        use crate::kvcache::manager::KvError;
+        let mut i = 0;
+        while i < self.running.len() {
+            let id = self.running[i].id;
+            let need = self.running[i].context_len();
+            let mut force_finish = false;
+            loop {
+                let have = match self.kv.tokens_of(id) {
+                    Some(h) => h,
+                    None => break, // preempted below
+                };
+                if have >= need {
+                    break;
+                }
+                match self.kv.append_token(id) {
+                    Ok(_) => {}
+                    Err(KvError::OutOfBlocks { .. }) => {
+                        if !self.preempt_newest_except(id) {
+                            // Nothing left to evict: truncate this one.
+                            force_finish = true;
+                            break;
+                        }
+                        // A victim (possibly at index < i) was removed;
+                        // restart the scan position conservatively.
+                        if i >= self.running.len() {
+                            i = self.running.len().saturating_sub(1);
+                        }
+                    }
+                    Err(_) => {
+                        force_finish = true; // context window exhausted
+                        break;
+                    }
+                }
+            }
+            if force_finish {
+                let s = &mut self.running[i];
+                s.target_output = s.generated; // is_finished() becomes true
+            }
+            // The current seq may itself have been preempted.
+            if self.running.get(i).map(|s| s.id) == Some(id) {
+                i += 1;
+            }
+        }
+        // Retire any force-finished sequences.
+        let seqs = std::mem::take(&mut self.running);
+        self.retire_or_keep(seqs);
+    }
+
+    /// Preempt the newest-arrived running sequence other than `keep`.
+    /// Returns false if there is no eligible victim.
+    fn preempt_newest_except(&mut self, keep: u64) -> bool {
+        let Some(pos) = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.id != keep)
+            .max_by(|a, b| a.1.arrival.partial_cmp(&b.1.arrival).unwrap())
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let mut victim = self.running.remove(pos);
+        self.kv.free(victim.id).ok();
+        victim.preempt();
+        self.preemptions += 1;
+        self.waiting.push_front(victim);
+        true
+    }
+
+    /// Split a batch into backend-sized chunks (PJRT buckets), summing
+    /// the outputs as one logical engine step.
+    fn exec_batched(&mut self, batch: &StepBatch, phase: Phase) -> Result<StepOutput> {
+        let cap = self.backend.max_batch().max(1);
+        if batch.len() <= cap {
+            return match phase {
+                Phase::Prefill => self.backend.prefill(batch),
+                _ => self.backend.decode(batch),
+            };
+        }
+        let mut next_tokens = Vec::with_capacity(batch.len());
+        let mut gpu_time = 0.0;
+        let mut cpu_gap = 0.0;
+        let mut sim = None;
+        for chunk in batch.entries.chunks(cap) {
+            let sub = StepBatch {
+                entries: chunk.to_vec(),
+            };
+            let out = match phase {
+                Phase::Prefill => self.backend.prefill(&sub)?,
+                _ => self.backend.decode(&sub)?,
+            };
+            next_tokens.extend(out.next_tokens);
+            gpu_time += out.gpu_time;
+            cpu_gap += out.cpu_gap;
+            sim = out.sim.or(sim);
+        }
+        Ok(StepOutput {
+            next_tokens,
+            gpu_time,
+            cpu_gap,
+            sim,
+        })
+    }
+
+    fn after_step(&mut self, out: &StepOutput, batch: usize, phase: Phase) {
+        self.clock += out.cpu_gap + out.gpu_time;
+        self.steps += 1;
+        match phase {
+            Phase::Prefill => self.prefill_time += out.cpu_gap + out.gpu_time,
+            _ => self.decode_time += out.cpu_gap + out.gpu_time,
+        }
+        self.metrics
+            .on_step(self.clock, batch, out.cpu_gap, out.gpu_time);
+        let demand = out
+            .sim
+            .as_ref()
+            .map(|s| {
+                s.mean_dram_read_util()
+                    + s.kernels
+                        .iter()
+                        .map(|k| k.dram_write_util * k.duration)
+                        .sum::<f64>()
+                        / s.gpu_time.max(1e-12)
+            })
+            .unwrap_or(0.5);
+        self.segments.push(Segment::Cpu {
+            duration: out.cpu_gap,
+        });
+        self.segments.push(Segment::Gpu {
+            duration: out.gpu_time,
+            dram_demand: demand.min(1.0),
+        });
+        if self.cfg.record_steps {
+            if let Some(sim) = &out.sim {
+                self.recorded.push(sim.clone());
+            }
+        }
+    }
+
+    fn retire_or_keep(&mut self, seqs: Vec<RunningSeq>) {
+        for mut s in seqs {
+            if s.is_finished() {
+                s.state = RequestState::Finished;
+                self.kv.free(s.id).ok();
+                self.finished.push(FinishedSeq {
+                    id: s.id,
+                    prompt_tokens: s.prompt_tokens,
+                    generated: s.generated,
+                    token_ids: s.token_ids,
+                    finished_at: self.clock,
+                });
+            } else {
+                self.running.push(s);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prefill,
+    Decode,
+    Mixed,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::gpusim::GpuSpec;
+    use crate::models::spec::{AttentionBackendKind, ModelSpec};
+    use crate::workload::{generate, WorkloadConfig};
+
+    fn engine(max_seqs: usize, kv_blocks: usize) -> Engine<SimBackend> {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        Engine::new(backend, EngineConfig::new(max_seqs, kv_blocks, 16))
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut e = engine(8, 4096);
+        e.submit(&generate(&WorkloadConfig::offline(20, 64, 32)));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.num_requests, 20);
+        assert_eq!(report.metrics.completed, 20);
+        assert_eq!(report.metrics.total_output_tokens, 20 * 32);
+        assert!(report.metrics.makespan > 0.0);
+        assert!(report.steps > 32); // at least one decode step per token
+    }
+
+    #[test]
+    fn kv_blocks_fully_released_at_end() {
+        let mut e = engine(4, 1024);
+        e.submit(&generate(&WorkloadConfig::offline(10, 50, 20)));
+        while e.has_work() {
+            e.step().unwrap();
+        }
+        assert_eq!(e.kv().allocator().allocated_blocks(), 0);
+        assert!(e.kv().peak_usage() > 0.0);
+    }
+
+    #[test]
+    fn respects_max_num_seqs() {
+        let mut e = engine(2, 4096);
+        e.submit(&generate(&WorkloadConfig::offline(10, 64, 16)));
+        while e.has_work() {
+            e.step().unwrap();
+            assert!(e.running_count() <= 2);
+        }
+    }
+
+    #[test]
+    fn preempts_and_recovers_when_kv_tight() {
+        // 64 usable blocks; 8 seqs x (50 prompt + 100 out) = 150 tokens
+        // -> 10 blocks each at steady state; only ~6 fit.
+        let mut e = engine(8, 65);
+        e.submit(&generate(&WorkloadConfig::offline(8, 50, 100)));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.completed, 8);
+        assert!(report.preemptions > 0, "expected KV pressure");
+    }
+
+    #[test]
+    fn poisson_arrivals_advance_clock() {
+        let mut e = engine(8, 4096);
+        let cfg = WorkloadConfig {
+            num_requests: 5,
+            arrivals: crate::workload::ArrivalPattern::Poisson { rate: 2.0 },
+            ..WorkloadConfig::offline(5, 32, 8)
+        };
+        e.submit(&generate(&cfg));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.completed, 5);
+        // Makespan at least as long as the last arrival.
+        assert!(report.metrics.makespan >= 1.0);
+    }
+
+    #[test]
+    fn throughput_knee_appears_across_batch_sizes() {
+        // The paper's Fig 2 shape out of the full engine: throughput
+        // rises steeply at small batch and flattens at large batch.
+        let tput = |max_seqs: usize| {
+            let mut e = engine(max_seqs, 32 * 1024);
+            e.submit(&generate(&WorkloadConfig::offline(
+                3 * max_seqs.max(4),
+                161,
+                64,
+            )));
+            e.run_to_completion().unwrap().metrics.throughput_tps
+        };
+        let t1 = tput(1);
+        let t32 = tput(32);
+        let t256 = tput(256);
+        assert!(t32 > 5.0 * t1, "t1={t1} t32={t32}");
+        assert!(t256 < 4.0 * t32, "t32={t32} t256={t256} (plateau)");
+    }
+
+    #[test]
+    fn chunked_prefill_works_end_to_end() {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(16, 4096, 16);
+        cfg.policy = SchedulerPolicy::ChunkedPrefill;
+        let mut e = Engine::new(backend, cfg);
+        e.submit(&generate(&WorkloadConfig::offline(24, 100, 20)));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.completed, 24);
+    }
+
+    #[test]
+    fn segments_alternate_cpu_gpu() {
+        let mut e = engine(4, 2048);
+        e.submit(&generate(&WorkloadConfig::offline(4, 32, 8)));
+        let report = e.run_to_completion().unwrap();
+        assert!(!report.segments.is_empty());
+        for pair in report.segments.chunks(2) {
+            assert!(matches!(pair[0], Segment::Cpu { .. }));
+            if pair.len() > 1 {
+                assert!(matches!(pair[1], Segment::Gpu { .. }));
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 serving coordinator: the vLLM-like engine the paper instruments.
+//!
+//! - [`request`]  — request lifecycle and per-sequence state.
+//! - [`scheduler`] — continuous-batching policy (prefill-priority like
+//!   vLLM's default, plus Sarathi-style chunked prefill), admission
+//!   control against the KV cache, preemption-by-recompute.
+//! - [`engine`]   — the step loop driving a [`Backend`](crate::backend::Backend):
+//!   builds batches (block tables / slot mappings), advances the clock,
+//!   records metrics and (when simulating) the kernel timeline.
+//! - [`offline`]  — the paper's §V offline mode: fixed-length requests,
+//!   everything at t=0, direct step calls.
+//! - [`router`]   — request routing across engine replicas (§VI-B).
+//! - [`server`]   — online mode: JSON-lines-over-TCP client/server
+//!   (std::net + threads; tokio is outside the offline vendor set).
+
+pub mod engine;
+pub mod offline;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig, EngineReport};
+pub use request::{RequestState, RunningSeq};
+pub use scheduler::{ScheduleDecision, Scheduler, SchedulerPolicy};

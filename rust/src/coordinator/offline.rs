@@ -1,0 +1,150 @@
+//! Offline mode (paper §IV/§V): fixed-length synthetic requests, all
+//! arriving at t=0, executed by direct step calls — the setup every
+//! GPU-profiling experiment uses (161 in / 338 out, the ShareGPT means).
+
+use anyhow::Result;
+
+use crate::backend::SimBackend;
+use crate::coordinator::engine::{Engine, EngineConfig, EngineReport};
+use crate::coordinator::scheduler::SchedulerPolicy;
+use crate::gpusim::GpuSpec;
+use crate::kvcache;
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+use crate::workload::{generate, WorkloadConfig};
+
+/// Configuration of one offline simulated run.
+#[derive(Debug, Clone)]
+pub struct OfflineConfig {
+    pub gpu: GpuSpec,
+    pub model: ModelSpec,
+    pub attention: AttentionBackendKind,
+    /// Max batch size knob (vLLM `max_num_seqs`).
+    pub max_num_seqs: usize,
+    /// Memory fraction this engine may use (1.0 = the whole 90% budget;
+    /// BCA/replication pass smaller fractions).
+    pub mem_fraction: f64,
+    pub num_requests: usize,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub chunked_prefill: bool,
+    pub record_steps: bool,
+    pub block_size: usize,
+}
+
+impl OfflineConfig {
+    pub fn new(model: ModelSpec, max_num_seqs: usize) -> Self {
+        Self {
+            gpu: GpuSpec::h100_64g(),
+            model,
+            attention: AttentionBackendKind::XFormers,
+            max_num_seqs,
+            mem_fraction: 1.0,
+            num_requests: 2 * max_num_seqs.max(8),
+            input_len: crate::workload::SHAREGPT_MEAN_INPUT,
+            output_len: crate::workload::SHAREGPT_MEAN_OUTPUT,
+            chunked_prefill: false,
+            record_steps: false,
+            block_size: 16,
+        }
+    }
+
+    pub fn build_engine(&self) -> Engine<SimBackend> {
+        let kv_blocks = kvcache::capacity_blocks(
+            &self.gpu,
+            &self.model,
+            self.block_size,
+            self.mem_fraction,
+        )
+        .max(2);
+        let backend = SimBackend::new(self.gpu.clone(), self.model.clone(), self.attention);
+        let mut cfg = EngineConfig::new(self.max_num_seqs, kv_blocks + 1, self.block_size);
+        cfg.max_blocks_per_seq = (self.model.max_seq + self.block_size - 1) / self.block_size;
+        cfg.record_steps = self.record_steps;
+        if self.chunked_prefill {
+            cfg.policy = SchedulerPolicy::ChunkedPrefill;
+        }
+        Engine::new(backend, cfg)
+    }
+
+    /// Run the configured workload to completion.
+    pub fn run(&self) -> Result<EngineReport> {
+        let mut engine = self.build_engine();
+        engine.submit(&generate(&WorkloadConfig::offline(
+            self.num_requests,
+            self.input_len,
+            self.output_len,
+        )));
+        engine.run_to_completion()
+    }
+
+    /// Run the paper's *online-mode* workload (ShareGPT-like lengths)
+    /// through the same engine — used by Figs 2/3 and Table IV.
+    pub fn run_sharegpt(&self, num_requests: usize, seed: u64) -> Result<EngineReport> {
+        let mut engine = self.build_engine();
+        engine.submit(&generate(&WorkloadConfig::sharegpt(num_requests, seed)));
+        engine.run_to_completion()
+    }
+}
+
+/// Sweep `max_num_seqs` over `batches`, returning (batch, report) —
+/// the x-axis loop behind Figs 2/3/10.
+pub fn sweep_batch_sizes(
+    base: &OfflineConfig,
+    batches: &[usize],
+    sharegpt: bool,
+    num_requests: usize,
+) -> Result<Vec<(usize, EngineReport)>> {
+    let mut out = Vec::with_capacity(batches.len());
+    for &b in batches {
+        let mut cfg = base.clone();
+        cfg.max_num_seqs = b;
+        cfg.num_requests = num_requests;
+        let report = if sharegpt {
+            cfg.run_sharegpt(num_requests, 0)?
+        } else {
+            cfg.run()?
+        };
+        out.push((b, report));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_run_completes_and_reports() {
+        let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+        cfg.num_requests = 32;
+        cfg.input_len = 64;
+        cfg.output_len = 32;
+        let r = cfg.run().unwrap();
+        assert_eq!(r.metrics.completed, 32);
+        assert!(r.decode_time > r.prefill_time);
+        assert!(r.peak_kv_usage > 0.0 && r.peak_kv_usage <= 1.0);
+    }
+
+    #[test]
+    fn mem_fraction_limits_kv_and_throughput() {
+        let mut full = OfflineConfig::new(ModelSpec::opt_1_3b(), 256);
+        full.num_requests = 256;
+        full.output_len = 16;
+        let mut tight = full.clone();
+        tight.mem_fraction = 0.08;
+        let rf = full.run().unwrap();
+        let rt = tight.run().unwrap();
+        // The tight engine has far fewer blocks -> higher peak usage and
+        // (with preemptions) no better throughput.
+        assert!(rt.peak_kv_usage >= rf.peak_kv_usage);
+        assert!(rt.metrics.throughput_tps <= rf.metrics.throughput_tps * 1.05);
+    }
+
+    #[test]
+    fn sharegpt_mode_runs() {
+        let cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 32);
+        let r = cfg.run_sharegpt(64, 1).unwrap();
+        assert_eq!(r.metrics.completed, 64);
+        assert!(r.metrics.avg_batch > 1.0);
+    }
+}

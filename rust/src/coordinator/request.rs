@@ -1,0 +1,132 @@
+//! Request lifecycle: waiting -> running (prefilled) -> finished, with
+//! preemption back to waiting (recompute policy, as in vLLM).
+
+use crate::kvcache::SeqId;
+use crate::workload::Request;
+
+/// Where a request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Waiting,
+    Running,
+    Finished,
+    Preempted,
+}
+
+/// A sequence admitted to the engine.
+#[derive(Debug, Clone)]
+pub struct RunningSeq {
+    pub id: SeqId,
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    pub target_output: usize,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Full token-id history (prompt + generated) — needed by the PJRT
+    /// backend; the simulator ignores the values.
+    pub token_ids: Vec<i32>,
+    pub state: RequestState,
+    /// Times the request was preempted (recompute restarts the prompt).
+    pub preemptions: u32,
+}
+
+impl RunningSeq {
+    /// Deterministic synthetic prompt ids: hash(id, position) % vocab.
+    /// Real deployments would take these from the tokenizer; content is
+    /// irrelevant to every experiment in the paper.
+    pub fn from_request(req: &Request, vocab: usize) -> Self {
+        let mut token_ids = Vec::with_capacity(req.prompt_tokens);
+        for pos in 0..req.prompt_tokens {
+            let h = req
+                .id
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(pos as u64)
+                .wrapping_mul(0xBF58476D1CE4E5B9);
+            // Keep 0 free for padding.
+            token_ids.push((1 + (h % (vocab as u64 - 1))) as i32);
+        }
+        Self {
+            id: req.id,
+            arrival: req.arrival,
+            prompt_tokens: req.prompt_tokens,
+            target_output: req.output_tokens,
+            generated: 0,
+            token_ids,
+            state: RequestState::Waiting,
+            preemptions: 0,
+        }
+    }
+
+    /// Context length after prefill + generation so far.
+    pub fn context_len(&self) -> usize {
+        self.prompt_tokens + self.generated
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.generated >= self.target_output
+    }
+
+    pub fn push_token(&mut self, tok: i32) {
+        self.token_ids.push(tok);
+        self.generated += 1;
+    }
+
+    /// Reset to the waiting state for recompute-preemption: generated
+    /// tokens are *kept* in token_ids (they re-prefill as prompt).
+    pub fn preempt(&mut self) {
+        self.state = RequestState::Preempted;
+        self.preemptions += 1;
+    }
+
+    /// Effective prompt length for (re-)prefill.
+    pub fn prefill_len(&self) -> usize {
+        self.token_ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, p: usize, o: usize) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: p,
+            output_tokens: o,
+        }
+    }
+
+    #[test]
+    fn synthetic_prompt_is_deterministic_and_in_vocab() {
+        let a = RunningSeq::from_request(&req(3, 50, 10), 8192);
+        let b = RunningSeq::from_request(&req(3, 50, 10), 8192);
+        assert_eq!(a.token_ids, b.token_ids);
+        assert!(a.token_ids.iter().all(|&t| t >= 1 && (t as usize) < 8192));
+        let c = RunningSeq::from_request(&req(4, 50, 10), 8192);
+        assert_ne!(a.token_ids, c.token_ids);
+    }
+
+    #[test]
+    fn lifecycle_counters() {
+        let mut s = RunningSeq::from_request(&req(1, 5, 3), 100);
+        assert_eq!(s.context_len(), 5);
+        s.push_token(7);
+        s.push_token(8);
+        assert_eq!(s.context_len(), 7);
+        assert!(!s.is_finished());
+        s.push_token(9);
+        assert!(s.is_finished());
+        assert_eq!(s.token_ids.len(), 8);
+    }
+
+    #[test]
+    fn preemption_keeps_generated_tokens_for_recompute() {
+        let mut s = RunningSeq::from_request(&req(1, 5, 10), 100);
+        s.push_token(42);
+        s.preempt();
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.prefill_len(), 6); // prompt + 1 generated
+        assert_eq!(s.generated, 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Request routing across engine replicas (paper §VI-B).
+//!
+//! The replication study instantiates N identical engines on one GPU and
+//! distributes incoming requests among them. The paper splits requests
+//! evenly; we provide round-robin (its deterministic equivalent),
+//! least-loaded (by queued tokens), and hash routing for
+//! session-affinity-style workloads.
+
+use crate::workload::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Route to the replica with the fewest outstanding tokens.
+    LeastLoaded,
+    /// Stable hash of the request id.
+    Hash,
+}
+
+/// Stateful router over `n` replicas.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    n: usize,
+    next: usize,
+    /// Outstanding token load per replica (LeastLoaded bookkeeping).
+    load: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, n: usize) -> Self {
+        assert!(n >= 1);
+        Self {
+            policy,
+            n,
+            next: 0,
+            load: vec![0; n],
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.n
+    }
+
+    /// Pick the replica for `req`.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.next;
+                self.next = (self.next + 1) % self.n;
+                r
+            }
+            RoutePolicy::LeastLoaded => {
+                let (r, _) = self
+                    .load
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &l)| l)
+                    .unwrap();
+                r
+            }
+            RoutePolicy::Hash => {
+                (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.n
+            }
+        };
+        self.load[r] += req.total_tokens() as u64;
+        r
+    }
+
+    /// Report completion so LeastLoaded stays accurate.
+    pub fn complete(&mut self, replica: usize, req: &Request) {
+        self.load[replica] = self.load[replica].saturating_sub(req.total_tokens() as u64);
+    }
+
+    /// Partition a whole trace into per-replica traces (the offline
+    /// replication experiments route everything up front).
+    pub fn partition(&mut self, reqs: &[Request]) -> Vec<Vec<Request>> {
+        let mut out = vec![Vec::new(); self.n];
+        for r in reqs {
+            let i = self.route(r);
+            out[i].push(r.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, p: usize, o: usize) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: p,
+            output_tokens: o,
+        }
+    }
+
+    #[test]
+    fn round_robin_is_even() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 4);
+        let reqs: Vec<_> = (0..100).map(|i| req(i, 10, 10)).collect();
+        let parts = r.partition(&reqs);
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            assert_eq!(p.len(), 25);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_token_load() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        // One giant request, then many small ones: smalls should pile on
+        // the other replica until loads equalize.
+        let giant = req(0, 5000, 1000);
+        let g = r.route(&giant);
+        let mut counts = [0usize; 2];
+        for i in 1..20 {
+            let x = req(i, 100, 100);
+            counts[r.route(&x)] += 1;
+        }
+        assert!(counts[1 - g] > counts[g]);
+    }
+
+    #[test]
+    fn hash_routing_is_stable() {
+        let mut r1 = Router::new(RoutePolicy::Hash, 3);
+        let mut r2 = Router::new(RoutePolicy::Hash, 3);
+        for i in 0..50 {
+            let x = req(i, 10, 10);
+            assert_eq!(r1.route(&x), r2.route(&x));
+        }
+    }
+
+    #[test]
+    fn complete_reduces_load() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let a = req(0, 100, 100);
+        let ra = r.route(&a);
+        r.complete(ra, &a);
+        assert_eq!(r.load[ra], 0);
+    }
+}

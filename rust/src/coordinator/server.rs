@@ -1,0 +1,306 @@
+//! Online mode: a JSON-lines-over-TCP serving front end (paper §IV's
+//! client-server architecture).
+//!
+//! The offline vendor set has no tokio, so this is a std::net server:
+//! one acceptor, a thread per connection, and a single engine worker
+//! thread that continuously batches whatever has arrived — which is
+//! exactly the continuous-batching semantics the paper's online mode
+//! exercises.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"op":"generate", "prompt_len":32, "max_tokens":16}
+//!   <- {"id":7, "tokens":[...], "prompt_len":32, "queue_s":..., "e2e_s":...}
+//!   -> {"op":"stats"}
+//!   <- {"served":123, "steps":456, "kv_usage":0.41}
+//!   -> {"op":"shutdown"}   (stops the server after in-flight work)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::coordinator::engine::Engine;
+use crate::util::json::Json;
+use crate::workload::Request;
+
+struct Submission {
+    req: Request,
+    reply: Sender<Json>,
+    submitted_wall: std::time::Instant,
+}
+
+/// Shared server state.
+struct Shared {
+    tx: Sender<Submission>,
+    next_id: AtomicU64,
+    served: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// Serve `engine` on `addr` until a shutdown op arrives.
+/// Returns the number of requests served.
+///
+/// The engine runs on the *calling* thread (the PJRT backend holds
+/// non-Send FFI handles); a spawned acceptor thread owns the listener
+/// and hands submissions over an mpsc channel.
+pub fn serve<B: Backend>(engine: Engine<B>, addr: &str) -> Result<u64> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = channel::<Submission>();
+    let shared = Arc::new(Shared {
+        tx,
+        next_id: AtomicU64::new(1),
+        served: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+
+    let acceptor_shared = shared.clone();
+    let acceptor = std::thread::spawn(move || accept_loop(listener, acceptor_shared));
+
+    // Engine worker: continuous batching over whatever has arrived.
+    let served = engine_worker(engine, rx, shared);
+    acceptor.join().expect("acceptor panicked")?;
+    Ok(served)
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Result<()> {
+    let mut conns = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let s = shared.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, s);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn engine_worker<B: Backend>(
+    mut engine: Engine<B>,
+    rx: Receiver<Submission>,
+    shared: Arc<Shared>,
+) -> u64 {
+    use std::collections::HashMap;
+    let mut replies: HashMap<u64, (Sender<Json>, std::time::Instant, f64)> = HashMap::new();
+    loop {
+        // Drain everything pending; block briefly when idle.
+        let mut got = false;
+        loop {
+            match rx.try_recv() {
+                Ok(sub) => {
+                    let mut req = sub.req.clone();
+                    req.arrival = engine.now();
+                    replies.insert(req.id, (sub.reply, sub.submitted_wall, engine.now()));
+                    engine.submit(&[req]);
+                    got = true;
+                }
+                Err(_) => break,
+            }
+        }
+        if !engine.has_work() && !got {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(sub) => {
+                    let mut req = sub.req.clone();
+                    req.arrival = engine.now();
+                    replies.insert(req.id, (sub.reply, sub.submitted_wall, engine.now()));
+                    engine.submit(&[req]);
+                }
+                Err(_) => continue,
+            }
+        }
+        if engine.has_work() {
+            if engine.step().is_err() {
+                break;
+            }
+        }
+        for fin in engine.take_finished() {
+            if let Some((reply, wall0, t0)) = replies.remove(&fin.id) {
+                shared.served.fetch_add(1, Ordering::SeqCst);
+                let gen: Vec<Json> = fin.token_ids[fin.prompt_tokens..]
+                    .iter()
+                    .map(|&t| Json::num(t as f64))
+                    .collect();
+                let msg = Json::obj(vec![
+                    ("id", Json::num(fin.id as f64)),
+                    ("prompt_len", Json::num(fin.prompt_tokens as f64)),
+                    ("tokens", Json::arr(gen)),
+                    ("e2e_s", Json::num(fin.finished_at - t0)),
+                    ("wall_s", Json::num(wall0.elapsed().as_secs_f64())),
+                ]);
+                let _ = reply.send(msg);
+            }
+        }
+    }
+    shared.served.load(Ordering::SeqCst)
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(format!("bad json: {e}")))])
+                )?;
+                continue;
+            }
+        };
+        match msg.get("op").and_then(|o| o.as_str()) {
+            Some("generate") => {
+                let prompt_len = msg
+                    .get("prompt_len")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16)
+                    .max(1);
+                let max_tokens = msg
+                    .get("max_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16)
+                    .max(1);
+                let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+                let (reply_tx, reply_rx) = channel();
+                shared
+                    .tx
+                    .send(Submission {
+                        req: Request {
+                            id,
+                            arrival: 0.0,
+                            prompt_tokens: prompt_len,
+                            output_tokens: max_tokens,
+                        },
+                        reply: reply_tx,
+                        submitted_wall: std::time::Instant::now(),
+                    })
+                    .ok();
+                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                    Ok(resp) => writeln!(writer, "{resp}")?,
+                    Err(_) => writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("error", Json::str("timeout"))])
+                    )?,
+                }
+            }
+            Some("stats") => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![(
+                        "served",
+                        Json::num(shared.served.load(Ordering::SeqCst) as f64)
+                    )])
+                )?;
+            }
+            Some("shutdown") => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
+                break;
+            }
+            _ => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str("unknown op"))])
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal client for tests/examples: send one generate op, wait for
+/// the response line.
+pub fn client_generate(addr: &str, prompt_len: usize, max_tokens: usize) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(
+        stream,
+        "{}",
+        Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt_len", Json::num(prompt_len as f64)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+        ])
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(line.trim())?)
+}
+
+pub fn client_shutdown(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::gpusim::GpuSpec;
+    use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+    #[test]
+    fn serves_generate_requests_over_tcp() {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let engine = Engine::new(backend, EngineConfig::new(8, 4096, 16));
+        let addr = "127.0.0.1:47391";
+        let server = std::thread::spawn({
+            let addr = addr.to_string();
+            move || serve(engine, &addr).unwrap()
+        });
+        // Wait for the listener.
+        std::thread::sleep(Duration::from_millis(100));
+
+        let resp = client_generate(addr, 32, 8).unwrap();
+        assert_eq!(resp.get("prompt_len").unwrap().as_usize(), Some(32));
+        assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 8);
+
+        // Concurrent clients batch together.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || client_generate(addr, 16, 4).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+        }
+
+        client_shutdown(addr).unwrap();
+        let served = server.join().unwrap();
+        assert!(served >= 5, "served {served}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Fig 10 (throughput-latency trade-off + efficiency threshold) and
+//! Fig 11 (memory plans) — the BCA evaluation.
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::bca::{self, BcaProfile, Constraints};
+use crate::coordinator::offline::OfflineConfig;
+use crate::gpusim::GpuSpec;
+use crate::models::spec::ModelSpec;
+
+pub fn profile_grid(opts: &FigOpts) -> Vec<usize> {
+    if opts.quick {
+        vec![1, 16, 32, 64, 96, 256, 512]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256, 384, 512]
+    }
+}
+
+/// Fig 10: (left) throughput vs ITL with B_opt under the strict SLO;
+/// (right) throughput gain vs ideal linear scaling with epsilon = 0.1.
+pub fn fig10(opts: &FigOpts) -> Result<Vec<Table>> {
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 1);
+    let profile = BcaProfile::measure(&base, &profile_grid(opts), opts.requests())?;
+    let strict = Constraints::strict(&profile);
+    let rec = bca::recommend(&profile, strict);
+    let t1 = profile.t1();
+    let mut t = Table::new(
+        "fig10_tradeoff",
+        "Fig. 10: throughput-latency trade-off and efficiency (OPT-1.3B, strict SLO, eps=0.1)",
+        &[
+            "max_batch",
+            "avg_batch",
+            "throughput_tps",
+            "itl_ms",
+            "efficiency_T_over_BT1",
+            "is_b_opt",
+            "slo_itl_ms",
+            "epsilon",
+        ],
+    );
+    for p in &profile.points {
+        let eff = p.throughput_tps / (p.avg_batch.max(1.0) * t1);
+        t.push_row(vec![
+            p.max_batch.to_string(),
+            format!("{:.1}", p.avg_batch),
+            format!("{:.0}", p.throughput_tps),
+            format!("{:.2}", p.itl * 1e3),
+            format!("{:.3}", eff),
+            (rec.as_ref().map(|r| r.b_opt) == Some(p.max_batch)).to_string(),
+            format!("{:.2}", strict.slo_itl * 1e3),
+            format!("{}", strict.epsilon),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Fig 11: memory usage distribution per model under B_opt (strict SLO,
+/// eps = 0.1): weights / KV used / extra (freed) KV / other.
+pub fn fig11(opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let mut t = Table::new(
+        "fig11_memory_plan",
+        "Fig. 11: memory distribution under B_opt (strict SLO, eps=0.1), 64 GB GPU",
+        &[
+            "model",
+            "b_opt",
+            "weights_gb",
+            "kv_used_gb",
+            "kv_freed_gb",
+            "other_gb",
+            "freed_pct_of_total",
+        ],
+    );
+    for spec in ModelSpec::paper_models() {
+        let base = OfflineConfig::new(spec.clone(), 1);
+        let profile = BcaProfile::measure(&base, &profile_grid(opts), opts.requests())?;
+        let rec = bca::recommend(&profile, Constraints::strict(&profile));
+        let (b_opt, kv_usage) = match &rec {
+            Some(r) => (r.b_opt.to_string(), r.point.kv_usage),
+            // Llama-2-13B never reaches the plateau: MAX is optimal.
+            None => ("MAX".to_string(), 1.0),
+        };
+        // If B_opt == the largest grid point, the model needs all memory.
+        let kv_usage = if rec
+            .as_ref()
+            .map(|r| r.b_opt >= *profile_grid(opts).last().unwrap())
+            .unwrap_or(true)
+        {
+            1.0
+        } else {
+            kv_usage
+        };
+        let plan = bca::memory_plan(&gpu, &spec, kv_usage);
+        t.push_row(vec![
+            spec.name.clone(),
+            b_opt,
+            format!("{:.1}", plan.weights_gb),
+            format!("{:.1}", plan.kv_used_gb),
+            format!("{:.1}", plan.kv_freed_gb),
+            format!("{:.1}", plan.other_gb),
+            format!("{:.1}", 100.0 * plan.freed_frac()),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_marks_bopt_at_knee() {
+        let t = &fig10(&FigOpts::quick()).unwrap()[0];
+        let marked: Vec<usize> = t
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r[5] == "true")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(marked.len(), 1, "exactly one B_opt");
+        let i = marked[0];
+        let b_opt: f64 = t.rows[i][0].parse().unwrap();
+        assert!((32.0..=128.0).contains(&b_opt), "B_opt {b_opt}");
+        // Efficiency at B_opt above epsilon; beyond SLO excluded.
+        let eff: f64 = t.rows[i][4].parse().unwrap();
+        assert!(eff > 0.1);
+        let itl: f64 = t.rows[i][3].parse().unwrap();
+        let slo: f64 = t.rows[i][6].parse().unwrap();
+        assert!(itl <= slo);
+    }
+
+    #[test]
+    fn fig11_small_models_free_most_memory() {
+        let t = &fig11(&FigOpts::quick()).unwrap()[0];
+        assert_eq!(t.rows.len(), 4);
+        let freed: Vec<f64> = t.col_f64("freed_pct_of_total");
+        // Paper: OPT-1.3B frees ~63%, OPT-2.7B ~45%, Llama-2-7B ~10%,
+        // Llama-2-13B ~0%. Shape: monotone decreasing with model size.
+        assert!(freed[0] > 40.0, "{freed:?}");
+        assert!(freed[0] > freed[1]);
+        assert!(freed[1] > freed[2]);
+        assert!(freed[3] < 10.0, "{freed:?}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (DESIGN.md §5 maps artefact -> modules).
+//!
+//! `cargo run --release --bin figures -- --all [--quick] [--out results]`
+//! writes one CSV per artefact plus a combined markdown report; each
+//! `figN()`/`tableN()` function returns [`Table`]s so integration tests
+//! and benches can assert the shapes without touching the filesystem.
+
+pub mod bca_figs;
+pub mod phases;
+pub mod replication_figs;
+pub mod roofline_figs;
+pub mod serving;
+pub mod stalls;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A rendered result artefact: header + rows, exportable as CSV/markdown.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Artefact id, e.g. "fig2_opt-1.3b" or "table4".
+    pub name: String,
+    /// Human title ("Fig. 2: throughput/ITL vs batch size — OPT-1.3B").
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, headers: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            s,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        let _ = writeln!(s, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    /// Fetch a cell as f64 (tests use this to assert shapes).
+    pub fn cell_f64(&self, row: usize, col: &str) -> Option<f64> {
+        let ci = self.headers.iter().position(|h| h == col)?;
+        self.rows.get(row)?.get(ci)?.parse().ok()
+    }
+
+    pub fn col_f64(&self, col: &str) -> Vec<f64> {
+        let Some(ci) = self.headers.iter().position(|h| h == col) else {
+            return Vec::new();
+        };
+        self.rows
+            .iter()
+            .filter_map(|r| r.get(ci)?.parse().ok())
+            .collect()
+    }
+}
+
+/// Generation options.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    /// Reduced request counts / grids for CI and benches.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            seed: 0,
+        }
+    }
+}
+
+impl FigOpts {
+    pub fn quick() -> Self {
+        Self {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    /// Request count used by the serving sweeps (paper: 2000).
+    pub fn requests(&self) -> usize {
+        if self.quick {
+            200
+        } else {
+            2000
+        }
+    }
+
+    pub fn batch_grid(&self) -> Vec<usize> {
+        if self.quick {
+            vec![1, 8, 32, 96, 256, 512]
+        } else {
+            vec![1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256, 384, 512]
+        }
+    }
+}
+
+/// All artefact ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "table1", "table2", "table3", "table4",
+];
+
+/// Generate one artefact by id.
+pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
+    match id {
+        "fig1" => roofline_figs::fig1(opts),
+        "fig2" => serving::fig2(opts),
+        "fig3" => serving::fig3(opts),
+        "fig4" => phases::fig4(opts),
+        "fig5" => phases::fig5(opts),
+        "fig6" => phases::fig6(opts),
+        "fig7" => phases::fig7(opts),
+        "fig8" => stalls::fig8(opts),
+        "fig9" => stalls::fig9(opts),
+        "fig10" => bca_figs::fig10(opts),
+        "fig11" => bca_figs::fig11(opts),
+        "fig12" => serving::fig12(opts),
+        "fig13" => replication_figs::fig13(opts),
+        "table1" => phases::table1(opts),
+        "table2" => roofline_figs::table2(opts),
+        "table3" => stalls::table3(opts),
+        "table4" => replication_figs::table4(opts),
+        other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
+    }
+}
+
+/// Generate artefacts and write CSV + a combined markdown report.
+pub fn run_to_dir(ids: &[&str], opts: &FigOpts, out: &Path) -> Result<Vec<Table>> {
+    std::fs::create_dir_all(out).with_context(|| format!("mkdir {}", out.display()))?;
+    let mut all = Vec::new();
+    let mut report = String::from("# memgap — regenerated paper artefacts\n\n");
+    for id in ids {
+        eprintln!("[figures] generating {id} ...");
+        let tables = generate(id, opts)?;
+        for t in &tables {
+            let csv_path = out.join(format!("{}.csv", t.name));
+            std::fs::write(&csv_path, t.to_csv())?;
+            report.push_str(&t.to_markdown());
+            report.push('\n');
+        }
+        all.extend(tables);
+    }
+    std::fs::write(out.join("REPORT.md"), report)?;
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_csv_and_markdown() {
+        let mut t = Table::new("t", "Title", &["a", "b"]);
+        t.push_row(vec!["1".into(), "x,y".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("a,b"));
+        assert!(csv.contains("\"x,y\""));
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert_eq!(t.cell_f64(0, "a"), Some(1.0));
+        assert_eq!(t.col_f64("a"), vec![1.0]);
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(generate("fig99", &FigOpts::quick()).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Fig 13 (replication timelines) and Table IV (BCA + replication
+//! serving & GPU metrics) — the paper's headline system results.
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::bca::{self, BcaProfile, Constraints};
+use crate::coordinator::offline::OfflineConfig;
+use crate::gpusim::mps::SharePolicy;
+use crate::gpusim::GpuSpec;
+use crate::models::spec::ModelSpec;
+use crate::replication::run_replicated;
+use crate::workload::{generate, WorkloadConfig};
+
+/// Fig 13: decode-step timelines under (a) no replication, (b) 2
+/// replicas FCFS time-sharing, (c) 2 replicas MPS.
+pub fn fig13(opts: &FigOpts) -> Result<Vec<Table>> {
+    let spec = ModelSpec::opt_1_3b();
+    let base = OfflineConfig::new(spec, 96);
+    let n_req = if opts.quick { 96 } else { 384 };
+    let reqs = generate(&WorkloadConfig::offline(n_req, 161, 64));
+
+    let mut t = Table::new(
+        "fig13_replication_timeline",
+        "Fig. 13: decode timelines — 1 replica, 2x FCFS, 2x MPS (OPT-1.3B)",
+        &[
+            "config",
+            "replica",
+            "segment",
+            "start_ms",
+            "end_ms",
+            "slowdown",
+        ],
+    );
+    let mut summary = Table::new(
+        "fig13_summary",
+        "Fig. 13 summary: GPU idle (CPU) share and makespan per config",
+        &["config", "makespan_s", "gpu_idle_pct", "mean_dram_util_pct"],
+    );
+    for (label, n, policy) in [
+        ("1-replica", 1usize, SharePolicy::Mps),
+        ("2-fcfs", 2, SharePolicy::Fcfs),
+        ("2-mps", 2, SharePolicy::Mps),
+    ] {
+        let rep = run_replicated(&base, n, policy, &reqs, 1.0 / n as f64)?;
+        // First ~40 placements give the visual window the figure shows.
+        for p in rep.shared.placements.iter().take(40) {
+            t.push_row(vec![
+                label.to_string(),
+                p.replica.to_string(),
+                if p.is_gpu { "gpu" } else { "cpu" }.to_string(),
+                format!("{:.3}", p.start * 1e3),
+                format!("{:.3}", p.end * 1e3),
+                format!("{:.2}", p.slowdown),
+            ]);
+        }
+        summary.push_row(vec![
+            label.to_string(),
+            format!("{:.3}", rep.makespan),
+            format!("{:.1}", 100.0 * rep.cpu_time_frac),
+            format!("{:.1}", 100.0 * rep.mean_dram_util),
+        ]);
+    }
+    Ok(vec![t, summary])
+}
+
+/// One Table IV row.
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut Table,
+    model: &str,
+    config: &str,
+    replicas: usize,
+    tput_tpms: f64,
+    itl_ms: f64,
+    e2e_s: f64,
+    kv_pct: f64,
+    dram_pct: f64,
+    cpu_pct: f64,
+) {
+    t.push_row(vec![
+        model.to_string(),
+        config.to_string(),
+        replicas.to_string(),
+        format!("{:.2}", tput_tpms),
+        format!("{:.2}", itl_ms),
+        format!("{:.2}", e2e_s),
+        format!("{:.2}", kv_pct),
+        format!("{:.2}", dram_pct),
+        format!("{:.2}", cpu_pct),
+    ]);
+}
+
+/// Table IV: MAX vs MAX+chunked-prefill vs B_opt x {1..4} replicas for
+/// OPT-1.3B and OPT-2.7B under strict/relaxed SLOs.
+pub fn table4(opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    // Enough requests that even the MAX-batch config sees several full
+    // waves (the replicated runs split them 4 ways).
+    let n_req = opts.requests().max(800).min(2000);
+    let mut t = Table::new(
+        "table4_bca_replication",
+        "Table IV: serving + GPU metrics — MAX vs BCA B_opt with replication",
+        &[
+            "model",
+            "config",
+            "replicas",
+            "throughput_tok_per_ms",
+            "itl_ms",
+            "e2e_s",
+            "kv_usage_pct",
+            "dram_read_pct",
+            "cpu_time_pct",
+        ],
+    );
+
+    for spec in [ModelSpec::opt_1_3b(), ModelSpec::opt_2_7b()] {
+        let reqs = generate(&WorkloadConfig::sharegpt(n_req, opts.seed));
+        let base1 = OfflineConfig::new(spec.clone(), 1);
+        let profile = BcaProfile::measure(&base1, &super::bca_figs::profile_grid(opts), n_req)?;
+
+        // MAX batch, single instance (vLLM default allocation).
+        let bmax = super::roofline_figs::max_batch(&gpu, &spec);
+        for (cfg_name, chunked) in [("MAX", false), ("MAX+chunked-prefill", true)] {
+            let mut cfg = OfflineConfig::new(spec.clone(), bmax);
+            cfg.chunked_prefill = chunked;
+            let rep = run_replicated(&cfg, 1, SharePolicy::Mps, &reqs, 1.0)?;
+            push_row(
+                &mut t,
+                &spec.name,
+                cfg_name,
+                1,
+                rep.throughput_tps / 1e3,
+                rep.mean_itl * 1e3,
+                rep.mean_e2e,
+                100.0 * rep.kv_usage,
+                100.0 * rep.mean_dram_util,
+                100.0 * rep.cpu_time_frac,
+            );
+        }
+
+        // B_opt under strict and relaxed SLOs, replicated until memory
+        // is exhausted (paper: 4 replicas OPT-1.3B, 2 OPT-2.7B).
+        for (slo_name, constraints) in [
+            ("strict", Constraints::strict(&profile)),
+            ("relaxed", Constraints::relaxed(&profile)),
+        ] {
+            let Some(rec) = bca::recommend(&profile, constraints) else {
+                continue;
+            };
+            let plan = bca::memory_plan(&gpu, &spec, rec.point.kv_usage);
+            let frac = plan.engine_mem_fraction().max(0.05);
+            let max_replicas = ((1.0 / frac) as usize).clamp(1, 4);
+            let mut reps = vec![1];
+            if max_replicas >= 2 {
+                reps.push(2);
+            }
+            if max_replicas >= 4 {
+                reps.push(4);
+            }
+            for n in reps {
+                let cfg = OfflineConfig::new(spec.clone(), rec.b_opt);
+                let rep = run_replicated(&cfg, n, SharePolicy::Mps, &reqs, frac)?;
+                push_row(
+                    &mut t,
+                    &spec.name,
+                    &format!("B_opt={} ({slo_name} SLO)", rec.b_opt),
+                    n,
+                    rep.throughput_tps / 1e3,
+                    rep.mean_itl * 1e3,
+                    rep.mean_e2e,
+                    100.0 * rep.kv_usage * frac, // fraction of the whole pool
+                    100.0 * rep.mean_dram_util,
+                    100.0 * rep.cpu_time_frac,
+                );
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_mps_reduces_idle() {
+        let tables = fig13(&FigOpts::quick()).unwrap();
+        let s = &tables[1];
+        let idle: Vec<f64> = s.col_f64("gpu_idle_pct");
+        // 2 replicas (either policy) largely hide the CPU gaps.
+        assert!(idle[1] < idle[0], "{idle:?}");
+        assert!(idle[2] < idle[0], "{idle:?}");
+        // MPS finishes no later than FCFS (kernels overlap).
+        let makespan: Vec<f64> = s.col_f64("makespan_s");
+        assert!(makespan[2] <= makespan[1] + 1e-9, "{makespan:?}");
+        let dram: Vec<f64> = s.col_f64("mean_dram_util_pct");
+        assert!(dram[2] >= dram[0], "{dram:?}");
+    }
+
+    #[test]
+    fn table4_replication_beats_max() {
+        let t = &table4(&FigOpts::quick()).unwrap()[0];
+        // Find OPT-1.3B MAX and the best replicated B_opt row.
+        let rows: Vec<&Vec<String>> = t.rows.iter().filter(|r| r[0] == "OPT-1.3B").collect();
+        let max_tput: f64 = rows
+            .iter()
+            .find(|r| r[1] == "MAX")
+            .unwrap()[3]
+            .parse()
+            .unwrap();
+        let best_rep: f64 = rows
+            .iter()
+            .filter(|r| r[1].starts_with("B_opt") && r[2] != "1")
+            .map(|r| r[3].parse::<f64>().unwrap())
+            .fold(0.0, f64::max);
+        // Paper: +34% for OPT-1.3B; accept anything clearly above MAX.
+        assert!(
+            best_rep > 1.05 * max_tput,
+            "replicated {best_rep} vs MAX {max_tput}"
+        );
+        // Single-replica B_opt throughput is below MAX but ITL is much lower.
+        let bopt1 = rows
+            .iter()
+            .find(|r| r[1].starts_with("B_opt") && r[2] == "1")
+            .unwrap();
+        let bopt1_itl: f64 = bopt1[4].parse().unwrap();
+        let max_itl: f64 = rows
+            .iter()
+            .find(|r| r[1] == "MAX")
+            .unwrap()[4]
+            .parse()
+            .unwrap();
+        assert!(bopt1_itl < 0.6 * max_itl, "{bopt1_itl} vs {max_itl}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Fig 1 (performance vs arithmetic intensity) and Table II (achieved
+//! roofline values).
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::gpusim::{roofline, GpuSpec};
+use crate::kvcache;
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+use crate::workload::{SHAREGPT_MEAN_INPUT, SHAREGPT_MEAN_OUTPUT};
+
+/// Mean context of the "last decode step" the paper profiles.
+pub fn last_step_ctx() -> usize {
+    SHAREGPT_MEAN_INPUT + SHAREGPT_MEAN_OUTPUT
+}
+
+/// The MAX batch size for a model on the H100-64G (paper Table II rows).
+pub fn max_batch(gpu: &GpuSpec, spec: &ModelSpec) -> usize {
+    kvcache::max_batch_for(gpu, spec, last_step_ctx(), 16)
+}
+
+/// Fig 1: attention (xFormers + Flash) and matmul roofline points for
+/// OPT-1.3B at batch 1 and MAX, plus the hardware ceilings.
+pub fn fig1(_opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let spec = ModelSpec::opt_1_3b();
+    let bmax = max_batch(&gpu, &spec);
+    let ctx = last_step_ctx();
+
+    let mut t = Table::new(
+        "fig1_roofline",
+        "Fig. 1: Performance vs arithmetic intensity (OPT-1.3B, last decode step, H100)",
+        &[
+            "kernel",
+            "batch",
+            "arithmetic_intensity_flop_per_byte",
+            "performance_flops",
+            "mem_traffic_bytes_per_s",
+            "roofline_ceiling_flops",
+            "efficiency",
+        ],
+    );
+    let mut push = |p: roofline::RooflinePoint| {
+        t.push_row(vec![
+            p.label.clone(),
+            p.batch.to_string(),
+            format!("{:.4}", p.arithmetic_intensity),
+            format!("{:.3e}", p.performance),
+            format!("{:.3e}", p.mem_traffic),
+            format!("{:.3e}", p.ceiling),
+            format!("{:.3}", p.efficiency()),
+        ]);
+    };
+    for b in [1usize, bmax] {
+        push(roofline::attention_point(
+            &gpu,
+            &spec,
+            AttentionBackendKind::XFormers,
+            b,
+            ctx,
+        ));
+        push(roofline::attention_point(
+            &gpu,
+            &spec,
+            AttentionBackendKind::FlashAttention,
+            b,
+            ctx,
+        ));
+        push(roofline::matmul_point(&gpu, &spec, b));
+    }
+
+    let mut hw = Table::new(
+        "fig1_rooflines_hw",
+        "Fig. 1: hardware ceilings",
+        &["quantity", "value"],
+    );
+    hw.push_row(vec!["dram_bw_bytes_per_s".into(), format!("{:.3e}", gpu.dram_bw)]);
+    hw.push_row(vec![
+        "peak_flops_sp".into(),
+        format!("{:.3e}", gpu.peak_flops_sp),
+    ]);
+    hw.push_row(vec!["ridge_ai".into(), format!("{:.2}", gpu.ridge_ai_sp())]);
+    Ok(vec![t, hw])
+}
+
+/// Table II: achieved mem-traffic and FLOP/s of the xFormers attention
+/// kernel at batch 1 and MAX, all four models.
+pub fn table2(_opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let ctx = last_step_ctx();
+    let mut t = Table::new(
+        "table2_roofline",
+        "Table II: roofline results, xFormers attention (batch 1 vs MAX)",
+        &[
+            "model",
+            "batch",
+            "mem_traffic_bytes_per_s",
+            "performance_flops",
+            "arithmetic_intensity",
+        ],
+    );
+    t.push_row(vec![
+        "rooflines(hw)".into(),
+        "-".into(),
+        format!("{:.2e}", gpu.dram_bw),
+        format!("{:.2e}", gpu.peak_flops_sp),
+        "-".into(),
+    ]);
+    for spec in ModelSpec::paper_models() {
+        let bmax = max_batch(&gpu, &spec);
+        for b in [1usize, bmax] {
+            let p = roofline::attention_point(&gpu, &spec, AttentionBackendKind::XFormers, b, ctx);
+            t.push_row(vec![
+                spec.name.clone(),
+                b.to_string(),
+                format!("{:.2e}", p.mem_traffic),
+                format!("{:.2e}", p.performance),
+                format!("{:.3}", p.arithmetic_intensity),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_holds() {
+        let tables = fig1(&FigOpts::quick()).unwrap();
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 6);
+        // Attention AI constant across batch; matmul AI grows.
+        let ai = t.col_f64("arithmetic_intensity_flop_per_byte");
+        let (xf1, mm1, xf_max, mm_max) = (ai[0], ai[2], ai[3], ai[5]);
+        assert!((xf1 / xf_max - 1.0).abs() < 0.1);
+        assert!(mm_max > 10.0 * mm1);
+        // Attention at MAX rides the bandwidth roofline.
+        let eff = t.col_f64("efficiency");
+        assert!(eff[3] > 0.85, "{eff:?}");
+    }
+
+    #[test]
+    fn table2_bands() {
+        let tables = table2(&FigOpts::quick()).unwrap();
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 1 + 8);
+        // Every MAX row's mem traffic is within 15% of the paper's ~1.5e12.
+        for i in [2usize, 4, 6, 8] {
+            let mt = t.cell_f64(i, "mem_traffic_bytes_per_s").unwrap();
+            assert!((1.2e12..1.63e12).contains(&mt), "row {i}: {mt}");
+        }
+    }
+}

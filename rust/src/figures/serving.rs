@@ -1,0 +1,165 @@
+//! Figs 2/3/12: serving-level sweeps (throughput, ITL, KV usage).
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::coordinator::offline::{sweep_batch_sizes, OfflineConfig};
+use crate::models::spec::ModelSpec;
+use crate::workload::{generate as gen_workload, WorkloadConfig};
+
+/// Fig 2: throughput (tokens/s) + ITL vs average batch size, max batch
+/// swept 1..512, all four models, online-mode (ShareGPT-like) workload.
+pub fn fig2(opts: &FigOpts) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        let base = OfflineConfig::new(spec.clone(), 1);
+        let runs = sweep_batch_sizes(&base, &opts.batch_grid(), true, opts.requests())?;
+        let mut t = Table::new(
+            &format!("fig2_{}", spec.name.to_lowercase()),
+            &format!("Fig. 2: throughput & ITL vs batch size — {}", spec.name),
+            &[
+                "max_batch",
+                "avg_batch",
+                "throughput_tps",
+                "itl_ms",
+                "kv_exceeded",
+            ],
+        );
+        for (b, r) in runs {
+            t.push_row(vec![
+                b.to_string(),
+                format!("{:.1}", r.metrics.avg_batch),
+                format!("{:.0}", r.metrics.throughput_tps),
+                format!("{:.2}", r.metrics.mean_itl * 1e3),
+                // The paper's crosses: KV capacity exceeded (preempted).
+                (r.preemptions > 0).to_string(),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig 3: throughput vs peak KV-cache usage, same sweep.
+pub fn fig3(opts: &FigOpts) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        let base = OfflineConfig::new(spec.clone(), 1);
+        let runs = sweep_batch_sizes(&base, &opts.batch_grid(), true, opts.requests())?;
+        let mut t = Table::new(
+            &format!("fig3_{}", spec.name.to_lowercase()),
+            &format!("Fig. 3: throughput vs max KV usage — {}", spec.name),
+            &["max_batch", "kv_usage_pct", "throughput_tps"],
+        );
+        for (b, r) in runs {
+            t.push_row(vec![
+                b.to_string(),
+                format!("{:.1}", 100.0 * r.peak_kv_usage),
+                format!("{:.0}", r.metrics.throughput_tps),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig 12: throughput vs KV usage for output lengths 130/260/390/520
+/// (OPT-1.3B, batches up to 520 requests).
+pub fn fig12(opts: &FigOpts) -> Result<Vec<Table>> {
+    let spec = ModelSpec::opt_1_3b();
+    let out_lens = [130usize, 260, 390, 520];
+    let batch_grid: Vec<usize> = if opts.quick {
+        vec![8, 64, 260, 520]
+    } else {
+        vec![8, 16, 32, 65, 130, 260, 390, 520]
+    };
+    let mut t = Table::new(
+        "fig12_output_lens",
+        "Fig. 12: throughput vs KV usage across output lengths (OPT-1.3B)",
+        &[
+            "output_len",
+            "max_batch",
+            "kv_usage_pct",
+            "throughput_tps",
+        ],
+    );
+    for &out_len in &out_lens {
+        for &b in &batch_grid {
+            let mut cfg = OfflineConfig::new(spec.clone(), b);
+            cfg.input_len = crate::workload::SHAREGPT_MEAN_INPUT;
+            cfg.output_len = out_len;
+            cfg.num_requests = b.max(8);
+            let mut engine = cfg.build_engine();
+            engine.submit(&gen_workload(&WorkloadConfig::offline(
+                cfg.num_requests,
+                cfg.input_len,
+                out_len,
+            )));
+            let r = engine.run_to_completion()?;
+            t.push_row(vec![
+                out_len.to_string(),
+                b.to_string(),
+                format!("{:.1}", 100.0 * r.peak_kv_usage),
+                format!("{:.0}", r.metrics.throughput_tps),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_knee_and_itl_growth() {
+        let tables = fig2(&FigOpts::quick()).unwrap();
+        assert_eq!(tables.len(), 4);
+        let opt13 = &tables[0];
+        let tput = opt13.col_f64("throughput_tps");
+        let itl = opt13.col_f64("itl_ms");
+        // Throughput rises steeply then flattens.
+        assert!(tput[1] > 3.0 * tput[0]);
+        let last = tput.len() - 1;
+        assert!(tput[last] < 1.4 * tput[last - 2], "{tput:?}");
+        // ITL keeps growing past the knee while throughput does not.
+        assert!(itl[last] > 2.0 * itl[1], "{itl:?}");
+    }
+
+    #[test]
+    fn fig3_kv_usage_monotone() {
+        let tables = fig3(&FigOpts::quick()).unwrap();
+        let t = &tables[0];
+        let kv = t.col_f64("kv_usage_pct");
+        for w in kv.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "{kv:?}");
+        }
+    }
+
+    #[test]
+    fn fig12_longer_outputs_use_more_kv() {
+        let tables = fig12(&FigOpts::quick()).unwrap();
+        let t = &tables[0];
+        // At the same max_batch (520), KV usage grows with output len.
+        let rows: Vec<(f64, f64, f64)> = t
+            .rows
+            .iter()
+            .map(|r| {
+                (
+                    r[0].parse().unwrap(),
+                    r[1].parse().unwrap(),
+                    r[2].parse().unwrap(),
+                )
+            })
+            .collect();
+        let kv_at = |out: f64| {
+            rows.iter()
+                .filter(|(o, b, _)| *o == out && *b == 520.0)
+                .map(|(_, _, k)| *k)
+                .next()
+                .unwrap()
+        };
+        // (capacity clipping caps the longest-output point at 100%).
+        assert!(kv_at(520.0) > 1.5 * kv_at(130.0));
+    }
+}

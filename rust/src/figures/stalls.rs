@@ -1,0 +1,161 @@
+//! Fig 8 (stalled cycles batch 1 vs MAX), Fig 9 (stalls vs in/out
+//! lengths), Table III (L1/L2 hit rates).
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::gpusim::profiler::profile_attention;
+use crate::gpusim::warp::attention_stall_frac;
+use crate::gpusim::GpuSpec;
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+/// Fig 8: % warp cycles stalled waiting for data — both attention
+/// backends, batch 1 vs MAX, all models (OPT-2.7B is xFormers-only).
+pub fn fig8(_opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let ctx = super::roofline_figs::last_step_ctx();
+    let mut t = Table::new(
+        "fig8_stalled_cycles",
+        "Fig. 8: stalled warp cycles waiting for data (batch 1 vs MAX)",
+        &["model", "backend", "batch", "stalled_pct"],
+    );
+    for spec in ModelSpec::paper_models() {
+        let bmax = super::roofline_figs::max_batch(&gpu, &spec);
+        for backend in [
+            AttentionBackendKind::XFormers,
+            AttentionBackendKind::FlashAttention,
+        ] {
+            if backend == AttentionBackendKind::FlashAttention && !spec.flash_compatible() {
+                continue; // paper: OPT-2.7B incompatible with FA backend
+            }
+            for b in [1usize, bmax] {
+                let s = attention_stall_frac(&gpu, &spec, backend, b, ctx as f64);
+                t.push_row(vec![
+                    spec.name.clone(),
+                    format!("{backend:?}"),
+                    b.to_string(),
+                    format!("{:.1}", 100.0 * s),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig 9: stalled cycles vs input length and output length separately
+/// (OPT-1.3B, FlashAttention, defaults 100/100).
+pub fn fig9(_opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let spec = ModelSpec::opt_1_3b();
+    let backend = AttentionBackendKind::FlashAttention;
+    let mut t = Table::new(
+        "fig9_ctx_sweep",
+        "Fig. 9: stalled cycles vs input/output length (OPT-1.3B, Flash)",
+        &["swept", "length", "stalled_pct"],
+    );
+    // The paper averages the first and last decode steps. With default
+    // (in=100, out=100): first-step ctx = in, last-step ctx = in + out.
+    let grid = [100usize, 250, 400, 550, 700, 850, 1000];
+    for &inp in &grid {
+        let first = attention_stall_frac(&gpu, &spec, backend, 1, inp as f64);
+        let last = attention_stall_frac(&gpu, &spec, backend, 1, (inp + 100) as f64);
+        t.push_row(vec![
+            "input".into(),
+            inp.to_string(),
+            format!("{:.1}", 100.0 * 0.5 * (first + last)),
+        ]);
+    }
+    for &out in &grid {
+        let first = attention_stall_frac(&gpu, &spec, backend, 1, 100.0);
+        let last = attention_stall_frac(&gpu, &spec, backend, 1, (100 + out) as f64);
+        t.push_row(vec![
+            "output".into(),
+            out.to_string(),
+            format!("{:.1}", 100.0 * 0.5 * (first + last)),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Table III: L1/L2 hit rates of the attention kernel, batch 1 vs MAX.
+pub fn table3(_opts: &FigOpts) -> Result<Vec<Table>> {
+    let gpu = GpuSpec::h100_64g();
+    let ctx = super::roofline_figs::last_step_ctx();
+    let mut t = Table::new(
+        "table3_cache_hit_rates",
+        "Table III: L1/L2 cache hit rates (batch 1 vs MAX)",
+        &["model", "batch", "l1_hit_pct", "l2_hit_pct"],
+    );
+    for spec in ModelSpec::paper_models() {
+        let bmax = super::roofline_figs::max_batch(&gpu, &spec);
+        for b in [1usize, bmax] {
+            let p = profile_attention(&gpu, &spec, AttentionBackendKind::XFormers, b, ctx, 16);
+            t.push_row(vec![
+                spec.name.clone(),
+                b.to_string(),
+                format!("{:.2}", p.l1_hit_rate),
+                format!("{:.2}", p.l2_hit_rate),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_bands() {
+        let t = &fig8(&FigOpts::quick()).unwrap()[0];
+        // 4 models x 2 backends x 2 batches - 2 (OPT-2.7B FA missing).
+        assert_eq!(t.rows.len(), 14);
+        for r in &t.rows {
+            let stalled: f64 = r[3].parse().unwrap();
+            if r[2] != "1" {
+                assert!(stalled > 50.0, "{r:?}"); // paper: >50% at MAX
+            }
+            if r[1] == "XFormers" && r[2] != "1" {
+                assert!(stalled > 75.0, "{r:?}"); // xFormers worst
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_input_steeper_than_output() {
+        let t = &fig9(&FigOpts::quick()).unwrap()[0];
+        let inputs: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "input")
+            .map(|r| r[2].parse().unwrap())
+            .collect();
+        let outputs: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "output")
+            .map(|r| r[2].parse().unwrap())
+            .collect();
+        // Both monotone increasing...
+        assert!(inputs.last().unwrap() > inputs.first().unwrap());
+        assert!(outputs.last().unwrap() > outputs.first().unwrap());
+        // ...but input length has the stronger effect (paper §V-C).
+        let din = inputs.last().unwrap() - inputs.first().unwrap();
+        let dout = outputs.last().unwrap() - outputs.first().unwrap();
+        assert!(din > dout, "din {din} dout {dout}");
+    }
+
+    #[test]
+    fn table3_l1_falls_l2_flat() {
+        let t = &table3(&FigOpts::quick()).unwrap()[0];
+        for pair in t.rows.chunks(2) {
+            let l1_b1: f64 = pair[0][2].parse().unwrap();
+            let l1_max: f64 = pair[1][2].parse().unwrap();
+            assert!(l1_b1 > 2.0 * l1_max, "{pair:?}");
+            let l2_b1: f64 = pair[0][3].parse().unwrap();
+            let l2_max: f64 = pair[1][3].parse().unwrap();
+            assert!((l2_b1 - l2_max).abs() < 0.3);
+            assert!(l2_b1 < 3.0);
+        }
+    }
+}

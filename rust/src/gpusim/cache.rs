@@ -1,0 +1,80 @@
+//! L1/L2 cache hit-rate surrogates (paper Table III).
+//!
+//! The paper measures *very* low hit rates for the attention kernels —
+//! L1 <= 16% falling to ~2% at MAX batch, L2 ~1-2% and flat — because
+//! the paged KV gather streams a working set that dwarfs both caches and
+//! vLLM's non-contiguous block layout defeats spatial locality.
+//!
+//! Surrogates (fitted against Table III, provenance in `GpuSpec`):
+//!
+//! ```text
+//!   L1%(B) = (l1_a / head_dim) / (1 + sqrt(ws / L1_total))
+//!            ws = B * mean_ctx * kv_bytes_per_token_per_layer
+//!   L2%    = clamp(l2_a / d_model, 0.6, 2.5)        (flat in B)
+//! ```
+
+use super::hardware::GpuSpec;
+use crate::models::spec::ModelSpec;
+
+/// L1 hit rate (percent) of the decode-attention kernel.
+pub fn l1_hit_rate(gpu: &GpuSpec, spec: &ModelSpec, batch: usize, mean_ctx: f64) -> f64 {
+    let a = gpu.l1_a / spec.head_dim() as f64;
+    let ws = batch as f64 * mean_ctx * spec.kv_bytes_per_token_per_layer() as f64;
+    let l1_total = (gpu.l1_bytes_per_sm * gpu.num_sms as u64) as f64;
+    a / (1.0 + (ws / l1_total).sqrt())
+}
+
+/// L2 hit rate (percent) of the decode-attention kernel. Streaming KV
+/// has essentially no reuse; the residual hits come from block-table
+/// metadata and partial-tile overlap, a width-dependent constant.
+pub fn l2_hit_rate(gpu: &GpuSpec, spec: &ModelSpec, _batch: usize) -> f64 {
+    (gpu.l2_a / spec.d_model as f64).clamp(0.6, 2.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_matches_table3_shape() {
+        let gpu = GpuSpec::h100_64g();
+        // Paper Table III: (model, B=1 HR, MAX batch, MAX HR)
+        let cases = [
+            (ModelSpec::opt_1_3b(), 16.49, 512, 2.62),
+            (ModelSpec::opt_2_7b(), 13.84, 256, 2.43),
+            (ModelSpec::llama2_7b(), 9.40, 128, 1.55),
+            (ModelSpec::llama2_13b(), 7.70, 80, 1.61),
+        ];
+        for (spec, hr1, bmax, hrmax) in cases {
+            let g1 = l1_hit_rate(&gpu, &spec, 1, 338.0);
+            let gm = l1_hit_rate(&gpu, &spec, bmax, 338.0);
+            assert!(
+                (g1 / hr1 - 1.0).abs() < 0.5,
+                "{} B=1: {g1:.2} vs paper {hr1}",
+                spec.name
+            );
+            assert!(
+                (gm / hrmax - 1.0).abs() < 0.8,
+                "{} MAX: {gm:.2} vs paper {hrmax}",
+                spec.name
+            );
+            assert!(g1 > gm, "L1 HR must fall with batch");
+        }
+    }
+
+    #[test]
+    fn l2_flat_and_tiny() {
+        let gpu = GpuSpec::h100_64g();
+        for spec in ModelSpec::paper_models() {
+            let a = l2_hit_rate(&gpu, &spec, 1);
+            let b = l2_hit_rate(&gpu, &spec, 256);
+            assert_eq!(a, b, "L2 HR is flat in batch");
+            assert!((0.5..3.0).contains(&a));
+        }
+        // Bigger d_model -> lower L2 HR (paper: OPT 1.6% > Llama 0.84%).
+        assert!(
+            l2_hit_rate(&gpu, &ModelSpec::opt_1_3b(), 1)
+                > l2_hit_rate(&gpu, &ModelSpec::llama2_7b(), 1)
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Host-side overhead model: the "CPU time" gaps of Figs 5/6/13.
+//!
+//! Between GPU steps the serving engine runs Python-side scheduling,
+//! sampling post-processing and detokenization whose cost grows with
+//! batch size; the paper measures these gaps at up to 30% of decode
+//! time for OPT-1.3B at B=512 (Fig 6) and shows replication hides them
+//! (Table IV: CPU time -78% with 2 replicas).
+//!
+//! Model: `gap(B) = cpu_base_s + cpu_per_seq_s * B`, per engine step.
+//! Calibration provenance in `GpuSpec`.
+
+use super::hardware::GpuSpec;
+
+/// CPU gap (seconds) before a step over `batch` sequences is launched.
+pub fn step_gap(gpu: &GpuSpec, batch: usize) -> f64 {
+    gpu.cpu_base_s + gpu.cpu_per_seq_s * batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::dram::kernel_time;
+    use crate::gpusim::kernels::decode_step_kernels;
+    use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+    #[test]
+    fn cpu_share_near_30pct_at_max_batch_opt13() {
+        // Fig 6: OPT-1.3B at B=512 spends up to ~30% of decode time on CPU.
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let ctx = vec![338usize; 512];
+        let gpu_time: f64 = decode_step_kernels(&spec, AttentionBackendKind::XFormers, &ctx, 16)
+            .iter()
+            .map(|k| kernel_time(&gpu, &spec, k))
+            .sum();
+        let cpu = step_gap(&gpu, 512);
+        let share = cpu / (cpu + gpu_time);
+        assert!(
+            (0.18..0.42).contains(&share),
+            "CPU share {share:.3} (cpu {cpu:.4}s gpu {gpu_time:.4}s)"
+        );
+    }
+
+    #[test]
+    fn cpu_share_small_at_batch_1() {
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let gpu_time: f64 = decode_step_kernels(&spec, AttentionBackendKind::XFormers, &[338], 16)
+            .iter()
+            .map(|k| kernel_time(&gpu, &spec, k))
+            .sum();
+        let cpu = step_gap(&gpu, 1);
+        assert!(cpu / (cpu + gpu_time) < 0.20);
+    }
+
+    #[test]
+    fn gap_monotone_in_batch() {
+        let gpu = GpuSpec::h100_64g();
+        assert!(step_gap(&gpu, 512) > step_gap(&gpu, 64));
+        assert!(step_gap(&gpu, 64) > step_gap(&gpu, 1));
+    }
+}

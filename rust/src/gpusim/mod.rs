@@ -1,0 +1,44 @@
+//! Analytical H100 performance model + Nsight-like profiler.
+//!
+//! This module is the substitute for the paper's testbed (H100 64GB +
+//! NVIDIA Nsight Systems/Compute): a kernel-granular roofline model with
+//! DRAM-saturation, cache and warp-occupancy surrogates, an execution
+//! timeline, and an MPS/FCFS multi-replica overlap model. Every paper
+//! table and figure is regenerated from these pieces (see DESIGN.md §5
+//! for the per-artefact module map and §7 for the calibration story).
+//!
+//! Structure:
+//! - [`hardware`] — the H100 spec and calibration constants, each with
+//!   provenance (paper table/figure it was fitted against).
+//! - [`kernels`]  — per-kernel FLOPs/bytes cost models mirroring the
+//!   Pallas kernels' `io_bytes`/`flops` (golden-tested on both sides).
+//! - [`dram`]     — achieved-bandwidth model (the paper's key finding:
+//!   decode attention saturates DRAM reads while compute idles).
+//! - [`cache`]    — L1/L2 hit-rate surrogates (Table III).
+//! - [`warp`]     — occupancy + stalled-cycles model (Table I, Fig 8/9).
+//! - [`cpu`]      — host-side overhead model (the CPU gaps of Fig 5/6).
+//! - [`step`]     — assembles one prefill/decode step into timed kernel
+//!   executions (Fig 4/6/7).
+//! - [`timeline`] — Nsight-Systems-like sampled counter traces (Fig 5/7/13).
+//! - [`profiler`] — Nsight-Compute-like per-kernel metric aggregation
+//!   (Tables I-III).
+//! - [`roofline`] — arithmetic-intensity / roofline computations (Fig 1,
+//!   Table II) and the TPU VMEM/MXU estimates for the Pallas kernels.
+//! - [`mps`]      — processor-sharing executor for replicated engines
+//!   (Fig 13, Table IV).
+
+pub mod cache;
+pub mod cpu;
+pub mod dram;
+pub mod hardware;
+pub mod kernels;
+pub mod mps;
+pub mod profiler;
+pub mod roofline;
+pub mod step;
+pub mod timeline;
+pub mod warp;
+
+pub use hardware::GpuSpec;
+pub use kernels::{KernelClass, KernelInvocation};
+pub use step::{simulate_decode_step, simulate_prefill_step, KernelExec, StepSim};

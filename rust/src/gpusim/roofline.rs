@@ -1,0 +1,253 @@
+//! Roofline analysis (paper Fig 1 + Table II) and the TPU-side
+//! VMEM/MXU estimates for the Pallas kernels.
+//!
+//! The roofline places a kernel by its arithmetic intensity: achievable
+//! performance is `min(peak_flops, AI * achieved_bandwidth)`. The
+//! paper's Fig 1 shows decode attention pinned at AI 0.5-1 (so its
+//! ceiling is the DRAM bandwidth line) while matmul AI climbs with
+//! batch size.
+
+use super::dram;
+use super::hardware::GpuSpec;
+use super::kernels::{self, KernelInvocation};
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+/// One point on the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    pub batch: usize,
+    /// Arithmetic intensity (FLOP/byte), the x-axis.
+    pub arithmetic_intensity: f64,
+    /// Achieved performance (FLOP/s), the y-axis.
+    pub performance: f64,
+    /// Achieved memory traffic (bytes/s).
+    pub mem_traffic: f64,
+    /// Roofline ceiling at this AI.
+    pub ceiling: f64,
+}
+
+impl RooflinePoint {
+    /// Fraction of the roofline ceiling this kernel achieves — the
+    /// "efficiency ratio" the perf pass targets (DESIGN.md §8).
+    pub fn efficiency(&self) -> f64 {
+        if self.ceiling > 0.0 {
+            self.performance / self.ceiling
+        } else {
+            0.0
+        }
+    }
+}
+
+fn point_from_kernel(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    label: String,
+    batch: usize,
+    k: &KernelInvocation,
+) -> RooflinePoint {
+    let ai = k.arithmetic_intensity();
+    // Achieved performance: the kernel runs for its roofline time; the
+    // sustained FLOP/s follow from that.
+    let t = dram::kernel_time(gpu, spec, k) - gpu.kernel_launch_s;
+    let performance = k.flops / t.max(1e-12);
+    let mem_traffic = k.bytes_total() / t.max(1e-12);
+    RooflinePoint {
+        label,
+        batch,
+        arithmetic_intensity: ai,
+        performance,
+        mem_traffic,
+        ceiling: (ai * gpu.dram_bw).min(gpu.peak_flops_sp),
+    }
+}
+
+/// Fig 1 attention point: decode attention at `batch` with mean ctx.
+pub fn attention_point(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    batch: usize,
+    mean_ctx: usize,
+) -> RooflinePoint {
+    let k = kernels::attention_decode(spec, backend, &vec![mean_ctx; batch], 16);
+    let label = match backend {
+        AttentionBackendKind::XFormers => format!("xformers b{batch}"),
+        AttentionBackendKind::FlashAttention => format!("flash b{batch}"),
+    };
+    point_from_kernel(gpu, spec, label, batch, &k)
+}
+
+/// Fig 1 matmul point: the QKV projection GEMM at `batch`.
+pub fn matmul_point(gpu: &GpuSpec, spec: &ModelSpec, batch: usize) -> RooflinePoint {
+    let k = kernels::gemm(
+        "qkv_proj",
+        batch,
+        spec.d_model,
+        3 * spec.d_model,
+        spec.dtype_bytes,
+        batch,
+    );
+    point_from_kernel(gpu, spec, format!("matmul b{batch}"), batch, &k)
+}
+
+// ---------------------------------------------------------------------
+// TPU estimates for the Pallas kernels (DESIGN.md §Hardware-Adaptation).
+// interpret=True gives no hardware timing, so real-TPU behaviour is
+// *estimated* from the BlockSpec structure: VMEM footprint per grid
+// program and an MXU-utilization proxy from tile shapes.
+// ---------------------------------------------------------------------
+
+/// Static estimate of a Pallas kernel's TPU residency.
+#[derive(Debug, Clone)]
+pub struct TpuKernelEstimate {
+    pub kernel: &'static str,
+    /// VMEM bytes resident per grid program (tiles + accumulators).
+    pub vmem_bytes_per_program: u64,
+    /// HBM bytes moved per grid program.
+    pub hbm_bytes_per_program: u64,
+    /// MXU utilization proxy: fraction of the 128x128 systolic array a
+    /// tile multiply fills.
+    pub mxu_utilization: f64,
+    /// Whether the working set fits VMEM (~16 MiB/core budget).
+    pub fits_vmem: bool,
+}
+
+const TPU_VMEM_BYTES: u64 = 16 * 1024 * 1024;
+const MXU_DIM: f64 = 128.0;
+
+/// Paged decode attention: per (seq, head) program streams KV blocks of
+/// `block_size` rows through VMEM with an f32 accumulator of `head_dim`.
+pub fn tpu_paged_attention(
+    head_dim: usize,
+    block_size: usize,
+    ctx_len: usize,
+    dtype_bytes: usize,
+) -> TpuKernelEstimate {
+    let tile = (block_size * head_dim * dtype_bytes) as u64;
+    // q + k-tile + v-tile + acc/m/l scratch (f32)
+    let vmem = (head_dim * dtype_bytes) as u64 + 2 * tile + (head_dim * 4 + 8) as u64;
+    let blocks = (ctx_len + block_size - 1) / block_size;
+    let hbm = 2 * blocks as u64 * tile;
+    // Matrix-vector product: only one row of the MXU's left operand is
+    // live -> utilization ~ block_size/128 x head_dim/128, capped at 1.
+    let mxu = ((block_size as f64 / MXU_DIM).min(1.0)) * ((head_dim as f64 / MXU_DIM).min(1.0));
+    TpuKernelEstimate {
+        kernel: "paged_decode_attention",
+        vmem_bytes_per_program: vmem,
+        hbm_bytes_per_program: hbm,
+        mxu_utilization: mxu,
+        fits_vmem: vmem <= TPU_VMEM_BYTES,
+    }
+}
+
+/// Flash prefill attention: per (b, h, q-tile) program holds a
+/// `block_q x head_dim` Q tile and streams `block_k x head_dim` K/V tiles.
+pub fn tpu_flash_attention(
+    head_dim: usize,
+    block_q: usize,
+    block_k: usize,
+    kv_len: usize,
+    dtype_bytes: usize,
+) -> TpuKernelEstimate {
+    let q_tile = (block_q * head_dim * dtype_bytes) as u64;
+    let kv_tile = (block_k * head_dim * dtype_bytes) as u64;
+    let acc = (block_q * head_dim * 4 + block_q * 8) as u64;
+    let vmem = q_tile + 2 * kv_tile + acc;
+    let n_k = (kv_len + block_k - 1) / block_k;
+    let hbm = q_tile + 2 * n_k as u64 * kv_tile;
+    let mxu = ((block_q as f64 / MXU_DIM).min(1.0)) * ((block_k as f64 / MXU_DIM).min(1.0));
+    TpuKernelEstimate {
+        kernel: "flash_attention",
+        vmem_bytes_per_program: vmem,
+        hbm_bytes_per_program: hbm,
+        mxu_utilization: mxu,
+        fits_vmem: vmem <= TPU_VMEM_BYTES,
+    }
+}
+
+/// Blocked matmul: `block_m x K` and `K x block_n` panels + f32 acc tile.
+pub fn tpu_matmul(
+    k_dim: usize,
+    block_m: usize,
+    block_n: usize,
+    block_k: usize,
+    dtype_bytes: usize,
+) -> TpuKernelEstimate {
+    let a_panel = (block_m * block_k * dtype_bytes) as u64;
+    let b_panel = (block_k * block_n * dtype_bytes) as u64;
+    let acc = (block_m * block_n * 4) as u64;
+    let vmem = a_panel + b_panel + acc;
+    let n_k = (k_dim + block_k - 1) / block_k;
+    let hbm = n_k as u64 * (a_panel + b_panel) + acc;
+    let mxu = ((block_m as f64 / MXU_DIM).min(1.0))
+        * ((block_n as f64 / MXU_DIM).min(1.0))
+        * ((block_k as f64 / MXU_DIM).min(1.0)).max(0.25);
+    TpuKernelEstimate {
+        kernel: "matmul",
+        vmem_bytes_per_program: vmem,
+        hbm_bytes_per_program: hbm,
+        mxu_utilization: mxu,
+        fits_vmem: vmem <= TPU_VMEM_BYTES,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_attention_ai_constant_matmul_ai_grows() {
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let a1 = attention_point(&gpu, &spec, AttentionBackendKind::XFormers, 1, 338);
+        let amax = attention_point(&gpu, &spec, AttentionBackendKind::XFormers, 512, 338);
+        let m1 = matmul_point(&gpu, &spec, 1);
+        let mmax = matmul_point(&gpu, &spec, 512);
+        // Attention AI ~constant in the 0.25..2 band.
+        assert!((a1.arithmetic_intensity / amax.arithmetic_intensity - 1.0).abs() < 0.1);
+        assert!((0.25..2.0).contains(&a1.arithmetic_intensity));
+        // Matmul AI grows by >10x.
+        assert!(mmax.arithmetic_intensity > 10.0 * m1.arithmetic_intensity);
+        // Attention at MAX sits on the bandwidth roofline (>=85% eff).
+        assert!(amax.efficiency() > 0.85, "{}", amax.efficiency());
+        // At batch 1 it is far from the ceiling (latency-bound).
+        assert!(a1.efficiency() < 0.4, "{}", a1.efficiency());
+    }
+
+    #[test]
+    fn performance_orders_of_magnitude_below_sp_peak() {
+        // Fig 1: attention FLOPS/s orders of magnitude under 2.56e13.
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let p = attention_point(&gpu, &spec, AttentionBackendKind::XFormers, 512, 338);
+        assert!(p.performance < gpu.peak_flops_sp / 10.0);
+    }
+
+    #[test]
+    fn tpu_paged_attention_fits_vmem() {
+        let e = tpu_paged_attention(64, 16, 2048, 4);
+        assert!(e.fits_vmem);
+        assert!(e.vmem_bytes_per_program < 64 * 1024);
+        // Decode attention is MXU-starved: the systolic array is mostly
+        // idle (the TPU analogue of the paper's idle CUDA cores).
+        assert!(e.mxu_utilization < 0.1);
+    }
+
+    #[test]
+    fn tpu_flash_uses_mxu_better_than_paged() {
+        let flash = tpu_flash_attention(64, 128, 128, 2048, 4);
+        let paged = tpu_paged_attention(64, 16, 2048, 4);
+        assert!(flash.mxu_utilization > 5.0 * paged.mxu_utilization);
+    }
+
+    #[test]
+    fn tpu_matmul_block_tradeoff() {
+        // Bigger tiles -> better MXU fill but more VMEM.
+        let small = tpu_matmul(2048, 32, 32, 32, 4);
+        let big = tpu_matmul(2048, 128, 128, 128, 4);
+        assert!(big.mxu_utilization > small.mxu_utilization);
+        assert!(big.vmem_bytes_per_program > small.vmem_bytes_per_program);
+        assert!(big.fits_vmem);
+    }
+}

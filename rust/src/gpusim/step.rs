@@ -1,0 +1,273 @@
+//! Assemble one engine step into a timed sequence of kernel executions.
+//!
+//! This is the simulator's unit of work: the backend asks for a prefill
+//! or decode step over a concrete batch, and gets back per-kernel
+//! timings plus the Nsight-like instantaneous metrics each kernel
+//! exhibits while running — the raw material for Figs 4-7 and the MPS
+//! overlap model.
+
+
+use super::dram;
+use super::hardware::GpuSpec;
+use super::kernels::{self, KernelClass, KernelInvocation};
+use super::warp;
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+/// One executed kernel with its schedule and observed metrics.
+#[derive(Debug, Clone)]
+pub struct KernelExec {
+    pub inv: KernelInvocation,
+    /// Start offset within the step's GPU burst (seconds).
+    pub start: f64,
+    pub duration: f64,
+    /// Achieved DRAM-read bandwidth as a fraction of peak while running.
+    pub dram_read_util: f64,
+    /// Achieved DRAM-write fraction of peak.
+    pub dram_write_util: f64,
+    /// % of device warp slots issuing instructions.
+    pub warps_in_flight_pct: f64,
+    /// % of SMs with resident work.
+    pub active_sm_pct: f64,
+    /// Fraction of warp cycles stalled waiting on data (attention only,
+    /// 0 elsewhere — matches what the paper reports per Fig 8).
+    pub stall_frac: f64,
+}
+
+impl KernelExec {
+    pub fn end(&self) -> f64 {
+        self.start + self.duration
+    }
+}
+
+/// A simulated engine step: an ordered GPU burst preceded by a CPU gap.
+#[derive(Debug, Clone)]
+pub struct StepSim {
+    pub kernels: Vec<KernelExec>,
+    /// Total GPU burst duration (sum of kernel durations).
+    pub gpu_time: f64,
+    /// Host-side gap preceding the burst (scheduler/sampling/detok).
+    pub cpu_gap: f64,
+    /// Batch size this step covered.
+    pub batch: usize,
+}
+
+impl StepSim {
+    pub fn total_time(&self) -> f64 {
+        self.cpu_gap + self.gpu_time
+    }
+
+    /// GPU time grouped by kernel label (Fig 6 stacked bars).
+    pub fn time_by_label(&self) -> Vec<(&'static str, f64)> {
+        let mut acc: Vec<(&'static str, f64)> = Vec::new();
+        for k in &self.kernels {
+            let label = k.inv.class.label();
+            match acc.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, t)) => *t += k.duration,
+                None => acc.push((label, k.duration)),
+            }
+        }
+        acc
+    }
+
+    /// Time-weighted mean DRAM read utilization across the burst.
+    pub fn mean_dram_read_util(&self) -> f64 {
+        if self.gpu_time <= 0.0 {
+            return 0.0;
+        }
+        self.kernels
+            .iter()
+            .map(|k| k.dram_read_util * k.duration)
+            .sum::<f64>()
+            / self.gpu_time
+    }
+
+    /// Time-weighted mean warps-in-flight %, over the whole step
+    /// including the CPU gap (where GPU metrics are zero) — matching
+    /// how Nsight Systems averages over wall time.
+    pub fn mean_warps_in_flight_pct(&self) -> f64 {
+        let t = self.total_time();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.kernels
+            .iter()
+            .map(|k| k.warps_in_flight_pct * k.duration)
+            .sum::<f64>()
+            / t
+    }
+}
+
+fn exec_kernels(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    invs: Vec<KernelInvocation>,
+    batch: usize,
+    mean_ctx: f64,
+) -> StepSim {
+    let mut t = 0.0;
+    let mut kernels = Vec::with_capacity(invs.len());
+    for inv in invs {
+        let duration = dram::kernel_time(gpu, spec, &inv);
+        let util = dram::utilization(gpu, spec, &inv);
+        let total = inv.bytes_total().max(1.0);
+        let read_share = inv.bytes_read / total;
+        let stall = if inv.class == KernelClass::AttentionDecode {
+            warp::attention_stall_frac(gpu, spec, backend, batch, mean_ctx)
+        } else if inv.class == KernelClass::AttentionPrefill {
+            // Prefill attention is compute-leaning; stalls stay moderate.
+            0.5 * warp::attention_stall_frac(gpu, spec, backend, batch, mean_ctx)
+        } else {
+            0.0
+        };
+        kernels.push(KernelExec {
+            start: t,
+            duration,
+            dram_read_util: util * read_share,
+            dram_write_util: util * (1.0 - read_share),
+            warps_in_flight_pct: warp::warps_in_flight_pct(gpu, spec, &inv),
+            active_sm_pct: 100.0 * warp::active_sm_frac(gpu, &inv),
+            stall_frac: stall,
+            inv,
+        });
+        t += duration;
+    }
+    StepSim {
+        gpu_time: t,
+        cpu_gap: super::cpu::step_gap(gpu, batch),
+        batch,
+        kernels,
+    }
+}
+
+/// Simulate one decode step over `ctx_lens` sequences.
+pub fn simulate_decode_step(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    ctx_lens: &[usize],
+    kv_block: usize,
+) -> StepSim {
+    let batch = ctx_lens.len();
+    let mean_ctx = if batch > 0 {
+        ctx_lens.iter().sum::<usize>() as f64 / batch as f64
+    } else {
+        0.0
+    };
+    let invs = kernels::decode_step_kernels(spec, backend, ctx_lens, kv_block);
+    exec_kernels(gpu, spec, backend, invs, batch, mean_ctx)
+}
+
+/// Simulate one prefill step over `prompt_lens` prompts.
+pub fn simulate_prefill_step(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    prompt_lens: &[usize],
+) -> StepSim {
+    let batch = prompt_lens.len();
+    let mean_ctx = if batch > 0 {
+        prompt_lens.iter().sum::<usize>() as f64 / batch as f64
+    } else {
+        0.0
+    };
+    let invs = kernels::prefill_step_kernels(spec, backend, prompt_lens);
+    exec_kernels(gpu, spec, backend, invs, batch, mean_ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(b: usize) -> StepSim {
+        simulate_decode_step(
+            &GpuSpec::h100_64g(),
+            &ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+            &vec![338; b],
+            16,
+        )
+    }
+
+    #[test]
+    fn kernels_are_contiguous_and_ordered() {
+        let s = sim(8);
+        let mut t = 0.0;
+        for k in &s.kernels {
+            assert!((k.start - t).abs() < 1e-12);
+            assert!(k.duration > 0.0);
+            t = k.end();
+        }
+        assert!((t - s.gpu_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_time_flat_then_linear() {
+        // Fig 4: near-constant until ~B=32, then ~proportional growth.
+        let t1 = sim(1).total_time();
+        let t32 = sim(32).total_time();
+        let t512 = sim(512).total_time();
+        assert!(t32 / t1 < 3.0, "flat region: {t1} -> {t32}");
+        assert!(t512 / t32 > 4.0, "linear region: {t32} -> {t512}");
+        // Overall ~6-8x slowdown 1 -> MAX mirrors Fig 4's 6x.
+        let slow = t512 / t1;
+        assert!((4.0..14.0).contains(&slow), "slowdown {slow}");
+    }
+
+    #[test]
+    fn attention_share_grows_with_batch() {
+        // Fig 6: attention ~5% -> >40% for OPT-1.3B; matmul 50% -> <15%.
+        let share = |b: usize, label: &str| {
+            let s = sim(b);
+            let t: f64 = s
+                .time_by_label()
+                .iter()
+                .filter(|(l, _)| *l == label)
+                .map(|(_, t)| *t)
+                .sum();
+            t / s.gpu_time
+        };
+        let attn_small = share(2, "attention");
+        let attn_big = share(512, "attention");
+        assert!(attn_small < 0.25, "{attn_small}");
+        assert!(attn_big > 0.40, "{attn_big}");
+        let mm_small = share(2, "matmul");
+        let mm_big = share(512, "matmul");
+        assert!(mm_small > 0.40, "{mm_small}");
+        assert!(mm_big < 0.35, "{mm_big}");
+        assert!(mm_big < mm_small);
+    }
+
+    #[test]
+    fn prefill_much_shorter_than_decode_phase() {
+        // Table I: decode importance >= 95% — one prefill of the prompt
+        // vs ~338 decode steps.
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_2_7b();
+        let b = 64;
+        let pre = simulate_prefill_step(
+            &gpu,
+            &spec,
+            AttentionBackendKind::XFormers,
+            &vec![161; b],
+        );
+        let dec = simulate_decode_step(
+            &gpu,
+            &spec,
+            AttentionBackendKind::XFormers,
+            &vec![338; b],
+            16,
+        );
+        let decode_phase = dec.total_time() * 338.0;
+        let importance = decode_phase / (decode_phase + pre.total_time());
+        assert!(importance > 0.90, "{importance}");
+    }
+
+    #[test]
+    fn mean_dram_read_util_rises_with_batch() {
+        let lo = sim(1).mean_dram_read_util();
+        let hi = sim(512).mean_dram_read_util();
+        assert!(hi > lo);
+        assert!(hi > 0.45, "Table I decode DRAM read ~48-77%: {hi}");
+    }
+}

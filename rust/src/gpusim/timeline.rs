@@ -1,0 +1,230 @@
+//! Nsight-Systems-like execution timeline.
+//!
+//! Builds a wall-clock trace of kernel spans (with the instantaneous
+//! GPU counters each span exhibits) separated by CPU gaps, and samples
+//! it on a uniform grid — the raw data behind Fig 5 (counter traces),
+//! Fig 7 (kernel-level zoom) and Fig 13 (replication timelines).
+
+use super::kernels::KernelClass;
+use super::step::StepSim;
+
+/// A labelled interval on the GPU timeline.
+#[derive(Debug, Clone)]
+pub struct KernelSpan {
+    pub start: f64,
+    pub end: f64,
+    pub name: &'static str,
+    pub class: Option<KernelClass>,
+    /// Instantaneous DRAM-read utilization (fraction of peak) while active.
+    pub dram_read_util: f64,
+    pub dram_write_util: f64,
+    /// Instantaneous compute-warps-in-flight (% of device warp slots).
+    pub warps_pct: f64,
+    pub active_sm_pct: f64,
+}
+
+impl KernelSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// One uniform-grid sample of the GPU counters.
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineSample {
+    pub t: f64,
+    pub dram_read_pct: f64,
+    pub dram_write_pct: f64,
+    pub warps_pct: f64,
+    pub active_sm_pct: f64,
+}
+
+/// A wall-clock trace of kernel spans and CPU gaps.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub spans: Vec<KernelSpan>,
+    pub end: f64,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a simulated step: its CPU gap advances the clock with no
+    /// GPU activity, then its kernels execute back-to-back.
+    pub fn push_step(&mut self, step: &StepSim) {
+        let mut t = self.end + step.cpu_gap;
+        for k in &step.kernels {
+            self.spans.push(KernelSpan {
+                start: t,
+                end: t + k.duration,
+                name: k.inv.name,
+                class: Some(k.inv.class),
+                dram_read_util: k.dram_read_util,
+                dram_write_util: k.dram_write_util,
+                warps_pct: k.warps_in_flight_pct,
+                active_sm_pct: k.active_sm_pct,
+            });
+            t += k.duration;
+        }
+        self.end = t;
+    }
+
+    pub fn from_steps<'a>(steps: impl IntoIterator<Item = &'a StepSim>) -> Self {
+        let mut tl = Self::new();
+        for s in steps {
+            tl.push_step(s);
+        }
+        tl
+    }
+
+    /// Counter values at time `t` (zero inside CPU gaps).
+    pub fn at(&self, t: f64) -> TimelineSample {
+        // Spans are sorted by construction; binary-search the cover.
+        let mut lo = 0usize;
+        let mut hi = self.spans.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.spans[mid].end <= t {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if let Some(s) = self.spans.get(lo) {
+            if s.start <= t && t < s.end {
+                return TimelineSample {
+                    t,
+                    dram_read_pct: 100.0 * s.dram_read_util,
+                    dram_write_pct: 100.0 * s.dram_write_util,
+                    warps_pct: s.warps_pct,
+                    active_sm_pct: s.active_sm_pct,
+                };
+            }
+        }
+        TimelineSample {
+            t,
+            dram_read_pct: 0.0,
+            dram_write_pct: 0.0,
+            warps_pct: 0.0,
+            active_sm_pct: 0.0,
+        }
+    }
+
+    /// Sample the counters on a uniform grid of `n` points (Fig 5 top).
+    pub fn sample(&self, n: usize) -> Vec<TimelineSample> {
+        let dt = self.end / n.max(1) as f64;
+        (0..n).map(|i| self.at((i as f64 + 0.5) * dt)).collect()
+    }
+
+    /// Time-weighted average and maximum of (dram_read_pct, warps_pct)
+    /// over the whole wall-clock (gaps count as zero) — Fig 5 bottom.
+    pub fn avg_max(&self) -> TimelineStats {
+        let mut read_avg = 0.0;
+        let mut read_max: f64 = 0.0;
+        let mut warp_avg = 0.0;
+        let mut warp_max: f64 = 0.0;
+        for s in &self.spans {
+            let d = s.duration();
+            read_avg += 100.0 * s.dram_read_util * d;
+            warp_avg += s.warps_pct * d;
+            read_max = read_max.max(100.0 * s.dram_read_util);
+            warp_max = warp_max.max(s.warps_pct);
+        }
+        if self.end > 0.0 {
+            read_avg /= self.end;
+            warp_avg /= self.end;
+        }
+        TimelineStats {
+            dram_read_avg_pct: read_avg,
+            dram_read_max_pct: read_max,
+            warps_avg_pct: warp_avg,
+            warps_max_pct: warp_max,
+        }
+    }
+
+    /// Fraction of wall time with no kernel running (the CPU gaps).
+    pub fn idle_frac(&self) -> f64 {
+        let busy: f64 = self.spans.iter().map(|s| s.duration()).sum();
+        if self.end > 0.0 {
+            1.0 - busy / self.end
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineStats {
+    pub dram_read_avg_pct: f64,
+    pub dram_read_max_pct: f64,
+    pub warps_avg_pct: f64,
+    pub warps_max_pct: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::step::simulate_decode_step;
+    use crate::gpusim::GpuSpec;
+    use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+    fn tl(b: usize, steps: usize) -> Timeline {
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let step =
+            simulate_decode_step(&gpu, &spec, AttentionBackendKind::XFormers, &vec![338; b], 16);
+        Timeline::from_steps(std::iter::repeat(&step).take(steps))
+    }
+
+    #[test]
+    fn spans_sorted_and_within_bounds() {
+        let t = tl(32, 3);
+        let mut prev = 0.0;
+        for s in &t.spans {
+            assert!(s.start >= prev - 1e-12);
+            assert!(s.end > s.start);
+            prev = s.end;
+        }
+        assert!(t.end >= prev);
+    }
+
+    #[test]
+    fn gaps_sample_as_zero() {
+        let t = tl(8, 2);
+        // The instant just after step start is inside the CPU gap.
+        let s = t.at(1e-9);
+        assert_eq!(s.dram_read_pct, 0.0);
+        assert_eq!(s.warps_pct, 0.0);
+    }
+
+    #[test]
+    fn avg_below_max_and_under_50_at_large_batch() {
+        // Fig 5 bottom: avg utilization well below 50% even at B=512,
+        // while peaks approach saturation.
+        let t = tl(512, 3);
+        let st = t.avg_max();
+        assert!(st.dram_read_max_pct > 80.0, "{:?}", st);
+        assert!(st.warps_avg_pct < 50.0, "{:?}", st);
+        assert!(st.dram_read_avg_pct < st.dram_read_max_pct);
+    }
+
+    #[test]
+    fn idle_frac_grows_with_batch() {
+        // CPU gap grows with batch (Fig 5: bigger inter-step gaps).
+        let lo = tl(1, 4).idle_frac();
+        let hi = tl(512, 4).idle_frac();
+        assert!(hi > 0.0);
+        assert!(hi > lo * 0.5); // gap share stays significant
+    }
+
+    #[test]
+    fn sample_grid_covers_timeline() {
+        let t = tl(16, 2);
+        let samples = t.sample(100);
+        assert_eq!(samples.len(), 100);
+        assert!(samples.first().unwrap().t < samples.last().unwrap().t);
+        assert!(samples.last().unwrap().t < t.end);
+    }
+}

@@ -1,0 +1,202 @@
+//! Warp occupancy and stalled-cycles surrogates (Table I, Figs 8/9).
+//!
+//! The paper's Table I shows the paradox its title points at: SMs are
+//! *active* (60-88%) yet *compute warps in flight* stay under 35%, with
+//! half the warp slots unallocated — because attention kernels pin DRAM
+//! while issuing few instructions. We model:
+//!
+//! - **resident warps** from launch width vs device warp slots, capped
+//!   by a per-class occupancy limit (registers/smem pressure);
+//! - **in-flight (issuing) warps** = resident x issue duty cycle, where
+//!   the duty cycle is the compute share of the kernel's roofline time;
+//! - **stalled cycles** (`smsp__warp_issue_stalled_*` analogue) as a
+//!   saturating function of DRAM utilization — memory pressure directly
+//!   turns into data-wait stalls. Fitted against Fig 8 (B=1 vs MAX,
+//!   xFormers vs Flash) and Fig 9 (ctx-length sweeps).
+
+use super::dram;
+use super::hardware::GpuSpec;
+use super::kernels::{KernelClass, KernelInvocation};
+use crate::models::spec::{AttentionBackendKind, ModelSpec};
+
+/// Per-class occupancy ceiling: max fraction of an SM's warp slots a
+/// kernel can allocate (register/shared-memory limited).
+pub fn occupancy_ceiling(class: KernelClass) -> f64 {
+    match class {
+        KernelClass::MatMul => 0.50,
+        KernelClass::AttentionDecode => 0.38,
+        KernelClass::AttentionPrefill => 0.45,
+        KernelClass::Elementwise => 0.75,
+        KernelClass::Embedding => 0.75,
+        KernelClass::Sampling => 0.50,
+        KernelClass::CacheWrite => 0.75,
+    }
+}
+
+/// Fraction of SMs with at least one resident block.
+pub fn active_sm_frac(gpu: &GpuSpec, k: &KernelInvocation) -> f64 {
+    (k.blocks / gpu.num_sms as f64).min(1.0)
+}
+
+/// Resident warps as a fraction of all device warp slots.
+pub fn resident_warp_frac(gpu: &GpuSpec, k: &KernelInvocation) -> f64 {
+    active_sm_frac(gpu, k) * occupancy_ceiling(k.class)
+}
+
+/// "Compute warps in flight" (% of device warp slots actually issuing):
+/// resident warps x issue duty cycle from the roofline time split.
+pub fn warps_in_flight_pct(gpu: &GpuSpec, spec: &ModelSpec, k: &KernelInvocation) -> f64 {
+    let t_c = dram::compute_time(gpu, k);
+    let t_m = dram::memory_time(gpu, spec, k);
+    let duty = (t_c / t_c.max(t_m)).clamp(0.02, 1.0);
+    // Even compute-bound kernels issue from ~2/3 of resident warps at a
+    // time (dependency chains); memory-bound kernels idle most slots.
+    100.0 * resident_warp_frac(gpu, k) * (0.2 + 0.6 * duty)
+}
+
+/// "Unallocated warps in active SMs" (%): slots an active SM cannot fill
+/// because of the per-class occupancy ceiling.
+pub fn unallocated_warp_pct(k: &KernelInvocation) -> f64 {
+    100.0 * (1.0 - occupancy_ceiling(k.class))
+}
+
+/// Stall parameters per attention backend, fitted to Fig 8:
+/// `(stall_floor, stall_ceiling)` — interpolated by sqrt(DRAM util).
+fn stall_band(backend: AttentionBackendKind) -> (f64, f64) {
+    match backend {
+        AttentionBackendKind::FlashAttention => (0.15, 0.68),
+        AttentionBackendKind::XFormers => (0.32, 0.88),
+    }
+}
+
+/// Fraction of warp-cycles stalled waiting for data in a decode-attention
+/// kernel (`stalled long scoreboard` analogue; Fig 8/9).
+pub fn attention_stall_frac(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    batch: usize,
+    mean_ctx: f64,
+) -> f64 {
+    let util = dram::attention_utilization(gpu, spec, batch, mean_ctx);
+    let (lo, hi) = stall_band(backend);
+    // Larger models stall more even at B=1 (Fig 8): more bytes in flight
+    // per request raises the exposed-latency floor.
+    let size_bump = (spec.kv_bytes_per_token_per_layer() as f64 / 8192.0)
+        .log2()
+        .max(0.0)
+        * 0.09;
+    (lo + size_bump + (hi - lo) * util.sqrt()).min(0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernels;
+
+    #[test]
+    fn stalls_exceed_half_at_max_batch() {
+        // Paper Fig 8: >50% stalled cycles at MAX for every model.
+        let gpu = GpuSpec::h100_64g();
+        let cases = [
+            (ModelSpec::opt_1_3b(), 512),
+            (ModelSpec::opt_2_7b(), 256),
+            (ModelSpec::llama2_7b(), 128),
+            (ModelSpec::llama2_13b(), 80),
+        ];
+        for (spec, bmax) in cases {
+            for backend in [AttentionBackendKind::XFormers, AttentionBackendKind::FlashAttention] {
+                if backend == AttentionBackendKind::FlashAttention && !spec.flash_compatible() {
+                    continue;
+                }
+                let s = attention_stall_frac(&gpu, &spec, backend, bmax, 338.0);
+                assert!(s > 0.5, "{} {:?}: {s}", spec.name, backend);
+            }
+        }
+    }
+
+    #[test]
+    fn xformers_stalls_exceed_flash() {
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        for b in [1, 64, 512] {
+            let xf = attention_stall_frac(&gpu, &spec, AttentionBackendKind::XFormers, b, 338.0);
+            let fl =
+                attention_stall_frac(&gpu, &spec, AttentionBackendKind::FlashAttention, b, 338.0);
+            assert!(xf > fl, "B={b}: xformers {xf} <= flash {fl}");
+        }
+        // xFormers at MAX exceeds 80% (paper Fig 8).
+        let xf_max =
+            attention_stall_frac(&gpu, &spec, AttentionBackendKind::XFormers, 512, 338.0);
+        assert!(xf_max > 0.8, "{xf_max}");
+    }
+
+    #[test]
+    fn stalls_grow_with_input_length() {
+        // Paper Fig 9: longer prompts -> more stalled cycles.
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let mut prev = 0.0;
+        for ctx in [100.0, 400.0, 700.0, 1000.0] {
+            let s = attention_stall_frac(
+                &gpu,
+                &spec,
+                AttentionBackendKind::FlashAttention,
+                1,
+                ctx,
+            );
+            assert!(s > prev, "ctx {ctx}: {s} <= {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn larger_models_stall_more_at_batch_1() {
+        let gpu = GpuSpec::h100_64g();
+        let small = attention_stall_frac(
+            &gpu,
+            &ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+            1,
+            338.0,
+        );
+        let large = attention_stall_frac(
+            &gpu,
+            &ModelSpec::llama2_13b(),
+            AttentionBackendKind::XFormers,
+            1,
+            338.0,
+        );
+        assert!(large > small);
+    }
+
+    #[test]
+    fn warps_in_flight_low_for_decode_attention() {
+        // Table I: decode warps-in-flight < 35% on every model.
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        let k = kernels::attention_decode(
+            &spec,
+            AttentionBackendKind::XFormers,
+            &vec![338; 512],
+            16,
+        );
+        let wif = warps_in_flight_pct(&gpu, &spec, &k);
+        assert!(wif < 35.0, "{wif}");
+        assert!(wif > 2.0, "{wif}");
+    }
+
+    #[test]
+    fn unallocated_warps_near_paper_band() {
+        // Table I: 40-66% unallocated warps in active SMs.
+        let spec = ModelSpec::opt_1_3b();
+        let k = kernels::attention_decode(
+            &spec,
+            AttentionBackendKind::XFormers,
+            &vec![338; 64],
+            16,
+        );
+        let u = unallocated_warp_pct(&k);
+        assert!((40.0..70.0).contains(&u), "{u}");
+    }
+}

@@ -1,0 +1,324 @@
+//! Block allocator + per-sequence block tables.
+//!
+//! Invariants (enforced here, property-tested in `rust/tests/proptests.rs`):
+//! - a physical block belongs to at most one sequence;
+//! - block 0 is never handed out (reserved dummy for padded rows);
+//! - `free + allocated == num_blocks - 1` at all times;
+//! - a sequence's slots are `table[pos / bs] * bs + pos % bs`.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+pub type SeqId = u64;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("out of KV blocks: need {need}, free {free}")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(SeqId),
+    #[error("sequence {0} already registered")]
+    DuplicateSeq(SeqId),
+    #[error("sequence {seq} exceeds max_blocks_per_seq {max}")]
+    SeqTooLong { seq: SeqId, max: usize },
+}
+
+/// Free-list allocator over the physical block pool.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    num_blocks: usize,
+    free: Vec<u32>,
+    allocated: usize,
+    peak_allocated: usize,
+}
+
+impl BlockAllocator {
+    /// `num_blocks` includes the reserved dummy block 0.
+    pub fn new(num_blocks: usize) -> Self {
+        assert!(num_blocks >= 1, "need at least the reserved block");
+        // LIFO free list: low block ids come out first.
+        let free: Vec<u32> = (1..num_blocks as u32).rev().collect();
+        Self {
+            num_blocks,
+            free,
+            allocated: 0,
+            peak_allocated: 0,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn peak_allocated_blocks(&self) -> usize {
+        self.peak_allocated
+    }
+
+    /// Usable capacity (excludes the reserved block).
+    pub fn capacity(&self) -> usize {
+        self.num_blocks - 1
+    }
+
+    pub fn alloc(&mut self, n: usize) -> Result<Vec<u32>, KvError> {
+        if self.free.len() < n {
+            return Err(KvError::OutOfBlocks {
+                need: n,
+                free: self.free.len(),
+            });
+        }
+        let at = self.free.len() - n;
+        let blocks = self.free.split_off(at);
+        self.allocated += n;
+        self.peak_allocated = self.peak_allocated.max(self.allocated);
+        Ok(blocks)
+    }
+
+    pub fn release(&mut self, blocks: &[u32]) {
+        debug_assert!(blocks.iter().all(|&b| b != 0), "block 0 is reserved");
+        self.allocated -= blocks.len();
+        self.free.extend_from_slice(blocks);
+    }
+
+    /// Fraction of usable blocks currently allocated (Fig 3 y-axis).
+    pub fn usage(&self) -> f64 {
+        self.allocated as f64 / self.capacity().max(1) as f64
+    }
+
+    pub fn peak_usage(&self) -> f64 {
+        self.peak_allocated as f64 / self.capacity().max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqState {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+/// Per-sequence block tables on top of the allocator.
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    block_size: usize,
+    max_blocks_per_seq: usize,
+    seqs: HashMap<SeqId, SeqState>,
+}
+
+impl KvCacheManager {
+    pub fn new(num_blocks: usize, block_size: usize, max_blocks_per_seq: usize) -> Self {
+        Self {
+            alloc: BlockAllocator::new(num_blocks),
+            block_size,
+            max_blocks_per_seq,
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn max_blocks_per_seq(&self) -> usize {
+        self.max_blocks_per_seq
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.block_size - 1) / self.block_size
+    }
+
+    /// Blocks needed to admit a prompt of `prompt` tokens.
+    pub fn blocks_needed(&self, prompt: usize) -> usize {
+        self.blocks_for(prompt)
+    }
+
+    pub fn can_admit(&self, prompt: usize) -> bool {
+        self.alloc.free_blocks() >= self.blocks_for(prompt)
+    }
+
+    /// Register a sequence and allocate blocks for its prompt.
+    pub fn admit(&mut self, id: SeqId, prompt: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&id) {
+            return Err(KvError::DuplicateSeq(id));
+        }
+        let need = self.blocks_for(prompt.max(1));
+        if need > self.max_blocks_per_seq {
+            return Err(KvError::SeqTooLong {
+                seq: id,
+                max: self.max_blocks_per_seq,
+            });
+        }
+        let blocks = self.alloc.alloc(need)?;
+        self.seqs.insert(
+            id,
+            SeqState {
+                blocks,
+                tokens: prompt.max(1),
+            },
+        );
+        Ok(())
+    }
+
+    /// Extend a sequence by one generated token; allocates a new block
+    /// at block boundaries. Returns true if a new block was taken.
+    pub fn append_token(&mut self, id: SeqId) -> Result<bool, KvError> {
+        let bs = self.block_size;
+        let max_blocks = self.max_blocks_per_seq;
+        let state = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let new_tokens = state.tokens + 1;
+        let need = (new_tokens + bs - 1) / bs;
+        if need > max_blocks {
+            return Err(KvError::SeqTooLong { seq: id, max: max_blocks });
+        }
+        if need > state.blocks.len() {
+            let more = self.alloc.alloc(1)?;
+            let state = self.seqs.get_mut(&id).unwrap();
+            state.blocks.extend(more);
+            state.tokens = new_tokens;
+            Ok(true)
+        } else {
+            state.tokens = new_tokens;
+            Ok(false)
+        }
+    }
+
+    /// Release a finished (or preempted) sequence.
+    pub fn free(&mut self, id: SeqId) -> Result<(), KvError> {
+        let state = self.seqs.remove(&id).ok_or(KvError::UnknownSeq(id))?;
+        self.alloc.release(&state.blocks);
+        Ok(())
+    }
+
+    pub fn tokens_of(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.tokens)
+    }
+
+    /// The sequence's physical block table (padded externally).
+    pub fn block_table(&self, id: SeqId) -> Option<&[u32]> {
+        self.seqs.get(&id).map(|s| s.blocks.as_slice())
+    }
+
+    /// Physical slot of logical position `pos` in sequence `id`.
+    pub fn slot_for(&self, id: SeqId, pos: usize) -> Option<u32> {
+        let s = self.seqs.get(&id)?;
+        let b = s.blocks.get(pos / self.block_size)?;
+        Some(b * self.block_size as u32 + (pos % self.block_size) as u32)
+    }
+
+    pub fn usage(&self) -> f64 {
+        self.alloc.usage()
+    }
+
+    pub fn peak_usage(&self) -> f64 {
+        self.alloc.peak_usage()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocator_conserves_blocks() {
+        let mut a = BlockAllocator::new(64);
+        assert_eq!(a.capacity(), 63);
+        let x = a.alloc(10).unwrap();
+        let y = a.alloc(5).unwrap();
+        assert_eq!(a.free_blocks() + a.allocated_blocks(), 63);
+        a.release(&x);
+        a.release(&y);
+        assert_eq!(a.free_blocks(), 63);
+        assert_eq!(a.allocated_blocks(), 0);
+        assert_eq!(a.peak_allocated_blocks(), 15);
+    }
+
+    #[test]
+    fn allocator_never_hands_out_block_zero() {
+        let mut a = BlockAllocator::new(16);
+        let all = a.alloc(15).unwrap();
+        assert!(!all.contains(&0));
+        assert!(a.alloc(1).is_err());
+    }
+
+    #[test]
+    fn admit_and_slots() {
+        let mut kv = KvCacheManager::new(64, 16, 8);
+        kv.admit(1, 20).unwrap(); // 2 blocks
+        let table = kv.block_table(1).unwrap().to_vec();
+        assert_eq!(table.len(), 2);
+        assert_eq!(kv.slot_for(1, 0), Some(table[0] * 16));
+        assert_eq!(kv.slot_for(1, 17), Some(table[1] * 16 + 1));
+        assert_eq!(kv.slot_for(1, 40), None); // beyond owned blocks
+    }
+
+    #[test]
+    fn append_allocates_at_boundary() {
+        let mut kv = KvCacheManager::new(64, 16, 8);
+        kv.admit(1, 16).unwrap(); // exactly one block
+        assert_eq!(kv.allocator().allocated_blocks(), 1);
+        assert!(kv.append_token(1).unwrap()); // token 17 -> new block
+        assert!(!kv.append_token(1).unwrap()); // token 18 -> same block
+        assert_eq!(kv.allocator().allocated_blocks(), 2);
+        assert_eq!(kv.tokens_of(1), Some(18));
+    }
+
+    #[test]
+    fn out_of_blocks_is_reported() {
+        let mut kv = KvCacheManager::new(4, 16, 8); // 3 usable
+        kv.admit(1, 40).unwrap(); // 3 blocks
+        let err = kv.admit(2, 16).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        kv.free(1).unwrap();
+        kv.admit(2, 16).unwrap();
+    }
+
+    #[test]
+    fn seq_length_cap_enforced() {
+        let mut kv = KvCacheManager::new(64, 16, 2);
+        assert!(matches!(
+            kv.admit(1, 40),
+            Err(KvError::SeqTooLong { .. })
+        ));
+        kv.admit(2, 31).unwrap();
+        kv.append_token(2).unwrap(); // 32 tokens = 2 blocks, ok
+        assert!(matches!(
+            kv.append_token(2),
+            Err(KvError::SeqTooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_seqs() {
+        let mut kv = KvCacheManager::new(64, 16, 8);
+        kv.admit(1, 5).unwrap();
+        assert_eq!(kv.admit(1, 5), Err(KvError::DuplicateSeq(1)));
+        assert_eq!(kv.free(9), Err(KvError::UnknownSeq(9)));
+        assert_eq!(kv.append_token(9), Err(KvError::UnknownSeq(9)));
+    }
+
+    #[test]
+    fn usage_tracks_allocation() {
+        let mut kv = KvCacheManager::new(101, 16, 16); // 100 usable
+        kv.admit(1, 160).unwrap(); // 10 blocks
+        assert!((kv.usage() - 0.10).abs() < 1e-9);
+        kv.free(1).unwrap();
+        assert_eq!(kv.usage(), 0.0);
+        assert!((kv.peak_usage() - 0.10).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,38 @@
+//! # memgap — Mind the Memory Gap, reproduced
+//!
+//! A reproduction of *"Mind the Memory Gap: Unveiling GPU Bottlenecks in
+//! Large-Batch LLM Inference"* (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas serving stack:
+//!
+//! - **L3 (this crate)** — a vLLM-like serving coordinator: continuous
+//!   batching scheduler, paged KV-cache manager, request router, online
+//!   (tokio) and offline drivers; plus the paper's two contributions,
+//!   the [`bca`] *Batching Configuration Advisor* and [`replication`]
+//!   (FCFS / MPS model replication), and the [`gpusim`] H100 performance
+//!   model + Nsight-like profiler that regenerates every table and
+//!   figure of the paper's evaluation.
+//! - **L2/L1 (build time)** — `python/compile`: an OPT-style decoder
+//!   transformer in JAX whose attention/matmul hot spots are Pallas
+//!   kernels, AOT-lowered to HLO text artifacts.
+//! - **Runtime bridge** — [`runtime`] loads those artifacts through the
+//!   PJRT CPU client (`xla` crate) so the rust coordinator can serve a
+//!   *real* small model end to end with python never on the request path.
+//!
+//! Start with [`coordinator::offline::OfflineDriver`] (the paper's §V
+//! methodology), or run `cargo run --release --bin figures -- --all`.
+
+pub mod backend;
+pub mod bca;
+pub mod coordinator;
+pub mod figures;
+pub mod gpusim;
+pub mod kvcache;
+pub mod metrics;
+pub mod models;
+pub mod replication;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use backend::{Backend, StepOutput};
+pub use models::spec::ModelSpec;

@@ -1,0 +1,302 @@
+//! `memgap` — CLI for the serving coordinator.
+//!
+//! Subcommands:
+//!   serve      Online server (PJRT tiny-opt by default, or --sim MODEL)
+//!   offline    One offline simulated run, report metrics
+//!   bca        Profile a model and print the B_opt recommendation
+//!   replicate  BCA + replication study for a model
+//!   profile    Nsight-like attention-kernel profile at an operating point
+//!   figures    Same as the `figures` binary (`--all` etc.)
+
+use anyhow::{bail, Result};
+
+use memgap::backend::SimBackend;
+use memgap::bca::{self, BcaProfile, Constraints};
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::server;
+use memgap::figures::{self, FigOpts};
+use memgap::gpusim::mps::SharePolicy;
+use memgap::gpusim::profiler::profile_attention;
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::replication::run_replicated;
+use memgap::runtime::PjrtBackend;
+use memgap::util::cli::Args;
+use memgap::workload::{generate, WorkloadConfig};
+
+const USAGE: &str = "\
+memgap — 'Mind the Memory Gap' reproduction
+
+USAGE: memgap <serve|offline|bca|replicate|profile|figures> [flags]
+
+  serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
+  offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
+  bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
+  replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
+  profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
+  figures   --all | --fig figN/tableN [--out results] [--quick]
+
+Models: OPT-1.3B, OPT-2.7B, Llama-2-7B, Llama-2-13B, tiny-opt";
+
+fn model_arg(args: &Args) -> Result<ModelSpec> {
+    let name = args.get_or("model", "OPT-1.3B");
+    ModelSpec::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+}
+
+fn backend_arg(args: &Args) -> AttentionBackendKind {
+    match args.get_or("backend", "xformers") {
+        "flash" | "flashattention" => AttentionBackendKind::FlashAttention,
+        _ => AttentionBackendKind::XFormers,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "offline" => cmd_offline(&args),
+        "bca" => cmd_bca(&args),
+        "replicate" => cmd_replicate(&args),
+        "profile" => cmd_profile(&args),
+        "figures" => cmd_figures(&args),
+        _ => {
+            println!("{USAGE}");
+            if cmd.is_empty() {
+                Ok(())
+            } else {
+                bail!("unknown command '{cmd}'")
+            }
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8078");
+    let max_seqs = args.usize_or("max-seqs", 8);
+    if let Some(model) = args.get("sim") {
+        let spec = ModelSpec::by_name(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        let backend = SimBackend::new(GpuSpec::h100_64g(), spec, backend_arg(args));
+        let engine = Engine::new(backend, EngineConfig::new(max_seqs, 64 * 1024, 16));
+        eprintln!("serving SIMULATED {model} on {addr} (JSON lines; op=generate/stats/shutdown)");
+        let served = server::serve(engine, addr)?;
+        eprintln!("served {served} requests");
+        return Ok(());
+    }
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(memgap::runtime::default_artifacts_dir);
+    let backend = PjrtBackend::load(&dir)?;
+    let (blocks, bs, mbs) = backend.kv_geometry();
+    eprintln!(
+        "loaded {} ({} params) on {}; {blocks} KV blocks x {bs} slots",
+        backend.manifest.model.name,
+        backend.manifest.model.param_count,
+        backend.platform()
+    );
+    let mut cfg = EngineConfig::new(max_seqs.min(backend.manifest.max_decode_batch()), blocks, bs);
+    cfg.max_blocks_per_seq = mbs;
+    cfg.max_batched_tokens = 512;
+    let engine = Engine::new(backend, cfg);
+    eprintln!("serving on {addr} (JSON lines; op=generate/stats/shutdown)");
+    let served = server::serve(engine, addr)?;
+    eprintln!("served {served} requests");
+    Ok(())
+}
+
+fn cmd_offline(args: &Args) -> Result<()> {
+    let spec = model_arg(args)?;
+    let max_seqs = args.usize_or("max-seqs", 96);
+    let mut cfg = OfflineConfig::new(spec, max_seqs);
+    cfg.attention = backend_arg(args);
+    cfg.num_requests = args.usize_or("requests", 2 * max_seqs.max(8));
+    cfg.input_len = args.usize_or("in", cfg.input_len);
+    cfg.output_len = args.usize_or("out", cfg.output_len);
+    cfg.chunked_prefill = args.bool_or("chunked-prefill", false);
+    let r = cfg.run()?;
+    println!("model            : {}", cfg.model.name);
+    println!("max batch        : {max_seqs}");
+    println!(
+        "requests         : {} (completed {})",
+        r.metrics.num_requests, r.metrics.completed
+    );
+    println!("makespan         : {:.3} s", r.metrics.makespan);
+    println!(
+        "throughput       : {:.0} tok/s ({:.2} tok/ms)",
+        r.metrics.throughput_tps,
+        r.metrics.throughput_tpms()
+    );
+    println!("avg batch        : {:.1}", r.metrics.avg_batch);
+    println!("mean ITL         : {:.2} ms", r.metrics.mean_itl * 1e3);
+    println!("mean E2E         : {:.2} s", r.metrics.mean_e2e);
+    println!("peak KV usage    : {:.1} %", 100.0 * r.peak_kv_usage);
+    println!("CPU-gap share    : {:.1} %", 100.0 * r.metrics.cpu_time_frac);
+    println!("preemptions      : {}", r.preemptions);
+    Ok(())
+}
+
+fn cmd_bca(args: &Args) -> Result<()> {
+    let spec = model_arg(args)?;
+    let opts = if args.bool_or("quick", false) {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    let base = OfflineConfig::new(spec.clone(), 1);
+    let grid = figures::bca_figs::profile_grid(&opts);
+    eprintln!("profiling {} over {:?} ...", spec.name, grid);
+    let profile = BcaProfile::measure(&base, &grid, opts.requests())?;
+    let c = match args.get_or("slo", "strict") {
+        "relaxed" => Constraints::relaxed(&profile),
+        _ => Constraints::strict(&profile),
+    };
+    let c = Constraints {
+        epsilon: args.f64_or("eps", c.epsilon),
+        ..c
+    };
+    println!("profile ({}):", spec.name);
+    println!(
+        "{:>9} {:>9} {:>12} {:>9} {:>8}",
+        "max_batch", "avg", "tok/s", "ITL ms", "KV %"
+    );
+    for p in &profile.points {
+        println!(
+            "{:>9} {:>9.1} {:>12.0} {:>9.2} {:>8.1}",
+            p.max_batch,
+            p.avg_batch,
+            p.throughput_tps,
+            p.itl * 1e3,
+            100.0 * p.kv_usage
+        );
+    }
+    match bca::recommend(&profile, c) {
+        Some(r) => {
+            println!(
+                "\nB_opt = {}  (SLO {:.2} ms, eps {})",
+                r.b_opt,
+                c.slo_itl * 1e3,
+                c.epsilon
+            );
+            println!("  throughput vs MAX : {:.1} %", 100.0 * r.throughput_vs_max);
+            println!("  ITL reduction     : {:.1} %", 100.0 * r.itl_reduction_vs_max);
+            println!("  KV usage          : {:.1} %", 100.0 * r.point.kv_usage);
+            let plan = bca::memory_plan(&GpuSpec::h100_64g(), &spec, r.point.kv_usage);
+            println!(
+                "  memory plan       : weights {:.1} GB | KV used {:.1} GB | freed {:.1} GB ({:.0} %) | other {:.1} GB",
+                plan.weights_gb,
+                plan.kv_used_gb,
+                plan.kv_freed_gb,
+                100.0 * plan.freed_frac(),
+                plan.other_gb
+            );
+        }
+        None => println!("\nno feasible B under the given constraints"),
+    }
+    Ok(())
+}
+
+fn cmd_replicate(args: &Args) -> Result<()> {
+    let spec = model_arg(args)?;
+    let quick = args.bool_or("quick", false);
+    let opts = if quick {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    let base1 = OfflineConfig::new(spec.clone(), 1);
+    let profile =
+        BcaProfile::measure(&base1, &figures::bca_figs::profile_grid(&opts), opts.requests())?;
+    let rec = bca::recommend(&profile, Constraints::relaxed(&profile))
+        .ok_or_else(|| anyhow::anyhow!("no feasible B_opt"))?;
+    let plan = bca::memory_plan(&GpuSpec::h100_64g(), &spec, rec.point.kv_usage);
+    let frac = plan.engine_mem_fraction().max(0.05);
+    let policy = match args.get_or("policy", "mps") {
+        "fcfs" => SharePolicy::Fcfs,
+        _ => SharePolicy::Mps,
+    };
+    let max_reps = args.usize_or("replicas", ((1.0 / frac) as usize).clamp(1, 4));
+    let reqs = generate(&WorkloadConfig::sharegpt(opts.requests(), 0));
+    println!(
+        "{}: B_opt {} (relaxed SLO), each replica needs {:.0}% of usable memory",
+        spec.name,
+        rec.b_opt,
+        100.0 * frac
+    );
+    println!(
+        "{:>9} {:>12} {:>9} {:>9} {:>10} {:>9}",
+        "replicas", "tok/s", "ITL ms", "E2E s", "DRAM %", "CPU %"
+    );
+    for n in 1..=max_reps {
+        let cfg = OfflineConfig::new(spec.clone(), rec.b_opt);
+        let rep = run_replicated(&cfg, n, policy, &reqs, frac)?;
+        println!(
+            "{:>9} {:>12.0} {:>9.2} {:>9.2} {:>10.1} {:>9.1}",
+            n,
+            rep.throughput_tps,
+            rep.mean_itl * 1e3,
+            rep.mean_e2e,
+            100.0 * rep.mean_dram_util,
+            100.0 * rep.cpu_time_frac
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let spec = model_arg(args)?;
+    let gpu = GpuSpec::h100_64g();
+    let batch = args.usize_or("batch", 1);
+    let ctx = args.usize_or("ctx", 499);
+    let p = profile_attention(&gpu, &spec, backend_arg(args), batch, ctx, 16);
+    println!(
+        "attention kernel profile — {} @ batch {batch}, ctx {ctx}",
+        spec.name
+    );
+    println!("  backend              : {:?}", p.backend);
+    println!(
+        "  mem traffic          : {:.3e} B/s ({:.1}% of peak)",
+        p.mem_traffic,
+        100.0 * p.mem_traffic / gpu.dram_bw
+    );
+    println!(
+        "  performance          : {:.3e} FLOP/s ({:.2}% of SP peak)",
+        p.performance,
+        100.0 * p.performance / gpu.peak_flops_sp
+    );
+    println!(
+        "  arithmetic intensity : {:.3} FLOP/byte (ridge {:.1})",
+        p.arithmetic_intensity,
+        gpu.ridge_ai_sp()
+    );
+    println!(
+        "  L1 / L2 hit rate     : {:.2}% / {:.2}%",
+        p.l1_hit_rate, p.l2_hit_rate
+    );
+    println!("  stalled warp cycles  : {:.1}%", p.stalled_pct);
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let opts = if args.bool_or("quick", false) {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    let out = std::path::PathBuf::from(args.get_or("out", "results"));
+    let ids: Vec<&str> = if args.bool_or("all", false) {
+        figures::ALL_IDS.to_vec()
+    } else if let Some(f) = args.get("fig") {
+        vec![f]
+    } else {
+        bail!("pass --all or --fig <id>");
+    };
+    let tables = figures::run_to_dir(&ids, &opts, &out)?;
+    for t in &tables {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!("wrote {} tables to {}", tables.len(), out.display());
+    Ok(())
+}

@@ -1,0 +1,243 @@
+//! Serving metrics: the quantities every paper table/figure reports.
+//!
+//! - **Throughput** — input+output tokens per second (paper Figs 2/3:
+//!   "input and output tokens/s"; Table IV: tokens/ms).
+//! - **ITL** — inter-token latency: mean gap between consecutive output
+//!   tokens of a request, averaged over requests.
+//! - **E2E** — end-to-end latency: arrival to last token.
+//! - **Average batch size** — the paper plots Fig 2 against the
+//!   *observed average* batch, not the configured maximum.
+
+use std::collections::HashMap;
+
+/// Per-request timing record, filled in by the engine.
+#[derive(Debug, Clone)]
+pub struct RequestTiming {
+    pub id: u64,
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    /// Completion time of each generated token (first = prefill done).
+    pub token_times: Vec<f64>,
+}
+
+impl RequestTiming {
+    pub fn finished_at(&self) -> Option<f64> {
+        self.token_times.last().copied()
+    }
+
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished_at().map(|t| t - self.arrival)
+    }
+
+    /// Mean inter-token latency (needs >= 2 tokens).
+    pub fn itl(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let n = self.token_times.len() - 1;
+        Some((self.token_times[n] - self.token_times[0]) / n as f64)
+    }
+
+    pub fn output_tokens(&self) -> usize {
+        self.token_times.len()
+    }
+}
+
+/// Collector the engine feeds during a run.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsCollector {
+    requests: HashMap<u64, RequestTiming>,
+    /// (time, batch) samples per decode step, for average batch size.
+    batch_samples: Vec<(f64, usize)>,
+    pub total_cpu_time: f64,
+    pub total_gpu_time: f64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_admit(&mut self, id: u64, arrival: f64, prompt_tokens: usize) {
+        self.requests.entry(id).or_insert(RequestTiming {
+            id,
+            arrival,
+            prompt_tokens,
+            token_times: Vec::new(),
+        });
+    }
+
+    pub fn on_token(&mut self, id: u64, now: f64) {
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.token_times.push(now);
+        }
+    }
+
+    pub fn on_step(&mut self, now: f64, batch: usize, cpu: f64, gpu: f64) {
+        self.batch_samples.push((now, batch));
+        self.total_cpu_time += cpu;
+        self.total_gpu_time += gpu;
+    }
+
+    pub fn finish(self, makespan: f64) -> RunMetrics {
+        RunMetrics::from_collector(self, makespan)
+    }
+
+    pub fn requests(&self) -> impl Iterator<Item = &RequestTiming> {
+        self.requests.values()
+    }
+}
+
+/// Aggregated results of one serving run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub num_requests: usize,
+    pub completed: usize,
+    pub makespan: f64,
+    pub total_input_tokens: usize,
+    pub total_output_tokens: usize,
+    /// Input+output tokens / makespan (tokens per second).
+    pub throughput_tps: f64,
+    /// Mean inter-token latency over requests (seconds).
+    pub mean_itl: f64,
+    pub p99_itl: f64,
+    /// Mean end-to-end latency over requests (seconds).
+    pub mean_e2e: f64,
+    /// Time-weighted mean decode batch size.
+    pub avg_batch: f64,
+    /// CPU-gap share of the run ("CPU time" in Table IV).
+    pub cpu_time_frac: f64,
+}
+
+impl RunMetrics {
+    fn from_collector(c: MetricsCollector, makespan: f64) -> Self {
+        let completed = c
+            .requests
+            .values()
+            .filter(|r| !r.token_times.is_empty())
+            .count();
+        let total_input_tokens: usize = c.requests.values().map(|r| r.prompt_tokens).sum();
+        let total_output_tokens: usize = c.requests.values().map(|r| r.output_tokens()).sum();
+        let mut itls: Vec<f64> = c.requests.values().filter_map(|r| r.itl()).collect();
+        itls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_itl = if itls.is_empty() {
+            0.0
+        } else {
+            itls.iter().sum::<f64>() / itls.len() as f64
+        };
+        let p99_itl = itls
+            .get((itls.len().saturating_sub(1)) * 99 / 100)
+            .copied()
+            .unwrap_or(0.0);
+        let e2es: Vec<f64> = c.requests.values().filter_map(|r| r.e2e()).collect();
+        let mean_e2e = if e2es.is_empty() {
+            0.0
+        } else {
+            e2es.iter().sum::<f64>() / e2es.len() as f64
+        };
+        // Time-weighted average batch: weight each sample by the gap to
+        // the next one.
+        let mut samples = c.batch_samples.clone();
+        samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut avg_batch = 0.0;
+        if !samples.is_empty() {
+            let mut weighted = 0.0;
+            let mut total_w = 0.0;
+            for i in 0..samples.len() {
+                let end = samples.get(i + 1).map(|s| s.0).unwrap_or(makespan);
+                let w = (end - samples[i].0).max(0.0);
+                weighted += samples[i].1 as f64 * w;
+                total_w += w;
+            }
+            avg_batch = if total_w > 0.0 {
+                weighted / total_w
+            } else {
+                samples.iter().map(|s| s.1 as f64).sum::<f64>() / samples.len() as f64
+            };
+        }
+        let throughput_tps = if makespan > 0.0 {
+            (total_input_tokens + total_output_tokens) as f64 / makespan
+        } else {
+            0.0
+        };
+        RunMetrics {
+            num_requests: c.requests.len(),
+            completed,
+            makespan,
+            total_input_tokens,
+            total_output_tokens,
+            throughput_tps,
+            mean_itl,
+            p99_itl,
+            mean_e2e,
+            avg_batch,
+            cpu_time_frac: if makespan > 0.0 {
+                c.total_cpu_time / makespan
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Table IV convention: tokens per millisecond.
+    pub fn throughput_tpms(&self) -> f64 {
+        self.throughput_tps / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collector_with_two_requests() -> MetricsCollector {
+        let mut c = MetricsCollector::new();
+        c.on_admit(1, 0.0, 100);
+        c.on_admit(2, 0.0, 50);
+        // req 1: tokens at 1.0, 1.1, 1.2 -> ITL 0.1
+        for t in [1.0, 1.1, 1.2] {
+            c.on_token(1, t);
+        }
+        // req 2: tokens at 1.0, 1.3 -> ITL 0.3
+        for t in [1.0, 1.3] {
+            c.on_token(2, t);
+        }
+        c.on_step(0.0, 2, 0.01, 0.09);
+        c.on_step(1.0, 2, 0.01, 0.09);
+        c
+    }
+
+    #[test]
+    fn aggregates_are_correct() {
+        let m = collector_with_two_requests().finish(2.0);
+        assert_eq!(m.num_requests, 2);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.total_input_tokens, 150);
+        assert_eq!(m.total_output_tokens, 5);
+        assert!((m.throughput_tps - 155.0 / 2.0).abs() < 1e-9);
+        assert!((m.mean_itl - 0.2).abs() < 1e-9); // (0.1 + 0.3) / 2
+        assert!((m.mean_e2e - (1.2 + 1.3) / 2.0).abs() < 1e-9);
+        assert!((m.cpu_time_frac - 0.01).abs() < 1e-9); // 0.02 / 2.0
+        assert!((m.avg_batch - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_requests_have_no_itl() {
+        let mut c = MetricsCollector::new();
+        c.on_admit(1, 0.0, 10);
+        c.on_token(1, 0.5);
+        let m = c.finish(1.0);
+        assert_eq!(m.mean_itl, 0.0);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn avg_batch_is_time_weighted() {
+        let mut c = MetricsCollector::new();
+        c.on_admit(1, 0.0, 1);
+        // batch 10 for 1 s, then batch 2 for 9 s.
+        c.on_step(0.0, 10, 0.0, 0.0);
+        c.on_step(1.0, 2, 0.0, 0.0);
+        let m = c.finish(10.0);
+        assert!((m.avg_batch - (10.0 * 1.0 + 2.0 * 9.0) / 10.0).abs() < 1e-9);
+    }
+}

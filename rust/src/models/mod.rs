@@ -1,0 +1,11 @@
+//! Model architecture specifications and analytic size/FLOPs accounting.
+//!
+//! The paper evaluates OPT-1.3B, OPT-2.7B, Llama-2-7B and Llama-2-13B on
+//! an H100; [`spec::ModelSpec`] captures exactly the architectural
+//! quantities the GPU analysis depends on (layers, width, heads, FFN
+//! size, KV bytes per token). `tiny-opt` mirrors the JAX model that is
+//! AOT-compiled for the real PJRT execution path.
+
+pub mod spec;
+
+pub use spec::{AttentionBackendKind, FfnKind, ModelSpec};

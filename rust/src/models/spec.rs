@@ -1,0 +1,259 @@
+//! Architecture specs for the paper's models (plus the tiny e2e model).
+//!
+//! All byte/FLOP accounting the simulator and the KV-cache manager rely
+//! on lives here, so the formulas exist in exactly one place.
+
+
+/// Feed-forward block style. OPT uses a plain ReLU MLP (2 matrices);
+/// Llama uses SwiGLU (3 matrices), which changes FFN FLOPs and weight
+/// bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnKind {
+    Relu,
+    SwiGlu,
+}
+
+/// Attention kernel implementation, matching the two CUDA backends the
+/// paper profiles (§V-C). The cost models differ in HBM traffic and
+/// stall behaviour (see `gpusim::kernels`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttentionBackendKind {
+    /// xFormers memory-efficient attention: unfused softmax statistics,
+    /// extra intermediate traffic, worst stall behaviour in the paper.
+    XFormers,
+    /// FlashAttention: tiled + fused, minimal HBM traffic.
+    FlashAttention,
+}
+
+/// Decoder-only transformer architecture description.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Distinct K/V heads (MHA: == n_heads; GQA/MQA would be fewer).
+    pub n_kv_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub ffn: FfnKind,
+    /// Weight/KV element size in bytes (paper deployments: fp16 = 2).
+    pub dtype_bytes: usize,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// vLLM/xFormers-era FlashAttention supported head dims {16..128,
+    /// multiple of 8} *except* configurations like OPT-2.7B (head_dim 80)
+    /// which the paper notes is incompatible with the FA backend.
+    pub fn flash_compatible(&self) -> bool {
+        matches!(self.head_dim(), 16 | 32 | 64 | 96 | 128)
+    }
+
+    /// Total parameter count (tied LM head, learned positions like OPT).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        let v = self.vocab as u64;
+        let l = self.n_layers as u64;
+        let attn = 4 * d * d + 4 * d;
+        let ffn = match self.ffn {
+            FfnKind::Relu => 2 * d * f + d + f,
+            FfnKind::SwiGlu => 3 * d * f,
+        };
+        let norms = 4 * d; // two pre-norms per block
+        v * d + (self.max_seq as u64) * d + l * (attn + ffn + norms) + 2 * d
+    }
+
+    /// Bytes of model weights resident in GPU memory.
+    pub fn weight_bytes(&self) -> u64 {
+        self.param_count() * self.dtype_bytes as u64
+    }
+
+    /// KV-cache bytes for ONE token across all layers (K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        let kv_dim = (self.n_kv_heads * self.head_dim()) as u64;
+        2 * self.n_layers as u64 * kv_dim * self.dtype_bytes as u64
+    }
+
+    /// KV bytes for one token in one layer (K+V) — the per-kernel unit
+    /// the attention cost model works in.
+    pub fn kv_bytes_per_token_per_layer(&self) -> u64 {
+        self.kv_bytes_per_token() / self.n_layers as u64
+    }
+
+    /// FLOPs of one decode step for a whole batch, all layers + LM head
+    /// (2·params·batch plus attention's 4·d·ctx per token).
+    pub fn decode_flops(&self, batch: usize, mean_ctx: f64) -> f64 {
+        let lin = 2.0 * self.param_count() as f64 * batch as f64;
+        let attn =
+            4.0 * self.n_layers as f64 * self.d_model as f64 * mean_ctx * batch as f64;
+        lin + attn
+    }
+
+    // ----- paper presets ---------------------------------------------------
+
+    pub fn opt_1_3b() -> Self {
+        Self {
+            name: "OPT-1.3B".into(),
+            n_layers: 24,
+            d_model: 2048,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ffn: 8192,
+            vocab: 50272,
+            max_seq: 2048,
+            ffn: FfnKind::Relu,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn opt_2_7b() -> Self {
+        Self {
+            name: "OPT-2.7B".into(),
+            n_layers: 32,
+            d_model: 2560,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ffn: 10240,
+            vocab: 50272,
+            max_seq: 2048,
+            ffn: FfnKind::Relu,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "Llama-2-7B".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ffn: 11008,
+            vocab: 32000,
+            max_seq: 2048,
+            ffn: FfnKind::SwiGlu,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "Llama-2-13B".into(),
+            n_layers: 40,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 40,
+            d_ffn: 13824,
+            vocab: 32000,
+            max_seq: 2048,
+            ffn: FfnKind::SwiGlu,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The real model served end-to-end through PJRT (f32 on CPU);
+    /// mirrors `python/compile/aot.py` preset `tiny-opt`.
+    pub fn tiny_opt() -> Self {
+        Self {
+            name: "tiny-opt".into(),
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 8,
+            d_ffn: 1024,
+            vocab: 8192,
+            max_seq: 512,
+            ffn: FfnKind::Relu,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// The four models of the paper's evaluation, in paper order.
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![
+            Self::opt_1_3b(),
+            Self::opt_2_7b(),
+            Self::llama2_7b(),
+            Self::llama2_13b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        let canon = name.to_ascii_lowercase().replace(['_', ' '], "-");
+        match canon.as_str() {
+            "opt-1.3b" | "opt1.3b" => Some(Self::opt_1_3b()),
+            "opt-2.7b" | "opt2.7b" => Some(Self::opt_2_7b()),
+            "llama-2-7b" | "llama2-7b" => Some(Self::llama2_7b()),
+            "llama-2-13b" | "llama2-13b" => Some(Self::llama2_13b()),
+            "tiny-opt" => Some(Self::tiny_opt()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // Within 10% of the nominal sizes (embeddings/rounding differ).
+        let cases = [
+            (ModelSpec::opt_1_3b(), 1.3e9),
+            (ModelSpec::opt_2_7b(), 2.7e9),
+            (ModelSpec::llama2_7b(), 6.7e9),
+            (ModelSpec::llama2_13b(), 13.0e9),
+        ];
+        for (spec, nominal) in cases {
+            let p = spec.param_count() as f64;
+            let ratio = p / nominal;
+            assert!(
+                (0.85..1.15).contains(&ratio),
+                "{}: {} params vs nominal {}",
+                spec.name,
+                p,
+                nominal
+            );
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token_known_values() {
+        // OPT-1.3B fp16: 2 * 24 layers * 2048 * 2B = 196608 B/token.
+        assert_eq!(ModelSpec::opt_1_3b().kv_bytes_per_token(), 196_608);
+        // Llama-2-13B fp16: 2 * 40 * 5120 * 2 = 819200.
+        assert_eq!(ModelSpec::llama2_13b().kv_bytes_per_token(), 819_200);
+    }
+
+    #[test]
+    fn flash_compatibility_matches_paper() {
+        // Paper Fig. 8: "OPT-2.7B model is not compatible" with the
+        // FlashAttention backend (head_dim 80).
+        assert!(ModelSpec::opt_1_3b().flash_compatible());
+        assert!(!ModelSpec::opt_2_7b().flash_compatible());
+        assert!(ModelSpec::llama2_7b().flash_compatible());
+        assert!(ModelSpec::llama2_13b().flash_compatible());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for spec in ModelSpec::paper_models() {
+            assert_eq!(ModelSpec::by_name(&spec.name).unwrap().name, spec.name);
+        }
+        assert!(ModelSpec::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn tiny_opt_matches_python_config() {
+        let t = ModelSpec::tiny_opt();
+        assert_eq!(t.head_dim(), 32);
+        // python: PRESETS['tiny-opt'].param_count() == 5_387_776
+        assert_eq!(t.param_count(), 5_387_776);
+    }
+}

@@ -1,0 +1,319 @@
+//! `PjrtBackend` — real execution of the AOT'd tiny model on the PJRT
+//! CPU client, implementing the same [`Backend`] trait the simulator
+//! does, so the whole coordinator stack (scheduler, KV manager, router,
+//! server) runs unchanged on real numerics.
+//!
+//! Bucketing: each (kind, batch[, seq]) pair was compiled ahead of time
+//! (`aot.py`); a step batch is padded up to the smallest bucket that
+//! fits. Padded rows follow the contract in `python/compile/model.py`:
+//! token 0, context_len 1, block table all-zeros, slot 0 (the reserved
+//! dummy block), so they cannot disturb real rows — asserted by
+//! `python/tests/test_model.py::test_padded_batch_rows_do_not_disturb_real_rows`
+//! and re-asserted end-to-end in `rust/tests/integration_pjrt.rs`.
+//!
+//! Weights are loaded once into host literals and passed by reference
+//! to every execute (PJRT copies host->"device" internally on CPU); the
+//! KV caches round-trip through the output tuple so rust owns state.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{Backend, StepBatch, StepOutput};
+use crate::models::spec::{FfnKind, ModelSpec};
+use crate::runtime::manifest::{ExecSpec, Manifest};
+use crate::runtime::weights::load_weight_literals;
+
+/// Real-execution backend over compiled HLO buckets.
+pub struct PjrtBackend {
+    pub manifest: Manifest,
+    spec: ModelSpec,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::Literal>,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    /// Cumulative wall time spent inside execute() (perf accounting).
+    pub exec_time_s: f64,
+    pub exec_calls: u64,
+}
+
+/// Result of one raw executable run, before argmax.
+struct RawStep {
+    logits: xla::Literal,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    elapsed: f64,
+}
+
+fn cache_dims(m: &crate::runtime::manifest::TinyModelCfg) -> [usize; 4] {
+    [m.n_layers, m.n_heads, m.num_slots, m.head_dim]
+}
+
+impl PjrtBackend {
+    /// Load artifacts from `dir` and compile every bucket eagerly.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for e in &manifest.executables {
+            let path = manifest.dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|err| anyhow!("parsing {}: {err:?}", e.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|err| anyhow!("compiling {}: {err:?}", e.file))?;
+            executables.insert(e.file.clone(), exe);
+        }
+        let weights = load_weight_literals(&manifest).context("loading weights")?;
+        let dims = cache_dims(&manifest.model);
+        // CreateFromShape zero-fills — block 0 starts clean.
+        let k_cache = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+        let v_cache = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+        let m = &manifest.model;
+        let spec = ModelSpec {
+            name: m.name.clone(),
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_heads,
+            d_ffn: 4 * m.d_model,
+            vocab: m.vocab_size,
+            max_seq: m.max_seq,
+            ffn: FfnKind::Relu,
+            dtype_bytes: 4,
+        };
+        Ok(Self {
+            manifest,
+            spec,
+            client,
+            executables,
+            weights,
+            k_cache,
+            v_cache,
+            exec_time_s: 0.0,
+            exec_calls: 0,
+        })
+    }
+
+    /// KV geometry for the engine config: (num_blocks, block_size,
+    /// max_blocks_per_seq).
+    pub fn kv_geometry(&self) -> (usize, usize, usize) {
+        let m = &self.manifest.model;
+        (m.num_blocks, m.block_size, m.max_blocks_per_seq)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Reset KV cache state (fresh serving session).
+    pub fn reset_cache(&mut self) {
+        let dims = cache_dims(&self.manifest.model);
+        self.k_cache = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+        self.v_cache = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+    }
+
+    fn i32_lit(vals: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(vals)
+            .reshape(dims)
+            .map_err(|e| anyhow!("literal reshape: {e:?}"))
+    }
+
+    /// Execute one bucket with `step_inputs` (the per-step literals) in
+    /// front of the cache + weight literals; unpack the 3-tuple.
+    fn execute_raw(
+        executables: &HashMap<String, xla::PjRtLoadedExecutable>,
+        weights: &[xla::Literal],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        bucket: &ExecSpec,
+        step_inputs: &[&xla::Literal],
+    ) -> Result<RawStep> {
+        let exe = executables
+            .get(&bucket.file)
+            .ok_or_else(|| anyhow!("unknown executable {}", bucket.file))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(step_inputs.len() + 2 + weights.len());
+        inputs.extend_from_slice(step_inputs);
+        inputs.push(k_cache);
+        inputs.push(v_cache);
+        inputs.extend(weights.iter());
+        if inputs.len() != bucket.inputs.len() {
+            bail!(
+                "{}: built {} inputs, manifest expects {}",
+                bucket.file,
+                inputs.len(),
+                bucket.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", bucket.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != 3 {
+            bail!(
+                "expected (logits, k_cache, v_cache), got {} parts",
+                parts.len()
+            );
+        }
+        let v_cache = parts.pop().unwrap();
+        let k_cache = parts.pop().unwrap();
+        let logits = parts.pop().unwrap();
+        Ok(RawStep {
+            logits,
+            k_cache,
+            v_cache,
+            elapsed,
+        })
+    }
+
+    /// Greedy argmax over the first `real_rows` logit rows.
+    fn argmax_rows(logits: &xla::Literal, real_rows: usize) -> Result<Vec<i32>> {
+        let shape = logits
+            .array_shape()
+            .map_err(|e| anyhow!("logits shape: {e:?}"))?;
+        let vocab = *shape.dims().last().unwrap() as usize;
+        let vals = logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        let mut next = Vec::with_capacity(real_rows);
+        for r in 0..real_rows {
+            let row = &vals[r * vocab..(r + 1) * vocab];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            next.push(best as i32);
+        }
+        Ok(next)
+    }
+
+    fn finish_step(&mut self, raw: RawStep, real_rows: usize) -> Result<StepOutput> {
+        self.k_cache = raw.k_cache;
+        self.v_cache = raw.v_cache;
+        self.exec_time_s += raw.elapsed;
+        self.exec_calls += 1;
+        Ok(StepOutput {
+            next_tokens: Self::argmax_rows(&raw.logits, real_rows)?,
+            gpu_time: raw.elapsed,
+            cpu_gap: 0.0, // host time is real wall time here
+            sim: None,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn max_batch(&self) -> usize {
+        self.manifest.max_decode_batch()
+    }
+
+    fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput> {
+        let n = batch.len();
+        let max_len = batch
+            .entries
+            .iter()
+            .map(|e| e.tokens.len())
+            .max()
+            .unwrap_or(1);
+        let bucket = self
+            .manifest
+            .prefill_bucket(n, max_len)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no prefill bucket for batch {n} x seq {max_len} \
+                     (prompts longer than {} must be split upstream)",
+                    self.manifest.max_prefill_seq()
+                )
+            })?
+            .clone();
+        let b = bucket.batch;
+        let s = bucket.seq.expect("prefill bucket has seq");
+
+        let mut tokens = vec![0i32; b * s];
+        let mut prompt_lens = vec![1i32; b];
+        let mut slots = vec![0i32; b * s];
+        for (i, e) in batch.entries.iter().enumerate() {
+            prompt_lens[i] = e.tokens.len() as i32;
+            for (j, &t) in e.tokens.iter().enumerate() {
+                tokens[i * s + j] = t;
+            }
+            for (j, &sl) in e.slot_mapping.iter().enumerate() {
+                slots[i * s + j] = sl as i32;
+            }
+        }
+        let tokens_l = Self::i32_lit(&tokens, &[b as i64, s as i64])?;
+        let lens_l = Self::i32_lit(&prompt_lens, &[b as i64])?;
+        let slots_l = Self::i32_lit(&slots, &[b as i64, s as i64])?;
+
+        let raw = Self::execute_raw(
+            &self.executables,
+            &self.weights,
+            &self.k_cache,
+            &self.v_cache,
+            &bucket,
+            &[&tokens_l, &lens_l, &slots_l],
+        )?;
+        self.finish_step(raw, n)
+    }
+
+    fn decode(&mut self, batch: &StepBatch) -> Result<StepOutput> {
+        let n = batch.len();
+        let bucket = self
+            .manifest
+            .decode_bucket(n)
+            .ok_or_else(|| anyhow!("no decode bucket fits batch {n}"))?
+            .clone();
+        let b = bucket.batch;
+        let mb = self.manifest.model.max_blocks_per_seq;
+
+        let mut tokens = vec![0i32; b];
+        let mut ctx = vec![1i32; b];
+        let mut slots = vec![0i32; b];
+        let mut bt = vec![0i32; b * mb];
+        for (i, e) in batch.entries.iter().enumerate() {
+            tokens[i] = *e.tokens.last().unwrap_or(&0);
+            ctx[i] = e.context_len as i32;
+            slots[i] = *e.slot_mapping.last().unwrap_or(&0) as i32;
+            if e.block_table.len() > mb {
+                bail!("sequence {} exceeds max_blocks_per_seq {mb}", e.seq);
+            }
+            for (j, &blk) in e.block_table.iter().enumerate() {
+                bt[i * mb + j] = blk as i32;
+            }
+        }
+        let tokens_l = Self::i32_lit(&tokens, &[b as i64])?;
+        let bt_l = Self::i32_lit(&bt, &[b as i64, mb as i64])?;
+        let ctx_l = Self::i32_lit(&ctx, &[b as i64])?;
+        let slots_l = Self::i32_lit(&slots, &[b as i64])?;
+
+        let raw = Self::execute_raw(
+            &self.executables,
+            &self.weights,
+            &self.k_cache,
+            &self.v_cache,
+            &bucket,
+            &[&tokens_l, &bt_l, &ctx_l, &slots_l],
+        )?;
+        self.finish_step(raw, n)
+    }
+}

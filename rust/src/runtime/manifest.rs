@@ -1,0 +1,264 @@
+//! `artifacts/manifest.json` — the contract between `python/compile`
+//! and the rust runtime (schema emitted by `aot.py`, format_version 1).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// The tiny model's configuration (mirrors `python ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct TinyModelCfg {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub max_blocks_per_seq: usize,
+    pub num_slots: usize,
+    pub param_count: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecKind {
+    Decode,
+    Prefill,
+}
+
+/// One compiled executable bucket.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub kind: ExecKind,
+    pub batch: usize,
+    /// Padded sequence length (prefill only).
+    pub seq: Option<usize>,
+    pub file: String,
+    pub inputs: Vec<String>,
+}
+
+/// One weight tensor's location in weights.bin.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: TinyModelCfg,
+    pub seed: u64,
+    pub weights_file: String,
+    pub tensors: Vec<TensorInfo>,
+    pub executables: Vec<ExecSpec>,
+}
+
+fn req_usize(obj: &Json, key: &str) -> Result<usize> {
+    obj.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest: missing numeric field '{key}'"))
+}
+
+fn req_str(obj: &Json, key: &str) -> Result<String> {
+    Ok(obj
+        .get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("manifest: missing string field '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("format_version").and_then(|v| v.as_u64()) != Some(1) {
+            bail!("unsupported manifest format_version");
+        }
+        let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model = TinyModelCfg {
+            name: req_str(m, "name")?,
+            n_layers: req_usize(m, "n_layers")?,
+            d_model: req_usize(m, "d_model")?,
+            n_heads: req_usize(m, "n_heads")?,
+            head_dim: req_usize(m, "head_dim")?,
+            vocab_size: req_usize(m, "vocab_size")?,
+            max_seq: req_usize(m, "max_seq")?,
+            block_size: req_usize(m, "block_size")?,
+            num_blocks: req_usize(m, "num_blocks")?,
+            max_blocks_per_seq: req_usize(m, "max_blocks_per_seq")?,
+            num_slots: req_usize(m, "num_slots")?,
+            param_count: req_usize(m, "param_count")? as u64,
+        };
+        let w = j.get("weights").ok_or_else(|| anyhow!("missing weights"))?;
+        let tensors = w
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| anyhow!("missing weights.tensors"))?
+            .iter()
+            .map(|t| {
+                Ok(TensorInfo {
+                    name: req_str(t, "name")?,
+                    shape: t
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("tensor missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset_bytes: req_usize(t, "offset_bytes")?,
+                    size_bytes: req_usize(t, "size_bytes")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let executables = j
+            .get("executables")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("missing executables"))?
+            .iter()
+            .map(|e| {
+                let kind = match req_str(e, "kind")?.as_str() {
+                    "decode" => ExecKind::Decode,
+                    "prefill" => ExecKind::Prefill,
+                    k => bail!("unknown executable kind '{k}'"),
+                };
+                Ok(ExecSpec {
+                    kind,
+                    batch: req_usize(e, "batch")?,
+                    seq: e.get("seq").and_then(|s| s.as_usize()),
+                    file: req_str(e, "file")?,
+                    inputs: e
+                        .get("inputs")
+                        .and_then(|i| i.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            seed: j.get("seed").and_then(|s| s.as_u64()).unwrap_or(0),
+            weights_file: req_str(w, "file")?,
+            tensors,
+            executables,
+        })
+    }
+
+    /// Smallest decode bucket with capacity >= `batch`.
+    pub fn decode_bucket(&self, batch: usize) -> Option<&ExecSpec> {
+        self.executables
+            .iter()
+            .filter(|e| e.kind == ExecKind::Decode && e.batch >= batch)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// Smallest prefill bucket fitting `batch` prompts of length <= `seq`.
+    pub fn prefill_bucket(&self, batch: usize, seq: usize) -> Option<&ExecSpec> {
+        self.executables
+            .iter()
+            .filter(|e| {
+                e.kind == ExecKind::Prefill && e.batch >= batch && e.seq.unwrap_or(0) >= seq
+            })
+            .min_by_key(|e| (e.batch, e.seq.unwrap_or(0)))
+    }
+
+    pub fn max_decode_batch(&self) -> usize {
+        self.executables
+            .iter()
+            .filter(|e| e.kind == ExecKind::Decode)
+            .map(|e| e.batch)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn max_prefill_seq(&self) -> usize {
+        self.executables
+            .iter()
+            .filter(|e| e.kind == ExecKind::Prefill)
+            .filter_map(|e| e.seq)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+          "format_version": 1,
+          "model": {"name": "micro-opt", "n_layers": 2, "d_model": 64,
+                    "n_heads": 4, "head_dim": 16, "vocab_size": 512,
+                    "ffn_mult": 4, "max_seq": 128, "block_size": 8,
+                    "num_blocks": 64, "max_blocks_per_seq": 8,
+                    "num_slots": 512, "d_ffn": 256, "param_count": 1000},
+          "seed": 3,
+          "weights": {"file": "weights.bin",
+                      "tensors": [{"name": "embed", "shape": [512, 64],
+                                   "dtype": "f32", "offset_bytes": 0,
+                                   "size_bytes": 131072}]},
+          "executables": [
+            {"kind": "decode", "batch": 1, "file": "decode_b1.hlo.txt",
+             "inputs": ["tokens"], "outputs": ["logits"], "sha256": "x"},
+            {"kind": "decode", "batch": 4, "file": "decode_b4.hlo.txt",
+             "inputs": ["tokens"], "outputs": ["logits"], "sha256": "x"},
+            {"kind": "prefill", "batch": 2, "seq": 32,
+             "file": "prefill_b2_s32.hlo.txt", "inputs": ["tokens"],
+             "outputs": ["logits"], "sha256": "x"}
+          ]
+        }"#;
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(manifest.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "memgap-manifest-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_and_indexes_buckets() {
+        let dir = tmpdir("load");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.name, "micro-opt");
+        assert_eq!(m.model.num_slots, 512);
+        assert_eq!(m.tensors[0].shape, vec![512, 64]);
+        assert_eq!(m.decode_bucket(1).unwrap().batch, 1);
+        assert_eq!(m.decode_bucket(2).unwrap().batch, 4);
+        assert_eq!(m.decode_bucket(3).unwrap().batch, 4);
+        assert!(m.decode_bucket(5).is_none());
+        assert_eq!(m.prefill_bucket(1, 20).unwrap().seq, Some(32));
+        assert!(m.prefill_bucket(1, 64).is_none());
+        assert_eq!(m.max_decode_batch(), 4);
+        assert_eq!(m.max_prefill_seq(), 32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let dir = tmpdir("missing");
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: load the AOT'd HLO artifacts and execute them from the
+//! request path — python never runs here.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns the
+//! 64-bit instruction ids jax >= 0.5 emits, which the crate's
+//! xla_extension 0.5.1 would reject in proto form), compiled once per
+//! (kind, batch-bucket) on the PJRT CPU client.
+//!
+//! State strategy: model weights are loaded once from
+//! `artifacts/weights.bin` into host literals and passed to every
+//! execute (CPU-to-CPU copies); the paged KV caches round-trip through
+//! the executable's outputs — the tuple result is decomposed and the
+//! cache literals are threaded into the next step, so the rust side
+//! stays the single owner of cache state.
+
+pub mod backend;
+pub mod manifest;
+pub mod weights;
+
+pub use backend::PjrtBackend;
+pub use manifest::{ExecKind, ExecSpec, Manifest, TinyModelCfg};
+
+/// Default artifacts directory (built by `make artifacts`).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("MEMGAP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}
+
+/// True if the AOT artifacts exist (integration tests skip otherwise).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,126 @@
+//! Load `artifacts/weights.bin` into XLA literals, in the exact
+//! WEIGHT_ORDER the executables expect as trailing parameters.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Read the weight file and materialize one f32 literal per tensor.
+pub fn load_weight_literals(manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+    let path = manifest.dir.join(&manifest.weights_file);
+    let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let expected: usize = manifest.tensors.iter().map(|t| t.size_bytes).sum();
+    if raw.len() != expected {
+        bail!(
+            "weights.bin is {} bytes, manifest expects {expected}",
+            raw.len()
+        );
+    }
+    let mut out = Vec::with_capacity(manifest.tensors.len());
+    for t in &manifest.tensors {
+        let bytes = &raw[t.offset_bytes..t.offset_bytes + t.size_bytes];
+        let n = t.size_bytes / 4;
+        let mut floats = vec![0f32; n];
+        // weights.bin is little-endian f32 (written by numpy on x86).
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        let numel: usize = t.shape.iter().product();
+        if numel != n {
+            bail!("tensor {}: shape {:?} != {} elements", t.name, t.shape, n);
+        }
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&floats)
+            .reshape(&dims)
+            .with_context(|| format!("reshaping {}", t.name))?;
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorInfo;
+    use std::io::Write;
+
+    #[test]
+    fn roundtrips_f32_tensors() {
+        let dir = std::env::temp_dir().join(format!("memgap-weights-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let raw: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::File::create(dir.join("weights.bin"))
+            .unwrap()
+            .write_all(&raw)
+            .unwrap();
+        let manifest = Manifest {
+            dir: dir.clone(),
+            model: crate::runtime::manifest::TinyModelCfg {
+                name: "t".into(),
+                n_layers: 1,
+                d_model: 4,
+                n_heads: 1,
+                head_dim: 4,
+                vocab_size: 3,
+                max_seq: 8,
+                block_size: 4,
+                num_blocks: 4,
+                max_blocks_per_seq: 2,
+                num_slots: 16,
+                param_count: 12,
+            },
+            seed: 0,
+            weights_file: "weights.bin".into(),
+            tensors: vec![TensorInfo {
+                name: "embed".into(),
+                shape: vec![3, 4],
+                offset_bytes: 0,
+                size_bytes: 48,
+            }],
+            executables: vec![],
+        };
+        let lits = load_weight_literals(&manifest).unwrap();
+        assert_eq!(lits.len(), 1);
+        let back = lits[0].to_vec::<f32>().unwrap();
+        assert_eq!(back, data);
+        let shape = lits[0].array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3, 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("memgap-weights2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 16]).unwrap();
+        let manifest = Manifest {
+            dir: dir.clone(),
+            model: crate::runtime::manifest::TinyModelCfg {
+                name: "t".into(),
+                n_layers: 1,
+                d_model: 4,
+                n_heads: 1,
+                head_dim: 4,
+                vocab_size: 3,
+                max_seq: 8,
+                block_size: 4,
+                num_blocks: 4,
+                max_blocks_per_seq: 2,
+                num_slots: 16,
+                param_count: 12,
+            },
+            seed: 0,
+            weights_file: "weights.bin".into(),
+            tensors: vec![TensorInfo {
+                name: "embed".into(),
+                shape: vec![3, 4],
+                offset_bytes: 0,
+                size_bytes: 48,
+            }],
+            executables: vec![],
+        };
+        assert!(load_weight_literals(&manifest).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

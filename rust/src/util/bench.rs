@@ -1,0 +1,116 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` runs `harness = false` binaries that use this module:
+//! warmup, timed samples, and a mean / p50 / p95 / min report with
+//! black-box result consumption so the optimizer cannot elide the work.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  ({} samples)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+            self.samples,
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "min"
+    )
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 10_000 {
+        format!("{}ns", ns)
+    } else if ns < 10_000_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else if ns < 10_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then up to
+/// `samples` measured ones (capped by `budget` wall time).
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let start = Instant::now();
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    times.sort();
+    let n = times.len().max(1);
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    BenchResult {
+        name: name.to_string(),
+        samples: n,
+        mean,
+        p50: times.get(n / 2).copied().unwrap_or_default(),
+        p95: times.get(n * 95 / 100).copied().unwrap_or_default(),
+        min: times.first().copied().unwrap_or_default(),
+    }
+}
+
+/// Convenience: default warmup 3, 30 samples, 10 s budget.
+pub fn quick<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    bench(name, 3, 30, Duration::from_secs(10), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_orders_percentiles() {
+        let r = bench("spin", 1, 20, Duration::from_secs(2), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.samples > 0);
+        assert!(r.min <= r.p50);
+        assert!(r.p50 <= r.p95.max(r.p50));
+        assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let t0 = Instant::now();
+        let r = bench("sleepy", 0, 1000, Duration::from_millis(50), || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(r.samples < 1000);
+    }
+}

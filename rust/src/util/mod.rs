@@ -1,0 +1,9 @@
+//! In-tree replacements for crates outside the offline vendor set
+//! (DESIGN.md §2): JSON, CLI parsing, deterministic RNG, a bench
+//! harness, and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

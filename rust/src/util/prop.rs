@@ -1,0 +1,49 @@
+//! Randomized property-testing helper (proptest is not in the offline
+//! vendor set). Runs a property over many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly.
+
+use super::rng::Rng;
+
+/// Run `cases` random checks of `prop`. The property receives a seeded
+/// RNG; panic (assert) inside to fail. On failure the harness re-panics
+/// with the offending case index + seed for reproduction.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.range(0, 1000) as u64;
+            let b = rng.range(0, 1000) as u64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,218 @@
+//! Workload generation (paper §IV).
+//!
+//! Two generators mirror the paper's methodology exactly:
+//! - **ShareGPT-like** (online mode): 2000 requests whose input/output
+//!   lengths follow a lognormal fit of the cleaned ShareGPT trace with
+//!   the paper's published means (161 input / 338 output tokens),
+//!   truncated to the 2048-token context window.
+//! - **Fixed-length** (offline mode): every request is exactly
+//!   161 in / 338 out (the ShareGPT means), or any chosen pair —
+//!   used by the GPU-profiling experiments (§V) and Figs 9/12 sweeps.
+//!
+//! Arrivals are "all at once" as in the paper's evaluation; a Poisson
+//! process is also provided for the discussion-section online scenario.
+
+use crate::util::rng::Rng;
+
+/// One request to serve.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from experiment start.
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    /// Target generation length (the sim decodes exactly this many).
+    pub output_tokens: usize,
+}
+
+impl Request {
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// ShareGPT published moments used by the paper.
+pub const SHAREGPT_MEAN_INPUT: usize = 161;
+pub const SHAREGPT_MEAN_OUTPUT: usize = 338;
+
+/// Workload generator configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub num_requests: usize,
+    pub seed: u64,
+    pub max_context: usize,
+    pub arrivals: ArrivalPattern,
+    pub lengths: LengthDistribution,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalPattern {
+    /// Everything arrives at t=0 (the paper's evaluation setup).
+    AllAtOnce,
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDistribution {
+    /// Offline mode: fixed input/output lengths.
+    Fixed { input: usize, output: usize },
+    /// Online mode: lognormal lengths with the given means (the sigma
+    /// values approximate the heavy-tailed ShareGPT distribution).
+    ShareGpt {
+        mean_input: usize,
+        mean_output: usize,
+    },
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            num_requests: 2000,
+            seed: 0,
+            max_context: 2048,
+            arrivals: ArrivalPattern::AllAtOnce,
+            lengths: LengthDistribution::ShareGpt {
+                mean_input: SHAREGPT_MEAN_INPUT,
+                mean_output: SHAREGPT_MEAN_OUTPUT,
+            },
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn offline(num_requests: usize, input: usize, output: usize) -> Self {
+        Self {
+            num_requests,
+            lengths: LengthDistribution::Fixed { input, output },
+            ..Default::default()
+        }
+    }
+
+    pub fn sharegpt(num_requests: usize, seed: u64) -> Self {
+        Self {
+            num_requests,
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// Lognormal with target mean `m` and shape `sigma`:
+/// mu = ln(m) - sigma^2/2 keeps E[X] = m.
+fn lognormal_with_mean(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    rng.lognormal(mu, sigma)
+}
+
+/// Generate the request trace for `cfg`.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.num_requests);
+    for id in 0..cfg.num_requests {
+        let (input, output) = match cfg.lengths {
+            LengthDistribution::Fixed { input, output } => (input, output),
+            LengthDistribution::ShareGpt {
+                mean_input,
+                mean_output,
+            } => {
+                // Sigmas fit the cleaned-ShareGPT spread (heavier tail on
+                // inputs, moderate on outputs).
+                let i = lognormal_with_mean(&mut rng, mean_input as f64, 1.1);
+                let o = lognormal_with_mean(&mut rng, mean_output as f64, 0.8);
+                (i.round().max(1.0) as usize, o.round().max(1.0) as usize)
+            }
+        };
+        let input = input.min(cfg.max_context - 1);
+        let output = output.min(cfg.max_context - input);
+        let arrival = match cfg.arrivals {
+            ArrivalPattern::AllAtOnce => 0.0,
+            ArrivalPattern::Poisson { rate } => {
+                t += rng.exponential(rate);
+                t
+            }
+        };
+        out.push(Request {
+            id: id as u64,
+            arrival,
+            prompt_tokens: input,
+            output_tokens: output.max(1),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_lengths_are_exact() {
+        let reqs = generate(&WorkloadConfig::offline(10, 161, 338));
+        assert_eq!(reqs.len(), 10);
+        for r in &reqs {
+            assert_eq!(r.prompt_tokens, 161);
+            assert_eq!(r.output_tokens, 338);
+            assert_eq!(r.arrival, 0.0);
+        }
+    }
+
+    #[test]
+    fn sharegpt_means_match_paper() {
+        let reqs = generate(&WorkloadConfig::sharegpt(20_000, 1));
+        let mi = reqs.iter().map(|r| r.prompt_tokens).sum::<usize>() as f64 / reqs.len() as f64;
+        let mo = reqs.iter().map(|r| r.output_tokens).sum::<usize>() as f64 / reqs.len() as f64;
+        // Truncation to the context window pulls means slightly down.
+        assert!(
+            (mi - SHAREGPT_MEAN_INPUT as f64).abs() < 25.0,
+            "mean input {mi}"
+        );
+        assert!(
+            (mo - SHAREGPT_MEAN_OUTPUT as f64).abs() < 40.0,
+            "mean output {mo}"
+        );
+    }
+
+    #[test]
+    fn lengths_respect_context_window() {
+        let reqs = generate(&WorkloadConfig::sharegpt(5000, 2));
+        for r in &reqs {
+            assert!(r.total_tokens() <= 2048, "{:?}", r);
+            assert!(r.output_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&WorkloadConfig::sharegpt(100, 7));
+        let b = generate(&WorkloadConfig::sharegpt(100, 7));
+        let c = generate(&WorkloadConfig::sharegpt(100, 8));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.prompt_tokens != y.prompt_tokens));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_with_right_rate() {
+        let cfg = WorkloadConfig {
+            num_requests: 10_000,
+            arrivals: ArrivalPattern::Poisson { rate: 50.0 },
+            ..WorkloadConfig::offline(10_000, 10, 10)
+        };
+        let reqs = generate(&cfg);
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival >= prev);
+            prev = r.arrival;
+        }
+        let total = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / total;
+        assert!((rate / 50.0 - 1.0).abs() < 0.1, "rate {rate}");
+    }
+}

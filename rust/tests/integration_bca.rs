@@ -1,0 +1,124 @@
+//! Integration: BCA + replication reproduce the paper's §VI results in
+//! shape — B_opt lands at the knee, memory is freed, replication beats
+//! the MAX-batch baseline.
+
+use memgap::bca::{self, BcaProfile, Constraints};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::gpusim::mps::SharePolicy;
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::ModelSpec;
+use memgap::replication::run_replicated;
+use memgap::workload::{generate, WorkloadConfig};
+
+const GRID: &[usize] = &[1, 16, 32, 64, 96, 128, 256, 512];
+
+fn profile(spec: &ModelSpec) -> BcaProfile {
+    let base = OfflineConfig::new(spec.clone(), 1);
+    BcaProfile::measure(&base, GRID, 1024).expect("profile")
+}
+
+/// Paper §VI-A: OPT-1.3B strict SLO -> B_opt 96, ~83% of MAX throughput
+/// at ~16% of the KV cache, ITL reduced ~19%.
+#[test]
+fn bca_opt13b_matches_paper_operating_point() {
+    let p = profile(&ModelSpec::opt_1_3b());
+    let r = bca::recommend(&p, Constraints::strict(&p)).expect("feasible");
+    assert!((64..=128).contains(&r.b_opt), "B_opt {}", r.b_opt);
+    assert!(
+        (0.6..1.0).contains(&r.throughput_vs_max),
+        "tput vs MAX {}",
+        r.throughput_vs_max
+    );
+    assert!(r.point.kv_usage < 0.30, "KV {}", r.point.kv_usage);
+    assert!(r.itl_reduction_vs_max > 0.10, "{}", r.itl_reduction_vs_max);
+}
+
+/// Fig 11 shape: freed memory decreases with model size; the 13B frees
+/// (almost) nothing.
+#[test]
+fn memory_freed_shrinks_with_model_size() {
+    let gpu = GpuSpec::h100_64g();
+    let mut freed = Vec::new();
+    for spec in ModelSpec::paper_models() {
+        let p = profile(&spec);
+        let kv_usage = match bca::recommend(&p, Constraints::strict(&p)) {
+            Some(r) if r.b_opt < *GRID.last().unwrap() => r.point.kv_usage,
+            _ => 1.0, // never plateaus -> needs all memory
+        };
+        freed.push(bca::memory_plan(&gpu, &spec, kv_usage).freed_frac());
+    }
+    assert!(freed[0] > 0.40, "OPT-1.3B frees most: {freed:?}");
+    assert!(freed[0] > freed[2], "{freed:?}");
+    assert!(freed[3] < 0.15, "Llama-13B frees ~nothing: {freed:?}");
+}
+
+/// Table IV headline: BCA-sized replication beats single-instance MAX
+/// throughput on OPT-1.3B while ITL stays well under the MAX config's.
+#[test]
+fn replication_beats_max_for_opt13b() {
+    let spec = ModelSpec::opt_1_3b();
+    let gpu = GpuSpec::h100_64g();
+    let reqs = generate(&WorkloadConfig::sharegpt(1024, 0));
+
+    let bmax = memgap::kvcache::max_batch_for(&gpu, &spec, 499, 16);
+    let max_cfg = OfflineConfig::new(spec.clone(), bmax);
+    let max_run = run_replicated(&max_cfg, 1, SharePolicy::Mps, &reqs, 1.0).expect("max");
+
+    let p = profile(&spec);
+    let rec = bca::recommend(&p, Constraints::relaxed(&p)).expect("feasible");
+    let plan = bca::memory_plan(&gpu, &spec, rec.point.kv_usage);
+    let frac = plan.engine_mem_fraction().max(0.05);
+    let fit = ((1.0 / frac) as usize).clamp(2, 4);
+    let cfg = OfflineConfig::new(spec, rec.b_opt);
+    let rep = run_replicated(&cfg, fit, SharePolicy::Mps, &reqs, frac).expect("replicated");
+
+    assert!(
+        rep.throughput_tps > 1.05 * max_run.throughput_tps,
+        "{} replicas {} vs MAX {}",
+        fit,
+        rep.throughput_tps,
+        max_run.throughput_tps
+    );
+    assert!(
+        rep.mean_itl < max_run.mean_itl,
+        "replicated ITL {} vs MAX {}",
+        rep.mean_itl,
+        max_run.mean_itl
+    );
+    // Replication raises DRAM utilization and cuts CPU-visible idle.
+    assert!(rep.mean_dram_util > max_run.mean_dram_util);
+    assert!(rep.cpu_time_frac < max_run.cpu_time_frac);
+}
+
+/// MPS >= FCFS >= nothing: the Fig 13 ordering on real engine traces.
+#[test]
+fn sharing_policy_ordering() {
+    let spec = ModelSpec::opt_1_3b();
+    let reqs = generate(&WorkloadConfig::offline(256, 161, 80));
+    let cfg = OfflineConfig::new(spec, 64);
+    let one = run_replicated(&cfg, 1, SharePolicy::Mps, &reqs, 0.35).expect("one");
+    let fcfs = run_replicated(&cfg, 2, SharePolicy::Fcfs, &reqs, 0.35).expect("fcfs");
+    let mps = run_replicated(&cfg, 2, SharePolicy::Mps, &reqs, 0.35).expect("mps");
+    assert!(fcfs.throughput_tps > one.throughput_tps * 0.95);
+    assert!(mps.throughput_tps >= fcfs.throughput_tps * 0.99);
+    assert!(mps.makespan <= fcfs.makespan * 1.01);
+}
+
+/// Eq. 2 constraint semantics on a real profile: tightening the SLO
+/// never increases B_opt; tightening eps never increases it either.
+#[test]
+fn constraint_monotonicity() {
+    let p = profile(&ModelSpec::opt_2_7b());
+    let anchor = p.slo_anchor_itl();
+    let mut prev = usize::MAX;
+    for slo_mult in [8.0, 4.0, 2.0, 1.2] {
+        let c = Constraints {
+            slo_itl: slo_mult * anchor,
+            epsilon: 0.1,
+        };
+        if let Some(r) = bca::recommend(&p, c) {
+            assert!(r.b_opt <= prev, "slo x{slo_mult}: {} > {prev}", r.b_opt);
+            prev = r.b_opt;
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Integration: the real PJRT execution path. Requires `make artifacts`
+//! (tests no-op with a notice when artifacts are absent, so plain
+//! `cargo test` works before the AOT step).
+//!
+//! The crown jewel is `golden_tokens_match_jax`: greedy decoding through
+//! the rust stack (paged KV + bucketed HLO executables) must be
+//! TOKEN-EXACT against `ref_forward` in JAX (recorded in golden.json at
+//! AOT time) — the cross-language correctness proof for the whole
+//! three-layer bridge.
+
+use memgap::backend::{Backend, SeqBatchEntry, StepBatch};
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::kvcache::KvCacheManager;
+use memgap::runtime::{self, PjrtBackend};
+use memgap::util::json::Json;
+use memgap::workload::{generate, WorkloadConfig};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root; honour MEMGAP_ARTIFACTS too.
+    let dir = runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts in {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn loads_and_compiles_all_buckets() {
+    let Some(dir) = artifacts() else { return };
+    let backend = PjrtBackend::load(&dir).expect("load");
+    assert_eq!(backend.platform(), "cpu");
+    assert!(backend.manifest.max_decode_batch() >= 4);
+    assert!(backend.manifest.max_prefill_seq() >= 32);
+}
+
+/// Drive the backend directly (no engine) and compare against the JAX
+/// golden tokens.
+#[test]
+fn golden_tokens_match_jax() {
+    let Some(dir) = artifacts() else { return };
+    let golden_text =
+        std::fs::read_to_string(dir.join("golden.json")).expect("golden.json (rebuild artifacts)");
+    let golden = Json::parse(&golden_text).expect("parse golden");
+    let prompts = golden.get("prompts").unwrap().as_arr().unwrap();
+    let steps = golden.get("steps").unwrap().as_usize().unwrap();
+    let expected = golden.get("expected").unwrap().as_arr().unwrap();
+
+    let mut backend = PjrtBackend::load(&dir).expect("load");
+    let (blocks, bs, mbs) = backend.kv_geometry();
+
+    for (pi, (prompt, expect)) in prompts.iter().zip(expected).enumerate() {
+        backend.reset_cache();
+        let mut kv = KvCacheManager::new(blocks, bs, mbs);
+        let tokens: Vec<i32> = prompt
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        let want: Vec<i32> = expect
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(want.len(), steps);
+
+        // Prefill the prompt.
+        let id = 1000 + pi as u64;
+        kv.admit(id, tokens.len()).unwrap();
+        let slot_mapping: Vec<u32> = (0..tokens.len())
+            .map(|p| kv.slot_for(id, p).unwrap())
+            .collect();
+        let batch = StepBatch {
+            entries: vec![SeqBatchEntry {
+                seq: id,
+                tokens: tokens.clone(),
+                context_len: tokens.len(),
+                block_table: kv.block_table(id).unwrap().to_vec(),
+                slot_mapping,
+            }],
+        };
+        let out = backend.prefill(&batch).expect("prefill");
+        let mut history = tokens.clone();
+        let mut got = vec![out.next_tokens[0]];
+        history.push(out.next_tokens[0]);
+
+        // Greedy decode.
+        for _ in 1..steps {
+            while kv.tokens_of(id).unwrap() < history.len() {
+                kv.append_token(id).unwrap();
+            }
+            let ctx = history.len();
+            let batch = StepBatch {
+                entries: vec![SeqBatchEntry {
+                    seq: id,
+                    tokens: vec![*history.last().unwrap()],
+                    context_len: ctx,
+                    block_table: kv.block_table(id).unwrap().to_vec(),
+                    slot_mapping: vec![kv.slot_for(id, ctx - 1).unwrap()],
+                }],
+            };
+            let out = backend.decode(&batch).expect("decode");
+            got.push(out.next_tokens[0]);
+            history.push(out.next_tokens[0]);
+        }
+        assert_eq!(got, want, "prompt {pi}: rust/PJRT diverged from JAX");
+        kv.free(id).unwrap();
+    }
+}
+
+/// Batched decode with padded rows must give the same tokens as
+/// batch-1 decode (the bucket-padding contract end to end).
+#[test]
+fn bucket_padding_is_transparent() {
+    let Some(dir) = artifacts() else { return };
+    let mut backend = PjrtBackend::load(&dir).expect("load");
+    let (blocks, bs, mbs) = backend.kv_geometry();
+    let mut kv = KvCacheManager::new(blocks, bs, mbs);
+
+    // Two real sequences prefilled together.
+    let prompts: Vec<Vec<i32>> = vec![vec![5, 17, 200, 31], vec![900, 42, 7, 7, 1033, 64]];
+    let mut entries = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let id = i as u64;
+        kv.admit(id, p.len()).unwrap();
+        entries.push(SeqBatchEntry {
+            seq: id,
+            tokens: p.clone(),
+            context_len: p.len(),
+            block_table: kv.block_table(id).unwrap().to_vec(),
+            slot_mapping: (0..p.len()).map(|q| kv.slot_for(id, q).unwrap()).collect(),
+        });
+    }
+    let two = backend
+        .prefill(&StepBatch { entries: entries.clone() })
+        .expect("prefill x2");
+
+    // Same prompts, separately, on a fresh cache.
+    backend.reset_cache();
+    let mut kv1 = KvCacheManager::new(blocks, bs, mbs);
+    let mut singles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let id = 10 + i as u64;
+        kv1.admit(id, p.len()).unwrap();
+        let batch = StepBatch {
+            entries: vec![SeqBatchEntry {
+                seq: id,
+                tokens: p.clone(),
+                context_len: p.len(),
+                block_table: kv1.block_table(id).unwrap().to_vec(),
+                slot_mapping: (0..p.len()).map(|q| kv1.slot_for(id, q).unwrap()).collect(),
+            }],
+        };
+        singles.push(backend.prefill(&batch).expect("prefill x1").next_tokens[0]);
+    }
+    assert_eq!(two.next_tokens, singles, "batching changed the numerics");
+}
+
+/// Full engine over PJRT: a mixed workload completes, produces exact
+/// token counts, and the KV pool drains.
+#[test]
+fn engine_serves_workload_on_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let backend = PjrtBackend::load(&dir).expect("load");
+    let (blocks, bs, mbs) = backend.kv_geometry();
+    let mut cfg = EngineConfig::new(6, blocks, bs);
+    cfg.max_blocks_per_seq = mbs;
+    cfg.max_batched_tokens = 192;
+    let mut engine = Engine::new(backend, cfg);
+    engine.submit(&generate(&WorkloadConfig::offline(20, 24, 10)));
+    let mut finished = Vec::new();
+    while engine.has_work() {
+        engine.step().expect("step");
+        finished.extend(engine.take_finished());
+    }
+    let report = engine.finish();
+    assert_eq!(report.metrics.completed, 20);
+    assert_eq!(finished.len(), 20);
+    for f in &finished {
+        assert_eq!(f.generated, 10);
+        assert_eq!(f.token_ids.len(), f.prompt_tokens + 10);
+    }
+    assert_eq!(report.metrics.total_output_tokens, 200);
+}
+
+/// Determinism: two identical runs produce identical token streams.
+#[test]
+fn pjrt_decoding_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let backend = PjrtBackend::load(&dir).expect("load");
+        let (blocks, bs, mbs) = backend.kv_geometry();
+        let mut cfg = EngineConfig::new(4, blocks, bs);
+        cfg.max_blocks_per_seq = mbs;
+        cfg.max_batched_tokens = 128;
+        let mut engine = Engine::new(backend, cfg);
+        engine.submit(&generate(&WorkloadConfig::offline(6, 16, 8)));
+        let mut toks = Vec::new();
+        while engine.has_work() {
+            engine.step().expect("step");
+            for f in engine.take_finished() {
+                toks.push((f.id, f.token_ids));
+            }
+        }
+        toks.sort();
+        toks
+    };
+    assert_eq!(run(), run());
+}

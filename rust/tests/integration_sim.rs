@@ -1,0 +1,168 @@
+//! Integration: the full simulated serving stack reproduces the paper's
+//! headline *shapes* end to end (engine + scheduler + KV cache + gpusim
+//! together, not module by module).
+
+use memgap::backend::SimBackend;
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::offline::{sweep_batch_sizes, OfflineConfig};
+use memgap::coordinator::scheduler::SchedulerPolicy;
+use memgap::figures::{self, FigOpts};
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::workload::{generate, WorkloadConfig};
+
+/// Fig 2 end to end: the knee exists for every paper model, and the
+/// curve flattens while ITL keeps rising.
+#[test]
+fn throughput_plateau_for_all_models() {
+    for spec in ModelSpec::paper_models() {
+        let base = OfflineConfig::new(spec.clone(), 1);
+        let runs =
+            sweep_batch_sizes(&base, &[1, 8, 64, 256], true, 512).expect("sweep");
+        let tput: Vec<f64> = runs.iter().map(|(_, r)| r.metrics.throughput_tps).collect();
+        let itl: Vec<f64> = runs.iter().map(|(_, r)| r.metrics.mean_itl).collect();
+        // Rising part: B=8 is far better than B=1.
+        assert!(tput[1] > 4.0 * tput[0], "{}: {tput:?}", spec.name);
+        // Plateau: 64 -> 256 gains are sub-proportional (4x batch < 2.2x tput).
+        assert!(tput[3] < 2.2 * tput[2], "{}: {tput:?}", spec.name);
+        // ITL grows monotonically with batch.
+        assert!(itl.windows(2).all(|w| w[1] >= w[0] * 0.95), "{}: {itl:?}", spec.name);
+    }
+}
+
+/// The paper's §V claim chain on the full stack: at MAX batch the
+/// decode phase dominates, attention dominates decode, and the CPU gap
+/// is substantial for the small model.
+#[test]
+fn decode_attention_cpu_dominance_chain() {
+    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 512);
+    cfg.num_requests = 512;
+    cfg.record_steps = true;
+    let mut engine = cfg.build_engine();
+    engine.submit(&generate(&WorkloadConfig::offline(512, 161, 160)));
+    let report = engine.run_to_completion().expect("run");
+    // With 160 output tokens/request the decode phase clearly dominates
+    // (the paper's 338-token outputs make it >95%).
+    assert!(
+        report.decode_time > 3.0 * report.prefill_time,
+        "decode {} vs prefill {}",
+        report.decode_time,
+        report.prefill_time
+    );
+    let steps = &report.recorded;
+    assert!(!steps.is_empty());
+    // Attention share of a late decode step (largest batches).
+    let big = steps
+        .iter()
+        .max_by_key(|s| s.batch)
+        .expect("recorded steps");
+    let attn: f64 = big
+        .time_by_label()
+        .iter()
+        .filter(|(l, _)| *l == "attention")
+        .map(|(_, t)| *t)
+        .sum();
+    assert!(attn / big.gpu_time > 0.35, "attention share {}", attn / big.gpu_time);
+    assert!(report.metrics.cpu_time_frac > 0.10, "{}", report.metrics.cpu_time_frac);
+}
+
+/// Chunked prefill (Table IV rows) improves throughput at MAX batch by
+/// fusing prompt chunks into decode steps (fewer standalone stalls).
+#[test]
+fn chunked_prefill_no_worse_than_default() {
+    let mut plain = OfflineConfig::new(ModelSpec::opt_2_7b(), 128);
+    plain.num_requests = 256;
+    let mut chunked = plain.clone();
+    chunked.chunked_prefill = true;
+    let rp = plain.run_sharegpt(256, 3).expect("plain");
+    let rc = chunked.run_sharegpt(256, 3).expect("chunked");
+    assert_eq!(rc.metrics.completed, 256);
+    // Same work completed; chunked must not collapse throughput.
+    assert!(
+        rc.metrics.throughput_tps > 0.8 * rp.metrics.throughput_tps,
+        "chunked {} vs plain {}",
+        rc.metrics.throughput_tps,
+        rp.metrics.throughput_tps
+    );
+}
+
+/// KV accounting holds under preemption pressure across the whole run.
+#[test]
+fn kv_accounting_exact_under_pressure() {
+    let backend = SimBackend::new(
+        GpuSpec::h100_64g(),
+        ModelSpec::opt_1_3b(),
+        AttentionBackendKind::XFormers,
+    );
+    // Tiny pool: 129 blocks incl reserved -> heavy preemption.
+    let mut engine = Engine::new(backend, EngineConfig::new(16, 129, 16));
+    engine.submit(&generate(&WorkloadConfig::offline(24, 100, 120)));
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.step().expect("step");
+        let a = engine.kv().allocator();
+        assert_eq!(a.free_blocks() + a.allocated_blocks(), 128);
+        guard += 1;
+        assert!(guard < 1_000_000, "run did not terminate");
+    }
+    let report = engine.finish();
+    assert_eq!(report.metrics.completed, 24);
+    assert!(report.preemptions > 0);
+}
+
+/// The xFormers backend is slower than FlashAttention at large batch
+/// (more attention traffic), visible end to end.
+#[test]
+fn flash_beats_xformers_end_to_end() {
+    let mut xf = OfflineConfig::new(ModelSpec::llama2_7b(), 128);
+    xf.num_requests = 128;
+    xf.attention = AttentionBackendKind::XFormers;
+    let mut fl = xf.clone();
+    fl.attention = AttentionBackendKind::FlashAttention;
+    let rx = xf.run().expect("xformers");
+    let rf = fl.run().expect("flash");
+    assert!(
+        rf.metrics.throughput_tps > rx.metrics.throughput_tps,
+        "flash {} <= xformers {}",
+        rf.metrics.throughput_tps,
+        rx.metrics.throughput_tps
+    );
+}
+
+/// Figures harness: every artefact generates without error in quick
+/// mode and produces non-empty tables (the per-artefact shape checks
+/// live in the figures unit tests).
+#[test]
+fn all_artefacts_generate() {
+    let opts = FigOpts::quick();
+    for id in figures::ALL_IDS {
+        let tables = figures::generate(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!tables.is_empty(), "{id}");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{id}/{}", t.name);
+            assert!(!t.headers.is_empty());
+        }
+    }
+}
+
+/// Scheduler policies end to end: both complete identical workloads
+/// with identical token counts (determinism + correctness).
+#[test]
+fn policies_complete_identical_work() {
+    let mk = |policy| {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(32, 8192, 16);
+        cfg.policy = policy;
+        let mut e = Engine::new(backend, cfg);
+        e.submit(&generate(&WorkloadConfig::sharegpt(96, 11)));
+        e.run_to_completion().expect("run")
+    };
+    let a = mk(SchedulerPolicy::PrefillPriority);
+    let b = mk(SchedulerPolicy::ChunkedPrefill);
+    assert_eq!(a.metrics.completed, b.metrics.completed);
+    assert_eq!(a.metrics.total_output_tokens, b.metrics.total_output_tokens);
+}

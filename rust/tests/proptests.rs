@@ -1,0 +1,245 @@
+//! Randomized property tests over the coordinator invariants (the
+//! in-tree `util::prop` harness replaces proptest, which is outside the
+//! offline vendor set). Each property runs across many seeded cases;
+//! failures replay by seed.
+
+use std::collections::HashSet;
+
+use memgap::backend::SimBackend;
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::router::{RoutePolicy, Router};
+use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
+use memgap::gpusim::GpuSpec;
+use memgap::kvcache::{BlockAllocator, KvCacheManager};
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::util::prop::check;
+use memgap::util::rng::Rng;
+use memgap::workload::Request;
+
+/// Allocator: blocks are conserved, never duplicated, block 0 reserved.
+#[test]
+fn prop_allocator_conservation() {
+    check("allocator-conservation", 60, |rng| {
+        let total = rng.range(2, 300);
+        let mut alloc = BlockAllocator::new(total);
+        let mut held: Vec<Vec<u32>> = Vec::new();
+        let mut seen: HashSet<u32> = HashSet::new();
+        for _ in 0..rng.range(1, 120) {
+            if rng.f64() < 0.6 || held.is_empty() {
+                let n = rng.range(0, 8);
+                if let Ok(blocks) = alloc.alloc(n) {
+                    for &b in &blocks {
+                        assert_ne!(b, 0, "reserved block leaked");
+                        assert!(seen.insert(b), "double allocation of {b}");
+                    }
+                    held.push(blocks);
+                }
+            } else {
+                let i = rng.range(0, held.len());
+                let blocks = held.swap_remove(i);
+                for b in &blocks {
+                    seen.remove(b);
+                }
+                alloc.release(&blocks);
+            }
+            assert_eq!(
+                alloc.free_blocks() + alloc.allocated_blocks(),
+                total - 1,
+                "conservation violated"
+            );
+            assert!(alloc.peak_allocated_blocks() >= alloc.allocated_blocks());
+        }
+    });
+}
+
+/// KV manager: slot mappings are injective across live sequences
+/// (no two tokens ever share a physical slot).
+#[test]
+fn prop_kv_slots_injective() {
+    check("kv-slots-injective", 40, |rng| {
+        let bs = *[4usize, 8, 16].get(rng.range(0, 3)).unwrap();
+        let blocks = rng.range(8, 128);
+        let mut kv = KvCacheManager::new(blocks, bs, 64);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..rng.range(1, 80) {
+            let op = rng.f64();
+            if op < 0.4 {
+                let id = step as u64 * 1000 + rng.range(0, 100) as u64;
+                let prompt = rng.range(1, 4 * bs);
+                if kv.admit(id, prompt).is_ok() {
+                    live.push(id);
+                }
+            } else if op < 0.8 && !live.is_empty() {
+                let id = live[rng.range(0, live.len())];
+                let _ = kv.append_token(id);
+            } else if !live.is_empty() {
+                let i = rng.range(0, live.len());
+                kv.free(live.swap_remove(i)).unwrap();
+            }
+            // Injectivity over all live tokens.
+            let mut used = HashSet::new();
+            for &id in &live {
+                let n = kv.tokens_of(id).unwrap();
+                for p in 0..n {
+                    let slot = kv.slot_for(id, p).unwrap();
+                    assert!(used.insert(slot), "slot {slot} shared");
+                    assert!(slot >= bs as u32, "slot in reserved block 0");
+                }
+            }
+        }
+    });
+}
+
+/// Router: every request routed exactly once; round-robin is balanced
+/// within 1; all policies stay in range.
+#[test]
+fn prop_router_total_and_balanced() {
+    check("router-balance", 40, |rng| {
+        let n = rng.range(1, 9);
+        let reqs: Vec<Request> = (0..rng.range(1, 200))
+            .map(|i| Request {
+                id: i as u64,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 500),
+                output_tokens: rng.range(1, 500),
+            })
+            .collect();
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Hash] {
+            let mut router = Router::new(policy, n);
+            let parts = router.partition(&reqs);
+            assert_eq!(parts.len(), n);
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            assert_eq!(total, reqs.len(), "{policy:?} lost/duplicated requests");
+            if policy == RoutePolicy::RoundRobin {
+                let max = parts.iter().map(|p| p.len()).max().unwrap();
+                let min = parts.iter().map(|p| p.len()).min().unwrap();
+                assert!(max - min <= 1, "round robin imbalance {max}-{min}");
+            }
+        }
+    });
+}
+
+/// MPS executor: work conservation — every replica's trace completes,
+/// finish times bound the makespan, and the makespan is never shorter
+/// than the longest solo trace nor longer than the serialized sum.
+#[test]
+fn prop_mps_work_conservation() {
+    check("mps-conservation", 40, |rng| {
+        let n = rng.range(1, 5);
+        let mut traces = Vec::new();
+        let mut solos = Vec::new();
+        let mut serial_gpu = 0.0;
+        let mut max_solo: f64 = 0.0;
+        for _ in 0..n {
+            let steps = rng.range(1, 20);
+            let mut tr = Vec::new();
+            let mut solo = 0.0;
+            for _ in 0..steps {
+                let cpu = rng.f64() * 0.004;
+                let gpu = 0.0005 + rng.f64() * 0.008;
+                let demand = 0.1 + rng.f64() * 0.9;
+                tr.push(Segment::Cpu { duration: cpu });
+                tr.push(Segment::Gpu {
+                    duration: gpu,
+                    dram_demand: demand,
+                });
+                solo += cpu + gpu;
+                serial_gpu += gpu;
+            }
+            max_solo = max_solo.max(solo);
+            solos.push(solo);
+            traces.push(tr);
+        }
+        for policy in [SharePolicy::Fcfs, SharePolicy::Mps] {
+            let run = run_shared(&traces, policy);
+            assert_eq!(run.finish_times.len(), n);
+            for (&f, &solo) in run.finish_times.iter().zip(&solos) {
+                assert!(f >= solo * 0.999, "{policy:?}: finished faster than solo");
+                assert!(f <= run.makespan + 1e-9);
+            }
+            assert!(run.makespan >= max_solo * 0.999);
+            // Upper bound: all CPU serialized + all GPU serialized, with
+            // max MPS slowdown bounded by total demand.
+            let total_cpu: f64 = solos.iter().sum::<f64>() - serial_gpu;
+            assert!(
+                run.makespan <= total_cpu + serial_gpu * n as f64 + 1e-6,
+                "{policy:?}: makespan {} absurd",
+                run.makespan
+            );
+            assert!((0.0..=1.0 + 1e-9).contains(&run.gpu_idle_frac));
+            assert!((0.0..=1.0 + 1e-9).contains(&run.mean_dram_util));
+        }
+    });
+}
+
+/// Engine: for any workload mix, every submitted request completes with
+/// exactly its target output tokens, the clock is monotone, and KV
+/// blocks fully drain — under arbitrary (possibly tiny) KV pools.
+#[test]
+fn prop_engine_serves_everything() {
+    check("engine-completeness", 25, |rng| {
+        let n_req = rng.range(1, 40);
+        let reqs: Vec<Request> = (0..n_req)
+            .map(|i| Request {
+                id: i as u64,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 300),
+                output_tokens: rng.range(1, 120),
+            })
+            .collect();
+        let expected_out: usize = reqs.iter().map(|r| r.output_tokens).sum();
+        // Pool large enough for the single largest sequence, possibly
+        // too small for the whole set (forces preemption paths).
+        let biggest = reqs
+            .iter()
+            .map(|r| (r.prompt_tokens + r.output_tokens + 15) / 16)
+            .max()
+            .unwrap();
+        let blocks = rng.range(2 * biggest + 2, 4 * biggest + 512);
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(rng.range(1, 64), blocks, 16);
+        cfg.max_blocks_per_seq = 2048 / 16;
+        let mut engine = Engine::new(backend, cfg);
+        engine.submit(&reqs);
+        let mut last_clock = 0.0;
+        let mut guard = 0usize;
+        while engine.has_work() {
+            engine.step().expect("step");
+            assert!(engine.now() >= last_clock);
+            last_clock = engine.now();
+            guard += 1;
+            assert!(guard < 2_000_000, "engine did not terminate");
+        }
+        let report = engine.finish();
+        assert_eq!(report.metrics.completed, n_req);
+        assert_eq!(report.metrics.total_output_tokens, expected_out);
+        assert!(report.peak_kv_usage <= 1.0 + 1e-9);
+    });
+}
+
+/// Deterministic RNG-based property: the workload generator never
+/// violates the context window for any seed/config.
+#[test]
+fn prop_workload_respects_context() {
+    check("workload-context", 50, |rng: &mut Rng| {
+        use memgap::workload::{generate, LengthDistribution, WorkloadConfig};
+        let cfg = WorkloadConfig {
+            num_requests: rng.range(1, 500),
+            seed: rng.next_u64(),
+            max_context: *[256usize, 1024, 2048].get(rng.range(0, 3)).unwrap(),
+            arrivals: memgap::workload::ArrivalPattern::AllAtOnce,
+            lengths: LengthDistribution::ShareGpt {
+                mean_input: rng.range(10, 400),
+                mean_output: rng.range(10, 600),
+            },
+        };
+        for r in generate(&cfg) {
+            assert!(r.prompt_tokens + r.output_tokens <= cfg.max_context);
+            assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
+        }
+    });
+}
