@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use memgap::backend::{Backend, SeqBatchEntry, StepBatch, SimBackend};
+use memgap::backend::{SeqBatchEntry, SimBackend};
 use memgap::coordinator::engine::{Engine, EngineConfig};
 use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
 use memgap::gpusim::{simulate_decode_step, GpuSpec};
@@ -112,55 +112,67 @@ fn main() {
     });
     println!("{}", r.report());
 
-    // 6. PJRT real decode step (skipped without artifacts).
-    if memgap::runtime::artifacts_available() {
-        let dir = memgap::runtime::default_artifacts_dir();
-        let mut backend = memgap::runtime::PjrtBackend::load(&dir).expect("load artifacts");
-        let (blocks, bs, mbs) = backend.kv_geometry();
-        let mut kv = KvCacheManager::new(blocks, bs, mbs);
-        for id in 0..8u64 {
-            kv.admit(id, 32).unwrap();
-        }
-        let entries: Vec<SeqBatchEntry> = (0..8u64)
-            .map(|id| SeqBatchEntry {
-                seq: id,
-                tokens: vec![17],
-                context_len: 32,
-                block_table: kv.block_table(id).unwrap().to_vec(),
-                slot_mapping: vec![kv.slot_for(id, 31).unwrap()],
-            })
-            .collect();
-        let batch = StepBatch { entries };
-        let r = bench(
-            "pjrt_decode_step_b8_tiny_opt",
-            2,
-            20,
-            Duration::from_secs(30),
-            || backend.decode(&batch).unwrap().next_tokens.len(),
-        );
-        println!("{}", r.report());
-        let prompt: Vec<i32> = (1..33).collect();
-        kv.admit(100, prompt.len()).unwrap();
-        let pbatch = StepBatch {
-            entries: vec![SeqBatchEntry {
-                seq: 100,
-                tokens: prompt.clone(),
-                context_len: prompt.len(),
-                block_table: kv.block_table(100).unwrap().to_vec(),
-                slot_mapping: (0..prompt.len())
-                    .map(|p| kv.slot_for(100, p).unwrap())
-                    .collect(),
-            }],
-        };
-        let r = bench(
-            "pjrt_prefill_b1_s32_tiny_opt",
-            2,
-            20,
-            Duration::from_secs(30),
-            || backend.prefill(&pbatch).unwrap().next_tokens.len(),
-        );
-        println!("{}", r.report());
-    } else {
+    // 6. PJRT real decode step (needs the `pjrt` feature + artifacts).
+    pjrt_benches();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches() {
+    use memgap::backend::{Backend, StepBatch};
+
+    if !memgap::runtime::artifacts_available() {
         println!("pjrt_*  SKIPPED (run `make artifacts` first)");
+        return;
     }
+    let dir = memgap::runtime::default_artifacts_dir();
+    let mut backend = memgap::runtime::PjrtBackend::load(&dir).expect("load artifacts");
+    let (blocks, bs, mbs) = backend.kv_geometry();
+    let mut kv = KvCacheManager::new(blocks, bs, mbs);
+    for id in 0..8u64 {
+        kv.admit(id, 32).unwrap();
+    }
+    let entries: Vec<SeqBatchEntry> = (0..8u64)
+        .map(|id| SeqBatchEntry {
+            seq: id,
+            tokens: vec![17],
+            context_len: 32,
+            block_table: kv.block_table(id).unwrap().to_vec(),
+            slot_mapping: vec![kv.slot_for(id, 31).unwrap()],
+        })
+        .collect();
+    let batch = StepBatch { entries };
+    let r = bench(
+        "pjrt_decode_step_b8_tiny_opt",
+        2,
+        20,
+        Duration::from_secs(30),
+        || backend.decode(&batch).unwrap().next_tokens.len(),
+    );
+    println!("{}", r.report());
+    let prompt: Vec<i32> = (1..33).collect();
+    kv.admit(100, prompt.len()).unwrap();
+    let pbatch = StepBatch {
+        entries: vec![SeqBatchEntry {
+            seq: 100,
+            tokens: prompt.clone(),
+            context_len: prompt.len(),
+            block_table: kv.block_table(100).unwrap().to_vec(),
+            slot_mapping: (0..prompt.len())
+                .map(|p| kv.slot_for(100, p).unwrap())
+                .collect(),
+        }],
+    };
+    let r = bench(
+        "pjrt_prefill_b1_s32_tiny_opt",
+        2,
+        20,
+        Duration::from_secs(30),
+        || backend.prefill(&pbatch).unwrap().next_tokens.len(),
+    );
+    println!("{}", r.report());
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches() {
+    println!("pjrt_*  SKIPPED (build with --features pjrt and run `make artifacts`)");
 }

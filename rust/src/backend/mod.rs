@@ -8,7 +8,7 @@
 //!
 //! - [`SimBackend`]  — every paper table/figure: steps are costed by
 //!   `gpusim` and return the full kernel-level detail.
-//! - [`runtime::PjrtBackend`](crate::runtime::PjrtBackend) — the real
+//! - `runtime::PjrtBackend` (behind the `pjrt` feature) — the real
 //!   thing: loads the AOT'd HLO artifacts and computes actual logits
 //!   (end-to-end example + integration tests).
 

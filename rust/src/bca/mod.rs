@@ -25,9 +25,11 @@ pub struct ProfilePoint {
     pub max_batch: usize,
     /// Observed average batch size (the paper's Fig 2 x-axis).
     pub avg_batch: f64,
+    /// Input+output tokens per second at this operating point.
     pub throughput_tps: f64,
     /// Mean inter-token latency (seconds).
     pub itl: f64,
+    /// Mean end-to-end latency (seconds).
     pub e2e: f64,
     /// Peak KV-cache usage fraction at this batch size.
     pub kv_usage: f64,
@@ -36,7 +38,9 @@ pub struct ProfilePoint {
 /// Profiled throughput/latency curves for one model.
 #[derive(Debug, Clone)]
 pub struct BcaProfile {
+    /// Name of the profiled model.
     pub model: String,
+    /// One point per probed max-batch setting, in grid order.
     pub points: Vec<ProfilePoint>,
 }
 
@@ -72,6 +76,7 @@ impl BcaProfile {
         })
     }
 
+    /// The profiled point for an exact max-batch setting, if probed.
     pub fn point(&self, max_batch: usize) -> Option<&ProfilePoint> {
         self.points.iter().find(|p| p.max_batch == max_batch)
     }
@@ -106,6 +111,7 @@ pub struct Constraints {
 }
 
 impl Constraints {
+    /// The paper's strict SLO: 2x the ITL measured at max batch 32.
     pub fn strict(profile: &BcaProfile) -> Self {
         Self {
             slo_itl: 2.0 * profile.slo_anchor_itl(),
@@ -113,6 +119,7 @@ impl Constraints {
         }
     }
 
+    /// The paper's relaxed SLO: 4x the ITL measured at max batch 32.
     pub fn relaxed(profile: &BcaProfile) -> Self {
         Self {
             slo_itl: 4.0 * profile.slo_anchor_itl(),
@@ -124,7 +131,9 @@ impl Constraints {
 /// BCA output: the chosen operating point + memory plan.
 #[derive(Debug, Clone)]
 pub struct Recommendation {
+    /// The recommended max-batch setting (Eq. 2's argmax).
     pub b_opt: usize,
+    /// The full profiled operating point at `b_opt`.
     pub point: ProfilePoint,
     /// T(B)/(B*T(1)) at the chosen point.
     pub efficiency: f64,
@@ -166,7 +175,9 @@ pub fn recommend(profile: &BcaProfile, c: Constraints) -> Option<Recommendation>
 /// GPU memory layout for Fig 11: how the 64 GB splits under B_opt.
 #[derive(Debug, Clone)]
 pub struct MemoryPlan {
+    /// Total device memory (GB).
     pub total_gb: f64,
+    /// Resident model weights (GB).
     pub weights_gb: f64,
     /// KV actually needed at B_opt.
     pub kv_used_gb: f64,

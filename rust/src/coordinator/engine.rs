@@ -650,6 +650,54 @@ mod tests {
     }
 
     #[test]
+    fn preempt_by_recompute_frees_all_blocks() {
+        // Tight pool (64 usable blocks) forces recompute-preemption.
+        // Invariant after every engine iteration: exactly the running
+        // sequences hold KV blocks — a preempted (or finished) sequence
+        // must have released everything it owned.
+        let mut e = engine(8, 65);
+        e.submit(&generate(&WorkloadConfig::offline(8, 50, 100)));
+        while e.has_work() {
+            e.step().unwrap();
+            assert_eq!(
+                e.kv().num_seqs(),
+                e.running_count(),
+                "KV-registered sequences must match the running set"
+            );
+            assert!(e.kv().allocator().allocated_blocks() <= 64);
+        }
+        assert!(e.preemptions > 0, "expected KV pressure to preempt");
+        assert_eq!(e.kv().allocator().allocated_blocks(), 0);
+        let report = e.finish();
+        assert_eq!(report.metrics.completed, 8);
+    }
+
+    #[test]
+    fn finished_seqs_never_reappear_in_a_step_batch() {
+        use std::collections::HashSet;
+        // A finished sequence must be fully retired: it is drained via
+        // take_finished exactly once, stays out of the running set, and
+        // contributes exactly its target output tokens (a reappearing
+        // sequence would decode extra tokens).
+        let mut e = engine(4, 1024);
+        e.submit(&generate(&WorkloadConfig::offline(12, 40, 16)));
+        let mut seen: HashSet<u64> = HashSet::new();
+        while e.has_work() {
+            e.step().unwrap();
+            for f in e.take_finished() {
+                assert!(seen.insert(f.id), "sequence {} finished twice", f.id);
+                assert_eq!(f.generated, 16);
+                assert_eq!(f.token_ids.len(), f.prompt_tokens + 16);
+            }
+            // No retired sequence may linger in the schedulable sets.
+            assert_eq!(e.running_count() + e.queue_depth(), 12 - seen.len());
+        }
+        assert_eq!(seen.len(), 12);
+        let report = e.finish();
+        assert_eq!(report.metrics.total_output_tokens, 12 * 16);
+    }
+
+    #[test]
     fn segments_alternate_cpu_gpu() {
         let mut e = engine(4, 2048);
         e.submit(&generate(&WorkloadConfig::offline(4, 32, 8)));

@@ -96,20 +96,12 @@ impl Table {
 }
 
 /// Generation options.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct FigOpts {
     /// Reduced request counts / grids for CI and benches.
     pub quick: bool,
+    /// Workload seed threaded into the serving sweeps.
     pub seed: u64,
-}
-
-impl Default for FigOpts {
-    fn default() -> Self {
-        Self {
-            quick: false,
-            seed: 0,
-        }
-    }
 }
 
 impl FigOpts {

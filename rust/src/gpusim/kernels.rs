@@ -81,7 +81,14 @@ impl KernelInvocation {
 /// small re-fetch slack). At decode (m = batch) the weight term `k*n`
 /// dominates -> AI grows ~linearly with batch, exactly the Fig. 1
 /// matmul behaviour.
-pub fn gemm(name: &'static str, m: usize, k: usize, n: usize, dtype: usize, batch: usize) -> KernelInvocation {
+pub fn gemm(
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    dtype: usize,
+    batch: usize,
+) -> KernelInvocation {
     const BM: usize = 64;
     const BN: usize = 64;
     const REFETCH: f64 = 1.12; // imperfect panel reuse across waves
@@ -213,7 +220,13 @@ pub fn attention_prefill(
 
 /// Elementwise glue (LayerNorm/RMSNorm, residual adds, activations):
 /// pure streaming, ~zero arithmetic intensity.
-pub fn elementwise(name: &'static str, tokens: usize, width: usize, dtype: usize, batch: usize) -> KernelInvocation {
+pub fn elementwise(
+    name: &'static str,
+    tokens: usize,
+    width: usize,
+    dtype: usize,
+    batch: usize,
+) -> KernelInvocation {
     let bytes = (tokens * width * dtype) as f64;
     KernelInvocation {
         class: KernelClass::Elementwise,

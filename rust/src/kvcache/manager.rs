@@ -10,18 +10,35 @@ use std::collections::HashMap;
 
 use thiserror::Error;
 
+/// Engine-wide sequence identifier (the request id).
 pub type SeqId = u64;
 
+/// Errors the KV-cache manager can report to the engine.
 #[derive(Debug, Error, PartialEq, Eq)]
 pub enum KvError {
+    /// The free pool cannot satisfy an allocation (triggers preemption).
     #[error("out of KV blocks: need {need}, free {free}")]
-    OutOfBlocks { need: usize, free: usize },
+    OutOfBlocks {
+        /// Blocks the operation needed.
+        need: usize,
+        /// Blocks currently free.
+        free: usize,
+    },
+    /// The sequence id is not registered.
     #[error("unknown sequence {0}")]
     UnknownSeq(SeqId),
+    /// The sequence id is already registered.
     #[error("sequence {0} already registered")]
     DuplicateSeq(SeqId),
+    /// The sequence would exceed the per-sequence block cap
+    /// (context-window exhaustion).
     #[error("sequence {seq} exceeds max_blocks_per_seq {max}")]
-    SeqTooLong { seq: SeqId, max: usize },
+    SeqTooLong {
+        /// The offending sequence.
+        seq: SeqId,
+        /// The configured per-sequence block cap.
+        max: usize,
+    },
 }
 
 /// Free-list allocator over the physical block pool.
@@ -47,18 +64,22 @@ impl BlockAllocator {
         }
     }
 
+    /// Total physical blocks (including the reserved dummy block 0).
     pub fn num_blocks(&self) -> usize {
         self.num_blocks
     }
 
+    /// Blocks currently on the free list.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Blocks currently allocated to sequences.
     pub fn allocated_blocks(&self) -> usize {
         self.allocated
     }
 
+    /// High-water mark of allocated blocks over the allocator's life.
     pub fn peak_allocated_blocks(&self) -> usize {
         self.peak_allocated
     }
@@ -68,6 +89,7 @@ impl BlockAllocator {
         self.num_blocks - 1
     }
 
+    /// Take `n` blocks off the free list (all-or-nothing).
     pub fn alloc(&mut self, n: usize) -> Result<Vec<u32>, KvError> {
         if self.free.len() < n {
             return Err(KvError::OutOfBlocks {
@@ -82,6 +104,7 @@ impl BlockAllocator {
         Ok(blocks)
     }
 
+    /// Return previously allocated blocks to the free list.
     pub fn release(&mut self, blocks: &[u32]) {
         debug_assert!(blocks.iter().all(|&b| b != 0), "block 0 is reserved");
         self.allocated -= blocks.len();
@@ -93,6 +116,7 @@ impl BlockAllocator {
         self.allocated as f64 / self.capacity().max(1) as f64
     }
 
+    /// Peak fraction of usable blocks ever allocated.
     pub fn peak_usage(&self) -> f64 {
         self.peak_allocated as f64 / self.capacity().max(1) as f64
     }
@@ -114,6 +138,8 @@ pub struct KvCacheManager {
 }
 
 impl KvCacheManager {
+    /// A manager over `num_blocks` physical blocks (incl. reserved
+    /// block 0) of `block_size` token slots each.
     pub fn new(num_blocks: usize, block_size: usize, max_blocks_per_seq: usize) -> Self {
         Self {
             alloc: BlockAllocator::new(num_blocks),
@@ -123,18 +149,22 @@ impl KvCacheManager {
         }
     }
 
+    /// Token slots per physical block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
 
+    /// Per-sequence block cap (the context-window limit in blocks).
     pub fn max_blocks_per_seq(&self) -> usize {
         self.max_blocks_per_seq
     }
 
+    /// The underlying block allocator (read-only).
     pub fn allocator(&self) -> &BlockAllocator {
         &self.alloc
     }
 
+    /// Number of sequences currently holding blocks.
     pub fn num_seqs(&self) -> usize {
         self.seqs.len()
     }
@@ -148,6 +178,7 @@ impl KvCacheManager {
         self.blocks_for(prompt)
     }
 
+    /// Whether the free pool could admit a prompt of `prompt` tokens.
     pub fn can_admit(&self, prompt: usize) -> bool {
         self.alloc.free_blocks() >= self.blocks_for(prompt)
     }
@@ -205,6 +236,7 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Tokens with reserved slots for sequence `id` (None if unknown).
     pub fn tokens_of(&self, id: SeqId) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.tokens)
     }
@@ -221,10 +253,12 @@ impl KvCacheManager {
         Some(b * self.block_size as u32 + (pos % self.block_size) as u32)
     }
 
+    /// Current fraction of usable blocks allocated.
     pub fn usage(&self) -> f64 {
         self.alloc.usage()
     }
 
+    /// Peak fraction of usable blocks ever allocated.
     pub fn peak_usage(&self) -> f64 {
         self.alloc.peak_usage()
     }

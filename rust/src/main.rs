@@ -21,6 +21,7 @@ use memgap::gpusim::profiler::profile_attention;
 use memgap::gpusim::GpuSpec;
 use memgap::models::spec::{AttentionBackendKind, ModelSpec};
 use memgap::replication::run_replicated;
+#[cfg(feature = "pjrt")]
 use memgap::runtime::PjrtBackend;
 use memgap::util::cli::Args;
 use memgap::workload::{generate, WorkloadConfig};
@@ -85,26 +86,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("served {served} requests");
         return Ok(());
     }
-    let dir = args
-        .get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(memgap::runtime::default_artifacts_dir);
-    let backend = PjrtBackend::load(&dir)?;
-    let (blocks, bs, mbs) = backend.kv_geometry();
-    eprintln!(
-        "loaded {} ({} params) on {}; {blocks} KV blocks x {bs} slots",
-        backend.manifest.model.name,
-        backend.manifest.model.param_count,
-        backend.platform()
-    );
-    let mut cfg = EngineConfig::new(max_seqs.min(backend.manifest.max_decode_batch()), blocks, bs);
-    cfg.max_blocks_per_seq = mbs;
-    cfg.max_batched_tokens = 512;
-    let engine = Engine::new(backend, cfg);
-    eprintln!("serving on {addr} (JSON lines; op=generate/stats/shutdown)");
-    let served = server::serve(engine, addr)?;
-    eprintln!("served {served} requests");
-    Ok(())
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(memgap::runtime::default_artifacts_dir);
+        let backend = PjrtBackend::load(&dir)?;
+        let (blocks, bs, mbs) = backend.kv_geometry();
+        eprintln!(
+            "loaded {} ({} params) on {}; {blocks} KV blocks x {bs} slots",
+            backend.manifest.model.name,
+            backend.manifest.model.param_count,
+            backend.platform()
+        );
+        let mut cfg =
+            EngineConfig::new(max_seqs.min(backend.manifest.max_decode_batch()), blocks, bs);
+        cfg.max_blocks_per_seq = mbs;
+        cfg.max_batched_tokens = 512;
+        let engine = Engine::new(backend, cfg);
+        eprintln!("serving on {addr} (JSON lines; op=generate/stats/shutdown)");
+        let served = server::serve(engine, addr)?;
+        eprintln!("served {served} requests");
+        Ok(())
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        bail!(
+            "this build has no PJRT runtime (compiled without the `pjrt` feature); \
+             pass --sim MODEL to serve the simulated backend"
+        )
+    }
 }
 
 fn cmd_offline(args: &Args) -> Result<()> {

@@ -138,7 +138,8 @@ impl PjrtBackend {
         let exe = executables
             .get(&bucket.file)
             .ok_or_else(|| anyhow!("unknown executable {}", bucket.file))?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(step_inputs.len() + 2 + weights.len());
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(step_inputs.len() + 2 + weights.len());
         inputs.extend_from_slice(step_inputs);
         inputs.push(k_cache);
         inputs.push(v_cache);

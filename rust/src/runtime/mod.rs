@@ -1,6 +1,11 @@
 //! PJRT runtime: load the AOT'd HLO artifacts and execute them from the
 //! request path — python never runs here.
 //!
+//! The executor (`backend`/`weights`) needs the `xla` crate, which is
+//! outside the offline vendor set, so both modules are gated behind the
+//! off-by-default `pjrt` cargo feature; the [`manifest`] schema and the
+//! artifact-discovery helpers below stay available in every build.
+//!
 //! The bridge follows /opt/xla-example/load_hlo: HLO **text** is the
 //! interchange format (`HloModuleProto::from_text_file` reassigns the
 //! 64-bit instruction ids jax >= 0.5 emits, which the crate's
@@ -14,10 +19,13 @@
 //! cache literals are threaded into the next step, so the rust side
 //! stays the single owner of cache state.
 
+#[cfg(feature = "pjrt")]
 pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use manifest::{ExecKind, ExecSpec, Manifest, TinyModelCfg};
 

@@ -53,7 +53,13 @@ fn fmt_dur(d: Duration) -> String {
 
 /// Run `f` repeatedly: `warmup` unmeasured iterations, then up to
 /// `samples` measured ones (capped by `budget` wall time).
-pub fn bench<T>(name: &str, warmup: usize, samples: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    budget: Duration,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
     for _ in 0..warmup {
         black_box(f());
     }

@@ -124,7 +124,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> ParseError {
         ParseError {
             pos: self.pos,
