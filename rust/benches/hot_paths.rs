@@ -1,39 +1,97 @@
 //! `cargo bench --bench hot_paths` — L3 micro-benchmarks on the
 //! coordinator's hot loop (the §Perf targets in EXPERIMENTS.md):
 //!
-//! - simulate one decode step (the inner loop of every figure);
+//! - simulate one decode step (the inner loop of every figure), via the
+//!   plan-compiled fast path, the summary-only mode, and the legacy
+//!   reference enumeration (the pre-plan baseline, kept for the
+//!   speedup trajectory);
+//! - step-plan compilation itself;
 //! - scheduler decision at large queue depth;
 //! - KV allocator admit/append/free churn;
 //! - decode batch assembly (block tables + slot mappings);
-//! - a full small engine run (simulated);
+//! - a full small engine run (simulated, summary mode);
 //! - MPS co-scheduling of long traces;
 //! - PJRT decode step (only when artifacts are built).
+//!
+//! Besides the human-readable table, the run rewrites
+//! `BENCH_hotpaths.json` at the repo root (bench name -> mean ns/iter)
+//! so the perf trajectory is tracked across PRs. `BENCH_SMOKE=1`
+//! shrinks iteration counts for CI smoke coverage; smoke runs never
+//! touch the repo-root JSON (they only write where `BENCH_JSON`
+//! explicitly points) — smoke numbers are compile/regression canaries,
+//! not trajectory points.
 
 use std::time::Duration;
 
 use memgap::backend::{SeqBatchEntry, SimBackend};
 use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::gpusim::kernels::CtxAggregates;
 use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
+use memgap::gpusim::plan::{PlanScratch, StepPlan};
+use memgap::gpusim::step::simulate_decode_step_reference;
 use memgap::gpusim::{simulate_decode_step, GpuSpec};
 use memgap::kvcache::KvCacheManager;
 use memgap::models::spec::{AttentionBackendKind, ModelSpec};
-use memgap::util::bench::{bench, header, quick};
+use memgap::util::bench::{bench, header, smoke, BenchResult, JsonReport};
 use memgap::workload::{generate, WorkloadConfig};
+
+/// `quick`-shaped bench, scaled down under `BENCH_SMOKE=1`.
+fn run<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    if smoke() {
+        bench(name, 1, 3, Duration::from_secs(2), f)
+    } else {
+        bench(name, 3, 30, Duration::from_secs(10), f)
+    }
+}
+
+/// Heavier bench (whole engine runs), scaled down under smoke.
+fn run_heavy<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    if smoke() {
+        bench(name, 0, 2, Duration::from_secs(10), f)
+    } else {
+        bench(name, 1, 10, Duration::from_secs(30), f)
+    }
+}
 
 fn main() {
     println!("{}", header());
+    let mut json = JsonReport::new();
+    let mut record = |r: BenchResult| {
+        println!("{}", r.report());
+        json.add(&r);
+    };
     let gpu = GpuSpec::h100_64g();
     let spec = ModelSpec::opt_1_3b();
 
-    // 1. Simulator: one decode step at MAX batch.
+    // 1a. Simulator: one fully recorded decode step at MAX batch
+    // (plan-compiled fast path; the headline §Perf target).
     let ctx = vec![499usize; 512];
-    let r = quick("sim_decode_step_b512_opt13b", || {
+    record(run("sim_decode_step_b512_opt13b", || {
         simulate_decode_step(&gpu, &spec, AttentionBackendKind::XFormers, &ctx, 16)
-    });
-    println!("{}", r.report());
+    }));
+
+    // 1b. The legacy per-layer enumeration it replaced — kept so the
+    // trajectory file shows the plan speedup on the same machine.
+    record(run("sim_decode_step_reference_b512_opt13b", || {
+        simulate_decode_step_reference(&gpu, &spec, AttentionBackendKind::XFormers, &ctx, 16)
+    }));
+
+    // 1c. Summary mode: aggregates + digest, no per-kernel records —
+    // the engine's steady-state step cost when record_steps is off.
+    let plan = StepPlan::new(spec.clone(), AttentionBackendKind::XFormers);
+    let mut scratch = PlanScratch::default();
+    record(run("sim_decode_summary_b512_opt13b", || {
+        let agg = CtxAggregates::from_lens(&ctx, 16);
+        plan.decode_summary(&gpu, &agg, &mut scratch).gpu_time
+    }));
+
+    // 1d. Plan compilation itself (once per engine; must stay cheap).
+    record(run("plan_compile_opt13b", || {
+        StepPlan::new(spec.clone(), AttentionBackendKind::XFormers)
+    }));
 
     // 2. KV allocator churn: admit + grow + free 512 sequences.
-    let r = quick("kv_churn_512_seqs", || {
+    record(run("kv_churn_512_seqs", || {
         let mut kv = KvCacheManager::new(40_000, 16, 128);
         for id in 0..512u64 {
             kv.admit(id, 161).unwrap();
@@ -47,15 +105,14 @@ fn main() {
             kv.free(id).unwrap();
         }
         kv.allocator().peak_allocated_blocks()
-    });
-    println!("{}", r.report());
+    }));
 
     // 3. Decode batch assembly at B=512 (block tables + slots).
     let mut kv = KvCacheManager::new(40_000, 16, 128);
     for id in 0..512u64 {
         kv.admit(id, 400).unwrap();
     }
-    let r = quick("decode_batch_assembly_b512", || {
+    record(run("decode_batch_assembly_b512", || {
         let entries: Vec<SeqBatchEntry> = (0..512u64)
             .map(|id| {
                 let ctx = kv.tokens_of(id).unwrap();
@@ -69,28 +126,21 @@ fn main() {
             })
             .collect();
         entries.len()
-    });
-    println!("{}", r.report());
+    }));
 
-    // 4. Full engine run: 128 ShareGPT-like requests at B=64.
+    // 4. Full engine run: 128 ShareGPT-like requests at B=64
+    // (summary mode — record_steps off — like every serving sweep).
     let reqs = generate(&WorkloadConfig::sharegpt(128, 0));
-    let r = bench(
-        "engine_run_128reqs_b64",
-        1,
-        10,
-        Duration::from_secs(30),
-        || {
-            let backend = SimBackend::new(
-                gpu.clone(),
-                spec.clone(),
-                AttentionBackendKind::XFormers,
-            );
-            let mut engine = Engine::new(backend, EngineConfig::new(64, 32 * 1024, 16));
-            engine.submit(&reqs);
-            engine.run_to_completion().unwrap().steps
-        },
-    );
-    println!("{}", r.report());
+    record(run_heavy("engine_run_128reqs_b64", || {
+        let backend = SimBackend::new(
+            gpu.clone(),
+            spec.clone(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut engine = Engine::new(backend, EngineConfig::new(64, 32 * 1024, 16));
+        engine.submit(&reqs);
+        engine.run_to_completion().unwrap().steps
+    }));
 
     // 5. MPS co-scheduling: 4 replicas x 2000 segments.
     let trace: Vec<Segment> = (0..1000)
@@ -107,17 +157,34 @@ fn main() {
         })
         .collect();
     let traces = vec![trace; 4];
-    let r = quick("mps_coschedule_4x2000segs", || {
+    record(run("mps_coschedule_4x2000segs", || {
         run_shared(&traces, SharePolicy::Mps).makespan
-    });
-    println!("{}", r.report());
+    }));
 
     // 6. PJRT real decode step (needs the `pjrt` feature + artifacts).
-    pjrt_benches();
+    pjrt_benches(&mut record);
+    drop(record);
+
+    // 7. Machine-readable trajectory for the next PR's comparison.
+    // Smoke numbers are canaries, not trajectory points: never let a
+    // BENCH_SMOKE run clobber the committed repo-root file (it still
+    // writes wherever BENCH_JSON explicitly points, as CI does).
+    let out = match std::env::var_os("BENCH_JSON") {
+        Some(p) => std::path::PathBuf::from(p),
+        None if smoke() => {
+            eprintln!("BENCH_SMOKE set: skipping BENCH_hotpaths.json (set BENCH_JSON to force)");
+            return;
+        }
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpaths.json"),
+    };
+    match json.write(&out) {
+        Ok(()) => eprintln!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_benches() {
+fn pjrt_benches(record: &mut impl FnMut(BenchResult)) {
     use memgap::backend::{Backend, StepBatch};
 
     if !memgap::runtime::artifacts_available() {
@@ -141,14 +208,13 @@ fn pjrt_benches() {
         })
         .collect();
     let batch = StepBatch { entries };
-    let r = bench(
+    record(bench(
         "pjrt_decode_step_b8_tiny_opt",
         2,
         20,
         Duration::from_secs(30),
         || backend.decode(&batch).unwrap().next_tokens.len(),
-    );
-    println!("{}", r.report());
+    ));
     let prompt: Vec<i32> = (1..33).collect();
     kv.admit(100, prompt.len()).unwrap();
     let pbatch = StepBatch {
@@ -162,17 +228,16 @@ fn pjrt_benches() {
                 .collect(),
         }],
     };
-    let r = bench(
+    record(bench(
         "pjrt_prefill_b1_s32_tiny_opt",
         2,
         20,
         Duration::from_secs(30),
         || backend.prefill(&pbatch).unwrap().next_tokens.len(),
-    );
-    println!("{}", r.report());
+    ));
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_benches() {
+fn pjrt_benches(_record: &mut impl FnMut(BenchResult)) {
     println!("pjrt_*  SKIPPED (build with --features pjrt and run `make artifacts`)");
 }

@@ -14,13 +14,15 @@
 
 use anyhow::Result;
 
+use crate::gpusim::kernels::{CtxAggregates, PromptAggregates};
+use crate::gpusim::plan::{PlanScratch, StepPlan, StepSummary};
 use crate::gpusim::step::StepSim;
 use crate::gpusim::{self, GpuSpec};
 use crate::kvcache::SeqId;
 use crate::models::spec::{AttentionBackendKind, ModelSpec};
 
 /// One sequence's slice of a step batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SeqBatchEntry {
     pub seq: SeqId,
     /// Token ids this step feeds: the whole prompt for prefill, the
@@ -68,7 +70,11 @@ pub struct StepOutput {
     /// Host-side gap in seconds (simulated; 0 for real execution,
     /// where host time is part of the wall clock).
     pub cpu_gap: f64,
-    /// Full kernel-level detail when simulated (None on PJRT).
+    /// Heap-free step totals, present whenever the step was simulated
+    /// (both recording and summary mode; None on PJRT).
+    pub summary: Option<StepSummary>,
+    /// Full kernel-level detail when simulated *with recording on*
+    /// (None on PJRT and in summary mode — see [`Backend::set_record`]).
     pub sim: Option<StepSim>,
 }
 
@@ -89,6 +95,13 @@ pub trait Backend {
         true
     }
 
+    /// Toggle full kernel-level recording: with recording on, simulated
+    /// steps carry a [`StepSim`]; with it off they carry only the
+    /// heap-free [`StepSummary`] (the steady-state fast path). The
+    /// engine forwards `EngineConfig::record_steps` here. Backends
+    /// without a simulator ignore it.
+    fn set_record(&mut self, _record: bool) {}
+
     /// Process prompts and produce each sequence's first token.
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput>;
 
@@ -104,21 +117,32 @@ pub trait Backend {
 }
 
 /// Simulated backend over the analytical H100 model.
+///
+/// Holds a [`StepPlan`] compiled once at construction — `model` and
+/// `attention` are fixed from then on — plus reusable scratch so
+/// summary-mode steps allocate nothing per kernel.
 #[derive(Debug, Clone)]
 pub struct SimBackend {
     pub gpu: GpuSpec,
     pub model: ModelSpec,
     pub attention: AttentionBackendKind,
     pub kv_block: usize,
+    plan: StepPlan,
+    scratch: PlanScratch,
+    record: bool,
 }
 
 impl SimBackend {
     pub fn new(gpu: GpuSpec, model: ModelSpec, attention: AttentionBackendKind) -> Self {
+        let plan = StepPlan::new(model.clone(), attention);
         Self {
             gpu,
             model,
             attention,
             kv_block: 16,
+            plan,
+            scratch: PlanScratch::default(),
+            record: true,
         }
     }
 
@@ -141,80 +165,128 @@ impl Backend for SimBackend {
         false
     }
 
+    fn set_record(&mut self, record: bool) {
+        self.record = record;
+    }
+
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput> {
-        let lens: Vec<usize> = batch.entries.iter().map(|e| e.tokens.len()).collect();
-        let sim =
-            gpusim::simulate_prefill_step(&self.gpu, &self.model, self.attention, &lens);
-        Ok(StepOutput {
-            next_tokens: self.fake_tokens(batch),
-            gpu_time: sim.gpu_time,
-            cpu_gap: sim.cpu_gap,
-            sim: Some(sim),
-        })
+        let agg =
+            PromptAggregates::from_iter_lens(batch.entries.iter().map(|e| e.tokens.len()));
+        if self.record {
+            let sim = self.plan.prefill_sim_aggregated(&self.gpu, &agg);
+            Ok(StepOutput {
+                next_tokens: self.fake_tokens(batch),
+                gpu_time: sim.gpu_time,
+                cpu_gap: sim.cpu_gap,
+                summary: Some(StepSummary::from_sim(&sim)),
+                sim: Some(sim),
+            })
+        } else {
+            let summary = self.plan.prefill_summary(&self.gpu, &agg, &mut self.scratch);
+            Ok(StepOutput {
+                next_tokens: self.fake_tokens(batch),
+                gpu_time: summary.gpu_time,
+                cpu_gap: summary.cpu_gap,
+                summary: Some(summary),
+                sim: None,
+            })
+        }
     }
 
     fn decode(&mut self, batch: &StepBatch) -> Result<StepOutput> {
-        let ctx = batch.context_lens();
-        let sim = gpusim::simulate_decode_step(
-            &self.gpu,
-            &self.model,
-            self.attention,
-            &ctx,
+        let agg = CtxAggregates::from_iter_lens(
+            batch.entries.iter().map(|e| e.context_len),
             self.kv_block,
         );
-        Ok(StepOutput {
-            next_tokens: self.fake_tokens(batch),
-            gpu_time: sim.gpu_time,
-            cpu_gap: sim.cpu_gap,
-            sim: Some(sim),
-        })
+        if self.record {
+            let sim = self.plan.decode_sim_aggregated(&self.gpu, &agg);
+            Ok(StepOutput {
+                next_tokens: self.fake_tokens(batch),
+                gpu_time: sim.gpu_time,
+                cpu_gap: sim.cpu_gap,
+                summary: Some(StepSummary::from_sim(&sim)),
+                sim: Some(sim),
+            })
+        } else {
+            let summary = self.plan.decode_summary(&self.gpu, &agg, &mut self.scratch);
+            Ok(StepOutput {
+                next_tokens: self.fake_tokens(batch),
+                gpu_time: summary.gpu_time,
+                cpu_gap: summary.cpu_gap,
+                summary: Some(summary),
+                sim: None,
+            })
+        }
     }
 
     fn mixed(&mut self, prefills: &StepBatch, decodes: &StepBatch) -> Result<StepOutput> {
         // Sarathi-style chunked prefill: one fused pass. Model it as the
         // decode step plus the prefill chunk's kernels sharing a single
         // launch train and ONE host gap (that is the point of chunking).
-        let p_lens: Vec<usize> = prefills.entries.iter().map(|e| e.tokens.len()).collect();
-        let d_ctx = decodes.context_lens();
-        let mut kernels = Vec::new();
-        let mut gpu_time = 0.0;
-        let batch = p_lens.len() + d_ctx.len();
-        if !d_ctx.is_empty() {
-            let sim = gpusim::simulate_decode_step(
-                &self.gpu,
-                &self.model,
-                self.attention,
-                &d_ctx,
-                self.kv_block,
-            );
-            gpu_time += sim.gpu_time;
-            kernels.extend(sim.kernels);
-        }
-        if !p_lens.is_empty() {
-            let sim =
-                gpusim::simulate_prefill_step(&self.gpu, &self.model, self.attention, &p_lens);
-            gpu_time += sim.gpu_time;
-            // Offset the prefill kernels after the decode ones.
-            let offset = kernels.last().map(|k: &gpusim::KernelExec| k.end()).unwrap_or(0.0);
-            kernels.extend(sim.kernels.into_iter().map(|mut k| {
-                k.start += offset;
-                k
-            }));
-        }
+        let d_agg = CtxAggregates::from_iter_lens(
+            decodes.entries.iter().map(|e| e.context_len),
+            self.kv_block,
+        );
+        let p_agg =
+            PromptAggregates::from_iter_lens(prefills.entries.iter().map(|e| e.tokens.len()));
+        let batch = d_agg.count + p_agg.count;
         let cpu_gap = gpusim::cpu::step_gap(&self.gpu, batch);
         let mut next = self.fake_tokens(decodes);
         next.extend(self.fake_tokens(prefills));
-        Ok(StepOutput {
-            next_tokens: next,
-            gpu_time,
-            cpu_gap,
-            sim: Some(StepSim {
+        if self.record {
+            let mut kernels = Vec::new();
+            let mut gpu_time = 0.0;
+            if d_agg.count > 0 {
+                let sim = self.plan.decode_sim_aggregated(&self.gpu, &d_agg);
+                gpu_time += sim.gpu_time;
+                kernels.extend(sim.kernels);
+            }
+            if p_agg.count > 0 {
+                let sim = self.plan.prefill_sim_aggregated(&self.gpu, &p_agg);
+                gpu_time += sim.gpu_time;
+                // Offset the prefill kernels after the decode ones.
+                let offset = kernels
+                    .last()
+                    .map(|k: &gpusim::KernelExec| k.end())
+                    .unwrap_or(0.0);
+                kernels.extend(sim.kernels.into_iter().map(|mut k| {
+                    k.start += offset;
+                    k
+                }));
+            }
+            let sim = StepSim {
                 kernels,
                 gpu_time,
                 cpu_gap,
                 batch,
-            }),
-        })
+            };
+            Ok(StepOutput {
+                next_tokens: next,
+                gpu_time,
+                cpu_gap,
+                summary: Some(StepSummary::from_sim(&sim)),
+                sim: Some(sim),
+            })
+        } else {
+            let mut summary = StepSummary::default();
+            if d_agg.count > 0 {
+                summary.absorb(&self.plan.decode_summary(&self.gpu, &d_agg, &mut self.scratch));
+            }
+            if p_agg.count > 0 {
+                summary
+                    .absorb(&self.plan.prefill_summary(&self.gpu, &p_agg, &mut self.scratch));
+            }
+            // ONE host gap for the fused step, sized by the whole batch.
+            summary.cpu_gap = cpu_gap;
+            summary.batch = batch;
+            Ok(StepOutput {
+                next_tokens: next,
+                gpu_time: summary.gpu_time,
+                cpu_gap,
+                summary: Some(summary),
+                sim: None,
+            })
+        }
     }
 }
 
@@ -263,6 +335,27 @@ mod tests {
         let o2 = b.decode(&batch(&[42])).unwrap();
         assert_eq!(o1.next_tokens, o2.next_tokens);
         assert!((o1.next_tokens[0] as usize) < b.model.vocab);
+    }
+
+    #[test]
+    fn summary_mode_drops_kernel_detail_but_keeps_totals() {
+        let mut rec = sim();
+        let mut fast = sim();
+        fast.set_record(false);
+        let b = batch(&[100, 250, 400]);
+        let r = rec.decode(&b).unwrap();
+        let f = fast.decode(&b).unwrap();
+        assert!(r.sim.is_some());
+        assert!(f.sim.is_none());
+        let fs = f.summary.expect("summary in fast mode");
+        let rs = r.summary.expect("summary in record mode");
+        assert_eq!(f.next_tokens, r.next_tokens);
+        assert_eq!(fs.batch, rs.batch);
+        assert_eq!(fs.num_kernels, rs.num_kernels);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs());
+        assert!(close(f.gpu_time, r.gpu_time), "{} vs {}", f.gpu_time, r.gpu_time);
+        assert_eq!(f.cpu_gap, r.cpu_gap);
+        assert!(close(fs.mean_dram_read_util(), rs.mean_dram_read_util()));
     }
 
     #[test]

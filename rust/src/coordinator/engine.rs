@@ -22,6 +22,7 @@ use crate::coordinator::scheduler::{
     ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
 };
 use crate::gpusim::mps::Segment;
+use crate::gpusim::plan::StepSummary;
 use crate::gpusim::step::StepSim;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::{MetricsCollector, RunMetrics};
@@ -95,6 +96,10 @@ pub struct Engine<B: Backend> {
     pending: Vec<Request>, // not yet arrived (sorted by arrival desc)
     waiting: VecDeque<RunningSeq>,
     running: Vec<RunningSeq>,
+    /// Reusable decode batch-assembly scratch: entries (and their
+    /// token/table vectors) persist across steps, so steady-state
+    /// decode steps build their batch without per-step allocations.
+    decode_batch: StepBatch,
     metrics: MetricsCollector,
     preemptions: u64,
     steps: usize,
@@ -106,13 +111,16 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
-    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+    pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
         let kv = KvCacheManager::new(cfg.kv_blocks, cfg.block_size, cfg.max_blocks_per_seq);
         let scheduler = Scheduler::new(SchedulerConfig {
             max_num_seqs: cfg.max_num_seqs,
             max_batched_tokens: cfg.max_batched_tokens,
             policy: cfg.policy,
         });
+        // Without step recording the backend may take its summary-only
+        // fast path (no per-kernel records to throw away).
+        backend.set_record(cfg.record_steps);
         Self {
             backend,
             cfg,
@@ -122,6 +130,7 @@ impl<B: Backend> Engine<B> {
             pending: Vec::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
+            decode_batch: StepBatch::default(),
             metrics: MetricsCollector::new(),
             preemptions: 0,
             steps: 0,
@@ -156,15 +165,33 @@ impl<B: Backend> Engine<B> {
 
     /// Submit a workload trace (any arrival times).
     pub fn submit(&mut self, reqs: &[Request]) {
-        let vocab = self.backend.spec().vocab;
         for r in reqs {
             self.metrics.on_admit(r.id, r.arrival, r.prompt_tokens);
             self.pending.push(r.clone());
         }
-        // Sorted descending so pop() yields earliest arrival.
-        self.pending
-            .sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
-        let _ = vocab;
+        // `pending` must end up sorted descending so pop() yields the
+        // earliest arrival. Generated traces arrive already ordered, so
+        // only fall back to the (stable) sort when the invariant does
+        // not already hold — equal arrivals keep submission order either
+        // way. The common offline case (all arrivals equal) is a no-op.
+        let descending = self
+            .pending
+            .windows(2)
+            .all(|w| w[0].arrival >= w[1].arrival);
+        if !descending {
+            let strictly_ascending = self
+                .pending
+                .windows(2)
+                .all(|w| w[0].arrival < w[1].arrival);
+            if strictly_ascending {
+                // Ascending traces (Poisson arrivals): a reverse is the
+                // sort result without the O(n log n).
+                self.pending.reverse();
+            } else {
+                self.pending
+                    .sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+            }
+        }
     }
 
     fn absorb_arrivals(&mut self) {
@@ -290,32 +317,33 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    fn decode_entries(&self) -> Vec<SeqBatchEntry> {
+    /// Rebuild `self.decode_batch` over the running set, reusing the
+    /// entry records (and their token/table vectors) from the previous
+    /// step — the hot loop assembles its batch without allocating.
+    fn build_decode_batch(&mut self) {
         // The simulator only consumes context lengths; skip the block
         // table / slot clones for it (§Perf L3).
         let tables = self.backend.needs_tables();
-        self.running
-            .iter()
-            .map(|s| {
-                let ctx = s.context_len();
-                let pos = ctx - 1; // slot of the token fed this step
-                SeqBatchEntry {
-                    seq: s.id,
-                    tokens: vec![*s.token_ids.last().unwrap()],
-                    context_len: ctx,
-                    block_table: if tables {
-                        self.kv.block_table(s.id).unwrap().to_vec()
-                    } else {
-                        Vec::new()
-                    },
-                    slot_mapping: if tables {
-                        vec![self.kv.slot_for(s.id, pos).unwrap()]
-                    } else {
-                        Vec::new()
-                    },
-                }
-            })
-            .collect()
+        let entries = &mut self.decode_batch.entries;
+        entries.truncate(self.running.len());
+        while entries.len() < self.running.len() {
+            entries.push(SeqBatchEntry::default());
+        }
+        for (e, s) in entries.iter_mut().zip(self.running.iter()) {
+            let ctx = s.context_len();
+            e.seq = s.id;
+            e.context_len = ctx;
+            e.tokens.clear();
+            e.tokens.push(*s.token_ids.last().unwrap());
+            e.block_table.clear();
+            e.slot_mapping.clear();
+            if tables {
+                e.block_table
+                    .extend_from_slice(self.kv.block_table(s.id).unwrap());
+                // Slot of the token fed this step.
+                e.slot_mapping.push(self.kv.slot_for(s.id, ctx - 1).unwrap());
+            }
+        }
     }
 
     fn run_decode(&mut self) -> Result<()> {
@@ -326,11 +354,12 @@ impl<B: Backend> Engine<B> {
         if self.running.is_empty() {
             return Ok(());
         }
-        let batch = StepBatch {
-            entries: self.decode_entries(),
-        };
+        self.build_decode_batch();
+        let batch = std::mem::take(&mut self.decode_batch);
         let out = self.exec_batched(&batch, Phase::Decode)?;
-        self.after_step(&out, batch.len(), Phase::Decode);
+        let n = batch.len();
+        self.decode_batch = batch; // keep the allocations for next step
+        self.after_step(&out, n, Phase::Decode);
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.push_token(tok);
@@ -346,18 +375,19 @@ impl<B: Backend> Engine<B> {
         let pre = StepBatch {
             entries: pre_entries,
         };
-        let dec = StepBatch {
-            entries: self.decode_entries(),
-        };
+        self.build_decode_batch();
+        let dec = std::mem::take(&mut self.decode_batch);
         let out = self.backend.mixed(&pre, &dec)?;
-        self.after_step(&out, pre.len() + dec.len(), Phase::Mixed);
+        let dec_len = dec.len();
+        self.decode_batch = dec; // keep the allocations for next step
+        self.after_step(&out, pre.len() + dec_len, Phase::Mixed);
         // Convention: next_tokens lists decodes first, then prefills.
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.push_token(tok);
             self.metrics.on_token(s.id, self.clock);
         }
-        for (s, &tok) in pre_seqs.iter_mut().zip(&out.next_tokens[dec.len()..]) {
+        for (s, &tok) in pre_seqs.iter_mut().zip(&out.next_tokens[dec_len..]) {
             s.state = RequestState::Running;
             s.push_token(tok);
             self.metrics.on_token(s.id, self.clock);
@@ -455,6 +485,7 @@ impl<B: Backend> Engine<B> {
         let mut next_tokens = Vec::with_capacity(batch.len());
         let mut gpu_time = 0.0;
         let mut cpu_gap = 0.0;
+        let mut summary: Option<StepSummary> = None;
         let mut sim = None;
         for chunk in batch.entries.chunks(cap) {
             let sub = StepBatch {
@@ -467,12 +498,19 @@ impl<B: Backend> Engine<B> {
             next_tokens.extend(out.next_tokens);
             gpu_time += out.gpu_time;
             cpu_gap += out.cpu_gap;
+            if let Some(s) = out.summary {
+                match &mut summary {
+                    Some(acc) => acc.absorb(&s),
+                    None => summary = Some(s),
+                }
+            }
             sim = out.sim.or(sim);
         }
         Ok(StepOutput {
             next_tokens,
             gpu_time,
             cpu_gap,
+            summary,
             sim,
         })
     }
@@ -486,18 +524,18 @@ impl<B: Backend> Engine<B> {
         }
         self.metrics
             .on_step(self.clock, batch, out.cpu_gap, out.gpu_time);
-        let demand = out
-            .sim
-            .as_ref()
-            .map(|s| {
-                s.mean_dram_read_util()
-                    + s.kernels
-                        .iter()
-                        .map(|k| k.dram_write_util * k.duration)
-                        .sum::<f64>()
-                        / s.gpu_time.max(1e-12)
-            })
-            .unwrap_or(0.5);
+        let demand = if let Some(s) = &out.summary {
+            s.dram_demand()
+        } else if let Some(s) = &out.sim {
+            s.mean_dram_read_util()
+                + s.kernels
+                    .iter()
+                    .map(|k| k.dram_write_util * k.duration)
+                    .sum::<f64>()
+                    / s.gpu_time.max(1e-12)
+        } else {
+            0.5
+        };
         self.segments.push(Segment::Cpu {
             duration: out.cpu_gap,
         });
@@ -597,6 +635,40 @@ mod tests {
         let report = e.run_to_completion().unwrap();
         assert_eq!(report.metrics.completed, 8);
         assert!(report.preemptions > 0, "expected KV pressure");
+    }
+
+    #[test]
+    fn submit_handles_any_arrival_order() {
+        // Ascending (reverse fast path), descending (already sorted) and
+        // shuffled (stable sort fallback) all yield FCFS admission.
+        let mk = |arrivals: &[f64]| -> Vec<crate::workload::Request> {
+            arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| {
+                    let mut r = generate(&WorkloadConfig::offline(1, 16, 4))[0].clone();
+                    r.id = i as u64;
+                    r.arrival = a;
+                    r
+                })
+                .collect()
+        };
+        for arrivals in [
+            vec![0.1, 0.2, 0.3, 0.4],
+            vec![0.4, 0.3, 0.2, 0.1],
+            vec![0.3, 0.1, 0.4, 0.2],
+        ] {
+            let mut e = engine(4, 1024);
+            e.submit(&mk(&arrivals));
+            let report = e.run_to_completion().unwrap();
+            assert_eq!(report.metrics.completed, 4, "{arrivals:?}");
+        }
+        // Incremental submission (online server pattern) stays correct.
+        let mut e = engine(4, 1024);
+        e.submit(&mk(&[0.2]));
+        e.submit(&mk(&[0.1, 0.3]));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.completed, 3);
     }
 
     #[test]

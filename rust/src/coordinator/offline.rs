@@ -88,25 +88,32 @@ impl OfflineConfig {
 
 /// Sweep `max_num_seqs` over `batches`, returning (batch, report) —
 /// the x-axis loop behind Figs 2/3/10.
+///
+/// Every grid point is an independent engine run over its own workload
+/// copy, so the points fan out across scoped threads
+/// (`util::par::par_map`); results come back in grid order, keeping
+/// figure rows deterministic.
 pub fn sweep_batch_sizes(
     base: &OfflineConfig,
     batches: &[usize],
     sharegpt: bool,
     num_requests: usize,
 ) -> Result<Vec<(usize, EngineReport)>> {
-    let mut out = Vec::with_capacity(batches.len());
-    for &b in batches {
+    let reports = crate::util::par::par_map(batches, |&b| {
         let mut cfg = base.clone();
         cfg.max_num_seqs = b;
         cfg.num_requests = num_requests;
-        let report = if sharegpt {
-            cfg.run_sharegpt(num_requests, 0)?
+        if sharegpt {
+            cfg.run_sharegpt(num_requests, 0)
         } else {
-            cfg.run()?
-        };
-        out.push((b, report));
-    }
-    Ok(out)
+            cfg.run()
+        }
+    });
+    batches
+        .iter()
+        .zip(reports)
+        .map(|(&b, r)| Ok((b, r?)))
+        .collect()
 }
 
 #[cfg(test)]

@@ -161,13 +161,21 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
 }
 
 /// Generate artefacts and write CSV + a combined markdown report.
+///
+/// Artefacts are independent of each other, so they generate in
+/// parallel (each serving sweep additionally fans out its own grid
+/// points); files and the report are written sequentially afterwards in
+/// the requested (paper) order, so outputs are deterministic.
 pub fn run_to_dir(ids: &[&str], opts: &FigOpts, out: &Path) -> Result<Vec<Table>> {
     std::fs::create_dir_all(out).with_context(|| format!("mkdir {}", out.display()))?;
+    let generated = crate::util::par::par_map(ids, |id| {
+        eprintln!("[figures] generating {id} ...");
+        generate(id, opts)
+    });
     let mut all = Vec::new();
     let mut report = String::from("# memgap — regenerated paper artefacts\n\n");
-    for id in ids {
-        eprintln!("[figures] generating {id} ...");
-        let tables = generate(id, opts)?;
+    for tables in generated {
+        let tables = tables?;
         for t in &tables {
             let csv_path = out.join(format!("{}.csv", t.name));
             std::fs::write(&csv_path, t.to_csv())?;

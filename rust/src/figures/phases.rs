@@ -10,6 +10,7 @@ use crate::gpusim::profiler::{kernel_breakdown, profile_phase};
 use crate::gpusim::timeline::Timeline;
 use crate::gpusim::{simulate_decode_step, simulate_prefill_step, GpuSpec};
 use crate::models::spec::{AttentionBackendKind, ModelSpec};
+use crate::util::par;
 use crate::workload::{SHAREGPT_MEAN_INPUT, SHAREGPT_MEAN_OUTPUT};
 
 fn batch_grid(opts: &FigOpts, max: usize) -> Vec<usize> {
@@ -32,11 +33,17 @@ pub fn fig4(opts: &FigOpts) -> Result<Vec<Table>> {
             "slowdown_per_step",
         ],
     );
-    let mut t1_step = None;
-    for b in batch_grid(opts, 256) {
+    // One offline run per grid point — independent, so fan them out
+    // (rows land in grid order; the slowdown baseline is the first).
+    let grid = batch_grid(opts, 256);
+    let reports = par::par_map(&grid, |&b| {
         let mut cfg = OfflineConfig::new(spec.clone(), b);
         cfg.num_requests = b; // one full wave, the §V-A setup
-        let r = cfg.run()?;
+        cfg.run()
+    });
+    let mut t1_step = None;
+    for (&b, r) in grid.iter().zip(reports) {
+        let r = r?;
         let steps = (SHAREGPT_MEAN_OUTPUT as f64).max(1.0);
         let per_step = r.decode_time / steps;
         let t1 = *t1_step.get_or_insert(per_step);
@@ -126,7 +133,8 @@ pub fn fig6(opts: &FigOpts) -> Result<Vec<Table>> {
             &format!("Fig. 6: decode-time breakdown by kernel — {}", spec.name),
             &["batch", "matmul_pct", "attention_pct", "other_pct", "cpu_pct"],
         );
-        for b in batch_grid(opts, bmax) {
+        let grid = batch_grid(opts, bmax);
+        let rows = par::par_map(&grid, |&b| {
             let step = simulate_decode_step(
                 &gpu,
                 &spec,
@@ -135,13 +143,16 @@ pub fn fig6(opts: &FigOpts) -> Result<Vec<Table>> {
                 16,
             );
             let bd = kernel_breakdown(&[step]);
-            t.push_row(vec![
+            vec![
                 b.to_string(),
                 format!("{:.1}", 100.0 * bd.matmul),
                 format!("{:.1}", 100.0 * bd.attention),
                 format!("{:.1}", 100.0 * bd.other),
                 format!("{:.1}", 100.0 * bd.cpu),
-            ]);
+            ]
+        });
+        for row in rows {
+            t.push_row(row);
         }
         tables.push(t);
     }

@@ -5,6 +5,7 @@ use anyhow::Result;
 use super::{FigOpts, Table};
 use crate::coordinator::offline::{sweep_batch_sizes, OfflineConfig};
 use crate::models::spec::ModelSpec;
+use crate::util::par;
 use crate::workload::{generate as gen_workload, WorkloadConfig};
 
 /// Fig 2: throughput (tokens/s) + ITL vs average batch size, max batch
@@ -83,26 +84,33 @@ pub fn fig12(opts: &FigOpts) -> Result<Vec<Table>> {
             "throughput_tps",
         ],
     );
-    for &out_len in &out_lens {
-        for &b in &batch_grid {
-            let mut cfg = OfflineConfig::new(spec.clone(), b);
-            cfg.input_len = crate::workload::SHAREGPT_MEAN_INPUT;
-            cfg.output_len = out_len;
-            cfg.num_requests = b.max(8);
-            let mut engine = cfg.build_engine();
-            engine.submit(&gen_workload(&WorkloadConfig::offline(
-                cfg.num_requests,
-                cfg.input_len,
-                out_len,
-            )));
-            let r = engine.run_to_completion()?;
-            t.push_row(vec![
-                out_len.to_string(),
-                b.to_string(),
-                format!("{:.1}", 100.0 * r.peak_kv_usage),
-                format!("{:.0}", r.metrics.throughput_tps),
-            ]);
-        }
+    // The (output_len x batch) grid points are independent runs: fan
+    // them out, keeping row order (outer output_len, inner batch).
+    let points: Vec<(usize, usize)> = out_lens
+        .iter()
+        .flat_map(|&o| batch_grid.iter().map(move |&b| (o, b)))
+        .collect();
+    let rows = par::par_map(&points, |&(out_len, b)| -> Result<Vec<String>> {
+        let mut cfg = OfflineConfig::new(spec.clone(), b);
+        cfg.input_len = crate::workload::SHAREGPT_MEAN_INPUT;
+        cfg.output_len = out_len;
+        cfg.num_requests = b.max(8);
+        let mut engine = cfg.build_engine();
+        engine.submit(&gen_workload(&WorkloadConfig::offline(
+            cfg.num_requests,
+            cfg.input_len,
+            out_len,
+        )));
+        let r = engine.run_to_completion()?;
+        Ok(vec![
+            out_len.to_string(),
+            b.to_string(),
+            format!("{:.1}", 100.0 * r.peak_kv_usage),
+            format!("{:.0}", r.metrics.throughput_tps),
+        ])
+    });
+    for row in rows {
+        t.push_row(row?);
     }
     Ok(vec![t])
 }

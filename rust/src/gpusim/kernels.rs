@@ -29,6 +29,31 @@ pub enum KernelClass {
 }
 
 impl KernelClass {
+    /// Every class in declaration order; [`KernelClass::index`] is the
+    /// position in this array.
+    pub const ALL: [KernelClass; 7] = [
+        KernelClass::MatMul,
+        KernelClass::AttentionDecode,
+        KernelClass::AttentionPrefill,
+        KernelClass::Elementwise,
+        KernelClass::Embedding,
+        KernelClass::Sampling,
+        KernelClass::CacheWrite,
+    ];
+
+    /// Number of kernel classes (length of [`KernelClass::ALL`] and of
+    /// the per-class accumulator arrays in `gpusim::plan`).
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Dense index for per-class accumulator arrays (`[f64; COUNT]`),
+    /// replacing linear label searches on the hot path. The enum is
+    /// fieldless, so this is the discriminant; `ALL` lists the variants
+    /// in the same (declaration) order, asserted by
+    /// `kernel_class_index_is_dense_and_consistent`.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             KernelClass::MatMul => "matmul",
@@ -124,6 +149,115 @@ pub fn gemm_tiled_bytes(m: usize, k: usize, n: usize, dtype: usize) -> f64 {
     (mf * kf * n_n as f64 + kf * nf * n_m as f64 + mf * nf) * dtype as f64
 }
 
+/// O(batch) reduction of the per-sequence decode context lengths —
+/// everything the attention cost model needs from `ctx_lens`. Computed
+/// **once per step** and reused by every layer's attention invocation
+/// (the legacy path re-reduced all `ctx_lens` once per layer).
+///
+/// The padded sum bakes in the KV-block rounding, so the aggregate is
+/// specific to one `kv_block` size.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CtxAggregates {
+    /// Number of sequences (the decode batch size).
+    pub count: usize,
+    /// Sum of context lengths (tokens in cache).
+    pub sum: usize,
+    /// Sum of context lengths rounded up to the KV block.
+    pub padded_sum: usize,
+}
+
+impl CtxAggregates {
+    pub fn from_lens(ctx_lens: &[usize], kv_block: usize) -> Self {
+        Self::from_iter_lens(ctx_lens.iter().copied(), kv_block)
+    }
+
+    pub fn from_iter_lens(ctx_lens: impl IntoIterator<Item = usize>, kv_block: usize) -> Self {
+        let mut a = Self::default();
+        for ctx in ctx_lens {
+            a.count += 1;
+            a.sum += ctx;
+            a.padded_sum += (ctx + kv_block - 1) / kv_block * kv_block;
+        }
+        a
+    }
+
+    /// Mean context length (0 for an empty batch).
+    pub fn mean_ctx(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// O(prompts) reduction of prefill prompt lengths, mirroring
+/// [`CtxAggregates`]: computed once per step so the attention
+/// invocation can be synthesized once instead of once per layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PromptAggregates {
+    /// Number of prompts in the batch.
+    pub count: usize,
+    /// Sum of prompt lengths (total fed tokens).
+    pub token_sum: usize,
+    /// Sum of per-prompt Q-tile counts, `ceil(s / BQ)`.
+    pub tile_sum: usize,
+    /// Sum of `s * ceil(s / BQ)` (K/V re-reads per tile).
+    pub token_tile_sum: usize,
+    /// Sum of causal score pairs, `(s^2 + s) / 2` (exact in f64).
+    pub pair_sum: f64,
+}
+
+impl PromptAggregates {
+    /// Q-tile rows — must match [`attention_prefill`]'s `BQ`.
+    pub const BQ: usize = 32;
+
+    pub fn from_lens(prompt_lens: &[usize]) -> Self {
+        Self::from_iter_lens(prompt_lens.iter().copied())
+    }
+
+    pub fn from_iter_lens(prompt_lens: impl IntoIterator<Item = usize>) -> Self {
+        let mut a = Self::default();
+        for s in prompt_lens {
+            let tiles = (s + Self::BQ - 1) / Self::BQ;
+            let sf = s as f64;
+            a.count += 1;
+            a.token_sum += s;
+            a.tile_sum += tiles;
+            a.token_tile_sum += s * tiles;
+            a.pair_sum += (sf * sf) / 2.0 + sf / 2.0;
+        }
+        a
+    }
+
+    /// Mean prompt length (0 for an empty batch).
+    pub fn mean_len(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.token_sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Extra read/write traffic multipliers per attention backend (shared
+/// by the per-sequence and the aggregated decode-attention builders).
+fn attention_decode_multipliers(backend: AttentionBackendKind) -> (f64, f64) {
+    match backend {
+        AttentionBackendKind::FlashAttention => (1.0, 1.0),
+        // xFormers memory-efficient attention: extra passes over
+        // intermediate score/statistics buffers.
+        AttentionBackendKind::XFormers => (1.45, 1.6),
+    }
+}
+
+fn attention_decode_kernel_name(backend: AttentionBackendKind) -> &'static str {
+    match backend {
+        AttentionBackendKind::FlashAttention => "flash_decode_attn",
+        AttentionBackendKind::XFormers => "xformers_decode_attn",
+    }
+}
+
 /// Decode-phase paged attention for a batch of sequences.
 ///
 /// `ctx_lens` are the per-sequence context lengths (tokens in cache).
@@ -153,25 +287,82 @@ pub fn attention_decode(
         blocks += h; // one threadblock-equivalent per (seq, head)
     }
     let qo = 2.0 * b as f64 * h * dh * dt;
-    let (read_mult, write_mult) = match backend {
-        AttentionBackendKind::FlashAttention => (1.0, 1.0),
-        // xFormers memory-efficient attention: extra passes over
-        // intermediate score/statistics buffers.
-        AttentionBackendKind::XFormers => (1.45, 1.6),
-    };
+    let (read_mult, write_mult) = attention_decode_multipliers(backend);
     let mean_ctx = ctx_lens.iter().sum::<usize>() as f64 / b.max(1) as f64;
     KernelInvocation {
         class: KernelClass::AttentionDecode,
-        name: match backend {
-            AttentionBackendKind::FlashAttention => "flash_decode_attn",
-            AttentionBackendKind::XFormers => "xformers_decode_attn",
-        },
+        name: attention_decode_kernel_name(backend),
         flops,
         bytes_read: (kv_bytes + qo / 2.0) * read_mult,
         bytes_written: (qo / 2.0) * write_mult,
         blocks,
         working_set: mean_ctx * 2.0 * dh * dt, // one head's KV stream
         batch: b,
+    }
+}
+
+/// [`attention_decode`] synthesized in O(1) from [`CtxAggregates`]
+/// instead of O(batch): the same formulas factored over the aggregate
+/// sums. Every per-sequence term is an integer times a power of two
+/// for the paper models, so the factored products are bit-identical to
+/// the legacy per-sequence accumulation (asserted by the golden
+/// equivalence tests in `tests/plan_equivalence.rs`).
+pub fn attention_decode_aggregated(
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    agg: &CtxAggregates,
+) -> KernelInvocation {
+    let h = spec.n_heads as f64;
+    let dh = spec.head_dim() as f64;
+    let dt = spec.dtype_bytes as f64;
+    let b = agg.count;
+
+    let kv_bytes = 2.0 * h * agg.padded_sum as f64 * dh * dt; // K + V
+    let flops = 4.0 * h * agg.sum as f64 * dh; // qK^T + pV
+    let blocks = b as f64 * h; // one threadblock-equivalent per (seq, head)
+    let qo = 2.0 * b as f64 * h * dh * dt;
+    let (read_mult, write_mult) = attention_decode_multipliers(backend);
+    KernelInvocation {
+        class: KernelClass::AttentionDecode,
+        name: attention_decode_kernel_name(backend),
+        flops,
+        bytes_read: (kv_bytes + qo / 2.0) * read_mult,
+        bytes_written: (qo / 2.0) * write_mult,
+        blocks,
+        working_set: agg.mean_ctx() * 2.0 * dh * dt, // one head's KV stream
+        batch: b,
+    }
+}
+
+/// [`attention_prefill`] synthesized in O(1) from [`PromptAggregates`]
+/// — same factoring story as [`attention_decode_aggregated`].
+pub fn attention_prefill_aggregated(
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    agg: &PromptAggregates,
+) -> KernelInvocation {
+    let h = spec.n_heads as f64;
+    let dh = spec.head_dim() as f64;
+    let dt = spec.dtype_bytes as f64;
+
+    let base = h * dh * dt;
+    let bytes_read = base * (agg.token_sum as f64 + 2.0 * agg.token_tile_sum as f64);
+    let bytes_written = base * agg.token_sum as f64; // O
+    let flops = 4.0 * h * agg.pair_sum * dh;
+    let blocks = h * agg.tile_sum as f64;
+    let mult = match backend {
+        AttentionBackendKind::FlashAttention => 1.0,
+        AttentionBackendKind::XFormers => 1.35,
+    };
+    KernelInvocation {
+        class: KernelClass::AttentionPrefill,
+        name: "prefill_attn",
+        flops,
+        bytes_read: bytes_read * mult,
+        bytes_written,
+        blocks,
+        working_set: (PromptAggregates::BQ * spec.head_dim()) as f64 * dt * 3.0,
+        batch: agg.count,
     }
 }
 
@@ -184,7 +375,7 @@ pub fn attention_prefill(
     backend: AttentionBackendKind,
     prompt_lens: &[usize],
 ) -> KernelInvocation {
-    const BQ: usize = 32;
+    const BQ: usize = PromptAggregates::BQ;
     let h = spec.n_heads as f64;
     let dh = spec.head_dim() as f64;
     let dt = spec.dtype_bytes as f64;
@@ -497,5 +688,62 @@ mod tests {
         // 3 matrices, batch 1, per layer.
         let expect = 2.0 * (3 * spec.d_model * spec.d_ffn * spec.n_layers) as f64;
         assert!((ffn_flops / expect - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn aggregated_attention_hits_python_goldens() {
+        // The O(1) aggregated builder reproduces the python-mirrored
+        // golden values bit-for-bit (same values as
+        // golden_matches_python_paged_attention{,_batched}).
+        let spec = opt13();
+        let agg = CtxAggregates::from_lens(&[338], 16);
+        let k = attention_decode_aggregated(&spec, AttentionBackendKind::FlashAttention, &agg);
+        assert_eq!((k.bytes_read + k.bytes_written) as u64, 2_891_776);
+        assert_eq!(k.flops as u64, 2_768_896);
+        let agg = CtxAggregates::from_lens(&vec![338; 256], 16);
+        let k = attention_decode_aggregated(&spec, AttentionBackendKind::FlashAttention, &agg);
+        assert_eq!((k.bytes_read + k.bytes_written) as u64, 740_294_656);
+        assert_eq!(k.flops as u64, 256 * 2_768_896);
+    }
+
+    #[test]
+    fn ctx_aggregates_reduce_ragged_lens() {
+        let agg = CtxAggregates::from_lens(&[1, 16, 17, 338], 16);
+        assert_eq!(agg.count, 4);
+        assert_eq!(agg.sum, 372);
+        // 16 + 16 + 32 + 352 (ceil to the 16-token KV block).
+        assert_eq!(agg.padded_sum, 416);
+        assert!((agg.mean_ctx() - 93.0).abs() < 1e-12);
+        assert_eq!(CtxAggregates::from_lens(&[], 16).mean_ctx(), 0.0);
+    }
+
+    #[test]
+    fn prompt_aggregates_match_per_seq_attention() {
+        let spec = ModelSpec::llama2_7b();
+        let lens = [1usize, 31, 32, 33, 161, 512];
+        let agg = PromptAggregates::from_lens(&lens);
+        assert_eq!(agg.count, lens.len());
+        assert_eq!(agg.token_sum, lens.iter().sum::<usize>());
+        for backend in [
+            AttentionBackendKind::FlashAttention,
+            AttentionBackendKind::XFormers,
+        ] {
+            let legacy = attention_prefill(&spec, backend, &lens);
+            let fast = attention_prefill_aggregated(&spec, backend, &agg);
+            assert_eq!(legacy.flops, fast.flops);
+            assert_eq!(legacy.bytes_read, fast.bytes_read);
+            assert_eq!(legacy.bytes_written, fast.bytes_written);
+            assert_eq!(legacy.blocks, fast.blocks);
+            assert_eq!(legacy.working_set, fast.working_set);
+            assert_eq!(legacy.batch, fast.batch);
+        }
+    }
+
+    #[test]
+    fn kernel_class_index_is_dense_and_consistent() {
+        for (i, c) in KernelClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+        assert_eq!(KernelClass::ALL.len(), KernelClass::COUNT);
     }
 }

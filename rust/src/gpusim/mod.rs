@@ -19,6 +19,11 @@
 //! - [`cpu`]      — host-side overhead model (the CPU gaps of Fig 5/6).
 //! - [`step`]     — assembles one prefill/decode step into timed kernel
 //!   executions (Fig 4/6/7).
+//! - [`plan`]     — compiled step plans: the per-layer kernel block is
+//!   built once and replayed, attention is synthesized in O(1) per
+//!   layer from per-step ctx aggregates, and summary mode
+//!   ([`plan::StepSummary`]) digests a step without per-kernel
+//!   allocations — the simulator's hot loop.
 //! - [`timeline`] — Nsight-Systems-like sampled counter traces (Fig 5/7/13).
 //! - [`profiler`] — Nsight-Compute-like per-kernel metric aggregation
 //!   (Tables I-III).
@@ -33,6 +38,7 @@ pub mod dram;
 pub mod hardware;
 pub mod kernels;
 pub mod mps;
+pub mod plan;
 pub mod profiler;
 pub mod roofline;
 pub mod step;
@@ -40,5 +46,6 @@ pub mod timeline;
 pub mod warp;
 
 pub use hardware::GpuSpec;
-pub use kernels::{KernelClass, KernelInvocation};
+pub use kernels::{CtxAggregates, KernelClass, KernelInvocation, PromptAggregates};
+pub use plan::{PlanScratch, StepPlan, StepSummary};
 pub use step::{simulate_decode_step, simulate_prefill_step, KernelExec, StepSim};

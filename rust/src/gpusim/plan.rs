@@ -1,0 +1,572 @@
+//! Step-plan compilation: the simulator's allocation-free hot loop.
+//!
+//! The legacy path rebuilt the full kernel inventory from scratch every
+//! engine step: `attention_decode` re-reduced all `ctx_lens` once *per
+//! layer* (O(layers x batch) per step — ~12k iterations for OPT-1.3B at
+//! B=512) and `exec_kernels` heap-allocated one `KernelExec` record per
+//! kernel even when the caller only needs totals. A [`StepPlan`] fixes
+//! both:
+//!
+//! - the per-layer kernel block is **built once and replayed**
+//!   `n_layers` times (decode/prefill layers are shape-identical);
+//! - the attention invocation is synthesized in **O(1) per layer** from
+//!   [`CtxAggregates`] / [`PromptAggregates`] computed once per step;
+//! - [`StepSummary`] is a fixed-size, heap-free digest (GPU time, CPU
+//!   gap, per-[`KernelClass`] totals, time-weighted DRAM/warp utils)
+//!   for steady-state runs where nobody reads per-kernel detail.
+//!
+//! Step simulation drops from O(layers x batch) to O(batch + kernels).
+//! The fully recorded [`StepSim`] stays available as the slow path and
+//! matches the legacy per-layer enumeration bit-for-bit (asserted by
+//! `tests/plan_equivalence.rs`), so the python-mirrored golden values
+//! in `kernels.rs` remain authoritative for both paths.
+
+use super::cpu;
+use super::dram;
+use super::hardware::GpuSpec;
+use super::kernels::{
+    self, CtxAggregates, KernelClass, KernelInvocation, PromptAggregates,
+};
+use super::step::{KernelExec, StepSim};
+use super::warp;
+use crate::models::spec::{AttentionBackendKind, FfnKind, ModelSpec};
+
+/// Schedule layout of one step over a flat unique-kernel list:
+/// `invs[..prologue]` runs once at entry, `invs[prologue..prologue +
+/// block]` repeats `n_layers` times, the rest runs once at exit.
+#[derive(Debug, Clone, Copy)]
+struct Layout {
+    prologue: usize,
+    block: usize,
+}
+
+/// Roofline outputs for one unique kernel, computed once and replayed
+/// for every layer that launches it.
+#[derive(Debug, Clone, Copy)]
+struct KernelCost {
+    duration: f64,
+    dram_read_util: f64,
+    dram_write_util: f64,
+    warps_in_flight_pct: f64,
+    active_sm_pct: f64,
+    stall_frac: f64,
+}
+
+/// Reusable buffers so steady-state summary steps allocate nothing.
+#[derive(Debug, Clone, Default)]
+pub struct PlanScratch {
+    invs: Vec<KernelInvocation>,
+}
+
+/// A compiled step schedule for one `(ModelSpec, AttentionBackendKind)`
+/// pair. Compile once (cheap — it captures the spec), then drive every
+/// step of a run through it; `SimBackend` holds one per engine.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    spec: ModelSpec,
+    backend: AttentionBackendKind,
+}
+
+impl StepPlan {
+    pub fn new(spec: ModelSpec, backend: AttentionBackendKind) -> Self {
+        Self { spec, backend }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn backend(&self) -> AttentionBackendKind {
+        self.backend
+    }
+
+    /// Fill `buf` with the *unique* kernels of one decode step —
+    /// prologue, ONE layer block, epilogue — mirroring
+    /// `kernels::decode_step_kernels` without the `n_layers` repeat.
+    fn build_decode(&self, agg: &CtxAggregates, buf: &mut Vec<KernelInvocation>) -> Layout {
+        let spec = &self.spec;
+        let b = agg.count;
+        let d = spec.d_model;
+        let f = spec.d_ffn;
+        let dt = spec.dtype_bytes;
+        buf.clear();
+        buf.push(kernels::embedding(spec, b));
+        let prologue = buf.len();
+        buf.push(kernels::elementwise("pre_attn_norm", b, d, dt, b));
+        buf.push(kernels::gemm("qkv_proj", b, d, 3 * d, dt, b));
+        buf.push(kernels::cache_write(spec, b));
+        buf.push(kernels::attention_decode_aggregated(spec, self.backend, agg));
+        buf.push(kernels::gemm("out_proj", b, d, d, dt, b));
+        buf.push(kernels::elementwise("residual_add", b, d, dt, b));
+        buf.push(kernels::elementwise("pre_ffn_norm", b, d, dt, b));
+        match spec.ffn {
+            FfnKind::Relu => {
+                buf.push(kernels::gemm("ffn_up", b, d, f, dt, b));
+                buf.push(kernels::elementwise("ffn_act", b, f, dt, b));
+                buf.push(kernels::gemm("ffn_down", b, f, d, dt, b));
+            }
+            FfnKind::SwiGlu => {
+                buf.push(kernels::gemm("ffn_gate_up", b, d, 2 * f, dt, b));
+                buf.push(kernels::elementwise("ffn_act", b, f, dt, b));
+                buf.push(kernels::gemm("ffn_down", b, f, d, dt, b));
+            }
+        }
+        buf.push(kernels::elementwise("residual_add", b, d, dt, b));
+        let block = buf.len() - prologue;
+        buf.push(kernels::elementwise("final_norm", b, d, dt, b));
+        buf.push(kernels::gemm("lm_head", b, d, spec.vocab, dt, b));
+        buf.push(kernels::sampling(spec, b));
+        Layout { prologue, block }
+    }
+
+    /// Same as [`StepPlan::build_decode`] for a prefill step, mirroring
+    /// `kernels::prefill_step_kernels`.
+    fn build_prefill(&self, agg: &PromptAggregates, buf: &mut Vec<KernelInvocation>) -> Layout {
+        let spec = &self.spec;
+        let tokens = agg.token_sum;
+        let b = agg.count;
+        let d = spec.d_model;
+        let f = spec.d_ffn;
+        let dt = spec.dtype_bytes;
+        buf.clear();
+        buf.push(kernels::embedding(spec, tokens));
+        let prologue = buf.len();
+        buf.push(kernels::elementwise("pre_attn_norm", tokens, d, dt, b));
+        buf.push(kernels::gemm("qkv_proj", tokens, d, 3 * d, dt, b));
+        buf.push(kernels::cache_write(spec, tokens));
+        buf.push(kernels::attention_prefill_aggregated(spec, self.backend, agg));
+        buf.push(kernels::gemm("out_proj", tokens, d, d, dt, b));
+        buf.push(kernels::elementwise("residual_add", tokens, d, dt, b));
+        buf.push(kernels::elementwise("pre_ffn_norm", tokens, d, dt, b));
+        match spec.ffn {
+            FfnKind::Relu => {
+                buf.push(kernels::gemm("ffn_up", tokens, d, f, dt, b));
+                buf.push(kernels::elementwise("ffn_act", tokens, f, dt, b));
+                buf.push(kernels::gemm("ffn_down", tokens, f, d, dt, b));
+            }
+            FfnKind::SwiGlu => {
+                buf.push(kernels::gemm("ffn_gate_up", tokens, d, 2 * f, dt, b));
+                buf.push(kernels::elementwise("ffn_act", tokens, f, dt, b));
+                buf.push(kernels::gemm("ffn_down", tokens, f, d, dt, b));
+            }
+        }
+        buf.push(kernels::elementwise("residual_add", tokens, d, dt, b));
+        let block = buf.len() - prologue;
+        buf.push(kernels::elementwise("final_norm", b, d, dt, b));
+        buf.push(kernels::gemm("lm_head", b, d, spec.vocab, dt, b));
+        buf.push(kernels::sampling(spec, b));
+        Layout { prologue, block }
+    }
+
+    /// Roofline cost of one kernel — the exact math of the legacy
+    /// `step::exec_kernels`, evaluated once per *unique* kernel.
+    fn cost(
+        &self,
+        gpu: &GpuSpec,
+        inv: &KernelInvocation,
+        batch: usize,
+        mean_ctx: f64,
+    ) -> KernelCost {
+        let duration = dram::kernel_time(gpu, &self.spec, inv);
+        let util = dram::utilization(gpu, &self.spec, inv);
+        let total = inv.bytes_total().max(1.0);
+        let read_share = inv.bytes_read / total;
+        let stall = if inv.class == KernelClass::AttentionDecode {
+            warp::attention_stall_frac(gpu, &self.spec, self.backend, batch, mean_ctx)
+        } else if inv.class == KernelClass::AttentionPrefill {
+            // Prefill attention is compute-leaning; stalls stay moderate.
+            0.5 * warp::attention_stall_frac(gpu, &self.spec, self.backend, batch, mean_ctx)
+        } else {
+            0.0
+        };
+        KernelCost {
+            duration,
+            dram_read_util: util * read_share,
+            dram_write_util: util * (1.0 - read_share),
+            warps_in_flight_pct: warp::warps_in_flight_pct(gpu, &self.spec, inv),
+            active_sm_pct: 100.0 * warp::active_sm_frac(gpu, inv),
+            stall_frac: stall,
+        }
+    }
+
+    /// Expand a unique-kernel list into the fully recorded [`StepSim`].
+    /// Start times accumulate kernel-by-kernel in schedule order, so
+    /// the result is bit-identical to the legacy flat enumeration.
+    fn replay_sim(
+        &self,
+        gpu: &GpuSpec,
+        invs: &[KernelInvocation],
+        layout: Layout,
+        batch: usize,
+        mean_ctx: f64,
+    ) -> StepSim {
+        let costs: Vec<KernelCost> = invs
+            .iter()
+            .map(|inv| self.cost(gpu, inv, batch, mean_ctx))
+            .collect();
+        let n_layers = self.spec.n_layers;
+        let epilogue = invs.len() - layout.prologue - layout.block;
+        let mut out = Vec::with_capacity(layout.prologue + layout.block * n_layers + epilogue);
+        let mut t = 0.0;
+        let emit = |i: usize, t: &mut f64, out: &mut Vec<KernelExec>| {
+            let c = costs[i];
+            out.push(KernelExec {
+                inv: invs[i].clone(),
+                start: *t,
+                duration: c.duration,
+                dram_read_util: c.dram_read_util,
+                dram_write_util: c.dram_write_util,
+                warps_in_flight_pct: c.warps_in_flight_pct,
+                active_sm_pct: c.active_sm_pct,
+                stall_frac: c.stall_frac,
+            });
+            *t += c.duration;
+        };
+        for i in 0..layout.prologue {
+            emit(i, &mut t, &mut out);
+        }
+        for _ in 0..n_layers {
+            for i in layout.prologue..layout.prologue + layout.block {
+                emit(i, &mut t, &mut out);
+            }
+        }
+        for i in layout.prologue + layout.block..invs.len() {
+            emit(i, &mut t, &mut out);
+        }
+        StepSim {
+            kernels: out,
+            gpu_time: t,
+            cpu_gap: cpu::step_gap(gpu, batch),
+            batch,
+        }
+    }
+
+    /// Digest a unique-kernel list into a [`StepSummary`] without
+    /// materializing per-kernel records: every layer-block kernel is
+    /// weighted by `n_layers` instead of being emitted `n_layers`
+    /// times.
+    fn replay_summary(
+        &self,
+        gpu: &GpuSpec,
+        invs: &[KernelInvocation],
+        layout: Layout,
+        batch: usize,
+        mean_ctx: f64,
+    ) -> StepSummary {
+        let n_layers = self.spec.n_layers;
+        let mut s = StepSummary {
+            batch,
+            cpu_gap: cpu::step_gap(gpu, batch),
+            ..StepSummary::default()
+        };
+        for (i, inv) in invs.iter().enumerate() {
+            let c = self.cost(gpu, inv, batch, mean_ctx);
+            let reps = if i >= layout.prologue && i < layout.prologue + layout.block {
+                n_layers
+            } else {
+                1
+            };
+            let d = c.duration * reps as f64;
+            s.gpu_time += d;
+            s.num_kernels += reps;
+            s.time_by_class[inv.class.index()] += d;
+            s.read_util_time += c.dram_read_util * d;
+            s.write_util_time += c.dram_write_util * d;
+            s.warps_pct_time += c.warps_in_flight_pct * d;
+        }
+        s
+    }
+
+    /// Fully recorded decode step (the slow path; bit-identical to the
+    /// legacy `simulate_decode_step_reference`).
+    pub fn decode_sim(&self, gpu: &GpuSpec, ctx_lens: &[usize], kv_block: usize) -> StepSim {
+        self.decode_sim_aggregated(gpu, &CtxAggregates::from_lens(ctx_lens, kv_block))
+    }
+
+    /// [`StepPlan::decode_sim`] from precomputed aggregates.
+    pub fn decode_sim_aggregated(&self, gpu: &GpuSpec, agg: &CtxAggregates) -> StepSim {
+        let mut invs = Vec::new();
+        let layout = self.build_decode(agg, &mut invs);
+        self.replay_sim(gpu, &invs, layout, agg.count, agg.mean_ctx())
+    }
+
+    /// Summary-mode decode step: no per-kernel allocation; the `scratch`
+    /// buffers are reused across calls so steady-state steps are
+    /// allocation-free.
+    pub fn decode_summary(
+        &self,
+        gpu: &GpuSpec,
+        agg: &CtxAggregates,
+        scratch: &mut PlanScratch,
+    ) -> StepSummary {
+        let layout = self.build_decode(agg, &mut scratch.invs);
+        self.replay_summary(gpu, &scratch.invs, layout, agg.count, agg.mean_ctx())
+    }
+
+    /// Fully recorded prefill step.
+    pub fn prefill_sim(&self, gpu: &GpuSpec, prompt_lens: &[usize]) -> StepSim {
+        self.prefill_sim_aggregated(gpu, &PromptAggregates::from_lens(prompt_lens))
+    }
+
+    /// [`StepPlan::prefill_sim`] from precomputed aggregates.
+    pub fn prefill_sim_aggregated(&self, gpu: &GpuSpec, agg: &PromptAggregates) -> StepSim {
+        let mut invs = Vec::new();
+        let layout = self.build_prefill(agg, &mut invs);
+        self.replay_sim(gpu, &invs, layout, agg.count, agg.mean_len())
+    }
+
+    /// Summary-mode prefill step.
+    pub fn prefill_summary(
+        &self,
+        gpu: &GpuSpec,
+        agg: &PromptAggregates,
+        scratch: &mut PlanScratch,
+    ) -> StepSummary {
+        let layout = self.build_prefill(agg, &mut scratch.invs);
+        self.replay_summary(gpu, &scratch.invs, layout, agg.count, agg.mean_len())
+    }
+}
+
+/// Heap-free digest of one simulated step — what `SimBackend` returns
+/// when `record_steps` is off: totals only, no per-kernel records.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepSummary {
+    /// Batch size this step covered.
+    pub batch: usize,
+    /// Total GPU burst duration (sum of kernel durations).
+    pub gpu_time: f64,
+    /// Host-side gap preceding the burst.
+    pub cpu_gap: f64,
+    /// Kernel launches this step represents.
+    pub num_kernels: usize,
+    time_by_class: [f64; KernelClass::COUNT],
+    read_util_time: f64,
+    write_util_time: f64,
+    warps_pct_time: f64,
+}
+
+impl StepSummary {
+    /// Digest a fully recorded sim, so recording mode reports the same
+    /// totals it would in summary mode.
+    pub fn from_sim(sim: &StepSim) -> StepSummary {
+        let mut s = StepSummary {
+            batch: sim.batch,
+            gpu_time: sim.gpu_time,
+            cpu_gap: sim.cpu_gap,
+            num_kernels: sim.kernels.len(),
+            ..StepSummary::default()
+        };
+        for k in &sim.kernels {
+            s.time_by_class[k.inv.class.index()] += k.duration;
+            s.read_util_time += k.dram_read_util * k.duration;
+            s.write_util_time += k.dram_write_util * k.duration;
+            s.warps_pct_time += k.warps_in_flight_pct * k.duration;
+        }
+        s
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.cpu_gap + self.gpu_time
+    }
+
+    /// GPU time spent in one kernel class.
+    pub fn time_by_class(&self, class: KernelClass) -> f64 {
+        self.time_by_class[class.index()]
+    }
+
+    /// GPU time grouped by kernel label (Fig 6 stacked bars), in
+    /// [`KernelClass::ALL`] order with both attention classes merged.
+    pub fn time_by_label(&self) -> Vec<(&'static str, f64)> {
+        class_times_to_labels(&self.time_by_class)
+    }
+
+    /// Time-weighted mean DRAM read utilization across the burst.
+    pub fn mean_dram_read_util(&self) -> f64 {
+        if self.gpu_time <= 0.0 {
+            0.0
+        } else {
+            self.read_util_time / self.gpu_time
+        }
+    }
+
+    /// Time-weighted mean DRAM write utilization across the burst.
+    pub fn mean_dram_write_util(&self) -> f64 {
+        if self.gpu_time <= 0.0 {
+            0.0
+        } else {
+            self.write_util_time / self.gpu_time
+        }
+    }
+
+    /// Time-weighted mean warps-in-flight %, over the whole step
+    /// including the CPU gap — matching `StepSim`'s definition.
+    pub fn mean_warps_in_flight_pct(&self) -> f64 {
+        let t = self.total_time();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.warps_pct_time / t
+        }
+    }
+
+    /// Combined read+write achieved-DRAM fraction over the burst (the
+    /// engine's MPS demand input).
+    pub fn dram_demand(&self) -> f64 {
+        if self.gpu_time <= 0.0 {
+            0.0
+        } else {
+            (self.read_util_time + self.write_util_time) / self.gpu_time
+        }
+    }
+
+    /// Merge another step's totals into this one (chunked-prefill mixed
+    /// steps, PJRT bucket-split batches). `cpu_gap`s add; callers that
+    /// fuse steps under ONE host gap overwrite it afterwards.
+    pub fn absorb(&mut self, other: &StepSummary) {
+        self.batch += other.batch;
+        self.gpu_time += other.gpu_time;
+        self.cpu_gap += other.cpu_gap;
+        self.num_kernels += other.num_kernels;
+        for (acc, v) in self.time_by_class.iter_mut().zip(other.time_by_class.iter()) {
+            *acc += *v;
+        }
+        self.read_util_time += other.read_util_time;
+        self.write_util_time += other.write_util_time;
+        self.warps_pct_time += other.warps_pct_time;
+    }
+}
+
+/// Collapse a per-class time array into `(label, time)` pairs, merging
+/// classes that share a label (both attention classes -> "attention").
+/// Order follows [`KernelClass::ALL`]; zero-time classes are omitted.
+pub fn class_times_to_labels(
+    times: &[f64; KernelClass::COUNT],
+) -> Vec<(&'static str, f64)> {
+    let mut out: Vec<(&'static str, f64)> = Vec::with_capacity(KernelClass::COUNT);
+    for c in KernelClass::ALL {
+        let t = times[c.index()];
+        if t == 0.0 {
+            continue;
+        }
+        match out.iter_mut().find(|(l, _)| *l == c.label()) {
+            Some((_, acc)) => *acc += t,
+            None => out.push((c.label(), t)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::step;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::h100_64g()
+    }
+
+    #[test]
+    fn decode_sim_matches_reference_exactly() {
+        let spec = ModelSpec::opt_1_3b();
+        let plan = StepPlan::new(spec.clone(), AttentionBackendKind::XFormers);
+        let ctx: Vec<usize> = (0..64usize).map(|i| 1 + (i * 37) % 900).collect();
+        let fast = plan.decode_sim(&gpu(), &ctx, 16);
+        let slow = step::simulate_decode_step_reference(
+            &gpu(),
+            &spec,
+            AttentionBackendKind::XFormers,
+            &ctx,
+            16,
+        );
+        assert_eq!(fast.kernels.len(), slow.kernels.len());
+        assert_eq!(fast.gpu_time, slow.gpu_time);
+        assert_eq!(fast.cpu_gap, slow.cpu_gap);
+        assert_eq!(fast.batch, slow.batch);
+        for (a, b) in fast.kernels.iter().zip(&slow.kernels) {
+            assert_eq!(a.inv.name, b.inv.name);
+            assert_eq!(a.start, b.start);
+            assert_eq!(a.duration, b.duration);
+            assert_eq!(a.dram_read_util, b.dram_read_util);
+            assert_eq!(a.warps_in_flight_pct, b.warps_in_flight_pct);
+            assert_eq!(a.stall_frac, b.stall_frac);
+        }
+    }
+
+    #[test]
+    fn summary_matches_recorded_totals() {
+        let spec = ModelSpec::llama2_7b();
+        let plan = StepPlan::new(spec, AttentionBackendKind::FlashAttention);
+        let ctx = vec![338usize; 128];
+        let agg = CtxAggregates::from_lens(&ctx, 16);
+        let mut scratch = PlanScratch::default();
+        let summary = plan.decode_summary(&gpu(), &agg, &mut scratch);
+        let recorded = StepSummary::from_sim(&plan.decode_sim_aggregated(&gpu(), &agg));
+        assert_eq!(summary.batch, recorded.batch);
+        assert_eq!(summary.num_kernels, recorded.num_kernels);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-300);
+        assert!(close(summary.gpu_time, recorded.gpu_time));
+        for c in KernelClass::ALL {
+            assert!(close(summary.time_by_class(c), recorded.time_by_class(c)));
+        }
+        assert!(close(
+            summary.mean_dram_read_util(),
+            recorded.mean_dram_read_util()
+        ));
+        assert!(close(
+            summary.mean_warps_in_flight_pct(),
+            recorded.mean_warps_in_flight_pct()
+        ));
+    }
+
+    #[test]
+    fn summary_scratch_reuse_is_stable() {
+        let spec = ModelSpec::opt_2_7b();
+        let plan = StepPlan::new(spec, AttentionBackendKind::XFormers);
+        let mut scratch = PlanScratch::default();
+        let agg = CtxAggregates::from_lens(&vec![200; 32], 16);
+        let first = plan.decode_summary(&gpu(), &agg, &mut scratch);
+        for _ in 0..3 {
+            let again = plan.decode_summary(&gpu(), &agg, &mut scratch);
+            assert_eq!(first.gpu_time, again.gpu_time);
+            assert_eq!(first.num_kernels, again.num_kernels);
+        }
+        // The same scratch serves prefill steps too.
+        let p = PromptAggregates::from_lens(&[161; 8]);
+        let pre = plan.prefill_summary(&gpu(), &p, &mut scratch);
+        assert!(pre.gpu_time > 0.0);
+        assert!(pre.time_by_class(KernelClass::AttentionPrefill) > 0.0);
+    }
+
+    #[test]
+    fn labels_merge_attention_classes() {
+        let mut times = [0.0; KernelClass::COUNT];
+        times[KernelClass::AttentionDecode.index()] = 1.0;
+        times[KernelClass::AttentionPrefill.index()] = 2.0;
+        times[KernelClass::MatMul.index()] = 4.0;
+        let labels = class_times_to_labels(&times);
+        assert_eq!(labels, vec![("matmul", 4.0), ("attention", 3.0)]);
+    }
+
+    #[test]
+    fn absorb_adds_totals() {
+        let spec = ModelSpec::opt_1_3b();
+        let plan = StepPlan::new(spec, AttentionBackendKind::XFormers);
+        let mut scratch = PlanScratch::default();
+        let a = plan.decode_summary(
+            &gpu(),
+            &CtxAggregates::from_lens(&vec![100; 4], 16),
+            &mut scratch,
+        );
+        let b = plan.decode_summary(
+            &gpu(),
+            &CtxAggregates::from_lens(&vec![300; 8], 16),
+            &mut scratch,
+        );
+        let mut merged = a;
+        merged.absorb(&b);
+        assert_eq!(merged.batch, 12);
+        assert_eq!(merged.num_kernels, a.num_kernels + b.num_kernels);
+        assert_eq!(merged.gpu_time, a.gpu_time + b.gpu_time);
+        assert_eq!(merged.cpu_gap, a.cpu_gap + b.cpu_gap);
+    }
+}

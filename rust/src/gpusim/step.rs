@@ -57,16 +57,17 @@ impl StepSim {
     }
 
     /// GPU time grouped by kernel label (Fig 6 stacked bars).
+    ///
+    /// Accumulates into a fixed per-[`KernelClass`] array (no linear
+    /// label search per kernel); rows come out in [`KernelClass::ALL`]
+    /// order with both attention classes merged under "attention" —
+    /// the same grouping [`super::plan::StepSummary`] reports.
     pub fn time_by_label(&self) -> Vec<(&'static str, f64)> {
-        let mut acc: Vec<(&'static str, f64)> = Vec::new();
+        let mut times = [0.0f64; KernelClass::COUNT];
         for k in &self.kernels {
-            let label = k.inv.class.label();
-            match acc.iter_mut().find(|(l, _)| *l == label) {
-                Some((_, t)) => *t += k.duration,
-                None => acc.push((label, k.duration)),
-            }
+            times[k.inv.class.index()] += k.duration;
         }
-        acc
+        super::plan::class_times_to_labels(&times)
     }
 
     /// Time-weighted mean DRAM read utilization across the burst.
@@ -97,6 +98,9 @@ impl StepSim {
     }
 }
 
+/// Time a flat kernel list sequentially — the legacy execution model,
+/// kept verbatim as the golden reference for the plan-based fast path
+/// (`tests/plan_equivalence.rs` asserts bit-identical output).
 fn exec_kernels(
     gpu: &GpuSpec,
     spec: &ModelSpec,
@@ -141,7 +145,34 @@ fn exec_kernels(
 }
 
 /// Simulate one decode step over `ctx_lens` sequences.
+///
+/// Compiles a throwaway [`super::plan::StepPlan`] per call (compilation
+/// is cheap); loops driving many steps of one model should hold a plan
+/// instead, as `SimBackend` does.
 pub fn simulate_decode_step(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    ctx_lens: &[usize],
+    kv_block: usize,
+) -> StepSim {
+    super::plan::StepPlan::new(spec.clone(), backend).decode_sim(gpu, ctx_lens, kv_block)
+}
+
+/// Simulate one prefill step over `prompt_lens` prompts.
+pub fn simulate_prefill_step(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    backend: AttentionBackendKind,
+    prompt_lens: &[usize],
+) -> StepSim {
+    super::plan::StepPlan::new(spec.clone(), backend).prefill_sim(gpu, prompt_lens)
+}
+
+/// Legacy decode-step simulation: full per-layer kernel enumeration,
+/// O(layers x batch). Kept as the golden reference the plan-compiled
+/// fast path is equivalence-tested against — do not optimize this.
+pub fn simulate_decode_step_reference(
     gpu: &GpuSpec,
     spec: &ModelSpec,
     backend: AttentionBackendKind,
@@ -158,8 +189,9 @@ pub fn simulate_decode_step(
     exec_kernels(gpu, spec, backend, invs, batch, mean_ctx)
 }
 
-/// Simulate one prefill step over `prompt_lens` prompts.
-pub fn simulate_prefill_step(
+/// Legacy prefill-step simulation (see
+/// [`simulate_decode_step_reference`]).
+pub fn simulate_prefill_step_reference(
     gpu: &GpuSpec,
     spec: &ModelSpec,
     backend: AttentionBackendKind,

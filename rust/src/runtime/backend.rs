@@ -214,6 +214,7 @@ impl PjrtBackend {
             next_tokens: Self::argmax_rows(&raw.logits, real_rows)?,
             gpu_time: raw.elapsed,
             cpu_gap: 0.0, // host time is real wall time here
+            summary: None,
             sim: None,
         })
     }

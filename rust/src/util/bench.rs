@@ -18,6 +18,12 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean nanoseconds per iteration — the unit the JSON perf
+    /// trajectory (`BENCH_hotpaths.json`) is tracked in across PRs.
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} {:>10} {:>10} {:>10}  ({} samples)",
@@ -91,6 +97,47 @@ pub fn quick<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
     bench(name, 3, 30, Duration::from_secs(10), f)
 }
 
+/// True when the caller asked for reduced iteration counts via
+/// `BENCH_SMOKE=1` — the CI bench-smoke job sets this to catch
+/// hot-path compile breaks and gross regressions without paying for
+/// full statistics.
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some_and(|v| v != "0")
+}
+
+/// Collects [`BenchResult`]s and serializes the machine-readable perf
+/// trajectory (`BENCH_hotpaths.json`: bench name -> mean ns/iter, in
+/// insertion order) that is regenerated and committed across PRs.
+#[derive(Debug, Clone, Default)]
+pub struct JsonReport {
+    entries: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, r: &BenchResult) {
+        self.entries.push((r.name.clone(), r.ns_per_iter()));
+    }
+
+    /// Flat JSON object, one `"name": ns_per_iter` pair per bench.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        for (i, (name, ns)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 < self.entries.len() { "," } else { "" };
+            s.push_str(&format!("  \"{name}\": {ns:.1}{comma}\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +155,28 @@ mod tests {
         assert!(r.min <= r.p50);
         assert!(r.p50 <= r.p95.max(r.p50));
         assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn json_report_is_flat_and_ordered() {
+        let mut j = JsonReport::new();
+        for (name, us) in [("b_second", 2u64), ("a_first", 1)] {
+            j.add(&BenchResult {
+                name: name.into(),
+                samples: 1,
+                mean: Duration::from_micros(us),
+                p50: Duration::from_micros(us),
+                p95: Duration::from_micros(us),
+                min: Duration::from_micros(us),
+            });
+        }
+        let s = j.to_json();
+        // Insertion order, not alphabetical; ns units.
+        let b = s.find("b_second").unwrap();
+        let a = s.find("a_first").unwrap();
+        assert!(b < a, "{s}");
+        assert!(s.contains("\"b_second\": 2000.0"), "{s}");
+        assert!(s.trim_start().starts_with('{') && s.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! In-tree replacements for crates outside the offline vendor set
 //! (DESIGN.md §2): JSON, CLI parsing, deterministic RNG, a bench
-//! harness, and a property-testing helper.
+//! harness, a property-testing helper, and a scoped-thread parallel
+//! map for the figure sweeps.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,150 @@
+//! Scoped-thread fan-out for the figure sweeps (rayon is outside the
+//! offline vendor set — DESIGN.md §2).
+//!
+//! [`par_map`] is an order-preserving parallel map: results come back
+//! in input order no matter how the OS schedules the workers, so every
+//! figure/table keeps deterministic row order while its grid points run
+//! concurrently.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker threads currently live across *all* par_map calls: nested
+/// fan-outs (run_to_dir over artefacts, each sweeping its own grid)
+/// share one machine-sized budget instead of multiplying to cores^2
+/// concurrent engine runs.
+static ACTIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Map `f` over `items` on scoped threads, returning results in input
+/// order. Work is dealt round-robin (sweep grids are small and their
+/// points comparably sized). The thread count is `available_parallelism`
+/// minus workers already live in enclosing/concurrent `par_map` calls
+/// (an advisory global budget — see [`ACTIVE_WORKERS`]), so nested
+/// fan-outs degrade to sequential instead of oversubscribing; 0/1-item
+/// maps and single-core hosts run sequentially too.
+///
+/// Panics in `f` propagate to the caller after all workers finish.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Claim workers atomically (load + add in one CAS loop) so
+    // concurrent callers can't all read the same stale count and
+    // collectively oversubscribe. On the successful exchange the last
+    // closure invocation is the one that committed, so `claimed` holds
+    // the reserved amount.
+    let mut claimed = 0usize;
+    let reserved = ACTIVE_WORKERS.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |in_use| {
+        let want = cores.saturating_sub(in_use).min(items.len());
+        if want <= 1 {
+            None
+        } else {
+            claimed = want;
+            Some(in_use + want)
+        }
+    });
+    if reserved.is_err() {
+        return items.iter().map(f).collect();
+    }
+    let threads = claimed;
+    // Guard so the budget is returned even if a worker's panic unwinds
+    // through the scope.
+    struct BudgetGuard(usize);
+    impl Drop for BudgetGuard {
+        fn drop(&mut self) {
+            ACTIVE_WORKERS.fetch_sub(self.0, Ordering::Relaxed);
+        }
+    }
+    let _guard = BudgetGuard(threads);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                scope.spawn(move || {
+                    items
+                        .iter()
+                        .enumerate()
+                        .skip(t)
+                        .step_by(threads)
+                        .map(|(i, item)| (i, f(item)))
+                        .collect::<Vec<(usize, R)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par_map worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("par_map filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn works_with_results() {
+        let items = [1usize, 2, 3, 0, 5];
+        let out = par_map(&items, |&x| {
+            if x == 0 {
+                Err("zero")
+            } else {
+                Ok(10 / x)
+            }
+        });
+        assert_eq!(out[0], Ok(10));
+        assert_eq!(out[3], Err("zero"));
+    }
+
+    #[test]
+    fn nested_par_map_stays_correct() {
+        // Inner calls see a reduced budget (possibly sequential) but
+        // produce the same ordered results.
+        let outer: Vec<usize> = (0..8).collect();
+        let got = par_map(&outer, |&o| {
+            let inner: Vec<usize> = (0..8).collect();
+            par_map(&inner, |&i| o * 10 + i)
+        });
+        for (o, row) in got.iter().enumerate() {
+            for (i, v) in row.iter().enumerate() {
+                assert_eq!(*v, o * 10 + i);
+            }
+        }
+    }
+
+    #[test]
+    fn threads_actually_share_the_work() {
+        // Smoke: a map bigger than any plausible core count completes
+        // and every slot is filled exactly once.
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, |&x| x.wrapping_mul(2654435761));
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as u64).wrapping_mul(2654435761));
+        }
+    }
+}

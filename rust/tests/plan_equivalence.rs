@@ -1,0 +1,308 @@
+//! Golden equivalence: the plan-compiled fast paths reproduce the
+//! legacy per-layer enumeration, so the python-mirrored golden values
+//! in `kernels.rs`/`test_costmodel.py` stay authoritative for every
+//! simulated figure.
+//!
+//! Coverage axes: all four paper models x both attention backends x
+//! batch sizes from 1 to MAX-ish x ragged `ctx_lens` (randomized with
+//! replayable seeds). Tolerance is 1e-9 relative; most quantities are
+//! asserted bit-identical.
+
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::gpusim::kernels::{
+    attention_decode, attention_decode_aggregated, attention_prefill,
+    attention_prefill_aggregated, CtxAggregates, PromptAggregates,
+};
+use memgap::gpusim::plan::{PlanScratch, StepPlan, StepSummary};
+use memgap::gpusim::step::{
+    simulate_decode_step, simulate_decode_step_reference, simulate_prefill_step,
+    simulate_prefill_step_reference,
+};
+use memgap::gpusim::{GpuSpec, KernelClass, StepSim};
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::util::prop;
+use memgap::util::rng::Rng;
+
+const BACKENDS: [AttentionBackendKind; 2] = [
+    AttentionBackendKind::XFormers,
+    AttentionBackendKind::FlashAttention,
+];
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    let denom = a.abs().max(b.abs());
+    let ok = if denom == 0.0 {
+        true
+    } else {
+        ((a - b).abs() / denom) <= 1e-9
+    };
+    assert!(ok, "{what}: {a} vs {b} (rel {})", (a - b).abs() / denom);
+}
+
+fn ragged_ctx(rng: &mut Rng, batch: usize, max_len: usize) -> Vec<usize> {
+    (0..batch).map(|_| rng.range(1, max_len + 1)).collect()
+}
+
+fn assert_sims_match(fast: &StepSim, slow: &StepSim, what: &str) {
+    assert_eq!(fast.batch, slow.batch, "{what}: batch");
+    assert_eq!(fast.kernels.len(), slow.kernels.len(), "{what}: kernel count");
+    assert_close(fast.gpu_time, slow.gpu_time, &format!("{what}: gpu_time"));
+    assert_eq!(fast.cpu_gap, slow.cpu_gap, "{what}: cpu_gap");
+    for (i, (a, b)) in fast.kernels.iter().zip(&slow.kernels).enumerate() {
+        let at = format!("{what}: kernel {i} ({})", b.inv.name);
+        assert_eq!(a.inv.name, b.inv.name, "{at}: name");
+        assert_eq!(a.inv.class, b.inv.class, "{at}: class");
+        assert_eq!(a.inv.batch, b.inv.batch, "{at}: inv.batch");
+        assert_close(a.inv.flops, b.inv.flops, &format!("{at}: flops"));
+        assert_close(a.inv.bytes_read, b.inv.bytes_read, &format!("{at}: bytes_read"));
+        assert_close(
+            a.inv.bytes_written,
+            b.inv.bytes_written,
+            &format!("{at}: bytes_written"),
+        );
+        assert_close(a.inv.blocks, b.inv.blocks, &format!("{at}: blocks"));
+        assert_close(
+            a.inv.working_set,
+            b.inv.working_set,
+            &format!("{at}: working_set"),
+        );
+        assert_close(a.start, b.start, &format!("{at}: start"));
+        assert_close(a.duration, b.duration, &format!("{at}: duration"));
+        assert_close(
+            a.dram_read_util,
+            b.dram_read_util,
+            &format!("{at}: dram_read_util"),
+        );
+        assert_close(
+            a.dram_write_util,
+            b.dram_write_util,
+            &format!("{at}: dram_write_util"),
+        );
+        assert_close(
+            a.warps_in_flight_pct,
+            b.warps_in_flight_pct,
+            &format!("{at}: warps"),
+        );
+        assert_close(
+            a.active_sm_pct,
+            b.active_sm_pct,
+            &format!("{at}: active_sm"),
+        );
+        assert_close(a.stall_frac, b.stall_frac, &format!("{at}: stall"));
+    }
+}
+
+#[test]
+fn aggregated_decode_attention_matches_per_sequence() {
+    // Attention invocations are GPU-independent: no GpuSpec needed.
+    prop::check("attention-agg-equivalence", 40, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let batch = 1 + rng.range(0, 128);
+                let ctx = ragged_ctx(rng, batch, 1000);
+                for kv_block in [8usize, 16, 32] {
+                    let legacy = attention_decode(&spec, backend, &ctx, kv_block);
+                    let agg = CtxAggregates::from_lens(&ctx, kv_block);
+                    let fast = attention_decode_aggregated(&spec, backend, &agg);
+                    // These are exact for the paper models (integer
+                    // times power-of-two terms), so assert bitwise.
+                    assert_eq!(legacy.flops, fast.flops, "{} flops", spec.name);
+                    assert_eq!(legacy.bytes_read, fast.bytes_read, "{} reads", spec.name);
+                    assert_eq!(
+                        legacy.bytes_written, fast.bytes_written,
+                        "{} writes",
+                        spec.name
+                    );
+                    assert_eq!(legacy.blocks, fast.blocks, "{} blocks", spec.name);
+                    assert_eq!(
+                        legacy.working_set, fast.working_set,
+                        "{} working_set",
+                        spec.name
+                    );
+                    assert_eq!(legacy.batch, fast.batch);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn aggregated_prefill_attention_matches_per_sequence() {
+    prop::check("prefill-attention-agg-equivalence", 40, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let batch = 1 + rng.range(0, 48);
+                let lens = ragged_ctx(rng, batch, 512);
+                let legacy = attention_prefill(&spec, backend, &lens);
+                let agg = PromptAggregates::from_lens(&lens);
+                let fast = attention_prefill_aggregated(&spec, backend, &agg);
+                assert_eq!(legacy.flops, fast.flops, "{} flops", spec.name);
+                assert_eq!(legacy.bytes_read, fast.bytes_read, "{} reads", spec.name);
+                assert_eq!(legacy.bytes_written, fast.bytes_written);
+                assert_eq!(legacy.blocks, fast.blocks);
+                assert_eq!(legacy.batch, fast.batch);
+            }
+        }
+    });
+}
+
+#[test]
+fn plan_decode_sim_matches_reference_all_models() {
+    let gpu = GpuSpec::h100_64g();
+    prop::check("decode-sim-equivalence", 12, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let batch = 1 + rng.range(0, 96);
+                let ctx = ragged_ctx(rng, batch, 900);
+                let fast = simulate_decode_step(&gpu, &spec, backend, &ctx, 16);
+                let slow = simulate_decode_step_reference(&gpu, &spec, backend, &ctx, 16);
+                assert_sims_match(&fast, &slow, &format!("{} {backend:?}", spec.name));
+            }
+        }
+    });
+}
+
+#[test]
+fn plan_decode_sim_matches_reference_at_max_batch() {
+    // The headline operating points (paper Table II MAX rows).
+    let gpu = GpuSpec::h100_64g();
+    for (spec, bmax) in [
+        (ModelSpec::opt_1_3b(), 512usize),
+        (ModelSpec::opt_2_7b(), 256),
+        (ModelSpec::llama2_7b(), 128),
+        (ModelSpec::llama2_13b(), 80),
+    ] {
+        let ctx = vec![499usize; bmax];
+        let fast =
+            simulate_decode_step(&gpu, &spec, AttentionBackendKind::XFormers, &ctx, 16);
+        let slow = simulate_decode_step_reference(
+            &gpu,
+            &spec,
+            AttentionBackendKind::XFormers,
+            &ctx,
+            16,
+        );
+        assert_sims_match(&fast, &slow, &spec.name);
+    }
+}
+
+#[test]
+fn plan_prefill_sim_matches_reference() {
+    let gpu = GpuSpec::h100_64g();
+    prop::check("prefill-sim-equivalence", 12, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let batch = 1 + rng.range(0, 32);
+                let lens = ragged_ctx(rng, batch, 512);
+                let fast = simulate_prefill_step(&gpu, &spec, backend, &lens);
+                let slow = simulate_prefill_step_reference(&gpu, &spec, backend, &lens);
+                assert_sims_match(&fast, &slow, &format!("{} {backend:?}", spec.name));
+            }
+        }
+    });
+}
+
+#[test]
+fn summary_mode_matches_recorded_totals_everywhere() {
+    let gpu = GpuSpec::h100_64g();
+    prop::check("summary-equivalence", 12, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let plan = StepPlan::new(spec.clone(), backend);
+                let mut scratch = PlanScratch::default();
+                let batch = 1 + rng.range(0, 128);
+                let ctx = ragged_ctx(rng, batch, 900);
+                let agg = CtxAggregates::from_lens(&ctx, 16);
+                let summary = plan.decode_summary(&gpu, &agg, &mut scratch);
+                let reference = StepSummary::from_sim(&simulate_decode_step_reference(
+                    &gpu, &spec, backend, &ctx, 16,
+                ));
+                assert_eq!(summary.batch, reference.batch);
+                assert_eq!(summary.num_kernels, reference.num_kernels);
+                assert_close(summary.gpu_time, reference.gpu_time, "gpu_time");
+                assert_eq!(summary.cpu_gap, reference.cpu_gap);
+                for c in KernelClass::ALL {
+                    assert_close(
+                        summary.time_by_class(c),
+                        reference.time_by_class(c),
+                        &format!("time_by_class {c:?}"),
+                    );
+                }
+                assert_close(
+                    summary.mean_dram_read_util(),
+                    reference.mean_dram_read_util(),
+                    "read util",
+                );
+                assert_close(
+                    summary.mean_dram_write_util(),
+                    reference.mean_dram_write_util(),
+                    "write util",
+                );
+                assert_close(
+                    summary.mean_warps_in_flight_pct(),
+                    reference.mean_warps_in_flight_pct(),
+                    "warps",
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn time_by_label_matches_summary_grouping() {
+    let gpu = GpuSpec::h100_64g();
+    let spec = ModelSpec::opt_1_3b();
+    let sim = simulate_decode_step(
+        &gpu,
+        &spec,
+        AttentionBackendKind::XFormers,
+        &vec![338; 64],
+        16,
+    );
+    let from_sim = sim.time_by_label();
+    let from_summary = StepSummary::from_sim(&sim).time_by_label();
+    assert_eq!(from_sim.len(), from_summary.len());
+    for ((la, ta), (lb, tb)) in from_sim.iter().zip(&from_summary) {
+        assert_eq!(la, lb);
+        assert_close(*ta, *tb, la);
+    }
+    let total: f64 = from_sim.iter().map(|(_, t)| *t).sum();
+    assert_close(total, sim.gpu_time, "label times sum to gpu_time");
+}
+
+/// The figures contract: a full engine run produces the same serving
+/// numbers whether steps are recorded (StepSim) or summarized — so
+/// flipping `record_steps` off for the big sweeps changes nothing in
+/// the artefacts.
+#[test]
+fn engine_results_identical_in_summary_and_record_mode() {
+    for chunked in [false, true] {
+        let mut base = OfflineConfig::new(ModelSpec::opt_1_3b(), 32);
+        base.num_requests = 64;
+        base.input_len = 100;
+        base.output_len = 24;
+        base.chunked_prefill = chunked;
+        let mut recorded_cfg = base.clone();
+        recorded_cfg.record_steps = true;
+        let fast = base.run().expect("summary-mode run");
+        let slow = recorded_cfg.run().expect("recorded run");
+        assert_eq!(fast.metrics.completed, slow.metrics.completed);
+        assert_eq!(fast.steps, slow.steps, "chunked={chunked}");
+        assert_eq!(fast.preemptions, slow.preemptions);
+        assert_eq!(
+            fast.metrics.total_output_tokens,
+            slow.metrics.total_output_tokens
+        );
+        assert_close(fast.metrics.makespan, slow.metrics.makespan, "makespan");
+        assert_close(
+            fast.metrics.throughput_tps,
+            slow.metrics.throughput_tps,
+            "throughput",
+        );
+        assert_close(fast.decode_time, slow.decode_time, "decode_time");
+        assert_close(fast.prefill_time, slow.prefill_time, "prefill_time");
+        assert_close(fast.peak_kv_usage, slow.peak_kv_usage, "kv usage");
+        // Recording is the only difference: sims only in the slow run.
+        assert!(fast.recorded.is_empty());
+        assert!(!slow.recorded.is_empty());
+    }
+}
