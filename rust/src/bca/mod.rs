@@ -11,6 +11,15 @@
 //! then right-sizes the engine's memory allocation to what `B_opt`
 //! actually needs, freeing the rest for concurrent workloads (Fig 11's
 //! memory plan; §VI-B uses it for replication).
+//!
+//! The [`planner`] submodule extends Eq. 2 to the arrival-driven
+//! online scenario: a joint (batch × replica-count) sweep that
+//! maximizes goodput under a p99-ITL SLO.
+
+/// Joint batch×replica SLO planning for online serving.
+pub mod planner;
+
+pub use planner::{plan_joint, JointPlan, JointPlannerConfig, PlanPoint};
 
 use anyhow::Result;
 

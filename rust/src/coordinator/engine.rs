@@ -83,7 +83,21 @@ pub struct FinishedSeq {
     /// Full history: prompt then generated ids.
     pub token_ids: Vec<i32>,
     pub generated: usize,
+    /// Virtual arrival time of the originating request.
+    pub arrival: f64,
+    /// Virtual time the first token completed (TTFT = this − arrival).
+    pub first_token_at: f64,
     pub finished_at: f64,
+}
+
+impl FinishedSeq {
+    /// Mean inter-token latency; `None` for single-token outputs.
+    pub fn itl(&self) -> Option<f64> {
+        if self.generated < 2 {
+            return None;
+        }
+        Some((self.finished_at - self.first_token_at) / (self.generated - 1) as f64)
+    }
 }
 
 /// One serving engine instance.
@@ -159,6 +173,20 @@ impl<B: Backend> Engine<B> {
         self.pending.len() + self.waiting.len()
     }
 
+    /// Requests that have arrived but are not currently scheduled —
+    /// both never-admitted arrivals and recompute-preempted sequences
+    /// waiting to re-prefill. The congestion signal the online driver
+    /// samples.
+    pub fn waiting_count(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Engine iterations executed so far (monotone; the online server
+    /// reports it in `stats`).
+    pub fn steps_executed(&self) -> usize {
+        self.steps
+    }
+
     pub fn running_count(&self) -> usize {
         self.running.len()
     }
@@ -172,8 +200,10 @@ impl<B: Backend> Engine<B> {
         // `pending` must end up sorted descending so pop() yields the
         // earliest arrival. Generated traces arrive already ordered, so
         // only fall back to the (stable) sort when the invariant does
-        // not already hold — equal arrivals keep submission order either
-        // way. The common offline case (all arrivals equal) is a no-op.
+        // not already hold. The common offline case (all arrivals
+        // equal) is a no-op that keeps the seed-pinned admission order
+        // (last-submitted first among simultaneous arrivals); only the
+        // fallback sort guarantees submission-order tie-breaks.
         let descending = self
             .pending
             .windows(2)
@@ -188,8 +218,13 @@ impl<B: Backend> Engine<B> {
                 // sort result without the O(n log n).
                 self.pending.reverse();
             } else {
+                // Stable ascending sort then reverse: equal arrivals
+                // land in reverse-submission order in the vector, so
+                // pop() (from the end) admits FCFS — earliest arrival
+                // first, ties broken by submission order.
                 self.pending
-                    .sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+                    .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+                self.pending.reverse();
             }
         }
     }
@@ -250,9 +285,15 @@ impl<B: Backend> Engine<B> {
                 Ok(true)
             }
             ScheduleDecision::Idle => {
-                // Jump to the next arrival, if any.
+                // Jump to the next arrival, if any. The wait is recorded
+                // as a CPU segment so arrival-driven traces keep their
+                // true extent under the replication co-scheduler.
                 if let Some(r) = self.pending.last() {
-                    self.clock = self.clock.max(r.arrival);
+                    let gap = r.arrival - self.clock;
+                    if gap > 0.0 {
+                        self.clock = r.arrival;
+                        self.segments.push(Segment::Cpu { duration: gap });
+                    }
                     self.absorb_arrivals();
                     return Ok(true);
                 }
@@ -311,6 +352,9 @@ impl<B: Backend> Engine<B> {
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.state = RequestState::Running;
             s.push_token(tok);
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(self.clock);
+            }
             self.metrics.on_token(s.id, self.clock);
         }
         self.retire_or_keep(seqs);
@@ -363,6 +407,9 @@ impl<B: Backend> Engine<B> {
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.push_token(tok);
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(self.clock);
+            }
             self.metrics.on_token(s.id, self.clock);
         }
         self.retire_or_keep(seqs);
@@ -385,11 +432,17 @@ impl<B: Backend> Engine<B> {
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.push_token(tok);
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(self.clock);
+            }
             self.metrics.on_token(s.id, self.clock);
         }
         for (s, &tok) in pre_seqs.iter_mut().zip(&out.next_tokens[dec_len..]) {
             s.state = RequestState::Running;
             s.push_token(tok);
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(self.clock);
+            }
             self.metrics.on_token(s.id, self.clock);
         }
         self.retire_or_keep(seqs);
@@ -560,6 +613,8 @@ impl<B: Backend> Engine<B> {
                     prompt_tokens: s.prompt_tokens,
                     generated: s.generated,
                     token_ids: s.token_ids,
+                    arrival: s.arrival,
+                    first_token_at: s.first_token_at.unwrap_or(self.clock),
                     finished_at: self.clock,
                 });
             } else {
@@ -669,6 +724,90 @@ mod tests {
         e.submit(&mk(&[0.1, 0.3]));
         let report = e.run_to_completion().unwrap();
         assert_eq!(report.metrics.completed, 3);
+    }
+
+    #[test]
+    fn unsorted_submission_admits_fcfs_with_ties_in_submission_order() {
+        // Shuffled arrivals with a tie hit the fallback sort in
+        // submit(); FCFS requires earliest-arrival-first with ties kept
+        // in submission order. With max_num_seqs = 1 the completion
+        // order equals the admission order.
+        let reqs: Vec<crate::workload::Request> = [(0u64, 0.2), (1, 0.1), (2, 0.1), (3, 0.3)]
+            .iter()
+            .map(|&(id, arrival)| crate::workload::Request {
+                id,
+                arrival,
+                prompt_tokens: 16,
+                output_tokens: 4,
+            })
+            .collect();
+        let mut e = engine(1, 1024);
+        e.submit(&reqs);
+        let mut order = Vec::new();
+        while e.has_work() {
+            e.step().unwrap();
+            order.extend(e.take_finished().into_iter().map(|f| f.id));
+        }
+        assert_eq!(order, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn finished_seq_carries_arrival_and_ttft() {
+        let mut e = engine(4, 1024);
+        let cfg = WorkloadConfig {
+            num_requests: 6,
+            arrivals: crate::workload::ArrivalPattern::Poisson { rate: 5.0 },
+            ..WorkloadConfig::offline(6, 32, 8)
+        };
+        let reqs = generate(&cfg);
+        e.submit(&reqs);
+        let mut seen = 0;
+        while e.has_work() {
+            e.step().unwrap();
+            for f in e.take_finished() {
+                seen += 1;
+                let r = reqs.iter().find(|r| r.id == f.id).unwrap();
+                assert_eq!(f.arrival, r.arrival);
+                assert!(f.first_token_at > f.arrival, "{f:?}");
+                assert!(f.finished_at >= f.first_token_at);
+                let itl = f.itl().unwrap();
+                assert!(itl > 0.0);
+                // ITL spans exactly the decode phase of this request.
+                let span = f.finished_at - f.first_token_at;
+                assert!((itl * (f.generated - 1) as f64 - span).abs() < 1e-12);
+            }
+        }
+        assert_eq!(seen, 6);
+    }
+
+    #[test]
+    fn segments_account_for_arrival_idle_gaps() {
+        // Sparse arrivals leave the engine idle between requests; the
+        // idle jumps are recorded as CPU segments so the sum of all
+        // segment durations equals the makespan.
+        let mut e = engine(8, 4096);
+        let cfg = WorkloadConfig {
+            num_requests: 4,
+            arrivals: crate::workload::ArrivalPattern::Poisson { rate: 0.5 },
+            ..WorkloadConfig::offline(4, 32, 8)
+        };
+        e.submit(&generate(&cfg));
+        let report = e.run_to_completion().unwrap();
+        let total: f64 = report.segments.iter().map(|s| s.duration()).sum();
+        assert!(
+            (total - report.metrics.makespan).abs() < 1e-9,
+            "segments {total} vs makespan {}",
+            report.metrics.makespan
+        );
+        // At 0.5 req/s the inter-arrival gaps dwarf the service time, so
+        // idle CPU segments dominate the trace.
+        let cpu: f64 = report
+            .segments
+            .iter()
+            .filter(|s| matches!(s, Segment::Cpu { .. }))
+            .map(|s| s.duration())
+            .sum();
+        assert!(cpu > 0.5 * total, "cpu {cpu} of {total}");
     }
 
     #[test]

@@ -9,17 +9,23 @@
 //!   records metrics and (when simulating) the kernel timeline.
 //! - [`offline`]  — the paper's §V offline mode: fixed-length requests,
 //!   everything at t=0, direct step calls.
+//! - [`online`]   — arrival-driven serving in virtual time: Poisson /
+//!   bursty / trace-replay workloads, percentile latency summaries and
+//!   SLO attainment (the scenario the joint batch×replica planner
+//!   optimizes).
 //! - [`router`]   — request routing across engine replicas (§VI-B).
 //! - [`server`]   — online mode: JSON-lines-over-TCP client/server
 //!   (std::net + threads; tokio is outside the offline vendor set).
 
 pub mod engine;
 pub mod offline;
+pub mod online;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig, EngineReport};
+pub use online::{run_online, OnlineConfig, OnlineReport};
 pub use request::{RequestState, RunningSeq};
 pub use scheduler::{ScheduleDecision, Scheduler, SchedulerPolicy};

@@ -1,0 +1,333 @@
+//! Online serving in virtual time (tentpole of the arrival-driven
+//! scenario class; paper discussion §VII and the SLA-constrained
+//! batching literature it cites).
+//!
+//! The offline drivers submit everything at t=0, so the engine never
+//! idles and SLOs never bind. This driver feeds the *same* engine an
+//! arrival-stamped trace ([`ArrivalPattern::Poisson`], bursty, or a
+//! replayed trace): the engine's clock advances only by the simulated
+//! per-step CPU gap + GPU time (plus recorded idle waits), and a
+//! request joins the batch only once the virtual clock has passed its
+//! arrival. Everything is deterministic — same seed, same report,
+//! bit for bit, regardless of worker-thread count.
+//!
+//! As requests finish, the driver streams their TTFT/ITL/E2E into
+//! [`StreamingSummary`] accumulators and checks them against the
+//! [`Slo`]; the final [`OnlineReport`] carries p50/p90/p99 summaries,
+//! the SLO-attainment fraction, and **goodput** (SLO-met completed
+//! requests per second) — the objective the joint batch×replica
+//! planner in [`crate::bca::planner`] maximizes.
+
+use anyhow::Result;
+
+use crate::coordinator::offline::OfflineConfig;
+use crate::metrics::{Percentiles, RequestLatency, RunMetrics, Slo, StreamingSummary};
+use crate::util::json::Json;
+use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
+
+/// Configuration of one online (arrival-driven) run.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Engine/model/memory knobs (its request-count fields are unused —
+    /// the workload below is the source of truth).
+    pub engine: OfflineConfig,
+    /// Arrival-stamped workload to serve.
+    pub workload: WorkloadConfig,
+    /// Latency objective the report grades against.
+    pub slo: Slo,
+}
+
+impl OnlineConfig {
+    /// ShareGPT-like lengths, Poisson arrivals at `rate` req/s.
+    pub fn poisson(engine: OfflineConfig, num_requests: usize, rate: f64, seed: u64) -> Self {
+        Self {
+            engine,
+            workload: WorkloadConfig::poisson(num_requests, rate, seed),
+            slo: Slo::default(),
+        }
+    }
+}
+
+/// Result of one online run: the percentile/SLO view of a serving
+/// trace. Serializes to deterministic JSON via [`OnlineReport::to_json`].
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    pub model: String,
+    pub num_requests: usize,
+    pub completed: usize,
+    /// Long-run offered load (req/s): the configured pattern rate, or
+    /// `num_requests / last_arrival` for replayed traces (0 when all
+    /// requests arrive at t=0).
+    pub offered_rps: f64,
+    pub makespan: f64,
+    pub throughput_tps: f64,
+    /// Time-to-first-token summary (seconds).
+    pub ttft: Percentiles,
+    /// Per-request mean inter-token-latency summary (seconds).
+    pub itl: Percentiles,
+    /// End-to-end latency summary (seconds).
+    pub e2e: Percentiles,
+    pub slo: Slo,
+    /// Fraction of completed requests meeting the SLO.
+    pub attainment: f64,
+    /// SLO-met completed requests per second of makespan.
+    pub goodput_rps: f64,
+    /// Peak arrived-but-unscheduled backlog observed across steps
+    /// (never-admitted arrivals plus recompute-preempted sequences
+    /// awaiting re-prefill).
+    pub peak_queue_depth: usize,
+    pub peak_kv_usage: f64,
+    pub preemptions: u64,
+    pub steps: usize,
+    /// The underlying aggregate metrics (incl. per-request latencies).
+    pub metrics: RunMetrics,
+}
+
+fn pct_json(p: &Percentiles) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(p.count as f64)),
+        ("mean", Json::num(p.mean)),
+        ("p50", Json::num(p.p50)),
+        ("p90", Json::num(p.p90)),
+        ("p99", Json::num(p.p99)),
+    ])
+}
+
+fn slo_dim(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl OnlineReport {
+    /// Deterministic JSON rendering (objects are BTreeMaps, so the
+    /// serialization is byte-stable — the determinism suite compares
+    /// these strings across runs and worker counts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("num_requests", Json::num(self.num_requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("throughput_tps", Json::num(self.throughput_tps)),
+            ("ttft_s", pct_json(&self.ttft)),
+            ("itl_s", pct_json(&self.itl)),
+            ("e2e_s", pct_json(&self.e2e)),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("ttft_s", slo_dim(self.slo.ttft)),
+                    ("itl_s", slo_dim(self.slo.itl)),
+                    ("e2e_s", slo_dim(self.slo.e2e)),
+                ]),
+            ),
+            ("attainment", Json::num(self.attainment)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
+            ("peak_kv_usage", Json::num(self.peak_kv_usage)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("steps", Json::num(self.steps as f64)),
+        ])
+    }
+}
+
+/// Long-run offered load of a workload (req/s).
+pub fn offered_rps(cfg: &WorkloadConfig, last_arrival: f64) -> f64 {
+    match &cfg.arrivals {
+        ArrivalPattern::Poisson { rate } | ArrivalPattern::Bursty { rate, .. } => *rate,
+        ArrivalPattern::AllAtOnce => 0.0,
+        ArrivalPattern::Trace(_) => {
+            if last_arrival > 0.0 {
+                cfg.num_requests as f64 / last_arrival
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Run one arrival-driven serving experiment in virtual time.
+pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
+    let reqs = generate(&cfg.workload);
+    let last_arrival = reqs.last().map(|r| r.arrival).unwrap_or(0.0);
+    let mut engine = cfg.engine.build_engine();
+    engine.submit(&reqs);
+
+    // Stream TTFT/ITL/E2E as sequences finish; the SLO grading itself
+    // is single-sourced in `RunMetrics::{attainment, goodput_rps}` over
+    // the same per-request records, so the streamed summaries and the
+    // graded report can never diverge.
+    let mut ttft = StreamingSummary::new();
+    let mut itl = StreamingSummary::new();
+    let mut e2e = StreamingSummary::new();
+    let mut peak_queue = 0usize;
+    while engine.has_work() {
+        engine.step()?;
+        peak_queue = peak_queue.max(engine.waiting_count());
+        for f in engine.take_finished() {
+            let lat = RequestLatency {
+                id: f.id,
+                arrival: f.arrival,
+                ttft: f.first_token_at - f.arrival,
+                itl: f.itl(),
+                e2e: f.finished_at - f.arrival,
+                output_tokens: f.generated,
+            };
+            ttft.observe(lat.ttft);
+            e2e.observe(lat.e2e);
+            if let Some(i) = lat.itl {
+                itl.observe(i);
+            }
+        }
+    }
+    let report = engine.finish();
+    // The streamed summaries (FinishedSeq-derived) and the collector's
+    // per-request records (RequestTiming-derived) are two views of the
+    // same clock values; pin them to each other so the definitions can
+    // never silently diverge.
+    debug_assert_eq!(ttft.finalize(), report.metrics.ttft_percentiles());
+    debug_assert_eq!(itl.finalize(), report.metrics.itl_percentiles());
+    debug_assert_eq!(e2e.finalize(), report.metrics.e2e_percentiles());
+    let makespan = report.metrics.makespan;
+    let attainment = report.metrics.attainment(&cfg.slo);
+    let goodput_rps = report.metrics.goodput_rps(&cfg.slo);
+    Ok(OnlineReport {
+        model: cfg.engine.model.name.clone(),
+        num_requests: reqs.len(),
+        completed: report.metrics.completed,
+        offered_rps: offered_rps(&cfg.workload, last_arrival),
+        makespan,
+        throughput_tps: report.metrics.throughput_tps,
+        ttft: ttft.finalize(),
+        itl: itl.finalize(),
+        e2e: e2e.finalize(),
+        slo: cfg.slo,
+        attainment,
+        goodput_rps,
+        peak_queue_depth: peak_queue,
+        peak_kv_usage: report.peak_kv_usage,
+        preemptions: report.preemptions,
+        steps: report.steps,
+        metrics: report.metrics,
+    })
+}
+
+/// Sweep Poisson offered rates over independent *single-engine* runs
+/// (no replica contention — the figure frontier instead goes through
+/// `bca::planner::measure_point` for MPS-contended points). Rates fan
+/// out across scoped threads and come back in input order, so
+/// downstream consumers stay deterministic.
+pub fn sweep_rates(base: &OnlineConfig, rates: &[f64]) -> Result<Vec<(f64, OnlineReport)>> {
+    let reports = crate::util::par::par_map(rates, |&rate| {
+        let mut cfg = base.clone();
+        cfg.workload.arrivals = ArrivalPattern::Poisson { rate };
+        run_online(&cfg)
+    });
+    rates
+        .iter()
+        .zip(reports)
+        .map(|(&r, rep)| Ok((r, rep?)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::spec::ModelSpec;
+
+    fn base_engine(max_seqs: usize) -> OfflineConfig {
+        OfflineConfig::new(ModelSpec::opt_1_3b(), max_seqs)
+    }
+
+    /// Offline capacity (req/s) used to scale test rates.
+    fn capacity_rps(max_seqs: usize, n: usize) -> f64 {
+        let mut cfg = base_engine(max_seqs);
+        cfg.num_requests = n;
+        cfg.input_len = 64;
+        cfg.output_len = 16;
+        let r = cfg.run().unwrap();
+        r.metrics.completed as f64 / r.metrics.makespan
+    }
+
+    fn online_cfg(max_seqs: usize, n: usize, rate: f64) -> OnlineConfig {
+        let mut cfg = OnlineConfig::poisson(base_engine(max_seqs), n, rate, 3);
+        cfg.workload.lengths = crate::workload::LengthDistribution::Fixed {
+            input: 64,
+            output: 16,
+        };
+        cfg
+    }
+
+    #[test]
+    fn light_load_meets_unconstrained_slo_and_tracks_offered_rate() {
+        let cap = capacity_rps(8, 32);
+        let rate = 0.2 * cap;
+        let rep = run_online(&online_cfg(8, 40, rate)).unwrap();
+        assert_eq!(rep.completed, 40);
+        assert!((rep.attainment - 1.0).abs() < 1e-12); // unconstrained SLO
+        // Goodput tracks the offered rate (the bound is loose because
+        // the seeded arrival span of a finite trace fluctuates around
+        // num_requests / rate).
+        assert!(rep.goodput_rps <= rate * 1.6, "{} vs {rate}", rep.goodput_rps);
+        assert!(rep.goodput_rps > 0.5 * rate, "{} vs {rate}", rep.goodput_rps);
+        assert!(rep.ttft.p50 > 0.0 && rep.e2e.p99 >= rep.e2e.p50);
+        assert!(rep.itl.count > 0);
+    }
+
+    #[test]
+    fn overload_saturates_goodput_below_offered_rate() {
+        let cap = capacity_rps(8, 32);
+        let rep = run_online(&online_cfg(8, 64, 50.0 * cap)).unwrap();
+        assert_eq!(rep.completed, 64);
+        // Service-bound: goodput lands near capacity, far below offered.
+        assert!(
+            rep.goodput_rps < 0.2 * rep.offered_rps,
+            "goodput {} offered {}",
+            rep.goodput_rps,
+            rep.offered_rps
+        );
+        // The backlog actually built up.
+        assert!(rep.peak_queue_depth > 8, "{}", rep.peak_queue_depth);
+    }
+
+    #[test]
+    fn impossible_slo_gives_zero_goodput() {
+        let cap = capacity_rps(4, 16);
+        let mut cfg = online_cfg(4, 16, 0.5 * cap);
+        cfg.slo = Slo::itl_only(1e-12);
+        let rep = run_online(&cfg).unwrap();
+        // Every request decodes >= 2 tokens, so all miss the ITL bound.
+        assert_eq!(rep.attainment, 0.0);
+        assert_eq!(rep.goodput_rps, 0.0);
+        // Percentiles are unaffected by the SLO.
+        assert!(rep.itl.p50 > 0.0);
+    }
+
+    #[test]
+    fn report_is_deterministic_per_seed() {
+        let cfg = online_cfg(8, 48, 20.0);
+        let a = run_online(&cfg).unwrap().to_json().to_string();
+        let b = run_online(&cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b);
+        let mut other = cfg.clone();
+        other.workload.seed = 4;
+        let c = run_online(&other).unwrap().to_json().to_string();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sweep_rates_preserves_order_and_offered_rates() {
+        let base = online_cfg(8, 24, 1.0);
+        let rates = [5.0, 10.0, 20.0];
+        let runs = sweep_rates(&base, &rates).unwrap();
+        assert_eq!(runs.len(), 3);
+        for ((r, rep), want) in runs.iter().zip(rates) {
+            assert_eq!(*r, want);
+            assert_eq!(rep.offered_rps, want);
+            assert_eq!(rep.completed, 24);
+        }
+    }
+}

@@ -28,6 +28,9 @@ pub struct RunningSeq {
     pub state: RequestState,
     /// Times the request was preempted (recompute restarts the prompt).
     pub preemptions: u32,
+    /// Virtual time the first token completed (set once; preserved
+    /// across preemption since the token was already delivered).
+    pub first_token_at: Option<f64>,
 }
 
 impl RunningSeq {
@@ -54,6 +57,7 @@ impl RunningSeq {
             token_ids,
             state: RequestState::Waiting,
             preemptions: 0,
+            first_token_at: None,
         }
     }
 

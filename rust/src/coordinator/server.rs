@@ -9,7 +9,9 @@
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"op":"generate", "prompt_len":32, "max_tokens":16}
-//!   <- {"id":7, "tokens":[...], "prompt_len":32, "queue_s":..., "e2e_s":...}
+//!   <- {"id":7, "tokens":[...], "prompt_len":32, "queue_s":..., "e2e_s":..., "wall_s":...}
+//!      (queue_s = submission to first token, e2e_s = submission to last
+//!       token, both in the engine's virtual clock; wall_s is host time)
 //!   -> {"op":"stats"}
 //!   <- {"served":123, "steps":456, "kv_usage":0.41}
 //!   -> {"op":"shutdown"}   (stops the server after in-flight work)
@@ -39,23 +41,35 @@ struct Shared {
     tx: Sender<Submission>,
     next_id: AtomicU64,
     served: AtomicU64,
+    /// Engine iterations executed (mirrored by the worker for `stats`).
+    steps: AtomicU64,
+    /// Current KV usage fraction, stored as f64 bits (for `stats`).
+    kv_usage_bits: AtomicU64,
     shutdown: AtomicBool,
 }
 
 /// Serve `engine` on `addr` until a shutdown op arrives.
 /// Returns the number of requests served.
+pub fn serve<B: Backend>(engine: Engine<B>, addr: &str) -> Result<u64> {
+    serve_listener(engine, TcpListener::bind(addr)?)
+}
+
+/// Serve `engine` on an already-bound listener (tests bind port 0 and
+/// read the ephemeral port back via `listener.local_addr()` before
+/// handing the listener over). Returns the number of requests served.
 ///
 /// The engine runs on the *calling* thread (the PJRT backend holds
 /// non-Send FFI handles); a spawned acceptor thread owns the listener
 /// and hands submissions over an mpsc channel.
-pub fn serve<B: Backend>(engine: Engine<B>, addr: &str) -> Result<u64> {
-    let listener = TcpListener::bind(addr)?;
+pub fn serve_listener<B: Backend>(engine: Engine<B>, listener: TcpListener) -> Result<u64> {
     listener.set_nonblocking(true)?;
     let (tx, rx) = channel::<Submission>();
     let shared = Arc::new(Shared {
         tx,
         next_id: AtomicU64::new(1),
         served: AtomicU64::new(0),
+        steps: AtomicU64::new(0),
+        kv_usage_bits: AtomicU64::new(0f64.to_bits()),
         shutdown: AtomicBool::new(false),
     });
 
@@ -130,6 +144,12 @@ fn engine_worker<B: Backend>(
             if engine.step().is_err() {
                 break;
             }
+            shared
+                .steps
+                .store(engine.steps_executed() as u64, Ordering::SeqCst);
+            shared
+                .kv_usage_bits
+                .store(engine.kv().usage().to_bits(), Ordering::SeqCst);
         }
         for fin in engine.take_finished() {
             if let Some((reply, wall0, t0)) = replies.remove(&fin.id) {
@@ -142,6 +162,7 @@ fn engine_worker<B: Backend>(
                     ("id", Json::num(fin.id as f64)),
                     ("prompt_len", Json::num(fin.prompt_tokens as f64)),
                     ("tokens", Json::arr(gen)),
+                    ("queue_s", Json::num(fin.first_token_at - t0)),
                     ("e2e_s", Json::num(fin.finished_at - t0)),
                     ("wall_s", Json::num(wall0.elapsed().as_secs_f64())),
                 ]);
@@ -212,10 +233,22 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 writeln!(
                     writer,
                     "{}",
-                    Json::obj(vec![(
-                        "served",
-                        Json::num(shared.served.load(Ordering::SeqCst) as f64)
-                    )])
+                    Json::obj(vec![
+                        (
+                            "served",
+                            Json::num(shared.served.load(Ordering::SeqCst) as f64)
+                        ),
+                        (
+                            "steps",
+                            Json::num(shared.steps.load(Ordering::SeqCst) as f64)
+                        ),
+                        (
+                            "kv_usage",
+                            Json::num(f64::from_bits(
+                                shared.kv_usage_bits.load(Ordering::SeqCst)
+                            ))
+                        ),
+                    ])
                 )?;
             }
             Some("shutdown") => {
@@ -248,6 +281,16 @@ pub fn client_generate(addr: &str, prompt_len: usize, max_tokens: usize) -> Resu
             ("max_tokens", Json::num(max_tokens as f64)),
         ])
     )?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(line.trim())?)
+}
+
+/// Minimal client: ask the server for its stats line.
+pub fn client_stats(addr: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", Json::obj(vec![("op", Json::str("stats"))]))?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;

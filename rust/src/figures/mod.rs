@@ -7,6 +7,7 @@
 //! and benches can assert the shapes without touching the filesystem.
 
 pub mod bca_figs;
+pub mod online_figs;
 pub mod phases;
 pub mod replication_figs;
 pub mod roofline_figs;
@@ -130,10 +131,11 @@ impl FigOpts {
     }
 }
 
-/// All artefact ids in paper order.
+/// All artefact ids: the paper's figures/tables in paper order, then
+/// the repo's own online-serving artefact.
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "table1", "table2", "table3", "table4",
+    "fig12", "fig13", "table1", "table2", "table3", "table4", "online",
 ];
 
 /// Generate one artefact by id.
@@ -156,6 +158,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "table2" => roofline_figs::table2(opts),
         "table3" => stalls::table3(opts),
         "table4" => replication_figs::table4(opts),
+        "online" => online_figs::online(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

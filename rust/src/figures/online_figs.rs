@@ -1,0 +1,241 @@
+//! Online-serving artefact (beyond the paper's figure set): the
+//! goodput-vs-rate frontier and the joint (batch × replica) plan grid
+//! that [`crate::bca::planner`] recommends from.
+//!
+//! Three configurations are swept across Poisson offered rates scaled
+//! to a calibrated single-engine capacity:
+//! - **planned** — the joint planner's (B*, R*) recommendation,
+//! - **max-batch** — the unconstrained MAX batch on one replica
+//!   (vLLM's default allocation),
+//! - **best-1-replica** — the best single-replica grid point.
+//!
+//! Each point reports goodput under the plan's p99-ITL SLO, so the
+//! frontier shows where SLO-aware right-sizing + replication pays off.
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::bca::planner::{measure_point, plan_joint, score_point, JointPlannerConfig};
+use crate::coordinator::offline::OfflineConfig;
+use crate::models::spec::ModelSpec;
+use crate::util::par;
+use crate::workload::{generate, WorkloadConfig};
+
+/// Planner grid used by the artefact (and the `memgap plan` default).
+pub fn plan_grids(max_batch: usize) -> (Vec<usize>, Vec<usize>) {
+    (vec![32, 96, max_batch], vec![1, 2, 4])
+}
+
+/// Calibrated single-engine capacity in requests/second: one offline
+/// (all-at-once) ShareGPT run at `max_num_seqs`.
+pub fn calibrate_capacity_rps(
+    base: &OfflineConfig,
+    max_num_seqs: usize,
+    n_req: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut cfg = base.clone();
+    cfg.max_num_seqs = max_num_seqs;
+    let r = cfg.run_sharegpt(n_req, seed)?;
+    Ok(r.metrics.completed as f64 / r.metrics.makespan.max(1e-12))
+}
+
+/// Build the goodput-vs-rate frontier table for labelled
+/// (max_batch, replicas) configurations. Grid points fan out in
+/// parallel; rows come back in (config-major, rate-minor) order, so the
+/// CSV is deterministic.
+pub fn frontier_table(
+    base: &OfflineConfig,
+    configs: &[(String, usize, usize)],
+    rates: &[f64],
+    n_req: usize,
+    seed: u64,
+    slo_itl: f64,
+) -> Result<Table> {
+    let mut t = Table::new(
+        "online_frontier",
+        &format!(
+            "Online frontier: goodput vs offered rate under a {:.2} ms p99-ITL SLO ({})",
+            slo_itl * 1e3,
+            base.model.name
+        ),
+        &[
+            "config",
+            "max_batch",
+            "replicas",
+            "rate_rps",
+            "goodput_rps",
+            "attainment_pct",
+            "p99_itl_ms",
+            "throughput_tps",
+        ],
+    );
+    // One workload per rate, shared by every configuration at that
+    // rate (the trace depends only on rate and seed); measure each
+    // distinct (batch, replicas, rate) point once even when labelled
+    // configs coincide (e.g. the planner's best single-replica point
+    // can be the max-batch point).
+    let traces: Vec<Vec<crate::workload::Request>> = rates
+        .iter()
+        .map(|&rate| generate(&WorkloadConfig::poisson(n_req, rate, seed)))
+        .collect();
+    let mut distinct: Vec<(usize, usize)> = Vec::new();
+    for (_, b, r) in configs {
+        if !distinct.contains(&(*b, *r)) {
+            distinct.push((*b, *r));
+        }
+    }
+    let work: Vec<(usize, usize)> = (0..distinct.len())
+        .flat_map(|d| (0..rates.len()).map(move |ri| (d, ri)))
+        .collect();
+    let measured = par::par_map(&work, |&(d, ri)| {
+        let (b, r) = distinct[d];
+        measure_point(base, b, r, &traces[ri])
+    });
+    let scored: Vec<_> = work
+        .iter()
+        .zip(measured)
+        .map(|(&(d, ri), m)| Ok(((distinct[d], ri), score_point(&m?, slo_itl))))
+        .collect::<Result<Vec<_>>>()?;
+    // Emit rows config-major so rows group per labelled configuration.
+    for (label, b, r) in configs {
+        for (ri, &rate) in rates.iter().enumerate() {
+            let p = &scored
+                .iter()
+                .find(|(key, _)| *key == ((*b, *r), ri))
+                .expect("every (config, rate) point was measured")
+                .1;
+            t.push_row(vec![
+                label.clone(),
+                p.max_batch.to_string(),
+                p.replicas.to_string(),
+                format!("{rate:.2}"),
+                format!("{:.3}", p.goodput_rps),
+                format!("{:.1}", 100.0 * p.attainment),
+                format!("{:.3}", p.itl.p99 * 1e3),
+                format!("{:.0}", p.throughput_tps),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// The joint-plan grid as a table (one row per scored point).
+pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
+    let mut t = Table::new(
+        "online_plan",
+        &format!(
+            "Joint batch × replica plan at overload (p99-ITL SLO {:.2} ms)",
+            plan.slo_itl * 1e3
+        ),
+        &[
+            "max_batch",
+            "replicas",
+            "feasible",
+            "p99_itl_ms",
+            "attainment_pct",
+            "goodput_rps",
+            "throughput_tps",
+            "recommended",
+        ],
+    );
+    for p in &plan.points {
+        let recommended = plan
+            .best
+            .as_ref()
+            .map(|b| b.max_batch == p.max_batch && b.replicas == p.replicas)
+            .unwrap_or(false);
+        t.push_row(vec![
+            p.max_batch.to_string(),
+            p.replicas.to_string(),
+            p.feasible.to_string(),
+            format!("{:.3}", p.itl.p99 * 1e3),
+            format!("{:.1}", 100.0 * p.attainment),
+            format!("{:.3}", p.goodput_rps),
+            format!("{:.0}", p.throughput_tps),
+            recommended.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The `online` artefact: plan grid + goodput-vs-rate frontier for
+/// OPT-1.3B.
+pub fn online(opts: &FigOpts) -> Result<Vec<Table>> {
+    let spec = ModelSpec::opt_1_3b();
+    let base = OfflineConfig::new(spec.clone(), 96);
+    let n_req = opts.requests();
+    let cap = calibrate_capacity_rps(&base, 96, n_req, opts.seed)?;
+
+    // Plan at overload (2x the calibrated single-engine capacity).
+    let maxb = super::roofline_figs::max_batch(&base.gpu, &spec);
+    let (batches, replicas) = plan_grids(maxb);
+    let overload = generate(&WorkloadConfig::poisson(n_req, 2.0 * cap, opts.seed));
+    let plan = plan_joint(
+        &base,
+        &overload,
+        &JointPlannerConfig::new(batches, replicas),
+    )?;
+
+    // Frontier configurations: recommendation + the two baselines.
+    let mut configs: Vec<(String, usize, usize)> = Vec::new();
+    if let Some(best) = &plan.best {
+        configs.push(("planned".into(), best.max_batch, best.replicas));
+    }
+    if let Some(maxp) = plan.baseline_max_batch() {
+        configs.push(("max-batch".into(), maxp.max_batch, maxp.replicas));
+    }
+    if let Some(single) = plan.best_single_replica() {
+        configs.push(("best-1-replica".into(), single.max_batch, single.replicas));
+    }
+    let rates: Vec<f64> = [0.4, 0.8, 1.2, 1.6].iter().map(|f| f * cap).collect();
+    let frontier = frontier_table(&base, &configs, &rates, n_req, opts.seed, plan.slo_itl)?;
+    Ok(vec![plan_table(&plan), frontier])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_artefact_generates_plan_and_frontier() {
+        let tables = online(&FigOpts::quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+        let plan = &tables[0];
+        assert_eq!(plan.name, "online_plan");
+        // 3 batches x 3 replica counts.
+        assert_eq!(plan.rows.len(), 9);
+        // Exactly one recommended row, and it is feasible.
+        let rec_rows: Vec<&Vec<String>> = plan
+            .rows
+            .iter()
+            .filter(|r| r[7] == "true")
+            .collect();
+        assert_eq!(rec_rows.len(), 1, "{:?}", plan.rows);
+        assert_eq!(rec_rows[0][2], "true");
+
+        let frontier = &tables[1];
+        assert_eq!(frontier.name, "online_frontier");
+        // 3 configs x 4 rates.
+        assert_eq!(frontier.rows.len(), 12);
+        let rates = frontier.col_f64("rate_rps");
+        let goodput = frontier.col_f64("goodput_rps");
+        let attain = frontier.col_f64("attainment_pct");
+        for ((r, g), a) in rates.iter().zip(&goodput).zip(&attain) {
+            // Goodput cannot exceed offered load by more than the
+            // finite-trace arrival-span fluctuation.
+            assert!(*g <= r * 1.5, "goodput {g} at rate {r}");
+            assert!((0.0..=100.0 + 1e-9).contains(a));
+        }
+        // The planned config keeps a meaningful goodput at the highest
+        // rate (it was chosen feasible at overload).
+        let planned_rows: Vec<&Vec<String>> = frontier
+            .rows
+            .iter()
+            .filter(|r| r[0] == "planned")
+            .collect();
+        let planned_top = planned_rows.last().unwrap();
+        let g: f64 = planned_top[4].parse().unwrap();
+        assert!(g > 0.0, "{planned_top:?}");
+    }
+}

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   serve      Online server (PJRT tiny-opt by default, or --sim MODEL)
 //!   offline    One offline simulated run, report metrics
+//!   online     Arrival-driven virtual-time run: percentile latencies + SLO goodput
+//!   plan       Joint (batch x replicas) SLO planner over an online workload
 //!   bca        Profile a model and print the B_opt recommendation
 //!   replicate  BCA + replication study for a model
 //!   profile    Nsight-like attention-kernel profile at an operating point
@@ -29,10 +31,15 @@ use memgap::workload::{generate, WorkloadConfig};
 const USAGE: &str = "\
 memgap — 'Mind the Memory Gap' reproduction
 
-USAGE: memgap <serve|offline|bca|replicate|profile|figures> [flags]
+USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
 
   serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
+  online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
+            [--pattern poisson|bursty] [--period S] [--duty F]
+            [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
+  plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
+            [--replicas 1,2,4] [--slo-itl-ms X]
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -58,6 +65,8 @@ fn main() -> Result<()> {
     match cmd {
         "serve" => cmd_serve(&args),
         "offline" => cmd_offline(&args),
+        "online" => cmd_online(&args),
+        "plan" => cmd_plan(&args),
         "bca" => cmd_bca(&args),
         "replicate" => cmd_replicate(&args),
         "profile" => cmd_profile(&args),
@@ -147,6 +156,168 @@ fn cmd_offline(args: &Args) -> Result<()> {
     println!("peak KV usage    : {:.1} %", 100.0 * r.peak_kv_usage);
     println!("CPU-gap share    : {:.1} %", 100.0 * r.metrics.cpu_time_frac);
     println!("preemptions      : {}", r.preemptions);
+    Ok(())
+}
+
+/// Strict numeric flag: absent -> None, present-but-malformed -> error
+/// (the experiment-shaping flags must not silently fall back).
+fn f64_flag(args: &Args, key: &str) -> Result<Option<f64>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+    }
+}
+
+fn slo_arg(args: &Args) -> Result<memgap::metrics::Slo> {
+    let mut slo = memgap::metrics::Slo::default();
+    if let Some(ms) = f64_flag(args, "slo-itl-ms")? {
+        slo.itl = ms / 1e3;
+    }
+    if let Some(ms) = f64_flag(args, "slo-ttft-ms")? {
+        slo.ttft = ms / 1e3;
+    }
+    if let Some(s) = f64_flag(args, "slo-e2e-s")? {
+        slo.e2e = s;
+    }
+    Ok(slo)
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    use memgap::coordinator::online::{run_online, OnlineConfig};
+    use memgap::workload::ArrivalPattern;
+    let spec = model_arg(args)?;
+    let max_seqs = args.usize_or("max-seqs", 96);
+    let rate = f64_flag(args, "rate")?.unwrap_or(8.0);
+    let num_requests = args.usize_or("requests", 256);
+    let seed = args.u64_or("seed", 0);
+    let mut cfg = OnlineConfig::poisson(
+        OfflineConfig::new(spec, max_seqs),
+        num_requests,
+        rate,
+        seed,
+    );
+    match args.get_or("pattern", "poisson") {
+        "poisson" => {}
+        "bursty" => {
+            let period = f64_flag(args, "period")?.unwrap_or(10.0);
+            let duty = f64_flag(args, "duty")?.unwrap_or(0.3);
+            if period <= 0.0 || !(0.0..=1.0).contains(&duty) || duty == 0.0 {
+                bail!("bursty pattern needs --period > 0 and --duty in (0, 1]");
+            }
+            cfg.workload.arrivals = ArrivalPattern::Bursty { rate, period, duty };
+        }
+        other => bail!("unknown --pattern '{other}' (known: poisson, bursty)"),
+    }
+    if !rate.is_finite() || rate <= 0.0 {
+        bail!("--rate must be a positive number");
+    }
+    cfg.slo = slo_arg(args)?;
+    let rep = run_online(&cfg)?;
+    println!("model            : {}", rep.model);
+    println!("max batch        : {max_seqs}");
+    println!(
+        "requests         : {} (completed {})",
+        rep.num_requests, rep.completed
+    );
+    println!("offered rate     : {:.2} req/s", rep.offered_rps);
+    println!("makespan         : {:.3} s", rep.makespan);
+    println!("throughput       : {:.0} tok/s", rep.throughput_tps);
+    let ms = 1e3;
+    println!(
+        "TTFT p50/p90/p99 : {:.2} / {:.2} / {:.2} ms",
+        rep.ttft.p50 * ms,
+        rep.ttft.p90 * ms,
+        rep.ttft.p99 * ms
+    );
+    println!(
+        "ITL  p50/p90/p99 : {:.2} / {:.2} / {:.2} ms",
+        rep.itl.p50 * ms,
+        rep.itl.p90 * ms,
+        rep.itl.p99 * ms
+    );
+    println!(
+        "E2E  p50/p90/p99 : {:.2} / {:.2} / {:.2} s",
+        rep.e2e.p50, rep.e2e.p90, rep.e2e.p99
+    );
+    println!("SLO attainment   : {:.1} %", 100.0 * rep.attainment);
+    println!("goodput          : {:.2} req/s", rep.goodput_rps);
+    println!("peak queue depth : {}", rep.peak_queue_depth);
+    println!("peak KV usage    : {:.1} %", 100.0 * rep.peak_kv_usage);
+    println!("preemptions      : {}", rep.preemptions);
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("{}\n", rep.to_json()))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    use memgap::bca::planner::{plan_joint, JointPlannerConfig};
+    use memgap::figures::online_figs;
+    let spec = model_arg(args)?;
+    let base = OfflineConfig::new(spec.clone(), 96);
+    let num_requests = args.usize_or("requests", 256);
+    let seed = args.u64_or("seed", 0);
+    let rate = match f64_flag(args, "rate")? {
+        Some(v) => v,
+        None => {
+            let cap = online_figs::calibrate_capacity_rps(&base, 96, num_requests, seed)?;
+            eprintln!("calibrated capacity ~{cap:.2} req/s; planning at 2x overload");
+            2.0 * cap
+        }
+    };
+    if !rate.is_finite() || rate <= 0.0 {
+        bail!("--rate must be a positive number");
+    }
+    let maxb = memgap::figures::roofline_figs::max_batch(&base.gpu, &spec);
+    let (def_batches, def_replicas) = online_figs::plan_grids(maxb);
+    let mut cfg = JointPlannerConfig::new(
+        args.usize_list("batches", &def_batches),
+        args.usize_list("replicas", &def_replicas),
+    );
+    if let Some(ms) = f64_flag(args, "slo-itl-ms")? {
+        cfg.slo_itl = Some(ms / 1e3);
+    }
+    let reqs = generate(&WorkloadConfig::poisson(num_requests, rate, seed));
+    eprintln!(
+        "planning {} over {:?} x {:?} at {rate:.2} req/s ...",
+        spec.name, cfg.batch_grid, cfg.replica_grid
+    );
+    let plan = plan_joint(&base, &reqs, &cfg)?;
+    println!("{}", online_figs::plan_table(&plan).to_markdown());
+    match &plan.best {
+        Some(b) => {
+            println!(
+                "recommendation: max_batch={} x {} replicas (p99 ITL {:.2} ms <= SLO {:.2} ms)",
+                b.max_batch,
+                b.replicas,
+                b.itl.p99 * 1e3,
+                plan.slo_itl * 1e3
+            );
+            println!(
+                "  goodput {:.2} req/s | attainment {:.1} % | throughput {:.0} tok/s",
+                b.goodput_rps,
+                100.0 * b.attainment,
+                b.throughput_tps
+            );
+            if let Some(maxp) = plan.baseline_max_batch() {
+                println!(
+                    "  vs max-batch ({}x1)      : {:.2} req/s goodput",
+                    maxp.max_batch, maxp.goodput_rps
+                );
+            }
+            if let Some(single) = plan.best_single_replica() {
+                println!(
+                    "  vs best single replica ({}x1): {:.2} req/s goodput",
+                    single.max_batch, single.goodput_rps
+                );
+            }
+        }
+        None => println!("no feasible (batch, replicas) point under the SLO"),
+    }
     Ok(())
 }
 

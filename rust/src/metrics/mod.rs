@@ -7,8 +7,17 @@
 //! - **E2E** — end-to-end latency: arrival to last token.
 //! - **Average batch size** — the paper plots Fig 2 against the
 //!   *observed average* batch, not the configured maximum.
+//! - **Percentile summaries** — the online-serving driver reports
+//!   TTFT/ITL/E2E at p50/p90/p99 plus SLO attainment; [`Percentiles`]
+//!   and [`StreamingSummary`] provide deterministic (nearest-rank)
+//!   quantiles over streamed samples.
+//!
+//! The collector keys requests by id in a `BTreeMap` so every
+//! aggregation (including float summation order) is bit-deterministic
+//! across runs and thread counts — a repo invariant the determinism
+//! test suite pins.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Per-request timing record, filled in by the engine.
 #[derive(Debug, Clone)]
@@ -29,6 +38,11 @@ impl RequestTiming {
         self.finished_at().map(|t| t - self.arrival)
     }
 
+    /// Time to first token: arrival to the end of the prefill step.
+    pub fn ttft(&self) -> Option<f64> {
+        self.token_times.first().map(|t| t - self.arrival)
+    }
+
     /// Mean inter-token latency (needs >= 2 tokens).
     pub fn itl(&self) -> Option<f64> {
         if self.token_times.len() < 2 {
@@ -43,10 +57,120 @@ impl RequestTiming {
     }
 }
 
+/// Deterministic nearest-rank percentile summary of a sample set.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Summarize `samples` (order-independent; an empty set is all
+    /// zeros). Nearest-rank: pXX = sorted[ceil(n * XX/100) - 1].
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let rank = |q: f64| s[((n as f64 * q).ceil() as usize).clamp(1, n) - 1];
+        Self {
+            count: n,
+            mean: s.iter().sum::<f64>() / n as f64,
+            p50: rank(0.50),
+            p90: rank(0.90),
+            p99: rank(0.99),
+        }
+    }
+}
+
+/// Streaming accumulator for one latency dimension: the online driver
+/// observes samples as requests finish and finalizes a [`Percentiles`]
+/// at the end of the run.
+#[derive(Debug, Clone, Default)]
+pub struct StreamingSummary {
+    samples: Vec<f64>,
+}
+
+impl StreamingSummary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn finalize(&self) -> Percentiles {
+        Percentiles::from_samples(&self.samples)
+    }
+}
+
+/// One completed request's latency triple, as consumed by the SLO
+/// planner and the online report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestLatency {
+    pub id: u64,
+    pub arrival: f64,
+    /// Arrival to first token (seconds).
+    pub ttft: f64,
+    /// Mean inter-token latency; `None` for single-token requests
+    /// (which trivially satisfy any ITL SLO).
+    pub itl: Option<f64>,
+    /// Arrival to last token (seconds).
+    pub e2e: f64,
+    pub output_tokens: usize,
+}
+
+/// A latency service-level objective. Unset dimensions default to
+/// infinity (unconstrained); a request *meets* the SLO when every
+/// constrained dimension is within bound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Time-to-first-token bound (seconds).
+    pub ttft: f64,
+    /// Per-request mean inter-token-latency bound (seconds).
+    pub itl: f64,
+    /// End-to-end latency bound (seconds).
+    pub e2e: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Self {
+            ttft: f64::INFINITY,
+            itl: f64::INFINITY,
+            e2e: f64::INFINITY,
+        }
+    }
+}
+
+impl Slo {
+    /// The planner's objective: a bound on ITL only (paper Eq. 2).
+    pub fn itl_only(itl: f64) -> Self {
+        Self {
+            itl,
+            ..Self::default()
+        }
+    }
+
+    pub fn met(&self, l: &RequestLatency) -> bool {
+        l.ttft <= self.ttft && l.itl.unwrap_or(0.0) <= self.itl && l.e2e <= self.e2e
+    }
+}
+
 /// Collector the engine feeds during a run.
 #[derive(Debug, Default, Clone)]
 pub struct MetricsCollector {
-    requests: HashMap<u64, RequestTiming>,
+    requests: BTreeMap<u64, RequestTiming>,
     /// (time, batch) samples per decode step, for average batch size.
     batch_samples: Vec<(f64, usize)>,
     pub total_cpu_time: f64,
@@ -107,6 +231,10 @@ pub struct RunMetrics {
     pub avg_batch: f64,
     /// CPU-gap share of the run ("CPU time" in Table IV).
     pub cpu_time_frac: f64,
+    /// Per-completed-request latency records, sorted by request id —
+    /// the percentile/SLO surface the online driver and the joint
+    /// planner consume.
+    pub latencies: Vec<RequestLatency>,
 }
 
 impl RunMetrics {
@@ -118,17 +246,13 @@ impl RunMetrics {
             .count();
         let total_input_tokens: usize = c.requests.values().map(|r| r.prompt_tokens).sum();
         let total_output_tokens: usize = c.requests.values().map(|r| r.output_tokens()).sum();
-        let mut itls: Vec<f64> = c.requests.values().filter_map(|r| r.itl()).collect();
-        itls.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean_itl = if itls.is_empty() {
-            0.0
-        } else {
-            itls.iter().sum::<f64>() / itls.len() as f64
-        };
-        let p99_itl = itls
-            .get((itls.len().saturating_sub(1)) * 99 / 100)
-            .copied()
-            .unwrap_or(0.0);
+        let itls: Vec<f64> = c.requests.values().filter_map(|r| r.itl()).collect();
+        // Single-source the quantile definition: the legacy scalar
+        // fields are the nearest-rank summary the percentile surface
+        // reports.
+        let itl_summary = Percentiles::from_samples(&itls);
+        let mean_itl = itl_summary.mean;
+        let p99_itl = itl_summary.p99;
         let e2es: Vec<f64> = c.requests.values().filter_map(|r| r.e2e()).collect();
         let mean_e2e = if e2es.is_empty() {
             0.0
@@ -160,6 +284,20 @@ impl RunMetrics {
         } else {
             0.0
         };
+        // BTreeMap iteration is id-ordered, so this is sorted by id.
+        let latencies: Vec<RequestLatency> = c
+            .requests
+            .values()
+            .filter(|r| !r.token_times.is_empty())
+            .map(|r| RequestLatency {
+                id: r.id,
+                arrival: r.arrival,
+                ttft: r.ttft().unwrap_or(0.0),
+                itl: r.itl(),
+                e2e: r.e2e().unwrap_or(0.0),
+                output_tokens: r.output_tokens(),
+            })
+            .collect();
         RunMetrics {
             num_requests: c.requests.len(),
             completed,
@@ -176,12 +314,48 @@ impl RunMetrics {
             } else {
                 0.0
             },
+            latencies,
         }
     }
 
     /// Table IV convention: tokens per millisecond.
     pub fn throughput_tpms(&self) -> f64 {
         self.throughput_tps / 1000.0
+    }
+
+    /// TTFT percentile summary over completed requests.
+    pub fn ttft_percentiles(&self) -> Percentiles {
+        let s: Vec<f64> = self.latencies.iter().map(|l| l.ttft).collect();
+        Percentiles::from_samples(&s)
+    }
+
+    /// ITL percentile summary over completed multi-token requests.
+    pub fn itl_percentiles(&self) -> Percentiles {
+        let s: Vec<f64> = self.latencies.iter().filter_map(|l| l.itl).collect();
+        Percentiles::from_samples(&s)
+    }
+
+    /// E2E percentile summary over completed requests.
+    pub fn e2e_percentiles(&self) -> Percentiles {
+        let s: Vec<f64> = self.latencies.iter().map(|l| l.e2e).collect();
+        Percentiles::from_samples(&s)
+    }
+
+    /// Fraction of completed requests meeting `slo` (1.0 when none
+    /// completed, so an idle run never reads as an SLO violation).
+    pub fn attainment(&self, slo: &Slo) -> f64 {
+        if self.latencies.is_empty() {
+            return 1.0;
+        }
+        self.latencies.iter().filter(|l| slo.met(l)).count() as f64 / self.latencies.len() as f64
+    }
+
+    /// Goodput: completed requests meeting `slo` per second of makespan.
+    pub fn goodput_rps(&self, slo: &Slo) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.latencies.iter().filter(|l| slo.met(l)).count() as f64 / self.makespan
     }
 }
 
@@ -228,6 +402,76 @@ mod tests {
         let m = c.finish(1.0);
         assert_eq!(m.mean_itl, 0.0);
         assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&samples);
+        assert_eq!(p.count, 100);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p90, 90.0);
+        assert_eq!(p.p99, 99.0);
+        // Order-independence.
+        let mut rev = samples.clone();
+        rev.reverse();
+        assert_eq!(Percentiles::from_samples(&rev), p);
+        // Tiny sets degrade to the only sample; empty is all zeros.
+        let one = Percentiles::from_samples(&[7.0]);
+        assert_eq!((one.p50, one.p90, one.p99), (7.0, 7.0, 7.0));
+        assert_eq!(Percentiles::from_samples(&[]), Percentiles::default());
+    }
+
+    #[test]
+    fn streaming_summary_matches_batch() {
+        let mut s = StreamingSummary::new();
+        for x in [3.0, 1.0, 2.0, 5.0, 4.0] {
+            s.observe(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(
+            s.finalize(),
+            Percentiles::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0])
+        );
+    }
+
+    #[test]
+    fn slo_attainment_and_goodput() {
+        let m = collector_with_two_requests().finish(2.0);
+        // Latencies sorted by id: req 1 (ITL 0.1, e2e 1.2), req 2 (ITL 0.3, e2e 1.3).
+        assert_eq!(m.latencies.len(), 2);
+        assert_eq!(m.latencies[0].id, 1);
+        assert!((m.latencies[0].itl.unwrap() - 0.1).abs() < 1e-9);
+        assert!((m.latencies[1].itl.unwrap() - 0.3).abs() < 1e-9);
+        assert!((m.latencies[0].ttft - 1.0).abs() < 1e-9);
+        // ITL SLO at 0.2 s: only request 1 meets it.
+        let slo = Slo::itl_only(0.2);
+        assert!((m.attainment(&slo) - 0.5).abs() < 1e-9);
+        assert!((m.goodput_rps(&slo) - 0.5).abs() < 1e-9); // 1 met / 2 s
+        // Unconstrained SLO: everyone meets it.
+        assert!((m.attainment(&Slo::default()) - 1.0).abs() < 1e-9);
+        assert!((m.goodput_rps(&Slo::default()) - 1.0).abs() < 1e-9);
+        // Percentile surfaces agree with the per-request records.
+        assert!((m.itl_percentiles().p99 - 0.3).abs() < 1e-9);
+        assert!((m.e2e_percentiles().p50 - 1.2).abs() < 1e-9);
+        assert!((m.ttft_percentiles().p50 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_requests_trivially_meet_itl_slo() {
+        let mut c = MetricsCollector::new();
+        c.on_admit(1, 0.0, 10);
+        c.on_token(1, 0.5);
+        let m = c.finish(1.0);
+        assert_eq!(m.latencies[0].itl, None);
+        assert!((m.attainment(&Slo::itl_only(1e-12)) - 1.0).abs() < 1e-9);
+        // ...but a TTFT bound still applies.
+        let tight_ttft = Slo {
+            ttft: 0.1,
+            ..Slo::default()
+        };
+        assert_eq!(m.attainment(&tight_ttft), 0.0);
     }
 
     #[test]

@@ -43,8 +43,29 @@ pub struct ReplicatedReport {
     pub mean_dram_util: f64,
     /// Per-replica contention stretch (shared finish / solo finish).
     pub stretch: Vec<f64>,
+    /// Per-replica solo run metrics (virtual time, pre-contention);
+    /// combined with `stretch` they give per-request latencies under
+    /// contention — the SLO planner's percentile surface.
+    pub solo_metrics: Vec<crate::metrics::RunMetrics>,
     /// The shared schedule, for Fig-13-style timelines.
     pub shared: SharedRun,
+}
+
+impl ReplicatedReport {
+    /// Per-request mean ITLs across all replicas, each stretched by its
+    /// replica's contention factor (single-token requests excluded).
+    pub fn stretched_itls(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (m, &s) in self.solo_metrics.iter().zip(&self.stretch) {
+            out.extend(m.latencies.iter().filter_map(|l| l.itl.map(|i| i * s)));
+        }
+        out
+    }
+
+    /// Completed requests across replicas.
+    pub fn completed(&self) -> usize {
+        self.solo_metrics.iter().map(|m| m.completed).sum()
+    }
 }
 
 /// Run `base` replicated `n` ways under `policy` over `requests`.
@@ -141,6 +162,7 @@ pub fn run_replicated(
         cpu_time_frac: shared.gpu_idle_frac,
         mean_dram_util: shared.mean_dram_util,
         stretch,
+        solo_metrics: solo_reports.into_iter().map(|r| r.metrics).collect(),
         shared,
     })
 }
@@ -203,6 +225,24 @@ mod tests {
             mps.throughput_tps,
             fcfs.throughput_tps
         );
+    }
+
+    #[test]
+    fn solo_metrics_expose_per_request_latencies_under_contention() {
+        let reqs = opt13_requests(64);
+        let rep = run_replicated(&base(32), 2, SharePolicy::Mps, &reqs, 0.4).unwrap();
+        assert_eq!(rep.solo_metrics.len(), 2);
+        assert_eq!(rep.completed(), 64);
+        // Every request decodes 64 tokens, so each contributes an ITL.
+        let stretched = rep.stretched_itls();
+        assert_eq!(stretched.len(), 64);
+        let solo: f64 = rep
+            .solo_metrics
+            .iter()
+            .flat_map(|m| m.latencies.iter().filter_map(|l| l.itl))
+            .sum();
+        // Contention can only stretch latencies.
+        assert!(stretched.iter().sum::<f64>() >= solo * 0.999);
     }
 
     #[test]

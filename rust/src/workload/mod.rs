@@ -45,12 +45,30 @@ pub struct WorkloadConfig {
     pub lengths: LengthDistribution,
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum ArrivalPattern {
     /// Everything arrives at t=0 (the paper's evaluation setup).
     AllAtOnce,
     /// Poisson arrivals at `rate` requests/second.
     Poisson { rate: f64 },
+    /// On/off-modulated Poisson: within each `period` seconds, arrivals
+    /// occur only during the first `duty` fraction, at rate
+    /// `rate / duty`, so the long-run average rate is still `rate`.
+    /// Models diurnal / spiky traffic for the online-serving scenario.
+    Bursty {
+        /// Long-run average rate (requests/second).
+        rate: f64,
+        /// Cycle length in seconds.
+        period: f64,
+        /// Fraction of each cycle that receives arrivals, in (0, 1].
+        /// `duty = 1.0` degenerates to plain Poisson.
+        duty: f64,
+    },
+    /// Replay recorded arrival offsets (seconds from trace start).
+    /// Request `i` arrives at `trace[i % len]`, shifted by one trace
+    /// span per completed wrap so replays repeat back to back. The
+    /// trace need not be sorted — [`generate`] normalizes the output.
+    Trace(Vec<f64>),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -96,6 +114,15 @@ impl WorkloadConfig {
             ..Default::default()
         }
     }
+
+    /// Online-mode workload: ShareGPT-like lengths with Poisson
+    /// arrivals at `rate` requests/second.
+    pub fn poisson(num_requests: usize, rate: f64, seed: u64) -> Self {
+        Self {
+            arrivals: ArrivalPattern::Poisson { rate },
+            ..Self::sharegpt(num_requests, seed)
+        }
+    }
 }
 
 /// Lognormal with target mean `m` and shape `sigma`:
@@ -105,7 +132,44 @@ fn lognormal_with_mean(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
     rng.lognormal(mu, sigma)
 }
 
+/// Advance `t` to the next arrival of the on/off-modulated Poisson
+/// process (time-rescaling: spend an Exp(1) budget against the
+/// piecewise-constant instantaneous rate, skipping the off windows).
+fn bursty_next(t: &mut f64, rng: &mut Rng, rate: f64, period: f64, duty: f64) -> f64 {
+    // Sanitize: non-positive (or NaN) rate/period would make every
+    // window comparison false and loop forever.
+    let rate = if rate > 0.0 { rate } else { 1e-9 };
+    let period = if period > 0.0 { period } else { 1e-9 };
+    let duty = duty.clamp(1e-6, 1.0);
+    let rate_on = rate / duty;
+    let on_len = duty * period;
+    let mut budget = rng.exponential(1.0);
+    loop {
+        let cycle = (*t / period).floor();
+        let pos = *t - cycle * period;
+        if pos >= on_len {
+            // Off window: jump to the next cycle's on window.
+            *t = (cycle + 1.0) * period;
+            continue;
+        }
+        let capacity = (on_len - pos) * rate_on;
+        if budget <= capacity {
+            *t += budget / rate_on;
+            return *t;
+        }
+        budget -= capacity;
+        *t = (cycle + 1.0) * period;
+    }
+}
+
 /// Generate the request trace for `cfg`.
+///
+/// The returned trace is always sorted by arrival time (stable, so
+/// equal arrivals keep generation order) — [`crate::coordinator::engine::Engine::submit`]
+/// and the FCFS admission invariants assume ordered traces. Trace
+/// replay is the one pattern that can produce out-of-order raw
+/// arrivals; the normalization here keeps request ids bound to their
+/// generated lengths while presenting arrivals in order.
 pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0f64;
@@ -126,11 +190,22 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
         };
         let input = input.min(cfg.max_context - 1);
         let output = output.min(cfg.max_context - input);
-        let arrival = match cfg.arrivals {
+        let arrival = match &cfg.arrivals {
             ArrivalPattern::AllAtOnce => 0.0,
             ArrivalPattern::Poisson { rate } => {
-                t += rng.exponential(rate);
+                t += rng.exponential(*rate);
                 t
+            }
+            ArrivalPattern::Bursty { rate, period, duty } => {
+                bursty_next(&mut t, &mut rng, *rate, *period, *duty)
+            }
+            ArrivalPattern::Trace(trace) => {
+                if trace.is_empty() {
+                    0.0
+                } else {
+                    let span = trace.iter().cloned().fold(0.0f64, f64::max);
+                    trace[id % trace.len()] + (id / trace.len()) as f64 * span
+                }
             }
         };
         out.push(Request {
@@ -140,6 +215,12 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
             output_tokens: output.max(1),
         });
     }
+    // Normalize: traces must leave the generator sorted by arrival
+    // (stable — equal arrivals keep generation order). Poisson/bursty
+    // streams are monotone by construction, so this is a no-op there;
+    // trace replay may genuinely reorder.
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    debug_assert!(out.windows(2).all(|w| w[0].arrival <= w[1].arrival));
     out
 }
 
@@ -196,6 +277,95 @@ mod tests {
             .iter()
             .zip(&c)
             .any(|(x, y)| x.prompt_tokens != y.prompt_tokens));
+    }
+
+    #[test]
+    fn bursty_arrivals_stay_in_on_windows_at_the_average_rate() {
+        let (rate, period, duty) = (40.0, 2.0, 0.25);
+        let cfg = WorkloadConfig {
+            arrivals: ArrivalPattern::Bursty { rate, period, duty },
+            ..WorkloadConfig::offline(8_000, 10, 10)
+        };
+        let reqs = generate(&cfg);
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival >= prev, "bursty arrivals must be sorted");
+            prev = r.arrival;
+            // Every arrival lands inside an on window.
+            let pos = r.arrival % period;
+            assert!(pos <= duty * period + 1e-9, "arrival at off-phase {pos}");
+        }
+        // Long-run average rate matches the configured one.
+        let total = reqs.last().unwrap().arrival;
+        let observed = reqs.len() as f64 / total;
+        assert!((observed / rate - 1.0).abs() < 0.1, "rate {observed}");
+    }
+
+    #[test]
+    fn bursty_with_full_duty_matches_poisson_shape() {
+        let cfg = WorkloadConfig {
+            arrivals: ArrivalPattern::Bursty {
+                rate: 20.0,
+                period: 1.0,
+                duty: 1.0,
+            },
+            ..WorkloadConfig::offline(5_000, 10, 10)
+        };
+        let reqs = generate(&cfg);
+        let total = reqs.last().unwrap().arrival;
+        let observed = reqs.len() as f64 / total;
+        assert!((observed / 20.0 - 1.0).abs() < 0.1, "rate {observed}");
+    }
+
+    #[test]
+    fn trace_replay_is_normalized_sorted_with_ids_bound_to_lengths() {
+        // Deliberately unsorted trace with a duplicate timestamp.
+        let trace = vec![0.5, 0.1, 0.9, 0.1];
+        let cfg = WorkloadConfig {
+            num_requests: 6, // wraps: ids 4,5 replay offsets 0.5, 0.1 shifted by span 0.9
+            arrivals: ArrivalPattern::Trace(trace),
+            ..WorkloadConfig::offline(6, 17, 3)
+        };
+        let reqs = generate(&cfg);
+        assert_eq!(reqs.len(), 6);
+        let arrivals: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+        for (a, e) in arrivals.iter().zip([0.1, 0.1, 0.5, 0.9, 1.0, 1.4]) {
+            assert!((a - e).abs() < 1e-9, "{arrivals:?}");
+        }
+        // Equal arrivals keep generation order (stable sort): id 1 then 3.
+        assert_eq!(reqs[0].id, 1);
+        assert_eq!(reqs[1].id, 3);
+        // Ids survive the reorder with their generated lengths intact.
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        for r in &reqs {
+            assert_eq!((r.prompt_tokens, r.output_tokens), (17, 3));
+        }
+    }
+
+    #[test]
+    fn generator_output_is_sorted_for_every_pattern() {
+        for arrivals in [
+            ArrivalPattern::AllAtOnce,
+            ArrivalPattern::Poisson { rate: 10.0 },
+            ArrivalPattern::Bursty {
+                rate: 10.0,
+                period: 1.0,
+                duty: 0.5,
+            },
+            ArrivalPattern::Trace(vec![3.0, 1.0, 2.0, 0.0]),
+        ] {
+            let cfg = WorkloadConfig {
+                arrivals: arrivals.clone(),
+                ..WorkloadConfig::sharegpt(200, 5)
+            };
+            let reqs = generate(&cfg);
+            assert!(
+                reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+                "{arrivals:?} produced an unsorted trace"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,93 @@
+//! Determinism suite: identical `WorkloadConfig` seeds must produce
+//! bit-identical online reports and figure tables, across repeated
+//! runs *and* across `util::par` worker budgets (nested fan-outs give
+//! inner calls a reduced — possibly sequential — thread budget, so
+//! running the same computation inside an outer `par_map` exercises a
+//! different parallel schedule than running it at top level).
+
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::online::{run_online, sweep_rates, OnlineConfig};
+use memgap::figures::online_figs::frontier_table;
+use memgap::models::spec::ModelSpec;
+use memgap::util::par::par_map;
+use memgap::workload::LengthDistribution;
+
+fn online_cfg(seed: u64) -> OnlineConfig {
+    let mut cfg = OnlineConfig::poisson(
+        OfflineConfig::new(ModelSpec::opt_1_3b(), 8),
+        48,
+        20.0,
+        seed,
+    );
+    cfg.workload.lengths = LengthDistribution::ShareGpt {
+        mean_input: 64,
+        mean_output: 24,
+    };
+    cfg
+}
+
+fn online_json(seed: u64) -> String {
+    run_online(&online_cfg(seed)).unwrap().to_json().to_string()
+}
+
+#[test]
+fn online_report_is_bit_identical_across_runs_and_worker_budgets() {
+    let reference = online_json(7);
+    // Repeat at top level.
+    assert_eq!(online_json(7), reference);
+    // Inside a parallel fan-out: every concurrent copy sees a different
+    // worker budget, none may diverge.
+    let lanes: Vec<usize> = (0..3).collect();
+    let nested = par_map(&lanes, |_| online_json(7));
+    for (i, j) in nested.iter().enumerate() {
+        assert_eq!(*j, reference, "lane {i} diverged");
+    }
+    // A different seed genuinely changes the report (the comparison is
+    // not vacuous).
+    assert_ne!(online_json(8), reference);
+}
+
+#[test]
+fn rate_sweep_is_order_preserving_under_nested_fan_out() {
+    let rates = [10.0, 25.0, 60.0];
+    let sweep_json = || -> Vec<String> {
+        sweep_rates(&online_cfg(3), &rates)
+            .unwrap()
+            .into_iter()
+            .map(|(r, rep)| format!("{r}:{}", rep.to_json()))
+            .collect()
+    };
+    let reference = sweep_json();
+    assert_eq!(reference.len(), 3);
+    // The sweep itself fans out; nest it inside another fan-out so the
+    // inner par_map runs with a depleted (possibly zero) budget.
+    let lanes: Vec<usize> = (0..2).collect();
+    let nested = par_map(&lanes, |_| sweep_json());
+    for lane in &nested {
+        assert_eq!(*lane, reference);
+    }
+}
+
+#[test]
+fn frontier_table_csv_is_bit_identical_across_runs() {
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 8);
+    let configs = [
+        ("one".to_string(), 8usize, 1usize),
+        ("two".to_string(), 8, 2),
+    ];
+    let rates = [15.0, 40.0];
+    let make = || {
+        frontier_table(&base, &configs, &rates, 32, 11, 0.050)
+            .unwrap()
+            .to_csv()
+    };
+    let a = make();
+    let b = make();
+    assert_eq!(a, b);
+    // And under a nested fan-out.
+    let lanes: Vec<usize> = (0..2).collect();
+    let nested = par_map(&lanes, |_| make());
+    for lane in &nested {
+        assert_eq!(*lane, a);
+    }
+}

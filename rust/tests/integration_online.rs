@@ -1,0 +1,136 @@
+//! Integration: the arrival-driven online scenario end to end — the
+//! joint (batch × replica) SLO planner must find a configuration that
+//! demonstrably beats BOTH the unconstrained-max-batch baseline and
+//! every single-replica configuration on goodput under the SLO (the
+//! paper's §VI-B effect, transplanted to arrival-driven load).
+
+use memgap::bca::planner::{plan_joint, JointPlannerConfig};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::online::{run_online, OnlineConfig};
+use memgap::figures::online_figs::calibrate_capacity_rps;
+use memgap::figures::roofline_figs::max_batch;
+use memgap::metrics::Slo;
+use memgap::models::spec::ModelSpec;
+use memgap::workload::{generate, WorkloadConfig};
+
+/// The headline fixture: OPT-1.3B under sustained overload (3x the
+/// calibrated single-engine capacity at B=96). The SLO is auto-anchored
+/// by the planner at 3x the p99 ITL of the smallest grid point, the
+/// paper's style of tying SLOs to a measured small-batch latency.
+#[test]
+fn joint_planner_beats_max_batch_and_single_replica_baselines() {
+    let spec = ModelSpec::opt_1_3b();
+    let base = OfflineConfig::new(spec.clone(), 96);
+    let n_req = 480;
+    let cap = calibrate_capacity_rps(&base, 96, n_req, 0).expect("calibration");
+    let reqs = generate(&WorkloadConfig::poisson(n_req, 3.0 * cap, 0));
+
+    let maxb = max_batch(&base.gpu, &spec);
+    assert!(maxb >= 256, "unexpectedly small MAX batch {maxb}");
+    let cfg = JointPlannerConfig::new(vec![32, 96, maxb], vec![1, 2, 4]);
+    let plan = plan_joint(&base, &reqs, &cfg).expect("plan");
+    assert_eq!(plan.points.len(), 9);
+    assert!(plan.slo_itl > 0.0);
+
+    // The anchor point itself is feasible by construction, so a
+    // recommendation must exist.
+    let best = plan.best.as_ref().expect("a feasible recommendation");
+    assert!(best.feasible);
+    assert!(best.attainment > 0.9, "attainment {}", best.attainment);
+
+    // Headline claim 1: beats the unconstrained MAX-batch single-engine
+    // baseline on goodput-under-SLO.
+    let maxp = plan.baseline_max_batch().expect("max-batch baseline");
+    assert_eq!(maxp.max_batch, maxb);
+    assert!(
+        best.goodput_rps > 1.02 * maxp.goodput_rps,
+        "planned ({}x{}) {:.3} req/s vs max-batch {:.3} req/s",
+        best.max_batch,
+        best.replicas,
+        best.goodput_rps,
+        maxp.goodput_rps
+    );
+
+    // Headline claim 2: beats every 1-replica configuration — the win
+    // requires replication, not just batch right-sizing.
+    let single = plan.best_single_replica().expect("single-replica baseline");
+    assert!(
+        best.goodput_rps > 1.02 * single.goodput_rps,
+        "planned ({}x{}) {:.3} req/s vs best single replica ({}x1) {:.3} req/s",
+        best.max_batch,
+        best.replicas,
+        best.goodput_rps,
+        single.max_batch,
+        single.goodput_rps
+    );
+    assert!(best.replicas >= 2, "{best:?}");
+}
+
+/// The SLO genuinely bites: grading one overloaded run (its simulation
+/// is SLO-independent, so a single run suffices) against ever-tighter
+/// ITL bounds monotonically destroys goodput. One extra run with the
+/// SLO installed pins that run_online's own grading matches
+/// RunMetrics::goodput_rps over the same records.
+#[test]
+fn goodput_degrades_monotonically_as_the_slo_tightens() {
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 96);
+    let n_req = 192;
+    let cap = calibrate_capacity_rps(&base, 96, n_req, 0).expect("calibration");
+    let mut cfg = OnlineConfig::poisson(base, n_req, 2.0 * cap, 1);
+    let rep = run_online(&cfg).expect("run");
+    assert_eq!(rep.completed, n_req);
+    let p99 = rep.itl.p99;
+    assert!(p99 > 0.0);
+    let mut last = f64::INFINITY;
+    for slo_itl in [4.0 * p99, 1.0 * p99, 0.5 * p99, 0.25 * p99] {
+        let graded = rep.metrics.goodput_rps(&Slo::itl_only(slo_itl));
+        assert!(
+            graded <= last + 1e-9,
+            "goodput rose as the SLO tightened: {last} -> {graded}"
+        );
+        last = graded;
+    }
+    // The tightest bound rejects a large share of requests.
+    assert!(last < 0.7 * rep.goodput_rps, "{last} vs {}", rep.goodput_rps);
+    // End-to-end consistency: a run with the SLO installed reports the
+    // same goodput as grading the SLO-free run's records.
+    cfg.slo = Slo::itl_only(0.5 * p99);
+    let installed = run_online(&cfg).expect("run with SLO");
+    let regraded = rep.metrics.goodput_rps(&Slo::itl_only(0.5 * p99));
+    assert!(
+        (installed.goodput_rps - regraded).abs() < 1e-12,
+        "{} vs {regraded}",
+        installed.goodput_rps
+    );
+}
+
+/// Bursty arrivals: same average rate, spikier queueing — TTFT/E2E
+/// tails are at least as bad as under Poisson arrivals at that rate,
+/// while the engine still completes everything deterministically.
+#[test]
+fn bursty_arrivals_inflate_tail_latency_vs_poisson() {
+    use memgap::workload::ArrivalPattern;
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 32);
+    let n_req = 128;
+    let cap = calibrate_capacity_rps(&base, 32, n_req, 0).expect("calibration");
+    let rate = 0.8 * cap;
+    let poisson = OnlineConfig::poisson(base, n_req, rate, 5);
+    let mut bursty = poisson.clone();
+    bursty.workload.arrivals = ArrivalPattern::Bursty {
+        rate,
+        period: 40.0 / rate, // ~40-request cycles
+        duty: 0.25,
+    };
+    let p = run_online(&poisson).expect("poisson");
+    let b = run_online(&bursty).expect("bursty");
+    assert_eq!(p.completed, n_req);
+    assert_eq!(b.completed, n_req);
+    // Bursts concentrate arrivals 4x within the on-window, so queueing
+    // (E2E p99) degrades relative to the smooth process.
+    assert!(
+        b.e2e.p99 >= p.e2e.p99,
+        "bursty p99 e2e {} < poisson {}",
+        b.e2e.p99,
+        p.e2e.p99
+    );
+}

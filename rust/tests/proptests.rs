@@ -119,6 +119,108 @@ fn prop_router_total_and_balanced() {
     });
 }
 
+/// Router, round-robin: the partition is ceiling/floor-fair — with m
+/// requests over k replicas, replica i receives exactly
+/// `⌈(m - i) / k⌉` (the first `m mod k` replicas get `⌈m/k⌉`, the rest
+/// `⌊m/k⌋`), in submission order.
+#[test]
+fn prop_round_robin_counts_are_ceil_floor_fair() {
+    check("router-rr-fair", 60, |rng| {
+        let k = rng.range(1, 12);
+        let m = rng.range(0, 400);
+        let reqs: Vec<Request> = (0..m)
+            .map(|i| Request {
+                id: i as u64,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 100),
+                output_tokens: rng.range(1, 100),
+            })
+            .collect();
+        let mut router = Router::new(RoutePolicy::RoundRobin, k);
+        let parts = router.partition(&reqs);
+        for (i, part) in parts.iter().enumerate() {
+            // ⌈(m - i) / k⌉, written underflow-safe for i > m.
+            let expect = (m + k - 1 - i) / k;
+            assert_eq!(part.len(), expect, "replica {i} of {k}, m={m}");
+            // Round-robin preserves submission order within a replica.
+            assert!(part.windows(2).all(|w| w[0].id < w[1].id));
+        }
+    });
+}
+
+/// Router, least-loaded: the chosen replica is never strictly heavier
+/// (by outstanding tokens) than any other replica at routing time —
+/// checked against a shadow load model that mirrors route/complete
+/// bookkeeping, with interleaved completions.
+#[test]
+fn prop_least_loaded_never_picks_a_strictly_heavier_replica() {
+    check("router-least-loaded", 60, |rng| {
+        let k = rng.range(2, 8);
+        let mut router = Router::new(RoutePolicy::LeastLoaded, k);
+        let mut shadow = vec![0u64; k];
+        let mut in_flight: Vec<(usize, Request)> = Vec::new();
+        for i in 0..rng.range(1, 150) {
+            if rng.f64() < 0.3 && !in_flight.is_empty() {
+                let (replica, req) = in_flight.swap_remove(rng.range(0, in_flight.len()));
+                router.complete(replica, &req);
+                shadow[replica] = shadow[replica].saturating_sub(req.total_tokens() as u64);
+            } else {
+                let req = Request {
+                    id: i as u64,
+                    arrival: 0.0,
+                    prompt_tokens: rng.range(1, 2000),
+                    output_tokens: rng.range(1, 1000),
+                };
+                let chosen = router.route(&req);
+                let min = *shadow.iter().min().unwrap();
+                assert_eq!(
+                    shadow[chosen], min,
+                    "routed to replica {chosen} with load {} while min is {min}",
+                    shadow[chosen]
+                );
+                shadow[chosen] += req.total_tokens() as u64;
+                in_flight.push((chosen, req));
+            }
+        }
+    });
+}
+
+/// Router, hash: the replica for a request id is a pure function of
+/// (id, n) — stable across repeated calls and unaffected by whatever
+/// other traffic the router has seen.
+#[test]
+fn prop_hash_routing_is_stable_and_history_independent() {
+    check("router-hash-stable", 60, |rng| {
+        let n = rng.range(1, 10);
+        let mut fresh = Router::new(RoutePolicy::Hash, n);
+        let mut warmed = Router::new(RoutePolicy::Hash, n);
+        // Warm one router with unrelated traffic.
+        for i in 0..rng.range(1, 60) {
+            let noise = Request {
+                id: 10_000 + i as u64,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 100),
+                output_tokens: rng.range(1, 100),
+            };
+            warmed.route(&noise);
+        }
+        for _ in 0..30 {
+            let req = Request {
+                id: rng.next_u64() % 5_000,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 100),
+                output_tokens: rng.range(1, 100),
+            };
+            let a = fresh.route(&req);
+            let b = warmed.route(&req);
+            let c = fresh.route(&req); // repeated call, same id
+            assert_eq!(a, b, "history changed hash routing of id {}", req.id);
+            assert_eq!(a, c, "hash routing unstable across calls for id {}", req.id);
+            assert!(a < n);
+        }
+    });
+}
+
 /// MPS executor: work conservation — every replica's trace completes,
 /// finish times bound the makespan, and the makespan is never shorter
 /// than the longest solo trace nor longer than the serialized sum.

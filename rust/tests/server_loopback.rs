@@ -1,0 +1,77 @@
+//! Loopback integration test for the TCP serving front end: bind an
+//! ephemeral port, drive generate/stats/shutdown over a real socket,
+//! and check the served count plus the virtual-time bookkeeping the
+//! protocol reports (queue_s = submission to first token, e2e_s =
+//! submission to last token).
+
+use std::net::TcpListener;
+
+use memgap::backend::SimBackend;
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::server::{
+    client_generate, client_shutdown, client_stats, serve_listener,
+};
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+
+#[test]
+fn loopback_generate_stats_shutdown_on_ephemeral_port() {
+    let backend = SimBackend::new(
+        GpuSpec::h100_64g(),
+        ModelSpec::opt_1_3b(),
+        AttentionBackendKind::XFormers,
+    );
+    let engine = Engine::new(backend, EngineConfig::new(8, 4096, 16));
+    // Ephemeral port: bind :0 ourselves, read the assigned address back,
+    // then hand the listener to the server.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || serve_listener(engine, listener).unwrap());
+
+    // Sequential requests on an idle engine: timings are present, sane
+    // and ordered (queue <= e2e; longer generations take longer).
+    let short = client_generate(&addr, 32, 4).unwrap();
+    let long = client_generate(&addr, 32, 16).unwrap();
+    for resp in [&short, &long] {
+        assert!(resp.get("error").is_none(), "{resp}");
+        let queue = resp.get("queue_s").unwrap().as_f64().unwrap();
+        let e2e = resp.get("e2e_s").unwrap().as_f64().unwrap();
+        let wall = resp.get("wall_s").unwrap().as_f64().unwrap();
+        assert!(queue > 0.0, "queue_s {queue}");
+        assert!(e2e >= queue, "e2e_s {e2e} < queue_s {queue}");
+        assert!(wall >= 0.0);
+    }
+    assert_eq!(short.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(long.get("tokens").unwrap().as_arr().unwrap().len(), 16);
+    // 16 decoded tokens take longer than 4 in virtual time.
+    let e2e_short = short.get("e2e_s").unwrap().as_f64().unwrap();
+    let e2e_long = long.get("e2e_s").unwrap().as_f64().unwrap();
+    assert!(e2e_long > e2e_short, "{e2e_long} vs {e2e_short}");
+
+    let stats = client_stats(&addr).unwrap();
+    assert_eq!(stats.get("served").unwrap().as_usize(), Some(2));
+    assert!(stats.get("steps").unwrap().as_usize().unwrap() > 0);
+    let kv = stats.get("kv_usage").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&kv), "kv_usage {kv}");
+
+    // Concurrent clients batch together and all complete.
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || client_generate(&addr, 16, 8).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 8);
+        let queue = resp.get("queue_s").unwrap().as_f64().unwrap();
+        let e2e = resp.get("e2e_s").unwrap().as_f64().unwrap();
+        assert!(queue > 0.0 && e2e >= queue);
+    }
+    let stats = client_stats(&addr).unwrap();
+    assert_eq!(stats.get("served").unwrap().as_usize(), Some(6));
+
+    client_shutdown(&addr).unwrap();
+    let served = server.join().unwrap();
+    assert_eq!(served, 6, "served {served}");
+}
