@@ -30,7 +30,7 @@ use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
 use memgap::gpusim::plan::{PlanScratch, StepPlan};
 use memgap::gpusim::step::simulate_decode_step_reference;
 use memgap::gpusim::{simulate_decode_step, GpuSpec};
-use memgap::kvcache::KvCacheManager;
+use memgap::kvcache::{KvCacheManager, KvCacheV2, KvV2Config};
 use memgap::models::spec::{AttentionBackendKind, ModelSpec};
 use memgap::util::bench::{bench, header, smoke, BenchResult, JsonReport};
 use memgap::workload::{generate, WorkloadConfig};
@@ -105,6 +105,43 @@ fn main() {
             kv.free(id).unwrap();
         }
         kv.allocator().peak_allocated_blocks()
+    }));
+
+    // 2b. Same churn through the ref-counted v2 manager, cache off:
+    // the cost of the refcount/LRU generalization on the v1 path.
+    record(run("kv_v2_churn_512_seqs", || {
+        let mut kv = KvCacheV2::new(KvV2Config::new(40_000, 16, 128));
+        let toks: Vec<i32> = (0..161).map(|p| (p % 997) + 1).collect();
+        for id in 0..512u64 {
+            kv.admit(id, &toks).unwrap();
+        }
+        for _ in 0..64 {
+            for id in 0..512u64 {
+                kv.append_token(id).unwrap();
+            }
+        }
+        for id in 0..512u64 {
+            kv.free(id).unwrap();
+        }
+        kv.peak_allocated_blocks()
+    }));
+
+    // 2c. Prefix-cached admission: 512 prompts over 8 shared
+    // 256-token system prompts (hash + probe + share on every admit).
+    record(run("kv_v2_prefix_admit_512_seqs", || {
+        let mut cfg = KvV2Config::new(40_000, 16, 128);
+        cfg.prefix_cache = true;
+        let mut kv = KvCacheV2::new(cfg);
+        for id in 0..512u64 {
+            let class = (id % 8) as i32;
+            let mut toks: Vec<i32> = (0..256).map(|p| class * 300 + (p % 251) + 1).collect();
+            toks.extend((0..64).map(|p| (id as i32 * 31 + p) % 900 + 1));
+            kv.admit(id, &toks).unwrap();
+        }
+        for id in 0..512u64 {
+            kv.free(id).unwrap();
+        }
+        kv.stats().hits
     }));
 
     // 3. Decode batch assembly at B=512 (block tables + slots).

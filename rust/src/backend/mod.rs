@@ -102,6 +102,23 @@ pub trait Backend {
     /// without a simulator ignore it.
     fn set_record(&mut self, _record: bool) {}
 
+    /// Effective host<->device link bandwidth (bytes/s) for KV swap
+    /// transfers. Default ~50 GB/s PCIe; the simulator reports its
+    /// calibrated `GpuSpec::pcie_bw`.
+    fn link_bw(&self) -> f64 {
+        50.0e9
+    }
+
+    /// Seconds to move `blocks` KV blocks of `block_size` token slots
+    /// each across the host link (swap preemption, either direction).
+    fn swap_time(&self, blocks: usize, block_size: usize) -> f64 {
+        let bytes = self
+            .spec()
+            .kv_bytes_per_token()
+            .saturating_mul((blocks * block_size) as u64);
+        bytes as f64 / self.link_bw()
+    }
+
     /// Process prompts and produce each sequence's first token.
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput>;
 
@@ -167,6 +184,10 @@ impl Backend for SimBackend {
 
     fn set_record(&mut self, record: bool) {
         self.record = record;
+    }
+
+    fn link_bw(&self) -> f64 {
+        self.gpu.pcie_bw
     }
 
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput> {

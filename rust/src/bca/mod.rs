@@ -40,8 +40,14 @@ pub struct ProfilePoint {
     pub itl: f64,
     /// Mean end-to-end latency (seconds).
     pub e2e: f64,
-    /// Peak KV-cache usage fraction at this batch size.
+    /// Peak KV-cache usage fraction at this batch size. With the
+    /// prefix cache on, this is the *post-sharing* footprint, so the
+    /// memory plan's freed-KV accounting (and the replica count the
+    /// planner can fit) directly credits prefix-cache savings.
     pub kv_usage: f64,
+    /// Prefix-cache hit rate at this operating point (0 when the
+    /// profiled engine ran with the cache off).
+    pub prefix_hit_rate: f64,
 }
 
 /// Profiled throughput/latency curves for one model.
@@ -80,6 +86,7 @@ impl BcaProfile {
                     itl: r.metrics.mean_itl,
                     e2e: r.metrics.mean_e2e,
                     kv_usage: r.peak_kv_usage,
+                    prefix_hit_rate: r.prefix_cache.hit_rate(),
                 })
                 .collect(),
         })
@@ -246,6 +253,7 @@ mod tests {
                     itl: 0.005 * (1.0 + bf / 64.0),
                     e2e: 30.0,
                     kv_usage: (bf / 512.0).min(1.0),
+                    prefix_hit_rate: 0.0,
                 }
             })
             .collect();
@@ -313,6 +321,37 @@ mod tests {
             plan.freed_frac()
         );
         assert!(plan.engine_mem_fraction() < 0.5);
+    }
+
+    #[test]
+    fn prefix_cache_savings_flow_into_the_memory_plan() {
+        // Same shared-prefix workload profiled with the cache on vs
+        // off: the cache-on profile reports hits, a smaller KV
+        // footprint at equal throughput, and therefore a memory plan
+        // with more freed KV — the extra headroom the advisor/planner
+        // can trade for batch or replicas.
+        let mk = |cache: bool| {
+            let mut base = OfflineConfig::new(ModelSpec::opt_1_3b(), 1);
+            base.prefix = Some(crate::workload::SharedPrefixConfig {
+                classes: 4,
+                prefix_len: 256,
+                share: 1.0,
+            });
+            base.prefix_cache = cache;
+            BcaProfile::measure(&base, &[32], 96).unwrap()
+        };
+        let on = mk(true);
+        let off = mk(false);
+        let (pon, poff) = (&on.points[0], &off.points[0]);
+        assert!(pon.prefix_hit_rate > 0.0, "{pon:?}");
+        assert_eq!(poff.prefix_hit_rate, 0.0);
+        // Identical virtual-time schedule, smaller footprint.
+        assert_eq!(pon.throughput_tps, poff.throughput_tps);
+        assert!(pon.kv_usage < poff.kv_usage, "{pon:?} vs {poff:?}");
+        let plan_on = memory_plan(&GpuSpec::h100_64g(), &ModelSpec::opt_1_3b(), pon.kv_usage);
+        let plan_off = memory_plan(&GpuSpec::h100_64g(), &ModelSpec::opt_1_3b(), poff.kv_usage);
+        assert!(plan_on.kv_freed_gb > plan_off.kv_freed_gb);
+        assert!(plan_on.engine_mem_fraction() < plan_off.engine_mem_fraction());
     }
 
     #[test]

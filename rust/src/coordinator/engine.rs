@@ -7,7 +7,14 @@
 //!    KV manager — and run it on the backend;
 //! 4. advance the (virtual or wall) clock by the step's CPU gap + GPU
 //!    time, bookkeep tokens/finishes, free blocks, record metrics;
-//! 5. preempt-by-recompute when a decode step runs out of KV blocks.
+//! 5. preempt when a decode step runs out of KV blocks — by recompute
+//!    (free + re-prefill, vLLM's default) or by swap (blocks move to a
+//!    CPU pool over PCIe and swap back in later), per
+//!    [`PreemptMode`](crate::coordinator::scheduler::PreemptMode).
+//!
+//! The KV manager is the ref-counted v2 ([`crate::kvcache::v2`]):
+//! admission charges only net-new blocks, and with `prefix_cache` on,
+//! sequences sharing a system-prompt prefix share physical blocks.
 //!
 //! The same engine drives the H100 simulator (figures) and the PJRT CPU
 //! runtime (end-to-end example); only the backend differs.
@@ -19,12 +26,12 @@ use anyhow::Result;
 use crate::backend::{Backend, SeqBatchEntry, StepBatch, StepOutput};
 use crate::coordinator::request::{RequestState, RunningSeq};
 use crate::coordinator::scheduler::{
-    ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
+    PreemptMode, ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
 };
 use crate::gpusim::mps::Segment;
 use crate::gpusim::plan::StepSummary;
 use crate::gpusim::step::StepSim;
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{KvCacheV2, KvV2Config, PrefixCacheStats};
 use crate::metrics::{MetricsCollector, RunMetrics};
 use crate::workload::Request;
 
@@ -34,10 +41,18 @@ pub struct EngineConfig {
     pub max_num_seqs: usize,
     pub max_batched_tokens: usize,
     pub policy: SchedulerPolicy,
+    /// What to do with preemption victims (recompute vs swap).
+    pub preempt: PreemptMode,
     /// Physical KV blocks (incl. reserved block 0).
     pub kv_blocks: usize,
     pub block_size: usize,
     pub max_blocks_per_seq: usize,
+    /// Share full prompt blocks across sequences by content hash
+    /// (vLLM automatic-prefix-caching style). Off by default: the
+    /// cache-off engine is bit-identical to the v1 allocator path.
+    pub prefix_cache: bool,
+    /// CPU-pool blocks available to swap preemption.
+    pub cpu_swap_blocks: usize,
     /// Capture per-step kernel sims for timelines (memory-heavy; the
     /// figure harness enables it only where needed).
     pub record_steps: bool,
@@ -49,9 +64,12 @@ impl EngineConfig {
             max_num_seqs,
             max_batched_tokens: 4096,
             policy: SchedulerPolicy::PrefillPriority,
+            preempt: PreemptMode::Recompute,
             kv_blocks,
             block_size,
             max_blocks_per_seq: 2048 / block_size,
+            prefix_cache: false,
+            cpu_swap_blocks: kv_blocks,
             record_steps: false,
         }
     }
@@ -63,7 +81,18 @@ pub struct EngineReport {
     pub metrics: RunMetrics,
     /// Peak KV usage (fraction of usable blocks) — Figs 3/12, Table IV.
     pub peak_kv_usage: f64,
+    /// Peak unique referenced blocks (the prefix-sweep artefact's
+    /// absolute view of `peak_kv_usage`).
+    pub peak_kv_blocks: usize,
     pub preemptions: u64,
+    /// Preemptions served by swap (the rest recomputed).
+    pub swap_outs: u64,
+    /// KV blocks moved over PCIe, both directions.
+    pub swap_blocks: u64,
+    /// Virtual seconds spent in swap transfers.
+    pub swap_time: f64,
+    /// Prefix-cache hit/eviction/COW counters (zeros when disabled).
+    pub prefix_cache: PrefixCacheStats,
     pub steps: usize,
     pub prefill_time: f64,
     pub decode_time: f64,
@@ -105,17 +134,22 @@ pub struct Engine<B: Backend> {
     pub backend: B,
     cfg: EngineConfig,
     scheduler: Scheduler,
-    kv: KvCacheManager,
+    kv: KvCacheV2,
     clock: f64,
     pending: Vec<Request>, // not yet arrived (sorted by arrival desc)
     waiting: VecDeque<RunningSeq>,
     running: Vec<RunningSeq>,
+    /// Swap-preempted sequences parked in the CPU pool, FCFS.
+    swapped: VecDeque<RunningSeq>,
     /// Reusable decode batch-assembly scratch: entries (and their
     /// token/table vectors) persist across steps, so steady-state
     /// decode steps build their batch without per-step allocations.
     decode_batch: StepBatch,
     metrics: MetricsCollector,
     preemptions: u64,
+    swap_outs: u64,
+    swap_blocks: u64,
+    swap_time: f64,
     steps: usize,
     prefill_time: f64,
     decode_time: f64,
@@ -126,11 +160,18 @@ pub struct Engine<B: Backend> {
 
 impl<B: Backend> Engine<B> {
     pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
-        let kv = KvCacheManager::new(cfg.kv_blocks, cfg.block_size, cfg.max_blocks_per_seq);
+        let kv = KvCacheV2::new(KvV2Config {
+            num_blocks: cfg.kv_blocks,
+            block_size: cfg.block_size,
+            max_blocks_per_seq: cfg.max_blocks_per_seq,
+            prefix_cache: cfg.prefix_cache,
+            cpu_pool_blocks: cfg.cpu_swap_blocks,
+        });
         let scheduler = Scheduler::new(SchedulerConfig {
             max_num_seqs: cfg.max_num_seqs,
             max_batched_tokens: cfg.max_batched_tokens,
             policy: cfg.policy,
+            preempt: cfg.preempt,
         });
         // Without step recording the backend may take its summary-only
         // fast path (no per-kernel records to throw away).
@@ -144,9 +185,13 @@ impl<B: Backend> Engine<B> {
             pending: Vec::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
+            swapped: VecDeque::new(),
             decode_batch: StepBatch::default(),
             metrics: MetricsCollector::new(),
             preemptions: 0,
+            swap_outs: 0,
+            swap_blocks: 0,
+            swap_time: 0.0,
             steps: 0,
             prefill_time: 0.0,
             decode_time: 0.0,
@@ -165,20 +210,20 @@ impl<B: Backend> Engine<B> {
         self.clock
     }
 
-    pub fn kv(&self) -> &KvCacheManager {
+    pub fn kv(&self) -> &KvCacheV2 {
         &self.kv
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.pending.len() + self.waiting.len()
+        self.pending.len() + self.waiting.len() + self.swapped.len()
     }
 
     /// Requests that have arrived but are not currently scheduled —
-    /// both never-admitted arrivals and recompute-preempted sequences
-    /// waiting to re-prefill. The congestion signal the online driver
-    /// samples.
+    /// never-admitted arrivals, recompute-preempted sequences waiting
+    /// to re-prefill, and swap-preempted sequences parked in the CPU
+    /// pool. The congestion signal the online driver samples.
     pub fn waiting_count(&self) -> usize {
-        self.waiting.len()
+        self.waiting.len() + self.swapped.len()
     }
 
     /// Engine iterations executed so far (monotone; the online server
@@ -250,14 +295,22 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || !self.waiting.is_empty() || !self.running.is_empty()
+        !self.pending.is_empty()
+            || !self.waiting.is_empty()
+            || !self.running.is_empty()
+            || !self.swapped.is_empty()
     }
 
     pub fn finish(self) -> EngineReport {
         EngineReport {
             metrics: self.metrics.finish(self.clock),
             peak_kv_usage: self.kv.peak_usage(),
+            peak_kv_blocks: self.kv.peak_allocated_blocks(),
             preemptions: self.preemptions,
+            swap_outs: self.swap_outs,
+            swap_blocks: self.swap_blocks,
+            swap_time: self.swap_time,
+            prefix_cache: self.kv.stats(),
             steps: self.steps,
             prefill_time: self.prefill_time,
             decode_time: self.decode_time,
@@ -269,6 +322,9 @@ impl<B: Backend> Engine<B> {
     /// One engine iteration. Returns false if idle with nothing pending.
     pub fn step(&mut self) -> Result<bool> {
         self.absorb_arrivals();
+        // Swapped sequences have priority over fresh admissions: they
+        // already hold CPU-resident KV and resume without re-prefill.
+        self.try_swap_in();
         match self.scheduler.decide(&self.waiting, &self.running, &self.kv) {
             ScheduleDecision::Prefill { queue_idx } => {
                 let batch_seqs = self.take_waiting(&queue_idx)?;
@@ -313,14 +369,57 @@ impl<B: Backend> Engine<B> {
         Ok(out)
     }
 
+    /// Charge one swap transfer (either direction) to the virtual clock
+    /// as a PCIe segment.
+    fn charge_swap(&mut self, blocks: usize) {
+        let t = self.backend.swap_time(blocks, self.cfg.block_size);
+        self.clock += t;
+        self.swap_time += t;
+        self.swap_blocks += blocks as u64;
+        self.segments.push(Segment::Swap { duration: t });
+    }
+
+    /// Swap back as many parked sequences as fit (FCFS), charging the
+    /// PCIe transfer. They rejoin the running set and resume decoding
+    /// without re-prefill.
+    fn try_swap_in(&mut self) {
+        while let Some(front) = self.swapped.front() {
+            if self.running.len() >= self.cfg.max_num_seqs {
+                break;
+            }
+            let need = match self.kv.swapped_need(front.id) {
+                Some(n) => n,
+                None => break,
+            };
+            if self.kv.reclaimable_blocks() < need {
+                break;
+            }
+            let mut s = self.swapped.pop_front().unwrap();
+            let moved = self.kv.swap_in(s.id).expect("capacity checked");
+            self.charge_swap(moved);
+            s.state = RequestState::Running;
+            self.running.push(s);
+        }
+    }
+
     /// Build the prefill batch entries and admit sequences into the KV
-    /// cache. Infallible given the scheduler checked capacity.
-    fn admit_and_entries(&mut self, seqs: &[RunningSeq]) -> Result<Vec<SeqBatchEntry>> {
+    /// cache by token content (so prefix-cache hits land). The
+    /// scheduler's charge is conservative, but a fused step may have
+    /// consumed blocks since the decision (decode-capacity appends in
+    /// `run_mixed`): sequences that no longer fit are pushed back to
+    /// the waiting-queue front instead of failing the run.
+    fn admit_and_entries(&mut self, seqs: &mut Vec<RunningSeq>) -> Result<Vec<SeqBatchEntry>> {
+        use crate::kvcache::manager::KvError;
         let tables = self.backend.needs_tables();
         let mut entries = Vec::with_capacity(seqs.len());
-        for s in seqs {
+        let mut admitted = 0;
+        for s in seqs.iter() {
             let len = s.prefill_len();
-            self.kv.admit(s.id, len)?;
+            match self.kv.admit(s.id, &s.token_ids) {
+                Ok(()) => {}
+                Err(KvError::OutOfBlocks { .. }) => break,
+                Err(e) => return Err(e.into()),
+            }
             let (table, slot_mapping) = if tables {
                 (
                     self.kv.block_table(s.id).unwrap().to_vec(),
@@ -338,12 +437,20 @@ impl<B: Backend> Engine<B> {
                 block_table: table,
                 slot_mapping,
             });
+            admitted += 1;
+        }
+        // FCFS: anything not admitted goes back in front, in order.
+        for s in seqs.drain(admitted..).rev() {
+            self.waiting.push_front(s);
         }
         Ok(entries)
     }
 
     fn run_prefill(&mut self, mut seqs: Vec<RunningSeq>) -> Result<()> {
-        let entries = self.admit_and_entries(&seqs)?;
+        let entries = self.admit_and_entries(&mut seqs)?;
+        if entries.is_empty() {
+            return Ok(());
+        }
         let batch = StepBatch { entries };
         let out = self.exec_batched(&batch, Phase::Prefill)?;
         self.after_step(&out, batch.len(), Phase::Prefill);
@@ -418,10 +525,15 @@ impl<B: Backend> Engine<B> {
 
     fn run_mixed(&mut self, mut pre_seqs: Vec<RunningSeq>) -> Result<()> {
         self.ensure_decode_capacity();
-        let pre_entries = self.admit_and_entries(&pre_seqs)?;
+        let pre_entries = self.admit_and_entries(&mut pre_seqs)?;
         let pre = StepBatch {
             entries: pre_entries,
         };
+        if pre.is_empty() && self.running.is_empty() {
+            // Everything scheduled was re-queued (or preempted away):
+            // nothing to execute this iteration.
+            return Ok(());
+        }
         self.build_decode_batch();
         let dec = std::mem::take(&mut self.decode_batch);
         let out = self.backend.mixed(&pre, &dec)?;
@@ -504,8 +616,11 @@ impl<B: Backend> Engine<B> {
         self.retire_or_keep(seqs);
     }
 
-    /// Preempt the newest-arrived running sequence other than `keep`.
-    /// Returns false if there is no eligible victim.
+    /// Preempt the newest-arrived running sequence other than `keep`,
+    /// per the configured [`PreemptMode`]: recompute frees the blocks
+    /// and re-prefills later; swap parks them in the CPU pool (falling
+    /// back to recompute when the pool is full). Returns false if there
+    /// is no eligible victim.
     fn preempt_newest_except(&mut self, keep: u64) -> bool {
         let Some(pos) = self
             .running
@@ -518,9 +633,19 @@ impl<B: Backend> Engine<B> {
             return false;
         };
         let mut victim = self.running.remove(pos);
+        self.preemptions += 1;
+        if self.cfg.preempt == PreemptMode::Swap {
+            if let Ok(moved) = self.kv.swap_out(victim.id) {
+                self.swap_outs += 1;
+                self.charge_swap(moved);
+                victim.state = RequestState::Swapped;
+                self.swapped.push_back(victim);
+                return true;
+            }
+            // CPU pool full: fall through to recompute.
+        }
         self.kv.free(victim.id).ok();
         victim.preempt();
-        self.preemptions += 1;
         self.waiting.push_front(victim);
         true
     }
@@ -667,7 +792,7 @@ mod tests {
         while e.has_work() {
             e.step().unwrap();
         }
-        assert_eq!(e.kv().allocator().allocated_blocks(), 0);
+        assert_eq!(e.kv().allocated_blocks(), 0);
         assert!(e.kv().peak_usage() > 0.0);
     }
 
@@ -739,6 +864,7 @@ mod tests {
                 arrival,
                 prompt_tokens: 16,
                 output_tokens: 4,
+                prefix: None,
             })
             .collect();
         let mut e = engine(1, 1024);
@@ -875,12 +1001,13 @@ mod tests {
                 e.running_count(),
                 "KV-registered sequences must match the running set"
             );
-            assert!(e.kv().allocator().allocated_blocks() <= 64);
+            assert!(e.kv().allocated_blocks() <= 64);
         }
         assert!(e.preemptions > 0, "expected KV pressure to preempt");
-        assert_eq!(e.kv().allocator().allocated_blocks(), 0);
+        assert_eq!(e.kv().allocated_blocks(), 0);
         let report = e.finish();
         assert_eq!(report.metrics.completed, 8);
+        assert_eq!(report.swap_outs, 0, "recompute mode never swaps");
     }
 
     #[test]
@@ -906,6 +1033,110 @@ mod tests {
         assert_eq!(seen.len(), 12);
         let report = e.finish();
         assert_eq!(report.metrics.total_output_tokens, 12 * 16);
+    }
+
+    fn engine_with(
+        max_seqs: usize,
+        kv_blocks: usize,
+        f: impl FnOnce(&mut EngineConfig),
+    ) -> Engine<SimBackend> {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(max_seqs, kv_blocks, 16);
+        f(&mut cfg);
+        Engine::new(backend, cfg)
+    }
+
+    #[test]
+    fn swap_preemption_completes_under_pressure() {
+        // Same tight pool as the recompute test; victims swap to the
+        // CPU pool and come back without re-prefill.
+        let mut e = engine_with(8, 65, |c| c.preempt = PreemptMode::Swap);
+        e.submit(&generate(&WorkloadConfig::offline(8, 50, 100)));
+        while e.has_work() {
+            e.step().unwrap();
+            assert!(e.kv().allocated_blocks() <= 64);
+        }
+        assert_eq!(e.kv().allocated_blocks(), 0);
+        assert_eq!(e.kv().cpu_blocks_used(), 0, "CPU pool fully drained");
+        let report = e.finish();
+        assert_eq!(report.metrics.completed, 8);
+        assert!(report.swap_outs > 0, "expected swap preemptions");
+        assert!(report.swap_blocks > 0 && report.swap_time > 0.0);
+        // Every swap segment is accounted in the makespan.
+        let total: f64 = report.segments.iter().map(|s| s.duration()).sum();
+        assert!((total - report.metrics.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swap_and_recompute_finish_the_same_work() {
+        let run = |mode: PreemptMode| {
+            let mut e = engine_with(8, 65, |c| c.preempt = mode);
+            e.submit(&generate(&WorkloadConfig::offline(8, 50, 100)));
+            let mut fins = Vec::new();
+            while e.has_work() {
+                e.step().unwrap();
+                fins.extend(e.take_finished());
+            }
+            fins.sort_by_key(|f| f.id);
+            let report = e.finish();
+            (fins, report)
+        };
+        let (fr, rr) = run(PreemptMode::Recompute);
+        let (fs, rs) = run(PreemptMode::Swap);
+        assert_eq!(rr.metrics.completed, rs.metrics.completed);
+        assert_eq!(
+            rr.metrics.total_output_tokens,
+            rs.metrics.total_output_tokens
+        );
+        assert_eq!(fr.len(), fs.len());
+        for (a, b) in fr.iter().zip(&fs) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.generated, b.generated);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        }
+        assert!(rs.swap_outs > 0 && rr.swap_outs == 0);
+    }
+
+    #[test]
+    fn prefix_cache_cuts_peak_blocks_at_identical_timing() {
+        // Shared-prefix workload on an ample pool: admission is bound
+        // by max_num_seqs, so schedules (and thus every timing number)
+        // are identical — only the physical block footprint shrinks.
+        let wl = {
+            let mut cfg = WorkloadConfig::offline(24, 96, 24);
+            cfg.prefix = Some(crate::workload::SharedPrefixConfig {
+                classes: 3,
+                prefix_len: 64,
+                share: 1.0,
+            });
+            generate(&cfg)
+        };
+        let run = |cache: bool| {
+            let mut e = engine_with(8, 4096, |c| c.prefix_cache = cache);
+            e.submit(&wl);
+            e.run_to_completion().unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.metrics.completed, 24);
+        assert_eq!(on.metrics.completed, 24);
+        // Bit-identical virtual time either way.
+        assert_eq!(off.metrics.makespan, on.metrics.makespan);
+        assert_eq!(off.steps, on.steps);
+        // The cache-off path reports no queries (v1-equivalent), the
+        // cache-on path shares the 4 full prefix blocks per class.
+        assert_eq!(off.prefix_cache, PrefixCacheStats::default());
+        assert!(on.prefix_cache.hit_rate() > 0.0, "{:?}", on.prefix_cache);
+        assert!(
+            on.peak_kv_blocks < off.peak_kv_blocks,
+            "on {} vs off {}",
+            on.peak_kv_blocks,
+            off.peak_kv_blocks
+        );
     }
 
     #[test]

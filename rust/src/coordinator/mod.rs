@@ -3,7 +3,8 @@
 //! - [`request`]  — request lifecycle and per-sequence state.
 //! - [`scheduler`] — continuous-batching policy (prefill-priority like
 //!   vLLM's default, plus Sarathi-style chunked prefill), admission
-//!   control against the KV cache, preemption-by-recompute.
+//!   control charged by net-new KV blocks, preemption mode selection
+//!   (recompute vs swap).
 //! - [`engine`]   — the step loop driving a [`Backend`](crate::backend::Backend):
 //!   builds batches (block tables / slot mappings), advances the clock,
 //!   records metrics and (when simulating) the kernel timeline.
@@ -28,4 +29,4 @@ pub mod server;
 pub use engine::{Engine, EngineConfig, EngineReport};
 pub use online::{run_online, OnlineConfig, OnlineReport};
 pub use request::{RequestState, RunningSeq};
-pub use scheduler::{ScheduleDecision, Scheduler, SchedulerPolicy};
+pub use scheduler::{PreemptMode, ScheduleDecision, Scheduler, SchedulerPolicy};

@@ -6,11 +6,11 @@ use anyhow::Result;
 
 use crate::backend::SimBackend;
 use crate::coordinator::engine::{Engine, EngineConfig, EngineReport};
-use crate::coordinator::scheduler::SchedulerPolicy;
+use crate::coordinator::scheduler::{PreemptMode, SchedulerPolicy};
 use crate::gpusim::GpuSpec;
 use crate::kvcache;
 use crate::models::spec::{AttentionBackendKind, ModelSpec};
-use crate::workload::{generate, WorkloadConfig};
+use crate::workload::{generate, SharedPrefixConfig, WorkloadConfig};
 
 /// Configuration of one offline simulated run.
 #[derive(Debug, Clone)]
@@ -27,6 +27,12 @@ pub struct OfflineConfig {
     pub input_len: usize,
     pub output_len: usize,
     pub chunked_prefill: bool,
+    /// Preemption style when the KV pool runs dry.
+    pub preempt: PreemptMode,
+    /// Share full prompt blocks by content hash (KV cache v2).
+    pub prefix_cache: bool,
+    /// Shared system-prompt classes layered over the workload.
+    pub prefix: Option<SharedPrefixConfig>,
     pub record_steps: bool,
     pub block_size: usize,
 }
@@ -43,6 +49,9 @@ impl OfflineConfig {
             input_len: crate::workload::SHAREGPT_MEAN_INPUT,
             output_len: crate::workload::SHAREGPT_MEAN_OUTPUT,
             chunked_prefill: false,
+            preempt: PreemptMode::Recompute,
+            prefix_cache: false,
+            prefix: None,
             record_steps: false,
             block_size: 16,
         }
@@ -60,6 +69,8 @@ impl OfflineConfig {
         let mut cfg = EngineConfig::new(self.max_num_seqs, kv_blocks + 1, self.block_size);
         cfg.max_blocks_per_seq = (self.model.max_seq + self.block_size - 1) / self.block_size;
         cfg.record_steps = self.record_steps;
+        cfg.preempt = self.preempt;
+        cfg.prefix_cache = self.prefix_cache;
         if self.chunked_prefill {
             cfg.policy = SchedulerPolicy::ChunkedPrefill;
         }
@@ -69,11 +80,10 @@ impl OfflineConfig {
     /// Run the configured workload to completion.
     pub fn run(&self) -> Result<EngineReport> {
         let mut engine = self.build_engine();
-        engine.submit(&generate(&WorkloadConfig::offline(
-            self.num_requests,
-            self.input_len,
-            self.output_len,
-        )));
+        engine.submit(&generate(&WorkloadConfig {
+            prefix: self.prefix,
+            ..WorkloadConfig::offline(self.num_requests, self.input_len, self.output_len)
+        }));
         engine.run_to_completion()
     }
 
@@ -81,7 +91,10 @@ impl OfflineConfig {
     /// through the same engine — used by Figs 2/3 and Table IV.
     pub fn run_sharegpt(&self, num_requests: usize, seed: u64) -> Result<EngineReport> {
         let mut engine = self.build_engine();
-        engine.submit(&generate(&WorkloadConfig::sharegpt(num_requests, seed)));
+        engine.submit(&generate(&WorkloadConfig {
+            prefix: self.prefix,
+            ..WorkloadConfig::sharegpt(num_requests, seed)
+        }));
         engine.run_to_completion()
     }
 }

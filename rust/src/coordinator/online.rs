@@ -73,11 +73,15 @@ pub struct OnlineReport {
     /// SLO-met completed requests per second of makespan.
     pub goodput_rps: f64,
     /// Peak arrived-but-unscheduled backlog observed across steps
-    /// (never-admitted arrivals plus recompute-preempted sequences
-    /// awaiting re-prefill).
+    /// (never-admitted arrivals plus preempted sequences awaiting
+    /// re-prefill or swap-in).
     pub peak_queue_depth: usize,
     pub peak_kv_usage: f64,
     pub preemptions: u64,
+    /// Preemptions served by swap (PCIe transfer instead of recompute).
+    pub swap_outs: u64,
+    /// Prefix-cache hit rate over full prompt blocks (0 when disabled).
+    pub prefix_hit_rate: f64,
     pub steps: usize,
     /// The underlying aggregate metrics (incl. per-request latencies).
     pub metrics: RunMetrics,
@@ -129,6 +133,8 @@ impl OnlineReport {
             ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
             ("peak_kv_usage", Json::num(self.peak_kv_usage)),
             ("preemptions", Json::num(self.preemptions as f64)),
+            ("swap_outs", Json::num(self.swap_outs as f64)),
+            ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
             ("steps", Json::num(self.steps as f64)),
         ])
     }
@@ -210,6 +216,8 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
         peak_queue_depth: peak_queue,
         peak_kv_usage: report.peak_kv_usage,
         preemptions: report.preemptions,
+        swap_outs: report.swap_outs,
+        prefix_hit_rate: report.prefix_cache.hit_rate(),
         steps: report.steps,
         metrics: report.metrics,
     })

@@ -1,5 +1,6 @@
 //! Request lifecycle: waiting -> running (prefilled) -> finished, with
-//! preemption back to waiting (recompute policy, as in vLLM).
+//! preemption back to waiting (recompute policy, as in vLLM) or out to
+//! the CPU swap pool (swap policy — `PreemptMode::Swap`).
 
 use crate::kvcache::SeqId;
 use crate::workload::Request;
@@ -11,6 +12,9 @@ pub enum RequestState {
     Running,
     Finished,
     Preempted,
+    /// Evicted to the CPU swap pool; resumes decoding after swap-in
+    /// (no re-prefill, unlike [`RequestState::Preempted`]).
+    Swapped,
 }
 
 /// A sequence admitted to the engine.
@@ -34,14 +38,27 @@ pub struct RunningSeq {
 }
 
 impl RunningSeq {
-    /// Deterministic synthetic prompt ids: hash(id, position) % vocab.
-    /// Real deployments would take these from the tokenizer; content is
-    /// irrelevant to every experiment in the paper.
+    /// Deterministic synthetic prompt ids: hash(key, position) % vocab,
+    /// where `key` is the request id — or, for the leading
+    /// `prefix.tokens` positions, the shared prefix class, so every
+    /// request of a class opens with the *same* token ids and a
+    /// prefix-aware KV cache can share their leading blocks. Real
+    /// deployments would take these from the tokenizer; content is
+    /// irrelevant to every timing experiment in the paper.
     pub fn from_request(req: &Request, vocab: usize) -> Self {
+        let (class_key, prefix_tokens) = match req.prefix {
+            // `!class` keeps class keys disjoint from real request ids.
+            Some(p) => (!p.class, p.tokens.min(req.prompt_tokens)),
+            None => (0, 0),
+        };
         let mut token_ids = Vec::with_capacity(req.prompt_tokens);
         for pos in 0..req.prompt_tokens {
-            let h = req
-                .id
+            let key = if pos < prefix_tokens {
+                class_key
+            } else {
+                req.id
+            };
+            let h = key
                 .wrapping_mul(0x9E3779B97F4A7C15)
                 .wrapping_add(pos as u64)
                 .wrapping_mul(0xBF58476D1CE4E5B9);
@@ -98,6 +115,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: p,
             output_tokens: o,
+            prefix: None,
         }
     }
 
@@ -122,6 +140,28 @@ mod tests {
         s.push_token(9);
         assert!(s.is_finished());
         assert_eq!(s.token_ids.len(), 8);
+    }
+
+    #[test]
+    fn shared_prefix_classes_share_leading_tokens() {
+        use crate::workload::SharedPrefix;
+        let with = |id: u64, class: u64| {
+            let mut r = req(id, 40, 5);
+            r.prefix = Some(SharedPrefix { class, tokens: 24 });
+            RunningSeq::from_request(&r, 8192)
+        };
+        let a = with(1, 0);
+        let b = with(2, 0);
+        let c = with(3, 1);
+        // Same class: identical leading 24 tokens, divergent after.
+        assert_eq!(a.token_ids[..24], b.token_ids[..24]);
+        assert_ne!(a.token_ids[24..], b.token_ids[24..]);
+        // Different class: different prefix.
+        assert_ne!(a.token_ids[..24], c.token_ids[..24]);
+        // No prefix: bit-identical to the pre-prefix synthesis.
+        let plain = RunningSeq::from_request(&req(1, 40, 5), 8192);
+        assert_ne!(plain.token_ids, a.token_ids);
+        assert!(plain.token_ids.iter().all(|&t| t >= 1));
     }
 
     #[test]

@@ -94,6 +94,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: p,
             output_tokens: o,
+            prefix: None,
         }
     }
 

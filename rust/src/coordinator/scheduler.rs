@@ -12,19 +12,35 @@
 //!   prefill" rows): every step decodes the running set and fills the
 //!   remaining token budget with prompt chunks, fusing both phases.
 //!
-//! Admission is FCFS; preemption (engine side) evicts the most recent
-//! arrival and recomputes it later, as vLLM does by default.
+//! Admission is FCFS and *net-new-block* aware: a prompt is charged
+//! only for the blocks the prefix cache cannot already serve, against
+//! the reclaimable pool (free list + evictable cached blocks).
+//! Preemption (engine side) evicts the most recent arrival and either
+//! recomputes it later (vLLM's default) or swaps its blocks to the CPU
+//! pool, per [`PreemptMode`].
 
 use std::collections::VecDeque;
 
 use crate::coordinator::request::RunningSeq;
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::KvCacheV2;
 
 /// Scheduling policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerPolicy {
     PrefillPriority,
     ChunkedPrefill,
+}
+
+/// What the engine does with a victim when a decode step runs out of
+/// KV blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Free the victim's blocks and re-prefill it later (vLLM default).
+    Recompute,
+    /// Move the victim's blocks to the CPU pool over PCIe and swap them
+    /// back in when memory frees up (no re-prefill). Falls back to
+    /// recompute when the CPU pool is full.
+    Swap,
 }
 
 /// Engine-level knobs (the paper's configuration of vLLM).
@@ -35,6 +51,8 @@ pub struct SchedulerConfig {
     /// Max tokens one step may feed (vLLM `max_num_batched_tokens` 4096).
     pub max_batched_tokens: usize,
     pub policy: SchedulerPolicy,
+    /// How the engine preempts when the KV pool runs dry.
+    pub preempt: PreemptMode,
 }
 
 impl Default for SchedulerConfig {
@@ -43,6 +61,7 @@ impl Default for SchedulerConfig {
             max_num_seqs: 256,
             max_batched_tokens: 4096,
             policy: SchedulerPolicy::PrefillPriority,
+            preempt: PreemptMode::Recompute,
         }
     }
 }
@@ -80,7 +99,7 @@ impl Scheduler {
         &self,
         waiting: &VecDeque<RunningSeq>,
         running: &[RunningSeq],
-        kv: &KvCacheManager,
+        kv: &KvCacheV2,
     ) -> ScheduleDecision {
         match self.cfg.policy {
             SchedulerPolicy::PrefillPriority => self.decide_prefill_priority(waiting, running, kv),
@@ -92,19 +111,23 @@ impl Scheduler {
         &self,
         waiting: &VecDeque<RunningSeq>,
         running_len: usize,
-        kv: &KvCacheManager,
+        kv: &KvCacheV2,
         token_budget: usize,
     ) -> Vec<usize> {
         let mut idx = Vec::new();
         let mut seats = self.cfg.max_num_seqs.saturating_sub(running_len);
         let mut tokens = token_budget;
-        let mut free_blocks = kv.allocator().free_blocks();
+        // Charge each prompt only the blocks its admission removes from
+        // the reclaimable pool: net new blocks, plus LRU-parked cache
+        // hits it would re-reference. With the cache disabled this
+        // degenerates to v1's gross-blocks-vs-free check exactly.
+        let mut free_blocks = kv.reclaimable_blocks();
         for (i, seq) in waiting.iter().enumerate() {
             if seats == 0 {
                 break;
             }
             let need_tokens = seq.prefill_len();
-            let need_blocks = kv.blocks_needed(need_tokens);
+            let need_blocks = kv.charged_blocks_needed(&seq.token_ids);
             if need_tokens > tokens || need_blocks > free_blocks {
                 break; // strict FCFS: no skipping ahead
             }
@@ -120,7 +143,7 @@ impl Scheduler {
         &self,
         waiting: &VecDeque<RunningSeq>,
         running: &[RunningSeq],
-        kv: &KvCacheManager,
+        kv: &KvCacheV2,
     ) -> ScheduleDecision {
         let idx = self.admissible_prefix(waiting, running.len(), kv, self.cfg.max_batched_tokens);
         if !idx.is_empty() {
@@ -136,7 +159,7 @@ impl Scheduler {
         &self,
         waiting: &VecDeque<RunningSeq>,
         running: &[RunningSeq],
-        kv: &KvCacheManager,
+        kv: &KvCacheV2,
     ) -> ScheduleDecision {
         // Decodes get the budget first (one token each), prompts chunk
         // into the remainder.
@@ -166,13 +189,15 @@ mod tests {
                 arrival: 0.0,
                 prompt_tokens: prompt,
                 output_tokens: 10,
+                prefix: None,
             },
             1000,
         )
     }
 
-    fn kv() -> KvCacheManager {
-        KvCacheManager::new(1025, 16, 128) // 1024 usable blocks
+    fn kv() -> KvCacheV2 {
+        // 1024 usable blocks, prefix cache off.
+        KvCacheV2::new(crate::kvcache::KvV2Config::new(1025, 16, 128))
     }
 
     fn sched(max_seqs: usize, policy: SchedulerPolicy) -> Scheduler {
@@ -180,6 +205,7 @@ mod tests {
             max_num_seqs: max_seqs,
             max_batched_tokens: 4096,
             policy,
+            preempt: PreemptMode::Recompute,
         })
     }
 
@@ -242,8 +268,9 @@ mod tests {
     #[test]
     fn respects_kv_capacity_fcfs() {
         let s = sched(64, SchedulerPolicy::PrefillPriority);
-        let mut small_kv = KvCacheManager::new(9, 16, 8); // 8 usable blocks
-        small_kv.admit(99, 100).unwrap(); // 7 blocks -> 1 free
+        // 8 usable blocks.
+        let mut small_kv = KvCacheV2::new(crate::kvcache::KvV2Config::new(9, 16, 8));
+        small_kv.admit(99, &[1; 100]).unwrap(); // 7 blocks -> 1 free
         // First prompt needs 2 blocks: blocked; FCFS means nothing admits
         // even though the second would fit.
         let mut waiting = VecDeque::new();
@@ -254,6 +281,30 @@ mod tests {
             s.decide(&waiting, &running, &small_kv),
             ScheduleDecision::Decode
         );
+    }
+
+    #[test]
+    fn prefix_hits_reduce_the_charged_blocks() {
+        let s = sched(64, SchedulerPolicy::PrefillPriority);
+        let mut cfg = crate::kvcache::KvV2Config::new(7, 16, 8); // 6 usable
+        cfg.prefix_cache = true;
+        let mut kv = KvCacheV2::new(cfg);
+        // Seed the cache with a 3-full-block prompt, then free it so
+        // the blocks are reclaimable-but-cached.
+        let donor = seq(50, 48);
+        kv.admit(50, &donor.token_ids).unwrap();
+        kv.free(50).unwrap();
+        // An identical prompt (same id => same synthetic tokens) is
+        // charged 0 net blocks even though gross need (3) exceeds the
+        // free list (3 free, 3 cached).
+        let mut waiting = VecDeque::new();
+        waiting.push_back(seq(50, 48));
+        waiting.push_back(seq(51, 48)); // distinct content: 3 net blocks
+        waiting.push_back(seq(52, 48)); // no blocks left for this one
+        match s.decide(&waiting, &[], &kv) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0, 1]),
+            d => panic!("{d:?}"),
+        }
     }
 
     #[test]

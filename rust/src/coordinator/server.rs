@@ -215,6 +215,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                             arrival: 0.0,
                             prompt_tokens: prompt_len,
                             output_tokens: max_tokens,
+                            prefix: None,
                         },
                         reply: reply_tx,
                         submitted_wall: std::time::Instant::now(),

@@ -9,6 +9,7 @@
 pub mod bca_figs;
 pub mod online_figs;
 pub mod phases;
+pub mod prefix_figs;
 pub mod replication_figs;
 pub mod roofline_figs;
 pub mod serving;
@@ -132,10 +133,10 @@ impl FigOpts {
 }
 
 /// All artefact ids: the paper's figures/tables in paper order, then
-/// the repo's own online-serving artefact.
+/// the repo's own online-serving and prefix-cache artefacts.
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "table1", "table2", "table3", "table4", "online",
+    "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix",
 ];
 
 /// Generate one artefact by id.
@@ -159,6 +160,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "table3" => stalls::table3(opts),
         "table4" => replication_figs::table4(opts),
         "online" => online_figs::online(opts),
+        "prefix" => prefix_figs::prefix_sweep(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

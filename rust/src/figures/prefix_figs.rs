@@ -1,0 +1,135 @@
+//! Prefix-cache artefact (beyond the paper's figure set): sweep the
+//! shared-prefix ratio × batch size and show what KV cache v2's prefix
+//! sharing buys — peak-block savings at (virtually) unchanged
+//! throughput, per the paper's thesis that memory allocation, not
+//! compute, is the large-batch bottleneck.
+//!
+//! Each grid point runs the *same* shared-prefix ShareGPT-like workload
+//! twice — prefix cache off (v1-equivalent allocation) and on — and
+//! reports the hit rate, the peak unique-block footprint of both runs,
+//! and the throughput delta (≈0 whenever blocks are not the binding
+//! constraint, which is exactly the claim worth seeing in a CSV).
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::coordinator::offline::OfflineConfig;
+use crate::models::spec::ModelSpec;
+use crate::util::par;
+use crate::workload::SharedPrefixConfig;
+
+/// Tokens in each synthetic system prompt (16 full 16-token blocks).
+const PREFIX_LEN: usize = 256;
+/// Distinct system prompts in the workload.
+const PREFIX_CLASSES: usize = 4;
+
+/// The `prefix` artefact: share-ratio × batch-size sweep for OPT-1.3B.
+pub fn prefix_sweep(opts: &FigOpts) -> Result<Vec<Table>> {
+    let shares: Vec<f64> = if opts.quick {
+        vec![0.0, 0.5, 1.0]
+    } else {
+        vec![0.0, 0.25, 0.5, 0.75, 1.0]
+    };
+    let batches: Vec<usize> = if opts.quick {
+        vec![32, 96]
+    } else {
+        vec![16, 32, 96, 192]
+    };
+    let n_req = (opts.requests() / 2).max(64);
+    let grid: Vec<(f64, usize)> = shares
+        .iter()
+        .flat_map(|&s| batches.iter().map(move |&b| (s, b)))
+        .collect();
+    let runs = par::par_map(&grid, |&(share, max_batch)| {
+        let run = |cache: bool| {
+            let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), max_batch);
+            cfg.prefix = Some(SharedPrefixConfig {
+                classes: PREFIX_CLASSES,
+                prefix_len: PREFIX_LEN,
+                share,
+            });
+            cfg.prefix_cache = cache;
+            cfg.run_sharegpt(n_req, opts.seed)
+        };
+        Ok((run(true)?, run(false)?))
+    });
+    let mut t = Table::new(
+        "prefix_sweep",
+        &format!(
+            "Prefix cache: peak blocks & throughput vs shared-prefix ratio \
+             (OPT-1.3B, {PREFIX_CLASSES} classes x {PREFIX_LEN}-token prefixes)"
+        ),
+        &[
+            "share",
+            "max_batch",
+            "hit_rate_pct",
+            "peak_blocks_on",
+            "peak_blocks_off",
+            "block_savings_pct",
+            "tput_on_tps",
+            "tput_off_tps",
+            "tput_delta_pct",
+        ],
+    );
+    for (&(share, max_batch), run) in grid.iter().zip(runs) {
+        let (on, off) = run?;
+        let savings = if off.peak_kv_blocks > 0 {
+            100.0 * (off.peak_kv_blocks as f64 - on.peak_kv_blocks as f64)
+                / off.peak_kv_blocks as f64
+        } else {
+            0.0
+        };
+        let tput_delta = if off.metrics.throughput_tps > 0.0 {
+            100.0 * (on.metrics.throughput_tps - off.metrics.throughput_tps)
+                / off.metrics.throughput_tps
+        } else {
+            0.0
+        };
+        t.push_row(vec![
+            format!("{share:.2}"),
+            max_batch.to_string(),
+            format!("{:.1}", 100.0 * on.prefix_cache.hit_rate()),
+            on.peak_kv_blocks.to_string(),
+            off.peak_kv_blocks.to_string(),
+            format!("{savings:.1}"),
+            format!("{:.0}", on.metrics.throughput_tps),
+            format!("{:.0}", off.metrics.throughput_tps),
+            format!("{tput_delta:.2}"),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_artefact_shows_block_savings_at_full_share() {
+        let tables = prefix_sweep(&FigOpts::quick()).unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.name, "prefix_sweep");
+        assert_eq!(t.rows.len(), 3 * 2); // shares x batches
+        let share = t.col_f64("share");
+        let hit = t.col_f64("hit_rate_pct");
+        let on = t.col_f64("peak_blocks_on");
+        let off = t.col_f64("peak_blocks_off");
+        for i in 0..t.rows.len() {
+            if share[i] == 1.0 {
+                assert!(hit[i] > 0.0, "row {i}: no hits at full share");
+                assert!(
+                    on[i] < off[i],
+                    "row {i}: cache-on peak {} !< cache-off {}",
+                    on[i],
+                    off[i]
+                );
+            }
+        }
+        // More sharing => more hits (compare share extremes at equal
+        // batch; rows are share-major so batches align).
+        let half = share.iter().position(|&s| s == 0.5).unwrap();
+        let full = share.iter().position(|&s| s == 1.0).unwrap();
+        assert!(hit[full] >= hit[half]);
+    }
+}

@@ -31,6 +31,10 @@ pub struct GpuSpec {
     /// Fraction of device memory the serving framework may use
     /// (vLLM's `gpu_memory_utilization`, default 0.9 — paper Fig 11).
     pub mem_utilization: f64,
+    /// Effective host<->device PCIe bandwidth (bytes/s) — what KV swap
+    /// preemption transfers are costed at. H100 PCIe Gen5 x16 peaks at
+    /// 64 GB/s; ~80% is achievable on large pinned copies.
+    pub pcie_bw: f64,
     /// Fixed kernel launch + driver overhead per kernel (seconds).
     pub kernel_launch_s: f64,
 
@@ -75,6 +79,7 @@ impl GpuSpec {
             l2_bytes: 50 * 1024 * 1024,
             mem_bytes: 64 * 1024 * 1024 * 1024,
             mem_utilization: 0.90,
+            pcie_bw: 0.8 * 64.0e9,
             kernel_launch_s: 3.0e-6,
             c_util_b1: 1536.0,
             util_gamma_scale: 0.15,

@@ -25,12 +25,19 @@ pub enum Segment {
     /// is the average fraction of peak DRAM bandwidth it consumes when
     /// running alone (from `StepSim::mean_dram_read_util` + writes).
     Gpu { duration: f64, dram_demand: f64 },
+    /// Host-link (PCIe) KV swap transfer: occupies the engine like a
+    /// CPU gap — it rides the PCIe link, not the SMs, and its DRAM
+    /// touch is far below saturation — but is kept distinct so swap
+    /// cost stays visible in traces.
+    Swap { duration: f64 },
 }
 
 impl Segment {
     pub fn duration(&self) -> f64 {
         match self {
-            Segment::Cpu { duration } | Segment::Gpu { duration, .. } => *duration,
+            Segment::Cpu { duration }
+            | Segment::Gpu { duration, .. }
+            | Segment::Swap { duration } => *duration,
         }
     }
 }
@@ -219,7 +226,9 @@ fn next_state(trace: &[Segment], idx: &mut usize, now: f64) -> RunState {
     let seg = trace[*idx];
     *idx += 1;
     match seg {
-        Segment::Cpu { duration } => RunState::Cpu {
+        // Swap transfers progress like CPU gaps: the PCIe link is not
+        // the contended resource this model shares (DRAM bandwidth).
+        Segment::Cpu { duration } | Segment::Swap { duration } => RunState::Cpu {
             remaining: duration,
         },
         Segment::Gpu {

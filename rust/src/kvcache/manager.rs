@@ -1,4 +1,10 @@
-//! Block allocator + per-sequence block tables.
+//! Block allocator + per-sequence block tables (v1).
+//!
+//! This is the original exclusive-ownership manager, kept as the golden
+//! reference for the ref-counted [`super::v2`] manager (the same role
+//! `simulate_*_step_reference` plays for the compiled step plans): with
+//! the prefix cache disabled, v2 must allocate bit-identically to v1 —
+//! asserted by `rust/tests/kv_v2.rs`.
 //!
 //! Invariants (enforced here, property-tested in `rust/tests/proptests.rs`):
 //! - a physical block belongs to at most one sequence;
@@ -6,7 +12,7 @@
 //! - `free + allocated == num_blocks - 1` at all times;
 //! - a sequence's slots are `table[pos / bs] * bs + pos % bs`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use thiserror::Error;
 
@@ -38,6 +44,15 @@ pub enum KvError {
         seq: SeqId,
         /// The configured per-sequence block cap.
         max: usize,
+    },
+    /// The CPU swap pool cannot hold the sequence being swapped out
+    /// (v2 swap preemption falls back to recompute on this).
+    #[error("CPU swap pool full: need {need}, free {free}")]
+    CpuPoolFull {
+        /// Blocks the swap-out needed.
+        need: usize,
+        /// CPU-pool blocks currently free.
+        free: usize,
     },
 }
 
@@ -129,12 +144,16 @@ struct SeqState {
 }
 
 /// Per-sequence block tables on top of the allocator.
+///
+/// Sequences live in a `BTreeMap` so every iteration-order-dependent
+/// path is bit-deterministic (matching the PR 3 metrics-collector fix);
+/// a `HashMap` here made float sums over sequences run-order dependent.
 #[derive(Debug, Clone)]
 pub struct KvCacheManager {
     alloc: BlockAllocator,
     block_size: usize,
     max_blocks_per_seq: usize,
-    seqs: HashMap<SeqId, SeqState>,
+    seqs: BTreeMap<SeqId, SeqState>,
 }
 
 impl KvCacheManager {
@@ -145,7 +164,7 @@ impl KvCacheManager {
             alloc: BlockAllocator::new(num_blocks),
             block_size,
             max_blocks_per_seq,
-            seqs: HashMap::new(),
+            seqs: BTreeMap::new(),
         }
     }
 

@@ -11,10 +11,18 @@
 //! `gpu.mem_utilization` of device memory; weights are resident; the
 //! remainder is KV blocks. This is what the paper's Figs 3/11/12 (KV
 //! usage) and the BCA memory plan are computed from.
+//!
+//! Two managers share this accounting: [`manager`] (v1 — exclusive
+//! block ownership, the golden reference) and [`v2`] (ref-counted
+//! blocks with a hash-based prefix cache, copy-on-write, and a CPU swap
+//! pool — what the engine runs on). With the prefix cache disabled, v2
+//! allocates bit-identically to v1.
 
 pub mod manager;
+pub mod v2;
 
 pub use manager::{BlockAllocator, KvCacheManager, SeqId};
+pub use v2::{KvCacheV2, KvV2Config, PrefixCacheStats};
 
 use crate::gpusim::hardware::GpuSpec;
 use crate::models::spec::ModelSpec;

@@ -1,0 +1,792 @@
+//! KV cache v2: ref-counted blocks, prefix sharing, COW, swap.
+//!
+//! The v2 manager generalizes the exclusive-ownership v1 allocator
+//! ([`super::manager`], kept as the golden reference) along the three
+//! memory-allocation levers the paper's analysis points at:
+//!
+//! - **Ref-counted physical blocks + prefix cache** — every *full*
+//!   prompt block is content-addressed by a chained token hash (vLLM
+//!   automatic-prefix-caching style). Admitting a sequence first walks
+//!   the cache over its leading full blocks and shares every hit
+//!   (`ref_count += 1`), then allocates only the *net new* blocks.
+//!   Blocks whose last reference drops are not freed immediately: they
+//!   park on an LRU of unreferenced-but-cached blocks and are evicted
+//!   (hash unregistered, block reused) only when the free list runs
+//!   dry — so idle memory doubles as prefix-cache capacity.
+//! - **Copy-on-write** — appending into a block that is shared
+//!   (`ref_count > 1`, e.g. after [`KvCacheV2::fork`], the beam-search /
+//!   parallel-sampling hook) first copies it to a private block; a
+//!   shared block is never mutated.
+//! - **Swap preemption** — [`KvCacheV2::swap_out`] moves a victim's
+//!   blocks to a bounded CPU pool and [`KvCacheV2::swap_in`]
+//!   re-materializes them, so the engine can preempt without discarding
+//!   computed KV. The engine costs both directions as PCIe transfer
+//!   segments (`gpusim::mps::Segment::Swap`).
+//!
+//! Determinism: all per-sequence state is in `BTreeMap`s, the free list
+//! is the same LIFO vector as v1, and the LRU is a FIFO `VecDeque` —
+//! every decision is bit-reproducible. With the prefix cache disabled
+//! the allocation sequence is identical to v1 (`rust/tests/kv_v2.rs`).
+//!
+//! Pool invariant (property-tested in `rust/tests/proptests.rs`):
+//! `free + cached_unreferenced + unique_allocated == num_blocks - 1`
+//! (block 0 stays reserved for padded rows, as in v1).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::manager::{KvError, SeqId};
+use crate::util::rng::mix64;
+
+/// Chained content hash of one full block given its predecessor's hash
+/// (so a block's key encodes the *whole* token prefix, not just its own
+/// slice — vLLM's prefix-caching key).
+fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = mix64(prev ^ 0x517C_C1B7_2722_0A95);
+    for &t in tokens {
+        h = mix64(h ^ (t as u64));
+    }
+    h
+}
+
+/// Hash seed for the first block of a sequence's chain.
+const CHAIN_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Counters of the prefix cache (and the COW/eviction churn around it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Full prompt blocks probed against the cache at admit time.
+    pub queries: u64,
+    /// Probes that found a cached block to share.
+    pub hits: u64,
+    /// Unreferenced cached blocks reclaimed to satisfy allocations.
+    pub evictions: u64,
+    /// Copy-on-write block copies (append into a shared block).
+    pub cow_copies: u64,
+}
+
+impl PrefixCacheStats {
+    /// Fraction of probed full blocks served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.queries as f64
+        }
+    }
+}
+
+/// Configuration of a [`KvCacheV2`] pool.
+#[derive(Debug, Clone)]
+pub struct KvV2Config {
+    /// Physical GPU blocks, including the reserved dummy block 0.
+    pub num_blocks: usize,
+    /// Token slots per physical block.
+    pub block_size: usize,
+    /// Per-sequence block cap (the context window in blocks).
+    pub max_blocks_per_seq: usize,
+    /// Enable hash-based sharing of full prompt blocks.
+    pub prefix_cache: bool,
+    /// CPU-pool capacity (blocks) available to swap preemption.
+    pub cpu_pool_blocks: usize,
+}
+
+impl KvV2Config {
+    /// A v1-compatible pool: prefix cache off, CPU pool sized like the
+    /// GPU pool.
+    pub fn new(num_blocks: usize, block_size: usize, max_blocks_per_seq: usize) -> Self {
+        Self {
+            num_blocks,
+            block_size,
+            max_blocks_per_seq,
+            prefix_cache: false,
+            cpu_pool_blocks: num_blocks,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqV2 {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+struct SwappedSeq {
+    blocks: usize,
+    tokens: usize,
+}
+
+/// Ref-counted paged KV manager with prefix cache and swap pool.
+#[derive(Debug, Clone)]
+pub struct KvCacheV2 {
+    cfg: KvV2Config,
+    /// LIFO free list, initialized exactly like v1 (low ids out first).
+    free: Vec<u32>,
+    /// Sequence references per physical block (cache residency is not a
+    /// reference; an unreferenced cached block sits on `lru`).
+    ref_count: Vec<u32>,
+    /// Chained content hash of a block while it is registered in the
+    /// cache (None = private / never hashed).
+    hash_of: Vec<Option<u64>>,
+    /// Prefix cache: chained hash -> physical block.
+    cache: BTreeMap<u64, u32>,
+    /// Unreferenced cached blocks, oldest first (eviction order).
+    /// Claims and displacements remove by linear scan — fine while the
+    /// parked set stays small relative to admissions; switch to an
+    /// index-mapped LRU if prefix churn ever dominates profiles.
+    lru: VecDeque<u32>,
+    seqs: BTreeMap<SeqId, SeqV2>,
+    swapped: BTreeMap<SeqId, SwappedSeq>,
+    cpu_blocks_used: usize,
+    /// Blocks with `ref_count > 0` (unique, shared blocks count once).
+    in_use: usize,
+    peak_in_use: usize,
+    stats: PrefixCacheStats,
+}
+
+impl KvCacheV2 {
+    /// Build a pool from `cfg` (see [`KvV2Config::new`] for the
+    /// v1-compatible shorthand).
+    pub fn new(cfg: KvV2Config) -> Self {
+        assert!(cfg.num_blocks >= 1, "need at least the reserved block");
+        let free: Vec<u32> = (1..cfg.num_blocks as u32).rev().collect();
+        let n = cfg.num_blocks;
+        Self {
+            cfg,
+            free,
+            ref_count: vec![0; n],
+            hash_of: vec![None; n],
+            cache: BTreeMap::new(),
+            lru: VecDeque::new(),
+            seqs: BTreeMap::new(),
+            swapped: BTreeMap::new(),
+            cpu_blocks_used: 0,
+            in_use: 0,
+            peak_in_use: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    // --- geometry & accounting -------------------------------------------
+
+    /// Token slots per physical block.
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Per-sequence block cap (the context-window limit in blocks).
+    pub fn max_blocks_per_seq(&self) -> usize {
+        self.cfg.max_blocks_per_seq
+    }
+
+    /// Total physical blocks (including the reserved dummy block 0).
+    pub fn num_blocks(&self) -> usize {
+        self.cfg.num_blocks
+    }
+
+    /// Usable capacity (excludes the reserved block).
+    pub fn capacity(&self) -> usize {
+        self.cfg.num_blocks - 1
+    }
+
+    /// Blocks on the free list (excludes reclaimable cached blocks).
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Unreferenced blocks kept alive only by the prefix cache.
+    pub fn cached_unreferenced_blocks(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Blocks an allocation may draw from: free list + evictable cache.
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.free.len() + self.lru.len()
+    }
+
+    /// Unique blocks currently referenced by at least one sequence.
+    pub fn allocated_blocks(&self) -> usize {
+        self.in_use
+    }
+
+    /// High-water mark of referenced unique blocks.
+    pub fn peak_allocated_blocks(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Fraction of usable blocks currently referenced.
+    pub fn usage(&self) -> f64 {
+        self.in_use as f64 / self.capacity().max(1) as f64
+    }
+
+    /// Peak fraction of usable blocks ever referenced.
+    pub fn peak_usage(&self) -> f64 {
+        self.peak_in_use as f64 / self.capacity().max(1) as f64
+    }
+
+    /// Number of sequences currently resident on the GPU pool.
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Number of sequences parked in the CPU swap pool.
+    pub fn num_swapped(&self) -> usize {
+        self.swapped.len()
+    }
+
+    /// CPU-pool blocks currently occupied by swapped sequences.
+    pub fn cpu_blocks_used(&self) -> usize {
+        self.cpu_blocks_used
+    }
+
+    /// Prefix-cache / COW counters.
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.stats
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.cfg.block_size - 1) / self.cfg.block_size
+    }
+
+    /// Gross blocks a prompt of `prompt` tokens would occupy.
+    pub fn blocks_needed(&self, prompt: usize) -> usize {
+        self.blocks_for(prompt.max(1))
+    }
+
+    /// Blocks a prompt actually needs to *allocate* after prefix-cache
+    /// hits. Equals [`Self::blocks_needed`] when the cache is disabled.
+    pub fn net_blocks_needed(&self, tokens: &[i32]) -> usize {
+        let gross = self.blocks_needed(tokens.len());
+        gross - self.probe(tokens).len()
+    }
+
+    /// Blocks admitting this prompt removes from the reclaimable pool:
+    /// net new allocations plus cached-but-unreferenced hit blocks the
+    /// admit re-references (pulling them off the eviction LRU). This is
+    /// what the scheduler charges admission against — when the shared
+    /// prefix is held live by running sequences it degenerates to the
+    /// net-new-block count, and with the cache disabled to v1's gross
+    /// count. The charge is conservative: an admit directly after a
+    /// `decide` that budgeted it can never run out of blocks.
+    pub fn charged_blocks_needed(&self, tokens: &[i32]) -> usize {
+        let gross = self.blocks_needed(tokens.len());
+        let hits = self.probe(tokens);
+        let zero_ref = hits
+            .iter()
+            .filter(|&&(_, b)| self.ref_count[b as usize] == 0)
+            .count();
+        gross - hits.len() + zero_ref
+    }
+
+    /// Cached blocks matching the leading full blocks of `tokens`, in
+    /// chain order (read-only probe; no LRU/stat mutation).
+    fn probe(&self, tokens: &[i32]) -> Vec<(u64, u32)> {
+        let mut out = Vec::new();
+        if !self.cfg.prefix_cache {
+            return out;
+        }
+        let bs = self.cfg.block_size;
+        let mut h = CHAIN_SEED;
+        for chunk in tokens.chunks_exact(bs) {
+            h = chain_hash(h, chunk);
+            match self.cache.get(&h) {
+                Some(&b) => out.push((h, b)),
+                None => break,
+            }
+        }
+        out
+    }
+
+    // --- allocation core -------------------------------------------------
+
+    /// Allocate `n` private (refcount-1) blocks: the free list first
+    /// (taken as one `split_off` slice, matching v1's `alloc` order bit
+    /// for bit), then LRU-evicted cached blocks. All-or-nothing.
+    fn alloc_private(&mut self, n: usize) -> Result<Vec<u32>, KvError> {
+        if self.reclaimable_blocks() < n {
+            return Err(KvError::OutOfBlocks {
+                need: n,
+                free: self.reclaimable_blocks(),
+            });
+        }
+        let from_free = n.min(self.free.len());
+        let at = self.free.len() - from_free;
+        let mut out = self.free.split_off(at);
+        while out.len() < n {
+            let b = self.lru.pop_front().expect("reclaimable_blocks checked");
+            if let Some(h) = self.hash_of[b as usize].take() {
+                // Only unregister if the cache still maps this hash to
+                // us (a re-admit may have re-keyed the hash elsewhere).
+                if self.cache.get(&h) == Some(&b) {
+                    self.cache.remove(&h);
+                }
+            }
+            self.stats.evictions += 1;
+            out.push(b);
+        }
+        for &b in &out {
+            debug_assert_eq!(self.ref_count[b as usize], 0);
+            self.ref_count[b as usize] = 1;
+        }
+        self.in_use += n;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Ok(out)
+    }
+
+    /// Drop one reference to `b`; unreferenced blocks go to the LRU if
+    /// cached, otherwise straight back to the free list.
+    fn unref(&mut self, b: u32) {
+        let rc = &mut self.ref_count[b as usize];
+        debug_assert!(*rc > 0, "unref of unreferenced block {b}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.in_use -= 1;
+            let still_cached = self.hash_of[b as usize]
+                .map(|h| self.cache.get(&h) == Some(&b))
+                .unwrap_or(false);
+            if still_cached {
+                self.lru.push_back(b);
+            } else {
+                self.hash_of[b as usize] = None;
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Register `b` in the cache under `h`, displacing a stale entry.
+    fn register(&mut self, h: u64, b: u32) {
+        if let Some(old) = self.cache.insert(h, b) {
+            if old != b {
+                // The displaced block keeps running on its references
+                // but is no longer addressable; if it was parked on the
+                // LRU it becomes plain free memory.
+                self.hash_of[old as usize] = None;
+                if let Some(pos) = self.lru.iter().position(|&x| x == old) {
+                    self.lru.remove(pos);
+                    self.free.push(old);
+                }
+            }
+        }
+        self.hash_of[b as usize] = Some(h);
+    }
+
+    // --- sequence lifecycle ----------------------------------------------
+
+    /// Register a sequence and allocate blocks for its prompt, sharing
+    /// every leading full block the prefix cache already holds. The
+    /// token slice is the prompt content (v1 took only a length; v2
+    /// needs content to address the cache).
+    pub fn admit(&mut self, id: SeqId, tokens: &[i32]) -> Result<(), KvError> {
+        if self.seqs.contains_key(&id) || self.swapped.contains_key(&id) {
+            return Err(KvError::DuplicateSeq(id));
+        }
+        let len = tokens.len().max(1);
+        let need_total = self.blocks_for(len);
+        if need_total > self.cfg.max_blocks_per_seq {
+            return Err(KvError::SeqTooLong {
+                seq: id,
+                max: self.cfg.max_blocks_per_seq,
+            });
+        }
+        let bs = self.cfg.block_size;
+        let full = tokens.len() / bs;
+        let hits = self.probe(tokens);
+        // Capacity check before any mutation: zero-ref hit blocks leave
+        // the LRU when claimed, so they cannot also back fresh blocks.
+        let zero_ref_hits = hits
+            .iter()
+            .filter(|&&(_, b)| self.ref_count[b as usize] == 0)
+            .count();
+        let net = need_total - hits.len();
+        if self.reclaimable_blocks() < net + zero_ref_hits {
+            // zero_ref_hits <= lru.len() <= reclaimable, so this is the
+            // pool actually available for fresh blocks.
+            return Err(KvError::OutOfBlocks {
+                need: net,
+                free: self.reclaimable_blocks() - zero_ref_hits,
+            });
+        }
+        if self.cfg.prefix_cache {
+            self.stats.queries += full as u64;
+            self.stats.hits += hits.len() as u64;
+        }
+        // Claim the shared prefix.
+        let mut blocks = Vec::with_capacity(need_total);
+        let mut h = CHAIN_SEED;
+        for &(hash, b) in &hits {
+            if self.ref_count[b as usize] == 0 {
+                let pos = self
+                    .lru
+                    .iter()
+                    .position(|&x| x == b)
+                    .expect("zero-ref cached block must be on the LRU");
+                self.lru.remove(pos);
+                self.in_use += 1;
+            }
+            self.ref_count[b as usize] += 1;
+            blocks.push(b);
+            h = hash;
+        }
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        // Allocate and (for full blocks) register the rest of the chain.
+        let fresh = self.alloc_private(net)?;
+        for (i, &b) in fresh.iter().enumerate() {
+            let block_idx = hits.len() + i;
+            if self.cfg.prefix_cache && block_idx < full {
+                let chunk = &tokens[block_idx * bs..(block_idx + 1) * bs];
+                h = chain_hash(h, chunk);
+                self.register(h, b);
+            }
+            blocks.push(b);
+        }
+        self.seqs.insert(id, SeqV2 { blocks, tokens: len });
+        Ok(())
+    }
+
+    /// Extend a sequence by one generated token. Allocates a block at
+    /// block boundaries and copies-on-write when the written block is
+    /// shared. Returns true when a new physical block was taken.
+    pub fn append_token(&mut self, id: SeqId) -> Result<bool, KvError> {
+        let bs = self.cfg.block_size;
+        let max_blocks = self.cfg.max_blocks_per_seq;
+        let state = self.seqs.get(&id).ok_or(KvError::UnknownSeq(id))?;
+        let new_tokens = state.tokens + 1;
+        let need = (new_tokens + bs - 1) / bs;
+        if need > max_blocks {
+            return Err(KvError::SeqTooLong {
+                seq: id,
+                max: max_blocks,
+            });
+        }
+        if need > state.blocks.len() {
+            let fresh = self.alloc_private(1)?;
+            let state = self.seqs.get_mut(&id).unwrap();
+            state.blocks.extend(fresh);
+            state.tokens = new_tokens;
+            return Ok(true);
+        }
+        // Writing into the tail block: copy first if it is shared.
+        let tail = state.blocks[need - 1];
+        if self.ref_count[tail as usize] > 1 {
+            let fresh = self.alloc_private(1)?;
+            let copy = fresh[0];
+            self.unref(tail);
+            self.stats.cow_copies += 1;
+            let state = self.seqs.get_mut(&id).unwrap();
+            state.blocks[need - 1] = copy;
+            state.tokens = new_tokens;
+            return Ok(true);
+        }
+        self.seqs.get_mut(&id).unwrap().tokens = new_tokens;
+        Ok(false)
+    }
+
+    /// Fork `child` from `parent`: the child shares every block
+    /// (including a partial tail, which the first divergent append will
+    /// copy-on-write). The beam-search / parallel-sampling hook.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<(), KvError> {
+        if self.seqs.contains_key(&child) || self.swapped.contains_key(&child) {
+            return Err(KvError::DuplicateSeq(child));
+        }
+        let state = self.seqs.get(&parent).ok_or(KvError::UnknownSeq(parent))?;
+        let cloned = SeqV2 {
+            blocks: state.blocks.clone(),
+            tokens: state.tokens,
+        };
+        for &b in &cloned.blocks {
+            debug_assert!(self.ref_count[b as usize] > 0);
+            self.ref_count[b as usize] += 1;
+        }
+        self.seqs.insert(child, cloned);
+        Ok(())
+    }
+
+    /// Release a finished (or recompute-preempted) sequence. Blocks
+    /// whose last reference drops stay reclaimable through the prefix
+    /// cache when they are registered in it.
+    pub fn free(&mut self, id: SeqId) -> Result<(), KvError> {
+        let state = self.seqs.remove(&id).ok_or(KvError::UnknownSeq(id))?;
+        for b in state.blocks {
+            self.unref(b);
+        }
+        Ok(())
+    }
+
+    // --- swap preemption -------------------------------------------------
+
+    /// Move a sequence's blocks to the CPU pool (swap preemption).
+    /// Returns the number of blocks transferred; the GPU copies are
+    /// released. Fails with [`KvError::CpuPoolFull`] when the pool
+    /// cannot hold the sequence (callers fall back to recompute).
+    ///
+    /// Deliberately conservative about prefix sharing: the whole block
+    /// table is transferred and [`Self::swap_in`] re-materializes it as
+    /// private blocks without re-probing the cache, so a round-trip
+    /// un-shares any cached prefix the victim held. That overstates the
+    /// swap cost of shared prefixes slightly; re-probing at swap-in is
+    /// the natural refinement if it ever matters.
+    pub fn swap_out(&mut self, id: SeqId) -> Result<usize, KvError> {
+        let state = self.seqs.get(&id).ok_or(KvError::UnknownSeq(id))?;
+        let n = state.blocks.len();
+        let cpu_free = self.cfg.cpu_pool_blocks - self.cpu_blocks_used;
+        if n > cpu_free {
+            return Err(KvError::CpuPoolFull {
+                need: n,
+                free: cpu_free,
+            });
+        }
+        let state = self.seqs.remove(&id).unwrap();
+        let tokens = state.tokens;
+        for b in state.blocks {
+            self.unref(b);
+        }
+        self.cpu_blocks_used += n;
+        self.swapped.insert(id, SwappedSeq { blocks: n, tokens });
+        Ok(n)
+    }
+
+    /// GPU blocks a swapped sequence needs to come back (None when the
+    /// sequence is not in the CPU pool).
+    pub fn swapped_need(&self, id: SeqId) -> Option<usize> {
+        self.swapped.get(&id).map(|s| s.blocks)
+    }
+
+    /// Bring a swapped sequence back onto the GPU pool. Returns the
+    /// number of blocks transferred.
+    pub fn swap_in(&mut self, id: SeqId) -> Result<usize, KvError> {
+        let entry = self.swapped.get(&id).ok_or(KvError::UnknownSeq(id))?;
+        let n = entry.blocks;
+        let blocks = self.alloc_private(n)?; // leaves the swap entry on failure
+        let entry = self.swapped.remove(&id).unwrap();
+        self.cpu_blocks_used -= n;
+        self.seqs.insert(
+            id,
+            SeqV2 {
+                blocks,
+                tokens: entry.tokens,
+            },
+        );
+        Ok(n)
+    }
+
+    // --- lookups the engine builds step batches from ---------------------
+
+    /// Tokens with reserved slots for sequence `id` (None if unknown or
+    /// swapped out).
+    pub fn tokens_of(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.tokens)
+    }
+
+    /// The sequence's physical block table (padded externally).
+    pub fn block_table(&self, id: SeqId) -> Option<&[u32]> {
+        self.seqs.get(&id).map(|s| s.blocks.as_slice())
+    }
+
+    /// Physical slot of logical position `pos` in sequence `id`.
+    pub fn slot_for(&self, id: SeqId, pos: usize) -> Option<u32> {
+        let s = self.seqs.get(&id)?;
+        let b = s.blocks.get(pos / self.cfg.block_size)?;
+        Some(b * self.cfg.block_size as u32 + (pos % self.cfg.block_size) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(seed: u64, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|p| (1 + (mix64(seed.wrapping_add(p as u64)) % 1000)) as i32)
+            .collect()
+    }
+
+    fn cache_on(num_blocks: usize) -> KvCacheV2 {
+        let mut cfg = KvV2Config::new(num_blocks, 16, 64);
+        cfg.prefix_cache = true;
+        KvCacheV2::new(cfg)
+    }
+
+    #[test]
+    fn plain_mode_matches_v1_semantics() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(64, 16, 8));
+        kv.admit(1, &toks(1, 20)).unwrap(); // 2 blocks
+        let table = kv.block_table(1).unwrap().to_vec();
+        assert_eq!(table.len(), 2);
+        assert_eq!(kv.slot_for(1, 0), Some(table[0] * 16));
+        assert_eq!(kv.slot_for(1, 17), Some(table[1] * 16 + 1));
+        assert!(kv.append_token(1).is_ok());
+        assert_eq!(kv.allocated_blocks(), 2);
+        kv.free(1).unwrap();
+        assert_eq!(kv.allocated_blocks(), 0);
+        assert_eq!(kv.free_blocks(), 63);
+        assert_eq!(kv.stats(), PrefixCacheStats::default());
+    }
+
+    #[test]
+    fn shared_prefix_allocates_net_new_blocks_only() {
+        let mut kv = cache_on(256);
+        let prefix = toks(99, 32); // 2 full shared blocks
+        let mut a = prefix.clone();
+        a.extend(toks(1, 20));
+        let mut b = prefix.clone();
+        b.extend(toks(2, 20));
+        kv.admit(1, &a).unwrap(); // 4 blocks (52 tokens)
+        assert_eq!(kv.allocated_blocks(), 4);
+        assert_eq!(kv.net_blocks_needed(&b), 2);
+        kv.admit(2, &b).unwrap(); // shares 2, allocates 2
+        assert_eq!(kv.allocated_blocks(), 6);
+        assert_eq!(kv.stats().hits, 2);
+        // The shared blocks are literally the same physical ids.
+        assert_eq!(
+            kv.block_table(1).unwrap()[..2],
+            kv.block_table(2).unwrap()[..2]
+        );
+        // Freeing one owner keeps the prefix alive for the other.
+        kv.free(1).unwrap();
+        assert_eq!(kv.allocated_blocks(), 4);
+        kv.free(2).unwrap();
+        assert_eq!(kv.allocated_blocks(), 0);
+        // The whole chain is now unreferenced-but-cached.
+        assert!(kv.cached_unreferenced_blocks() > 0);
+        assert_eq!(
+            kv.free_blocks() + kv.cached_unreferenced_blocks(),
+            kv.capacity()
+        );
+    }
+
+    #[test]
+    fn freed_prefixes_rehit_and_evict_under_pressure() {
+        let mut kv = cache_on(8); // 7 usable
+        let t = toks(7, 48); // 3 full blocks
+        kv.admit(1, &t).unwrap();
+        kv.free(1).unwrap();
+        assert_eq!(kv.cached_unreferenced_blocks(), 3);
+        // Re-admit: full hit, nothing newly allocated.
+        kv.admit(2, &t).unwrap();
+        assert_eq!(kv.stats().hits, 3);
+        assert_eq!(kv.free_blocks(), 4);
+        // A big private admit forces eviction of nothing (blocks are
+        // referenced again) but fails if it cannot fit.
+        assert!(matches!(
+            kv.admit(3, &toks(8, 90)),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+        kv.free(2).unwrap();
+        // Now the cached chain is evictable: 6 blocks fit (4 free + 2
+        // evicted), and the pool invariant holds throughout.
+        kv.admit(3, &toks(8, 90)).unwrap();
+        assert!(kv.stats().evictions >= 2);
+        assert_eq!(
+            kv.free_blocks() + kv.cached_unreferenced_blocks() + kv.allocated_blocks(),
+            kv.capacity()
+        );
+    }
+
+    #[test]
+    fn cow_copies_shared_tail_and_leaves_parent_intact() {
+        let mut kv = cache_on(64);
+        kv.admit(1, &toks(5, 24)).unwrap(); // 1 full + 1 partial block
+        let parent_table = kv.block_table(1).unwrap().to_vec();
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.block_table(2).unwrap(), parent_table.as_slice());
+        assert_eq!(kv.allocated_blocks(), 2); // fully shared
+        // Child appends into the shared partial tail -> COW.
+        assert!(kv.append_token(2).unwrap());
+        assert_eq!(kv.stats().cow_copies, 1);
+        let child_table = kv.block_table(2).unwrap().to_vec();
+        assert_eq!(kv.block_table(1).unwrap(), parent_table.as_slice());
+        assert_eq!(child_table[0], parent_table[0]);
+        assert_ne!(child_table[1], parent_table[1]);
+        assert_eq!(kv.allocated_blocks(), 3);
+        // Parent appends stay in its (now private) tail.
+        assert!(!kv.append_token(1).unwrap());
+        kv.free(1).unwrap();
+        kv.free(2).unwrap();
+        assert_eq!(kv.allocated_blocks(), 0);
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_geometry() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(32, 16, 8));
+        kv.admit(1, &toks(3, 40)).unwrap(); // 3 blocks
+        let moved = kv.swap_out(1).unwrap();
+        assert_eq!(moved, 3);
+        assert_eq!(kv.allocated_blocks(), 0);
+        assert_eq!(kv.cpu_blocks_used(), 3);
+        assert_eq!(kv.num_swapped(), 1);
+        assert_eq!(kv.tokens_of(1), None);
+        assert_eq!(kv.swapped_need(1), Some(3));
+        let back = kv.swap_in(1).unwrap();
+        assert_eq!(back, 3);
+        assert_eq!(kv.tokens_of(1), Some(40));
+        assert_eq!(kv.block_table(1).unwrap().len(), 3);
+        assert_eq!(kv.cpu_blocks_used(), 0);
+        kv.append_token(1).unwrap();
+        kv.free(1).unwrap();
+    }
+
+    #[test]
+    fn cpu_pool_capacity_is_enforced() {
+        let mut cfg = KvV2Config::new(32, 16, 8);
+        cfg.cpu_pool_blocks = 2;
+        let mut kv = KvCacheV2::new(cfg);
+        kv.admit(1, &toks(1, 40)).unwrap(); // 3 blocks > pool of 2
+        assert!(matches!(
+            kv.swap_out(1),
+            Err(KvError::CpuPoolFull { need: 3, free: 2 })
+        ));
+        // The failed swap-out must leave the sequence untouched.
+        assert_eq!(kv.tokens_of(1), Some(40));
+        assert_eq!(kv.allocated_blocks(), 3);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_seqs() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(64, 16, 8));
+        kv.admit(1, &toks(1, 5)).unwrap();
+        assert_eq!(kv.admit(1, &toks(1, 5)), Err(KvError::DuplicateSeq(1)));
+        assert_eq!(kv.free(9), Err(KvError::UnknownSeq(9)));
+        assert_eq!(kv.append_token(9), Err(KvError::UnknownSeq(9)));
+        assert_eq!(kv.fork(9, 10), Err(KvError::UnknownSeq(9)));
+        kv.swap_out(1).unwrap();
+        // Swapped ids stay reserved.
+        assert_eq!(kv.admit(1, &toks(1, 5)), Err(KvError::DuplicateSeq(1)));
+        assert_eq!(kv.swap_in(2), Err(KvError::UnknownSeq(2)));
+    }
+
+    #[test]
+    fn seq_length_cap_enforced() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(64, 16, 2));
+        assert!(matches!(
+            kv.admit(1, &toks(1, 40)),
+            Err(KvError::SeqTooLong { .. })
+        ));
+        kv.admit(2, &toks(2, 31)).unwrap();
+        kv.append_token(2).unwrap(); // 32 tokens = 2 blocks, ok
+        assert!(matches!(kv.append_token(2), Err(KvError::SeqTooLong { .. })));
+    }
+
+    #[test]
+    fn hits_are_deterministic_per_content() {
+        let ops = |kv: &mut KvCacheV2| {
+            for id in 0..6u64 {
+                let mut t = toks(42, 32);
+                t.extend(toks(id, 16));
+                kv.admit(id, &t).unwrap();
+            }
+            for id in 0..3u64 {
+                kv.free(id).unwrap();
+            }
+            (
+                kv.stats(),
+                (0..6u64)
+                    .filter_map(|id| kv.block_table(id).map(|b| b.to_vec()))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let a = ops(&mut cache_on(512));
+        let b = ops(&mut cache_on(512));
+        assert_eq!(a, b);
+        assert!(a.0.hits >= 10, "5 re-admits x 2 shared blocks: {:?}", a.0);
+    }
+}

@@ -35,11 +35,15 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
 
   serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
+            [--prefix-cache] [--preempt-mode recompute|swap]
+            [--prefix-classes N] [--prefix-len L] [--prefix-share F]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--pattern poisson|bursty] [--period S] [--duty F]
+            [--prefix-cache] [--preempt-mode recompute|swap]
+            [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
-            [--replicas 1,2,4] [--slo-itl-ms X]
+            [--replicas 1,2,4] [--slo-itl-ms X] [--csv PATH]
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -57,6 +61,33 @@ fn backend_arg(args: &Args) -> AttentionBackendKind {
         "flash" | "flashattention" => AttentionBackendKind::FlashAttention,
         _ => AttentionBackendKind::XFormers,
     }
+}
+
+fn preempt_arg(args: &Args) -> Result<memgap::coordinator::scheduler::PreemptMode> {
+    use memgap::coordinator::scheduler::PreemptMode;
+    Ok(match args.get_or("preempt-mode", "recompute") {
+        "recompute" => PreemptMode::Recompute,
+        "swap" => PreemptMode::Swap,
+        other => bail!("unknown --preempt-mode '{other}' (known: recompute, swap)"),
+    })
+}
+
+/// Shared-prefix workload shaping: present iff any `--prefix-*`
+/// workload flag is given (defaults: 4 classes x 256 tokens, share 1).
+fn prefix_args(args: &Args) -> Result<Option<memgap::workload::SharedPrefixConfig>> {
+    let any = args.has("prefix-classes") || args.has("prefix-len") || args.has("prefix-share");
+    if !any {
+        return Ok(None);
+    }
+    let share = f64_flag(args, "prefix-share")?.unwrap_or(1.0);
+    if !(0.0..=1.0).contains(&share) {
+        bail!("--prefix-share must be in [0, 1]");
+    }
+    Ok(Some(memgap::workload::SharedPrefixConfig {
+        classes: args.usize_or("prefix-classes", 4),
+        prefix_len: args.usize_or("prefix-len", 256),
+        share,
+    }))
 }
 
 fn main() -> Result<()> {
@@ -137,6 +168,9 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.input_len = args.usize_or("in", cfg.input_len);
     cfg.output_len = args.usize_or("out", cfg.output_len);
     cfg.chunked_prefill = args.bool_or("chunked-prefill", false);
+    cfg.prefix_cache = args.bool_or("prefix-cache", false);
+    cfg.preempt = preempt_arg(args)?;
+    cfg.prefix = prefix_args(args)?;
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
     println!("max batch        : {max_seqs}");
@@ -154,8 +188,28 @@ fn cmd_offline(args: &Args) -> Result<()> {
     println!("mean ITL         : {:.2} ms", r.metrics.mean_itl * 1e3);
     println!("mean E2E         : {:.2} s", r.metrics.mean_e2e);
     println!("peak KV usage    : {:.1} %", 100.0 * r.peak_kv_usage);
+    println!("peak KV blocks   : {}", r.peak_kv_blocks);
     println!("CPU-gap share    : {:.1} %", 100.0 * r.metrics.cpu_time_frac);
     println!("preemptions      : {}", r.preemptions);
+    if cfg.prefix_cache {
+        let s = r.prefix_cache;
+        println!(
+            "prefix hit rate  : {:.1} % ({} / {} full blocks; {} evictions, {} COW)",
+            100.0 * s.hit_rate(),
+            s.hits,
+            s.queries,
+            s.evictions,
+            s.cow_copies
+        );
+    }
+    if r.swap_outs > 0 {
+        println!(
+            "swap-outs        : {} ({} blocks over PCIe, {:.2} ms)",
+            r.swap_outs,
+            r.swap_blocks,
+            1e3 * r.swap_time
+        );
+    }
     Ok(())
 }
 
@@ -214,6 +268,9 @@ fn cmd_online(args: &Args) -> Result<()> {
     if !rate.is_finite() || rate <= 0.0 {
         bail!("--rate must be a positive number");
     }
+    cfg.engine.prefix_cache = args.bool_or("prefix-cache", false);
+    cfg.engine.preempt = preempt_arg(args)?;
+    cfg.workload.prefix = prefix_args(args)?;
     cfg.slo = slo_arg(args)?;
     let rep = run_online(&cfg)?;
     println!("model            : {}", rep.model);
@@ -247,6 +304,12 @@ fn cmd_online(args: &Args) -> Result<()> {
     println!("peak queue depth : {}", rep.peak_queue_depth);
     println!("peak KV usage    : {:.1} %", 100.0 * rep.peak_kv_usage);
     println!("preemptions      : {}", rep.preemptions);
+    if rep.prefix_hit_rate > 0.0 {
+        println!("prefix hit rate  : {:.1} %", 100.0 * rep.prefix_hit_rate);
+    }
+    if rep.swap_outs > 0 {
+        println!("swap-outs        : {}", rep.swap_outs);
+    }
     if let Some(path) = args.get("json") {
         std::fs::write(path, format!("{}\n", rep.to_json()))?;
         eprintln!("wrote {path}");
@@ -287,7 +350,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
         spec.name, cfg.batch_grid, cfg.replica_grid
     );
     let plan = plan_joint(&base, &reqs, &cfg)?;
-    println!("{}", online_figs::plan_table(&plan).to_markdown());
+    let table = online_figs::plan_table(&plan);
+    println!("{}", table.to_markdown());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, table.to_csv())?;
+        eprintln!("wrote {path}");
+    }
     match &plan.best {
         Some(b) => {
             println!(

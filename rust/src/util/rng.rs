@@ -3,6 +3,17 @@
 //! distributions the workload generator needs (uniform, lognormal,
 //! exponential, Poisson-process gaps).
 
+/// SplitMix64 finalizer: a stable, platform-independent 64-bit mixer.
+/// Shared by the KV prefix cache's block-content hashes and the
+/// workload generator's side streams (prefix-class membership), so the
+/// two can never silently diverge.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
 /// xoshiro256++ — fast, high-quality, reproducible across platforms.
 #[derive(Debug, Clone)]
 pub struct Rng {

@@ -12,7 +12,18 @@
 //! Arrivals are "all at once" as in the paper's evaluation; a Poisson
 //! process is also provided for the discussion-section online scenario.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
+
+/// A shared system-prompt prefix attached to a request: all requests of
+/// the same `class` open with the same `tokens` leading prompt tokens,
+/// so a prefix-aware KV cache can share their leading full blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedPrefix {
+    /// Prefix class (which system prompt this request uses).
+    pub class: u64,
+    /// Length of the shared prefix in tokens (clamped to the prompt).
+    pub tokens: usize,
+}
 
 /// One request to serve.
 #[derive(Debug, Clone)]
@@ -23,6 +34,8 @@ pub struct Request {
     pub prompt_tokens: usize,
     /// Target generation length (the sim decodes exactly this many).
     pub output_tokens: usize,
+    /// Shared system-prompt prefix, when the workload models one.
+    pub prefix: Option<SharedPrefix>,
 }
 
 impl Request {
@@ -35,6 +48,20 @@ impl Request {
 pub const SHAREGPT_MEAN_INPUT: usize = 161;
 pub const SHAREGPT_MEAN_OUTPUT: usize = 338;
 
+/// Shared-prefix shaping of a workload: a fixed set of system prompts
+/// ("prefix classes") layered over any length distribution, so
+/// prefix-cache hit rates are exercisable (the `memgap` prefix-sweep
+/// artefact sweeps `share`).
+#[derive(Debug, Clone, Copy)]
+pub struct SharedPrefixConfig {
+    /// Number of distinct system prompts.
+    pub classes: usize,
+    /// Tokens in each class prefix (clamped per request to its prompt).
+    pub prefix_len: usize,
+    /// Fraction of requests carrying a class prefix, in [0, 1].
+    pub share: f64,
+}
+
 /// Workload generator configuration.
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -43,6 +70,8 @@ pub struct WorkloadConfig {
     pub max_context: usize,
     pub arrivals: ArrivalPattern,
     pub lengths: LengthDistribution,
+    /// Shared system-prompt classes (None = fully distinct prompts).
+    pub prefix: Option<SharedPrefixConfig>,
 }
 
 #[derive(Debug, Clone)]
@@ -94,6 +123,7 @@ impl Default for WorkloadConfig {
                 mean_input: SHAREGPT_MEAN_INPUT,
                 mean_output: SHAREGPT_MEAN_OUTPUT,
             },
+            prefix: None,
         }
     }
 }
@@ -130,6 +160,28 @@ impl WorkloadConfig {
 fn lognormal_with_mean(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
     let mu = mean.ln() - sigma * sigma / 2.0;
     rng.lognormal(mu, sigma)
+}
+
+/// Prefix-class assignment for request `id`. Deterministic in
+/// (seed, id) via a side hash rather than the main RNG stream, so
+/// adding or sweeping `prefix` never perturbs the generated lengths or
+/// arrivals of the same seed, and a request keeps its class identity
+/// across `share` sweeps.
+fn assign_prefix(cfg: &WorkloadConfig, id: usize, input: usize) -> Option<SharedPrefix> {
+    let p = cfg.prefix?;
+    if p.classes == 0 || p.prefix_len == 0 {
+        return None;
+    }
+    let h = mix64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    if u < p.share {
+        Some(SharedPrefix {
+            class: (id % p.classes) as u64,
+            tokens: p.prefix_len.min(input),
+        })
+    } else {
+        None
+    }
 }
 
 /// Advance `t` to the next arrival of the on/off-modulated Poisson
@@ -213,6 +265,7 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
             arrival,
             prompt_tokens: input,
             output_tokens: output.max(1),
+            prefix: assign_prefix(cfg, id, input),
         });
     }
     // Normalize: traces must leave the generator sorted by arrival
@@ -366,6 +419,43 @@ mod tests {
                 "{arrivals:?} produced an unsorted trace"
             );
         }
+    }
+
+    #[test]
+    fn shared_prefix_classes_are_deterministic_and_share_scales() {
+        let with_share = |share: f64| {
+            let cfg = WorkloadConfig {
+                prefix: Some(SharedPrefixConfig {
+                    classes: 4,
+                    prefix_len: 128,
+                    share,
+                }),
+                ..WorkloadConfig::sharegpt(2_000, 9)
+            };
+            generate(&cfg)
+        };
+        let none = generate(&WorkloadConfig::sharegpt(2_000, 9));
+        let half = with_share(0.5);
+        let all = with_share(1.0);
+        // The side-hash assignment never perturbs lengths or arrivals.
+        for ((a, b), c) in none.iter().zip(&half).zip(&all) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, c.output_tokens);
+            assert!(a.prefix.is_none());
+        }
+        // share=1 tags everyone; share=0.5 a stable subset of the same.
+        assert!(all.iter().all(|r| r.prefix.is_some()));
+        let tagged = half.iter().filter(|r| r.prefix.is_some()).count();
+        assert!((800..1200).contains(&tagged), "{tagged}");
+        for (h, a) in half.iter().zip(&all) {
+            if let Some(p) = h.prefix {
+                assert_eq!(Some(p), a.prefix, "class identity stable across share");
+                assert_eq!(p.class, h.id % 4);
+                assert_eq!(p.tokens, 128.min(h.prompt_tokens));
+            }
+        }
+        assert_eq!(with_share(0.0).iter().filter(|r| r.prefix.is_some()).count(), 0);
     }
 
     #[test]

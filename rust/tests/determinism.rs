@@ -7,10 +7,11 @@
 
 use memgap::coordinator::offline::OfflineConfig;
 use memgap::coordinator::online::{run_online, sweep_rates, OnlineConfig};
+use memgap::coordinator::scheduler::PreemptMode;
 use memgap::figures::online_figs::frontier_table;
 use memgap::models::spec::ModelSpec;
 use memgap::util::par::par_map;
-use memgap::workload::LengthDistribution;
+use memgap::workload::{LengthDistribution, SharedPrefixConfig};
 
 fn online_cfg(seed: u64) -> OnlineConfig {
     let mut cfg = OnlineConfig::poisson(
@@ -45,6 +46,59 @@ fn online_report_is_bit_identical_across_runs_and_worker_budgets() {
     // A different seed genuinely changes the report (the comparison is
     // not vacuous).
     assert_ne!(online_json(8), reference);
+}
+
+/// The determinism guarantee extends to every (preempt mode x prefix
+/// cache) combination: each configuration replays bit-identically
+/// (including under a nested fan-out), and the configurations that
+/// must differ do differ.
+#[test]
+fn online_report_is_bit_identical_for_both_preempt_modes_and_cache_states() {
+    let cfg_for = |preempt: PreemptMode, cache: bool| {
+        let mut cfg = online_cfg(7);
+        // Tight memory + long fixed sequences so preemption policy
+        // actually matters (16 blocks/seq x 8 seqs over a ~100-block
+        // pool).
+        cfg.engine.mem_fraction = 0.048;
+        cfg.engine.preempt = preempt;
+        cfg.engine.prefix_cache = cache;
+        cfg.workload.lengths = LengthDistribution::Fixed {
+            input: 160,
+            output: 96,
+        };
+        cfg.workload.prefix = Some(SharedPrefixConfig {
+            classes: 3,
+            prefix_len: 64,
+            share: 1.0,
+        });
+        cfg
+    };
+    // The comparison below is vacuous unless preemption fires; make
+    // that failure loud instead of silent.
+    let probe = run_online(&cfg_for(PreemptMode::Recompute, false)).unwrap();
+    assert!(probe.preemptions > 0, "pool not tight enough to preempt");
+    let combos = [
+        (PreemptMode::Recompute, false),
+        (PreemptMode::Recompute, true),
+        (PreemptMode::Swap, false),
+        (PreemptMode::Swap, true),
+    ];
+    let mut reports = Vec::new();
+    for (preempt, cache) in combos {
+        let cfg = cfg_for(preempt, cache);
+        let a = run_online(&cfg).unwrap().to_json().to_string();
+        let b = run_online(&cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b, "{preempt:?}/cache={cache} not reproducible");
+        let lanes: Vec<usize> = (0..2).collect();
+        for lane in par_map(&lanes, |_| run_online(&cfg).unwrap().to_json().to_string()) {
+            assert_eq!(lane, a, "{preempt:?}/cache={cache} diverged under fan-out");
+        }
+        reports.push(a);
+    }
+    // Cache on vs off changes the report (hit rate shows up) and the
+    // two preemption modes time differently under pressure.
+    assert_ne!(reports[0], reports[1]);
+    assert_ne!(reports[0], reports[2]);
 }
 
 #[test]

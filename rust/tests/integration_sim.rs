@@ -100,8 +100,11 @@ fn kv_accounting_exact_under_pressure() {
     let mut guard = 0;
     while engine.has_work() {
         engine.step().expect("step");
-        let a = engine.kv().allocator();
-        assert_eq!(a.free_blocks() + a.allocated_blocks(), 128);
+        let kv = engine.kv();
+        assert_eq!(
+            kv.free_blocks() + kv.cached_unreferenced_blocks() + kv.allocated_blocks(),
+            128
+        );
         guard += 1;
         assert!(guard < 1_000_000, "run did not terminate");
     }

@@ -10,7 +10,7 @@ use memgap::coordinator::engine::{Engine, EngineConfig};
 use memgap::coordinator::router::{RoutePolicy, Router};
 use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
 use memgap::gpusim::GpuSpec;
-use memgap::kvcache::{BlockAllocator, KvCacheManager};
+use memgap::kvcache::{BlockAllocator, KvCacheManager, KvCacheV2, KvV2Config};
 use memgap::models::spec::{AttentionBackendKind, ModelSpec};
 use memgap::util::prop::check;
 use memgap::util::rng::Rng;
@@ -90,6 +90,153 @@ fn prop_kv_slots_injective() {
     });
 }
 
+/// KV v2 pool conservation under refcounts: across random
+/// admit/append/fork/free/swap traffic with the prefix cache on,
+/// `free + cached_unreferenced + unique_allocated == num_blocks - 1`
+/// always holds, and COW/forking never lets usage exceed capacity.
+#[test]
+fn prop_kv_v2_conservation_under_refcounts() {
+    check("kv-v2-conservation", 40, |rng| {
+        let bs = *[4usize, 8, 16].get(rng.range(0, 3)).unwrap();
+        let blocks = rng.range(8, 160);
+        let mut cfg = KvV2Config::new(blocks, bs, 64);
+        cfg.prefix_cache = true;
+        cfg.cpu_pool_blocks = rng.range(0, blocks + 8);
+        let mut kv = KvCacheV2::new(cfg);
+        let mut live: Vec<u64> = Vec::new();
+        let mut swapped: Vec<u64> = Vec::new();
+        // A few shared prompt stems so hits actually happen.
+        let stems: Vec<Vec<i32>> = (0..3)
+            .map(|c| (0..2 * bs).map(|p| (1 + c * 97 + p as i32 * 13) % 512 + 1).collect())
+            .collect();
+        let mut next_id = 0u64;
+        for _ in 0..rng.range(1, 120) {
+            let op = rng.f64();
+            if op < 0.35 {
+                let mut toks = stems[rng.range(0, stems.len())].clone();
+                let extra = rng.range(0, 3 * bs);
+                toks.extend((0..extra).map(|p| (next_id as i32 * 31 + p as i32) % 800 + 1));
+                if kv.admit(next_id, &toks).is_ok() {
+                    live.push(next_id);
+                }
+                next_id += 1;
+            } else if op < 0.6 && !live.is_empty() {
+                let id = live[rng.range(0, live.len())];
+                let _ = kv.append_token(id);
+            } else if op < 0.72 && !live.is_empty() {
+                let parent = live[rng.range(0, live.len())];
+                if kv.fork(parent, next_id).is_ok() {
+                    live.push(next_id);
+                }
+                next_id += 1;
+            } else if op < 0.82 && !live.is_empty() {
+                let i = rng.range(0, live.len());
+                let id = live[i];
+                if kv.swap_out(id).is_ok() {
+                    live.swap_remove(i);
+                    swapped.push(id);
+                }
+            } else if op < 0.9 && !swapped.is_empty() {
+                let i = rng.range(0, swapped.len());
+                let id = swapped[i];
+                if kv.swap_in(id).is_ok() {
+                    swapped.swap_remove(i);
+                    live.push(id);
+                }
+            } else if !live.is_empty() {
+                let i = rng.range(0, live.len());
+                kv.free(live.swap_remove(i)).unwrap();
+            }
+            assert_eq!(
+                kv.free_blocks() + kv.cached_unreferenced_blocks() + kv.allocated_blocks(),
+                blocks - 1,
+                "pool conservation violated"
+            );
+            assert!(kv.allocated_blocks() <= kv.capacity());
+            assert!(kv.peak_allocated_blocks() >= kv.allocated_blocks());
+            assert!(kv.reclaimable_blocks() <= kv.capacity());
+        }
+    });
+}
+
+/// KV v2 copy-on-write: appending on a forked child never mutates the
+/// parent's block table or slot mappings; every block two live
+/// sequences both reference appears at the same chain position.
+#[test]
+fn prop_kv_v2_cow_never_mutates_shared_blocks() {
+    check("kv-v2-cow", 40, |rng| {
+        let bs = *[4usize, 8, 16].get(rng.range(0, 3)).unwrap();
+        let mut kv = KvCacheV2::new(KvV2Config::new(rng.range(32, 256), bs, 64));
+        let plen = rng.range(1, 4 * bs);
+        let toks: Vec<i32> = (0..plen).map(|p| (p as i32 * 7) % 100 + 1).collect();
+        kv.admit(1, &toks).unwrap();
+        kv.fork(1, 2).unwrap();
+        let parent_before: Vec<u32> = kv.block_table(1).unwrap().to_vec();
+        let parent_slots: Vec<u32> = (0..plen).map(|p| kv.slot_for(1, p).unwrap()).collect();
+        // Child diverges by a random number of appends.
+        for _ in 0..rng.range(1, 3 * bs) {
+            if kv.append_token(2).is_err() {
+                break;
+            }
+        }
+        // Parent state is untouched by the child's writes.
+        assert_eq!(kv.block_table(1).unwrap(), parent_before.as_slice());
+        for (p, &slot) in parent_slots.iter().enumerate() {
+            assert_eq!(kv.slot_for(1, p), Some(slot));
+        }
+        // Any block present in both tables sits at the same position
+        // (a shared block is a common prefix block, never a divergent
+        // tail the child wrote into).
+        let child: Vec<u32> = kv.block_table(2).unwrap().to_vec();
+        for (i, &b) in parent_before.iter().enumerate() {
+            if let Some(j) = child.iter().position(|&x| x == b) {
+                assert_eq!(i, j, "shared block {b} at different chain positions");
+            }
+        }
+        // The parent can keep appending into its own tail afterwards.
+        let before_tokens = kv.tokens_of(1).unwrap();
+        kv.append_token(1).unwrap();
+        assert_eq!(kv.tokens_of(1), Some(before_tokens + 1));
+    });
+}
+
+/// KV v2 prefix cache determinism: replaying the same operation
+/// sequence yields bit-identical stats, tables and pool counters.
+#[test]
+fn prop_kv_v2_hits_deterministic_per_seed() {
+    check("kv-v2-determinism", 25, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut cfg = KvV2Config::new(96, 8, 64);
+            cfg.prefix_cache = true;
+            let mut kv = KvCacheV2::new(cfg);
+            let mut live: Vec<u64> = Vec::new();
+            for id in 0..60u64 {
+                let stem = r.range(0, 4) as i32;
+                let mut toks: Vec<i32> = (0..16).map(|p| stem * 50 + p + 1).collect();
+                toks.extend((0..r.range(0, 20)).map(|p| (id as i32 + 1) * 23 + p as i32));
+                if kv.admit(id, &toks).is_ok() {
+                    live.push(id);
+                }
+                if r.f64() < 0.5 && !live.is_empty() {
+                    let i = r.range(0, live.len());
+                    kv.free(live.swap_remove(i)).unwrap();
+                }
+            }
+            let tables: Vec<Vec<u32>> = live
+                .iter()
+                .filter_map(|&id| kv.block_table(id).map(|b| b.to_vec()))
+                .collect();
+            (kv.stats(), kv.free_blocks(), kv.cached_unreferenced_blocks(), tables)
+        };
+        let a = run(seed);
+        let b = run(seed);
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        assert!(a.0.queries > 0);
+    });
+}
+
 /// Router: every request routed exactly once; round-robin is balanced
 /// within 1; all policies stay in range.
 #[test]
@@ -102,6 +249,7 @@ fn prop_router_total_and_balanced() {
                 arrival: 0.0,
                 prompt_tokens: rng.range(1, 500),
                 output_tokens: rng.range(1, 500),
+                prefix: None,
             })
             .collect();
         for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Hash] {
@@ -134,6 +282,7 @@ fn prop_round_robin_counts_are_ceil_floor_fair() {
                 arrival: 0.0,
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
+                prefix: None,
             })
             .collect();
         let mut router = Router::new(RoutePolicy::RoundRobin, k);
@@ -170,6 +319,7 @@ fn prop_least_loaded_never_picks_a_strictly_heavier_replica() {
                     arrival: 0.0,
                     prompt_tokens: rng.range(1, 2000),
                     output_tokens: rng.range(1, 1000),
+                    prefix: None,
                 };
                 let chosen = router.route(&req);
                 let min = *shadow.iter().min().unwrap();
@@ -201,6 +351,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 arrival: 0.0,
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
+                prefix: None,
             };
             warmed.route(&noise);
         }
@@ -210,6 +361,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 arrival: 0.0,
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
+                prefix: None,
             };
             let a = fresh.route(&req);
             let b = warmed.route(&req);
@@ -287,6 +439,7 @@ fn prop_engine_serves_everything() {
                 arrival: 0.0,
                 prompt_tokens: rng.range(1, 300),
                 output_tokens: rng.range(1, 120),
+                prefix: None,
             })
             .collect();
         let expected_out: usize = reqs.iter().map(|r| r.output_tokens).sum();
@@ -338,6 +491,7 @@ fn prop_workload_respects_context() {
                 mean_input: rng.range(10, 400),
                 mean_output: rng.range(10, 600),
             },
+            prefix: None,
         };
         for r in generate(&cfg) {
             assert!(r.prompt_tokens + r.output_tokens <= cfg.max_context);

@@ -1,0 +1,193 @@
+//! Compile-only stub of the `xla` crate (xla-rs).
+//!
+//! Mirrors exactly the API surface `memgap::runtime::{backend,weights}`
+//! consumes, so `cargo check --features pjrt` type-checks the PJRT
+//! bridge without the native xla_extension toolchain. Every runtime
+//! entry point returns [`Error`] with a clear message; nothing here
+//! executes anything. Swap the path dependency in `rust/Cargo.toml`
+//! for the real `xla` crate to run artifacts for real.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error carried by every fallible stub call.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable (compile-only build; link the real `xla` crate \
+         to execute artifacts)"
+    )))
+}
+
+/// Element types the bridge materializes literals in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    /// 32-bit IEEE float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+/// Rust-native element types accepted by [`Literal::vec1`]/[`Literal::to_vec`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host tensor handle (stub: shape-only placeholder).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Zero-filled literal of the given element type and shape.
+    pub fn create_from_shape(_ty: PrimitiveType, dims: &[usize]) -> Literal {
+        Literal {
+            dims: dims.iter().map(|&d| d as i64).collect(),
+        }
+    }
+
+    /// Rank-1 literal over a native slice.
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        Literal {
+            dims: vec![vals.len() as i64],
+        }
+    }
+
+    /// Reshape to `dims` (stub: records the shape, never the data).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal {
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy out as a native vector (unavailable in the stub).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        stub_err("Literal::to_vec")
+    }
+
+    /// Array shape of the literal.
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Decompose a tuple literal (unavailable in the stub).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (unavailable in the stub).
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// Compilable computation wrapper.
+#[derive(Debug, Clone, Default)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal (unavailable in the stub).
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals (unavailable in the
+    /// stub).
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Construct the CPU client. Always fails in the stub so callers
+    /// surface a clear error before touching any executable path.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    /// Compile a computation (unavailable in the stub).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err("PjRtClient::compile")
+    }
+
+    /// Backing platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_plumbing_works_without_a_runtime() {
+        let l = Literal::create_from_shape(PrimitiveType::F32, &[2, 3, 4, 5]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 3, 4, 5]);
+        let v = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]).reshape(&[2, 3]).unwrap();
+        assert_eq!(v.array_shape().unwrap().dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::default().to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
