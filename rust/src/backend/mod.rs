@@ -163,6 +163,32 @@ impl SimBackend {
         }
     }
 
+    /// A backend whose step plan is the per-rank schedule of a `tp`-way
+    /// tensor-parallel engine (Megatron sharding + explicit ring
+    /// collectives). `tp = 1` is bit-identical to [`SimBackend::new`].
+    pub fn with_tp(
+        gpu: GpuSpec,
+        model: ModelSpec,
+        attention: AttentionBackendKind,
+        tp: usize,
+    ) -> Result<Self> {
+        let plan = StepPlan::with_tp(model.clone(), attention, tp)?;
+        Ok(Self {
+            gpu,
+            model,
+            attention,
+            kv_block: 16,
+            plan,
+            scratch: PlanScratch::default(),
+            record: true,
+        })
+    }
+
+    /// Tensor-parallel degree of the compiled plan (1 = unsharded).
+    pub fn tp(&self) -> usize {
+        self.plan.tp()
+    }
+
     /// Deterministic stand-in tokens (content is irrelevant to the sim).
     fn fake_tokens(&self, batch: &StepBatch) -> Vec<i32> {
         batch
@@ -377,6 +403,37 @@ mod tests {
         assert!(close(f.gpu_time, r.gpu_time), "{} vs {}", f.gpu_time, r.gpu_time);
         assert_eq!(f.cpu_gap, r.cpu_gap);
         assert!(close(fs.mean_dram_read_util(), rs.mean_dram_read_util()));
+    }
+
+    #[test]
+    fn tp_backend_is_identity_at_tp1_and_shards_beyond() {
+        let mut plain = sim();
+        let mut tp1 = SimBackend::with_tp(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+            1,
+        )
+        .unwrap();
+        let b = batch(&[338; 96]);
+        let o = plain.decode(&b).unwrap();
+        let o1 = tp1.decode(&b).unwrap();
+        assert_eq!(o.gpu_time, o1.gpu_time);
+        assert_eq!(o.cpu_gap, o1.cpu_gap);
+        assert_eq!(o.next_tokens, o1.next_tokens);
+        // tp=2: per-rank step is faster even after paying collectives,
+        // but the host gap (batch-sized) is identical.
+        let mut tp2 = SimBackend::with_tp(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+            2,
+        )
+        .unwrap();
+        assert_eq!(tp2.tp(), 2);
+        let o2 = tp2.decode(&b).unwrap();
+        assert!(o2.gpu_time < o.gpu_time, "{} vs {}", o2.gpu_time, o.gpu_time);
+        assert_eq!(o2.cpu_gap, o.cpu_gap);
     }
 
     #[test]

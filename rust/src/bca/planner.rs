@@ -1,25 +1,35 @@
-//! Joint (max_num_seqs × replica-count) SLO planner.
+//! Joint (max_num_seqs × replicas × tensor-parallel degree) SLO
+//! planner over a fixed GPU budget.
 //!
 //! The paper's BCA (Eq. 2) picks a batch size under a latency SLO for
 //! one engine; §VI-B then shows the freed memory funds replicas. This
 //! module closes the loop for the *online* scenario: it sweeps the
-//! (batch, replicas) grid under an arrival-driven workload, scores
+//! (batch, replicas, tp) grid under an arrival-driven workload, scores
 //! every point by **goodput under a p99-ITL SLO** (SLO-met completed
 //! requests per second, with per-request ITLs stretched by the MPS
-//! contention factor from [`crate::replication::run_replicated`]), and
-//! recommends the configuration maximizing it.
+//! contention factor from [`crate::replication::run_replicated`] /
+//! [`crate::replication::run_cluster`]), and recommends the
+//! configuration maximizing it. Because tp >= 2 points pay the ring
+//! collectives of `gpusim::collectives` while replicas buy parallel
+//! host loops, the planner *derives* the paper's
+//! replication-over-sharding prescription from costs instead of
+//! assuming it.
 //!
 //! Measurement ([`measure_point`] / [`plan_joint`]) is separated from
 //! scoring ([`score_point`]), so the selection logic is pure and unit
 //! testable; grid points fan out across scoped threads and come back
-//! in grid order, keeping the plan deterministic.
+//! in grid order, keeping the plan deterministic. Selection uses
+//! `total_cmp` with a lowest-(batch, replicas, tp) tie-break, so NaN
+//! measurements cannot panic the planner and ties never depend on grid
+//! enumeration order.
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::offline::OfflineConfig;
 use crate::gpusim::mps::SharePolicy;
 use crate::metrics::Percentiles;
-use crate::replication::run_replicated;
+use crate::models::spec::TpShard;
+use crate::replication::{run_cluster, run_replicated};
 use crate::workload::Request;
 
 /// Planner knobs.
@@ -29,10 +39,19 @@ pub struct JointPlannerConfig {
     pub batch_grid: Vec<usize>,
     /// Replica counts to probe (each replica gets `1/n` of the memory).
     pub replica_grid: Vec<usize>,
+    /// Tensor-parallel degrees to probe (default `[1]`: the classic
+    /// single-GPU batch × replica plan). Degrees the model cannot shard
+    /// to, or that exceed the GPU budget, are skipped.
+    pub tp_grid: Vec<usize>,
+    /// GPU budget the plan spends (default 1). A (replicas, tp) point
+    /// uses `replicas` engines of `tp` GPUs each, co-scheduled by
+    /// [`run_cluster`]; with 1 GPU this degenerates to the single-GPU
+    /// MPS replication model.
+    pub gpus: usize,
     /// p99 ITL SLO in seconds. `None` auto-anchors at
     /// `anchor_factor ×` the measured p99 ITL of the smallest
-    /// (batch, replicas) grid point — the paper's style of anchoring
-    /// SLOs to a measured small-batch latency.
+    /// (batch, replicas, tp) grid point — the paper's style of
+    /// anchoring SLOs to a measured small-batch latency.
     pub slo_itl: Option<f64>,
     /// Multiplier for the auto-anchored SLO (between the paper's
     /// strict 2× and relaxed 4×).
@@ -40,14 +59,25 @@ pub struct JointPlannerConfig {
 }
 
 impl JointPlannerConfig {
-    /// A planner over the given grids with the auto-anchored SLO.
+    /// A planner over the given grids with the auto-anchored SLO
+    /// (single GPU, tp = 1 only — the pre-cluster behavior).
     pub fn new(batch_grid: Vec<usize>, replica_grid: Vec<usize>) -> Self {
         Self {
             batch_grid,
             replica_grid,
+            tp_grid: vec![1],
+            gpus: 1,
             slo_itl: None,
             anchor_factor: 3.0,
         }
+    }
+
+    /// Extend the plan to a `gpus`-GPU budget probing the given
+    /// tensor-parallel degrees (the replication-vs-sharding frontier).
+    pub fn with_cluster(mut self, tp_grid: Vec<usize>, gpus: usize) -> Self {
+        self.tp_grid = tp_grid;
+        self.gpus = gpus.max(1);
+        self
     }
 }
 
@@ -58,6 +88,8 @@ pub struct MeasuredPoint {
     pub max_batch: usize,
     /// Probed replica count.
     pub replicas: usize,
+    /// Probed tensor-parallel degree (1 = unsharded).
+    pub tp: usize,
     /// Memory share each replica ran with (`1/replicas`).
     pub mem_fraction_each: f64,
     /// Aggregate (input+output) tokens/s over the shared makespan.
@@ -79,6 +111,8 @@ pub struct PlanPoint {
     pub max_batch: usize,
     /// Probed replica count.
     pub replicas: usize,
+    /// Probed tensor-parallel degree (1 = unsharded).
+    pub tp: usize,
     /// Memory share each replica ran with (`1/replicas`).
     pub mem_fraction_each: f64,
     /// Aggregate (input+output) tokens/s over the shared makespan.
@@ -102,29 +136,41 @@ pub struct PlanPoint {
 pub struct JointPlan {
     /// The p99 ITL SLO the plan was scored against (seconds).
     pub slo_itl: f64,
-    /// All scored points, in (batch-major, replica-minor) grid order.
+    /// All scored points, in (batch-major, replica, tp-minor) grid
+    /// order.
     pub points: Vec<PlanPoint>,
-    /// Feasible point with the highest goodput (ties break toward the
-    /// earlier grid point — the grid is batch-major, so smaller batch
-    /// first, then fewer replicas).
+    /// Feasible point with the highest goodput; ties break toward the
+    /// lowest (batch, replicas, tp) — see [`select_best`].
     pub best: Option<PlanPoint>,
 }
 
 impl JointPlan {
     /// The unconstrained-max-batch baseline: the largest probed batch
-    /// at 1 replica.
+    /// on a single unsharded engine.
     pub fn baseline_max_batch(&self) -> Option<&PlanPoint> {
         self.points
             .iter()
-            .filter(|p| p.replicas == 1)
+            .filter(|p| p.replicas == 1 && p.tp == 1)
             .max_by_key(|p| p.max_batch)
     }
 
-    /// The best single-replica point by goodput (ties toward the
-    /// smaller batch).
+    /// The best single-engine unsharded point by goodput (ties toward
+    /// the smaller batch).
     pub fn best_single_replica(&self) -> Option<&PlanPoint> {
         let mut best: Option<&PlanPoint> = None;
-        for p in self.points.iter().filter(|p| p.replicas == 1) {
+        for p in self.points.iter().filter(|p| p.replicas == 1 && p.tp == 1) {
+            if best.map(|b| p.goodput_rps > b.goodput_rps).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+        best
+    }
+
+    /// The best tensor-parallel (tp >= 2) point by goodput — the
+    /// sharding side of the replication-vs-sharding frontier.
+    pub fn best_sharded(&self) -> Option<&PlanPoint> {
+        let mut best: Option<&PlanPoint> = None;
+        for p in self.points.iter().filter(|p| p.tp >= 2) {
             if best.map(|b| p.goodput_rps > b.goodput_rps).unwrap_or(true) {
                 best = Some(p);
             }
@@ -136,7 +182,8 @@ impl JointPlan {
 /// Run one (batch, replicas) point over `requests` and collect its
 /// SLO-independent measurements. Each replica gets an even `1/replicas`
 /// share of the usable memory; contention comes from the MPS
-/// processor-sharing executor.
+/// processor-sharing executor. Single-GPU, tp = 1 — the original
+/// planner probe, kept verbatim so existing plans reproduce exactly.
 pub fn measure_point(
     base: &OfflineConfig,
     max_batch: usize,
@@ -150,7 +197,38 @@ pub fn measure_point(
     Ok(MeasuredPoint {
         max_batch,
         replicas,
+        tp: 1,
         mem_fraction_each: frac,
+        throughput_tps: rep.throughput_tps,
+        completed: rep.completed(),
+        makespan: rep.makespan,
+        itls: rep.stretched_itls(),
+    })
+}
+
+/// [`measure_point`] generalized to a GPU budget: `replicas` engines of
+/// `tp` GPUs each on `gpus` GPUs, co-scheduled by
+/// [`run_cluster`]. `(tp = 1, gpus = 1)` routes through the original
+/// single-GPU probe bit-for-bit.
+pub fn measure_point_cluster(
+    base: &OfflineConfig,
+    max_batch: usize,
+    replicas: usize,
+    tp: usize,
+    gpus: usize,
+    requests: &[Request],
+) -> Result<MeasuredPoint> {
+    if tp == 1 && gpus <= 1 {
+        return measure_point(base, max_batch, replicas, requests);
+    }
+    let mut cfg = base.clone();
+    cfg.max_num_seqs = max_batch;
+    let rep = run_cluster(&cfg, replicas, tp, gpus, SharePolicy::Mps, requests)?;
+    Ok(MeasuredPoint {
+        max_batch,
+        replicas,
+        tp,
+        mem_fraction_each: rep.mem_fraction_each,
         throughput_tps: rep.throughput_tps,
         completed: rep.completed(),
         makespan: rep.makespan,
@@ -178,6 +256,7 @@ pub fn score_point(m: &MeasuredPoint, slo_itl: f64) -> PlanPoint {
     PlanPoint {
         max_batch: m.max_batch,
         replicas: m.replicas,
+        tp: m.tp,
         mem_fraction_each: m.mem_fraction_each,
         throughput_tps: m.throughput_tps,
         completed: m.completed,
@@ -189,18 +268,52 @@ pub fn score_point(m: &MeasuredPoint, slo_itl: f64) -> PlanPoint {
     }
 }
 
+/// Pick the feasible point with the highest goodput. NaN-safe: a NaN
+/// goodput (degenerate measurement) sorts below every real number
+/// instead of panicking, and exact ties break deterministically toward
+/// the lowest (batch, replicas, tp) — the cheapest configuration that
+/// achieves the best goodput, independent of grid enumeration order.
+pub fn select_best(points: &[PlanPoint]) -> Option<PlanPoint> {
+    let key = |p: &PlanPoint| {
+        if p.goodput_rps.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            p.goodput_rps
+        }
+    };
+    let mut best: Option<&PlanPoint> = None;
+    for p in points.iter().filter(|p| p.feasible) {
+        let better = match best {
+            None => true,
+            Some(b) => match key(p).total_cmp(&key(b)) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => {
+                    (p.max_batch, p.replicas, p.tp) < (b.max_batch, b.replicas, b.tp)
+                }
+            },
+        };
+        if better {
+            best = Some(p);
+        }
+    }
+    best.cloned()
+}
+
 /// Sweep the joint grid over `requests` and recommend the goodput-
-/// maximizing feasible configuration.
+/// maximizing feasible configuration. Grid points whose tensor-parallel
+/// degree the model cannot shard to, or that exceed the GPU budget,
+/// are skipped (a 1-GPU, tp=[1] config never skips anything).
 pub fn plan_joint(
     base: &OfflineConfig,
     requests: &[Request],
     cfg: &JointPlannerConfig,
 ) -> Result<JointPlan> {
-    if cfg.batch_grid.is_empty() || cfg.replica_grid.is_empty() {
-        bail!("joint planner needs non-empty batch and replica grids");
+    if cfg.batch_grid.is_empty() || cfg.replica_grid.is_empty() || cfg.tp_grid.is_empty() {
+        bail!("joint planner needs non-empty batch, replica and tp grids");
     }
-    if cfg.batch_grid.contains(&0) || cfg.replica_grid.contains(&0) {
-        bail!("batch and replica grid entries must be >= 1");
+    if cfg.batch_grid.contains(&0) || cfg.replica_grid.contains(&0) || cfg.tp_grid.contains(&0) {
+        bail!("batch, replica and tp grid entries must be >= 1");
     }
     let mut batches = cfg.batch_grid.clone();
     batches.sort_unstable();
@@ -208,16 +321,44 @@ pub fn plan_joint(
     let mut replicas = cfg.replica_grid.clone();
     replicas.sort_unstable();
     replicas.dedup();
-    let grid: Vec<(usize, usize)> = batches
-        .iter()
-        .flat_map(|&b| replicas.iter().map(move |&r| (b, r)))
+    let mut tps = cfg.tp_grid.clone();
+    tps.sort_unstable();
+    tps.dedup();
+    let gpus = cfg.gpus.max(1);
+    // Shardable degrees that fit the budget; bail if nothing survives
+    // rather than planning over an empty grid.
+    let tps: Vec<usize> = tps
+        .into_iter()
+        .filter(|&tp| tp <= gpus && TpShard::new(&base.model, tp).is_ok())
         .collect();
-    let measured = crate::util::par::par_map(&grid, |&(b, r)| {
-        measure_point(base, b, r, requests)
+    if tps.is_empty() {
+        bail!(
+            "no probed tp degree both divides {} and fits {gpus} GPU(s)",
+            base.model.name
+        );
+    }
+    // tp = 1 replicas may co-locate on shared GPUs (the §VI-B MPS
+    // model); sharded engines may not, so (r, tp>=2) points must fit
+    // r*tp GPUs outright.
+    let mut grid: Vec<(usize, usize, usize)> = Vec::new();
+    for &b in &batches {
+        for &r in &replicas {
+            for &tp in &tps {
+                if tp == 1 || r * tp <= gpus {
+                    grid.push((b, r, tp));
+                }
+            }
+        }
+    }
+    if grid.is_empty() {
+        bail!("no (batch, replicas, tp) grid point fits the {gpus}-GPU budget");
+    }
+    let measured = crate::util::par::par_map(&grid, |&(b, r, tp)| {
+        measure_point_cluster(base, b, r, tp, gpus, requests)
     });
     let measured: Vec<MeasuredPoint> = measured.into_iter().collect::<Result<_>>()?;
-    // Auto-anchor: the smallest (batch, replicas) point is the grid's
-    // lowest-latency operating regime.
+    // Auto-anchor: the smallest (batch, replicas, tp) point is the
+    // grid's lowest-latency operating regime.
     let slo_itl = match cfg.slo_itl {
         Some(s) => s,
         None => {
@@ -226,16 +367,7 @@ pub fn plan_joint(
         }
     };
     let points: Vec<PlanPoint> = measured.iter().map(|m| score_point(m, slo_itl)).collect();
-    let mut best: Option<PlanPoint> = None;
-    for p in points.iter().filter(|p| p.feasible) {
-        if best
-            .as_ref()
-            .map(|b| p.goodput_rps > b.goodput_rps)
-            .unwrap_or(true)
-        {
-            best = Some(p.clone());
-        }
-    }
+    let best = select_best(&points);
     Ok(JointPlan {
         slo_itl,
         points,
@@ -251,6 +383,7 @@ mod tests {
         MeasuredPoint {
             max_batch: b,
             replicas: r,
+            tp: 1,
             mem_fraction_each: 1.0 / r as f64,
             throughput_tps: rps * 500.0,
             completed: n,
@@ -289,11 +422,7 @@ mod tests {
         let points: Vec<PlanPoint> = ms.iter().map(|m| score_point(m, slo)).collect();
         let plan = JointPlan {
             slo_itl: slo,
-            best: points
-                .iter()
-                .filter(|p| p.feasible)
-                .max_by(|a, b| a.goodput_rps.partial_cmp(&b.goodput_rps).unwrap())
-                .cloned(),
+            best: select_best(&points),
             points,
         };
         let best = plan.best.as_ref().unwrap();
@@ -304,5 +433,49 @@ mod tests {
         assert!(best.goodput_rps > maxb.goodput_rps);
         let single = plan.best_single_replica().unwrap();
         assert!(best.goodput_rps > single.goodput_rps);
+    }
+
+    #[test]
+    fn selection_survives_nan_goodput_without_panicking() {
+        // A degenerate measurement (NaN goodput from a 0/0) must never
+        // panic the planner, and must lose to every real point.
+        let slo = 1.0;
+        let mut nan_point = score_point(&measured(32, 1, 0.001, 10.0, 100), slo);
+        nan_point.goodput_rps = f64::NAN;
+        let real = score_point(&measured(96, 1, 0.001, 5.0, 100), slo);
+        assert!(nan_point.feasible && real.feasible);
+        let best = select_best(&[nan_point.clone(), real.clone()]).unwrap();
+        assert_eq!(best.max_batch, 96);
+        let best = select_best(&[real, nan_point.clone()]).unwrap();
+        assert_eq!(best.max_batch, 96);
+        // All-NaN: still no panic, a point is still returned.
+        let only = select_best(&[nan_point]).unwrap();
+        assert_eq!(only.max_batch, 32);
+    }
+
+    #[test]
+    fn selection_ties_break_toward_lowest_batch_replicas_tp() {
+        // Four points with IDENTICAL goodput: the cheapest
+        // configuration must win regardless of slice order.
+        let slo = 1.0;
+        let mk = |b: usize, r: usize, tp: usize| {
+            let mut p = score_point(&measured(b, r, 0.001, 10.0, 100), slo);
+            p.tp = tp;
+            p
+        };
+        let pts = [mk(96, 2, 1), mk(32, 2, 2), mk(32, 2, 1), mk(32, 4, 1)];
+        let best = select_best(&pts).unwrap();
+        assert_eq!((best.max_batch, best.replicas, best.tp), (32, 2, 1));
+        let mut rev = pts.to_vec();
+        rev.reverse();
+        let best = select_best(&rev).unwrap();
+        assert_eq!((best.max_batch, best.replicas, best.tp), (32, 2, 1));
+        // Infeasible points never win, even at higher goodput.
+        let mut infeasible = mk(1, 1, 1);
+        infeasible.goodput_rps = 1e9;
+        infeasible.feasible = false;
+        let best = select_best(&[infeasible.clone(), mk(32, 2, 1)]).unwrap();
+        assert_eq!(best.max_batch, 32);
+        assert!(select_best(&[infeasible]).is_none());
     }
 }

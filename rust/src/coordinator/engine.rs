@@ -93,6 +93,12 @@ pub struct EngineReport {
     pub swap_time: f64,
     /// Prefix-cache hit/eviction/COW counters (zeros when disabled).
     pub prefix_cache: PrefixCacheStats,
+    /// Largest token count any single step fed the backend (decode
+    /// tokens + prefill-chunk tokens). Under `ChunkedPrefill` this
+    /// never exceeds `max_batched_tokens` — the budget invariant the
+    /// chunk grants enforce; `PrefillPriority` may exceed it only for
+    /// a single oversized head-of-line prompt admitted alone.
+    pub peak_step_tokens: usize,
     pub steps: usize,
     pub prefill_time: f64,
     pub decode_time: f64,
@@ -150,6 +156,7 @@ pub struct Engine<B: Backend> {
     swap_outs: u64,
     swap_blocks: u64,
     swap_time: f64,
+    peak_step_tokens: usize,
     steps: usize,
     prefill_time: f64,
     decode_time: f64,
@@ -192,6 +199,7 @@ impl<B: Backend> Engine<B> {
             swap_outs: 0,
             swap_blocks: 0,
             swap_time: 0.0,
+            peak_step_tokens: 0,
             steps: 0,
             prefill_time: 0.0,
             decode_time: 0.0,
@@ -311,6 +319,7 @@ impl<B: Backend> Engine<B> {
             swap_blocks: self.swap_blocks,
             swap_time: self.swap_time,
             prefix_cache: self.kv.stats(),
+            peak_step_tokens: self.peak_step_tokens,
             steps: self.steps,
             prefill_time: self.prefill_time,
             decode_time: self.decode_time,
@@ -335,9 +344,14 @@ impl<B: Backend> Engine<B> {
                 self.run_decode()?;
                 Ok(true)
             }
-            ScheduleDecision::Mixed { queue_idx, .. } => {
+            ScheduleDecision::Mixed { grants } => {
+                let queue_idx: Vec<usize> = grants.iter().map(|g| g.queue_idx).collect();
                 let batch_seqs = self.take_waiting(&queue_idx)?;
-                self.run_mixed(batch_seqs)?;
+                let granted: Vec<(RunningSeq, usize)> = batch_seqs
+                    .into_iter()
+                    .zip(grants.iter().map(|g| g.tokens))
+                    .collect();
+                self.run_mixed(granted)?;
                 Ok(true)
             }
             ScheduleDecision::Idle => {
@@ -454,10 +468,12 @@ impl<B: Backend> Engine<B> {
         let batch = StepBatch { entries };
         let out = self.exec_batched(&batch, Phase::Prefill)?;
         self.after_step(&out, batch.len(), Phase::Prefill);
+        self.peak_step_tokens = self.peak_step_tokens.max(batch.fed_tokens());
         // First token of each sequence. Its KV slot is reserved lazily by
         // ensure_decode_capacity before the step that feeds it.
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.state = RequestState::Running;
+            s.prefilled = s.prefill_len();
             s.push_token(tok);
             if s.first_token_at.is_none() {
                 s.first_token_at = Some(self.clock);
@@ -511,6 +527,7 @@ impl<B: Backend> Engine<B> {
         let n = batch.len();
         self.decode_batch = batch; // keep the allocations for next step
         self.after_step(&out, n, Phase::Decode);
+        self.peak_step_tokens = self.peak_step_tokens.max(n);
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
             s.push_token(tok);
@@ -523,12 +540,82 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    fn run_mixed(&mut self, mut pre_seqs: Vec<RunningSeq>) -> Result<()> {
+    /// Fused chunked-prefill step: decode the running set while feeding
+    /// each granted prompt its chunk. A prompt whose chunk completes
+    /// its prefill produces its first token and joins the running set;
+    /// a prompt fed only a *partial* chunk records its progress and
+    /// returns to the waiting-queue front (strict FCFS) to continue
+    /// next step — this is what unblocks prompts longer than
+    /// `max_batched_tokens`.
+    fn run_mixed(&mut self, mut pre_seqs: Vec<(RunningSeq, usize)>) -> Result<()> {
+        use crate::kvcache::manager::KvError;
         self.ensure_decode_capacity();
-        let pre_entries = self.admit_and_entries(&mut pre_seqs)?;
-        let pre = StepBatch {
-            entries: pre_entries,
-        };
+        // Admit/extend each granted chunk. The scheduler's charge was
+        // conservative, but a fused step may have consumed blocks since
+        // the decision (decode-capacity appends above): sequences that
+        // no longer fit are pushed back to the waiting-queue front.
+        let tables = self.backend.needs_tables();
+        let mut entries = Vec::with_capacity(pre_seqs.len());
+        let mut admitted = 0;
+        let mut shrank = false;
+        for (s, grant) in pre_seqs.iter_mut() {
+            if shrank {
+                break; // a shrunken chunk means the pool is dry
+            }
+            let start = s.prefilled;
+            let mut end = start + *grant;
+            if start == 0 {
+                // First chunk (whole prompt or truncated head): admit
+                // by content so prefix-cache hits land.
+                match self.kv.admit(s.id, &s.token_ids[..end]) {
+                    Ok(()) => {}
+                    Err(KvError::OutOfBlocks { .. }) => break,
+                    Err(e) => return Err(e.into()),
+                }
+            } else {
+                // Continuation: extend the existing allocation, slot by
+                // slot, shrinking the chunk to whatever still fits.
+                let mut got = start;
+                while got < end {
+                    match self.kv.append_token(s.id) {
+                        Ok(_) => got += 1,
+                        Err(KvError::OutOfBlocks { .. }) => break,
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+                if got == start {
+                    break; // no progress possible; re-queue below
+                }
+                if got < end {
+                    shrank = true;
+                    end = got;
+                    *grant = end - start;
+                }
+            }
+            let (table, slot_mapping) = if tables {
+                (
+                    self.kv.block_table(s.id).unwrap().to_vec(),
+                    (start..end)
+                        .map(|p| self.kv.slot_for(s.id, p).unwrap())
+                        .collect(),
+                )
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            entries.push(SeqBatchEntry {
+                seq: s.id,
+                tokens: s.token_ids[start..end].to_vec(),
+                context_len: end,
+                block_table: table,
+                slot_mapping,
+            });
+            admitted += 1;
+        }
+        // FCFS: anything not admitted goes back in front, in order.
+        for (s, _) in pre_seqs.drain(admitted..).rev() {
+            self.waiting.push_front(s);
+        }
+        let pre = StepBatch { entries };
         if pre.is_empty() && self.running.is_empty() {
             // Everything scheduled was re-queued (or preempted away):
             // nothing to execute this iteration.
@@ -540,6 +627,7 @@ impl<B: Backend> Engine<B> {
         let dec_len = dec.len();
         self.decode_batch = dec; // keep the allocations for next step
         self.after_step(&out, pre.len() + dec_len, Phase::Mixed);
+        self.peak_step_tokens = self.peak_step_tokens.max(dec_len + pre.fed_tokens());
         // Convention: next_tokens lists decodes first, then prefills.
         let mut seqs = std::mem::take(&mut self.running);
         for (s, &tok) in seqs.iter_mut().zip(&out.next_tokens) {
@@ -549,16 +637,31 @@ impl<B: Backend> Engine<B> {
             }
             self.metrics.on_token(s.id, self.clock);
         }
-        for (s, &tok) in pre_seqs.iter_mut().zip(&out.next_tokens[dec_len..]) {
-            s.state = RequestState::Running;
-            s.push_token(tok);
-            if s.first_token_at.is_none() {
-                s.first_token_at = Some(self.clock);
+        let mut completed = Vec::new();
+        let mut unfinished = Vec::new();
+        for ((mut s, grant), &tok) in pre_seqs.into_iter().zip(&out.next_tokens[dec_len..]) {
+            s.prefilled += grant;
+            if s.prefilled >= s.prefill_len() {
+                // Prefill complete: first token lands this step.
+                s.state = RequestState::Running;
+                s.push_token(tok);
+                if s.first_token_at.is_none() {
+                    s.first_token_at = Some(self.clock);
+                }
+                self.metrics.on_token(s.id, self.clock);
+                completed.push(s);
+            } else {
+                // Partial chunk: no token yet; keep FCFS position.
+                unfinished.push(s);
             }
-            self.metrics.on_token(s.id, self.clock);
+        }
+        // Unfinished chunks precede the re-queued (never-admitted)
+        // sequences in arrival order, so push them in front last.
+        for s in unfinished.into_iter().rev() {
+            self.waiting.push_front(s);
         }
         self.retire_or_keep(seqs);
-        self.retire_or_keep(pre_seqs);
+        self.retire_or_keep(completed);
         Ok(())
     }
 
@@ -984,6 +1087,84 @@ mod tests {
         e.submit(&generate(&WorkloadConfig::offline(24, 100, 20)));
         let report = e.run_to_completion().unwrap();
         assert_eq!(report.metrics.completed, 24);
+    }
+
+    #[test]
+    fn chunked_prefill_chunks_a_prompt_longer_than_the_budget() {
+        // Regression: a head-of-line prompt longer than
+        // max_batched_tokens used to never admit under strict FCFS —
+        // the engine idled forever while work starved behind it. With
+        // per-prompt chunk grants it prefills over several fused steps
+        // and everything completes, never exceeding the step budget.
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(16, 4096, 16);
+        cfg.policy = SchedulerPolicy::ChunkedPrefill;
+        cfg.max_batched_tokens = 512;
+        let mut e = Engine::new(backend, cfg);
+        // Distinct arrivals pin admission order: the long prompt is
+        // strictly first, eight short prompts queue behind it.
+        let mut reqs: Vec<crate::workload::Request> = Vec::new();
+        reqs.push(crate::workload::Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_tokens: 900, // > 512 budget
+            output_tokens: 20,
+            prefix: None,
+        });
+        for i in 1..9u64 {
+            reqs.push(crate::workload::Request {
+                id: i,
+                arrival: 1e-6 * i as f64,
+                prompt_tokens: 100,
+                output_tokens: 20,
+                prefix: None,
+            });
+        }
+        e.submit(&reqs);
+        let mut finished_ids = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            assert!(guard < 10_000, "engine livelocked (starvation regressed)");
+            guard += 1;
+            e.step().unwrap();
+            finished_ids.extend(e.take_finished().into_iter().map(|f| f.id));
+        }
+        let report = e.finish();
+        assert_eq!(report.metrics.completed, 9, "everything must complete");
+        assert_eq!(finished_ids.len(), 9);
+        assert!(finished_ids.contains(&0), "the long prompt itself finishes");
+        // The budget invariant: no fused step ever fed more than
+        // max_batched_tokens (decodes + prefill chunks combined).
+        assert!(
+            report.peak_step_tokens <= 512,
+            "peak step tokens {} exceed the 512 budget",
+            report.peak_step_tokens
+        );
+        // The long prompt genuinely chunked: 900 tokens over a 512
+        // budget needs at least 2 fused steps before its first token.
+        assert!(report.steps > 20, "suspiciously few steps: {}", report.steps);
+    }
+
+    #[test]
+    fn chunked_prefill_short_prompts_behave_as_before() {
+        // Prompts that fit the budget take the whole-prompt grant path:
+        // same completions, same per-step budget discipline.
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(16, 4096, 16);
+        cfg.policy = SchedulerPolicy::ChunkedPrefill;
+        let mut e = Engine::new(backend, cfg);
+        e.submit(&generate(&WorkloadConfig::offline(24, 100, 20)));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.metrics.completed, 24);
+        assert!(report.peak_step_tokens <= 4096);
     }
 
     #[test]

@@ -35,6 +35,12 @@ pub struct RunningSeq {
     /// Virtual time the first token completed (set once; preserved
     /// across preemption since the token was already delivered).
     pub first_token_at: Option<f64>,
+    /// Prompt tokens already prefilled into the KV cache (chunked
+    /// prefill admits a long prompt over several steps). `0` until the
+    /// first chunk lands; equals [`RunningSeq::prefill_len`] once the
+    /// sequence starts decoding. Reset by recompute-preemption, which
+    /// frees the blocks and re-prefills from scratch.
+    pub prefilled: usize,
 }
 
 impl RunningSeq {
@@ -75,6 +81,7 @@ impl RunningSeq {
             state: RequestState::Waiting,
             preemptions: 0,
             first_token_at: None,
+            prefilled: 0,
         }
     }
 
@@ -93,15 +100,23 @@ impl RunningSeq {
     }
 
     /// Reset to the waiting state for recompute-preemption: generated
-    /// tokens are *kept* in token_ids (they re-prefill as prompt).
+    /// tokens are *kept* in token_ids (they re-prefill as prompt), and
+    /// chunked-prefill progress restarts because the blocks are freed.
     pub fn preempt(&mut self) {
         self.state = RequestState::Preempted;
         self.preemptions += 1;
+        self.prefilled = 0;
     }
 
     /// Effective prompt length for (re-)prefill.
     pub fn prefill_len(&self) -> usize {
         self.token_ids.len()
+    }
+
+    /// Prompt tokens still awaiting prefill (chunked prefill feeds
+    /// these across steps; whole-prompt prefill feeds them at once).
+    pub fn remaining_prefill(&self) -> usize {
+        self.prefill_len().saturating_sub(self.prefilled)
     }
 }
 
@@ -168,9 +183,23 @@ mod tests {
     fn preemption_keeps_generated_tokens_for_recompute() {
         let mut s = RunningSeq::from_request(&req(1, 5, 10), 100);
         s.push_token(42);
+        s.prefilled = 6;
         s.preempt();
         assert_eq!(s.preemptions, 1);
         assert_eq!(s.prefill_len(), 6); // prompt + 1 generated
         assert_eq!(s.generated, 1);
+        // Recompute frees the blocks: chunk progress restarts.
+        assert_eq!(s.prefilled, 0);
+        assert_eq!(s.remaining_prefill(), 6);
+    }
+
+    #[test]
+    fn chunk_progress_tracks_remaining_prefill() {
+        let mut s = RunningSeq::from_request(&req(1, 100, 4), 1000);
+        assert_eq!(s.remaining_prefill(), 100);
+        s.prefilled = 64;
+        assert_eq!(s.remaining_prefill(), 36);
+        s.prefilled = 100;
+        assert_eq!(s.remaining_prefill(), 0);
     }
 }

@@ -66,6 +66,21 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// One prompt's admission into a fused (chunked-prefill) step: which
+/// waiting-queue entry, and how many of its remaining prompt tokens
+/// this step may feed. Grants over one decision sum to at most the
+/// step's leftover token budget (asserted by the scheduler tests), and
+/// the head-of-line prompt is granted a *truncated* chunk when its
+/// remainder exceeds the budget — the fix for the FCFS starvation
+/// where an over-budget prompt could never admit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkGrant {
+    /// Index into the waiting queue (grants form an FCFS prefix).
+    pub queue_idx: usize,
+    /// Prompt tokens granted to this step (<= the prompt's remainder).
+    pub tokens: usize,
+}
+
 /// What the engine should do this iteration.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScheduleDecision {
@@ -73,12 +88,9 @@ pub enum ScheduleDecision {
     Prefill { queue_idx: Vec<usize> },
     /// Decode the whole running set.
     Decode,
-    /// Fused step: decode running + prefill these queue indices
-    /// (chunked to `chunk_tokens` apiece).
-    Mixed {
-        queue_idx: Vec<usize>,
-        chunk_tokens: usize,
-    },
+    /// Fused step: decode running + feed each granted prompt its
+    /// per-prompt chunk.
+    Mixed { grants: Vec<ChunkGrant> },
     /// Nothing admissible and nothing running.
     Idle,
 }
@@ -128,8 +140,17 @@ impl Scheduler {
             }
             let need_tokens = seq.prefill_len();
             let need_blocks = kv.charged_blocks_needed(&seq.token_ids);
-            if need_tokens > tokens || need_blocks > free_blocks {
+            if need_blocks > free_blocks {
                 break; // strict FCFS: no skipping ahead
+            }
+            if need_tokens > tokens {
+                // A head-of-line prompt longer than the whole step
+                // budget would deadlock strict FCFS (it can never
+                // admit); let it run alone in one oversized prefill.
+                if idx.is_empty() {
+                    idx.push(i);
+                }
+                break;
             }
             idx.push(i);
             seats -= 1;
@@ -165,15 +186,72 @@ impl Scheduler {
         // into the remainder.
         let decode_tokens = running.len();
         let leftover = self.cfg.max_batched_tokens.saturating_sub(decode_tokens);
-        let idx = self.admissible_prefix(waiting, running.len(), kv, leftover);
-        match (idx.is_empty(), running.is_empty()) {
-            (false, _) => ScheduleDecision::Mixed {
-                queue_idx: idx,
-                chunk_tokens: leftover,
-            },
+        let grants = self.chunk_grants(waiting, running.len(), kv, leftover);
+        match (grants.is_empty(), running.is_empty()) {
+            (false, _) => ScheduleDecision::Mixed { grants },
             (true, false) => ScheduleDecision::Decode,
             (true, true) => ScheduleDecision::Idle,
         }
+    }
+
+    /// Per-prompt chunk grants for a fused step: FCFS over the waiting
+    /// queue, each prompt granted `min(remaining prefill, budget left)`
+    /// tokens. The head-of-line prompt may receive a truncated chunk
+    /// (it keeps its place and continues next step), so a prompt longer
+    /// than the whole budget still makes progress instead of starving
+    /// everything behind it. Grants always sum to <= `token_budget`.
+    fn chunk_grants(
+        &self,
+        waiting: &VecDeque<RunningSeq>,
+        running_len: usize,
+        kv: &KvCacheV2,
+        token_budget: usize,
+    ) -> Vec<ChunkGrant> {
+        let mut grants = Vec::new();
+        let mut seats = self.cfg.max_num_seqs.saturating_sub(running_len);
+        let mut tokens = token_budget;
+        let mut free_blocks = kv.reclaimable_blocks();
+        let bs = kv.block_size();
+        for (i, seq) in waiting.iter().enumerate() {
+            if seats == 0 || tokens == 0 {
+                break;
+            }
+            let remaining = seq.remaining_prefill();
+            if remaining == 0 {
+                // Degenerate (empty prompt): nothing to feed; stop
+                // rather than loop on a zero-token grant.
+                break;
+            }
+            let grant = remaining.min(tokens);
+            let need_blocks = if seq.prefilled == 0 && grant == remaining {
+                // Fresh whole-prompt admission: net-new blocks, with
+                // prefix-cache credit (same charge as PrefillPriority).
+                kv.charged_blocks_needed(&seq.token_ids)
+            } else {
+                // Chunk continuation (or a truncated first chunk):
+                // geometric growth of the block table. Partial chunks
+                // bypass the prefix cache, so no hit credit applies.
+                let have_blocks = seq.prefilled.div_ceil(bs);
+                let end_blocks = (seq.prefilled + grant).div_ceil(bs);
+                end_blocks - have_blocks
+            };
+            if need_blocks > free_blocks {
+                break; // strict FCFS: no skipping ahead
+            }
+            grants.push(ChunkGrant {
+                queue_idx: i,
+                tokens: grant,
+            });
+            seats -= 1;
+            tokens -= grant;
+            free_blocks -= need_blocks;
+            if grant < remaining {
+                // A truncated chunk exhausted the budget; nothing
+                // behind it may overtake (strict FCFS).
+                break;
+            }
+        }
+        grants
     }
 }
 
@@ -313,13 +391,100 @@ mod tests {
         let waiting: VecDeque<_> = vec![seq(0, 500)].into();
         let running = vec![seq(10, 100); 4];
         match s.decide(&waiting, &running, &kv()) {
-            ScheduleDecision::Mixed {
-                queue_idx,
-                chunk_tokens,
-            } => {
-                assert_eq!(queue_idx, vec![0]);
-                assert_eq!(chunk_tokens, 4096 - 4);
+            ScheduleDecision::Mixed { grants } => {
+                // The whole 500-token prompt fits the 4092 leftover.
+                assert_eq!(
+                    grants,
+                    vec![ChunkGrant {
+                        queue_idx: 0,
+                        tokens: 500
+                    }]
+                );
             }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_truncates_the_head_of_line_prompt_to_the_budget() {
+        // A prompt longer than the leftover budget gets a truncated
+        // chunk instead of starving (the pre-fix behavior was Idle
+        // forever once the queue head exceeded the budget).
+        let s = sched(64, SchedulerPolicy::ChunkedPrefill);
+        let waiting: VecDeque<_> = vec![seq(0, 5000), seq(1, 100)].into();
+        let running = vec![seq(10, 100); 8];
+        match s.decide(&waiting, &running, &kv()) {
+            ScheduleDecision::Mixed { grants } => {
+                // 4096 - 8 decodes = 4088 tokens for the head chunk;
+                // strict FCFS: the prompt behind it must NOT overtake.
+                assert_eq!(
+                    grants,
+                    vec![ChunkGrant {
+                        queue_idx: 0,
+                        tokens: 4088
+                    }]
+                );
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_continues_a_partially_prefilled_head() {
+        let s = sched(64, SchedulerPolicy::ChunkedPrefill);
+        let mut head = seq(0, 5000);
+        head.prefilled = 4088; // one chunk already landed
+        let waiting: VecDeque<_> = vec![head, seq(1, 100), seq(2, 200)].into();
+        match s.decide(&waiting, &[], &kv()) {
+            ScheduleDecision::Mixed { grants } => {
+                // Remainder (912) + both small prompts fit 4096.
+                assert_eq!(grants.len(), 3);
+                assert_eq!(grants[0].tokens, 912);
+                assert_eq!(grants[1].tokens, 100);
+                assert_eq!(grants[2].tokens, 200);
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_grants_never_exceed_the_token_budget() {
+        // The decide_chunked contract (the old decision type claimed
+        // `chunk_tokens: leftover` PER prompt, which jointly exceeded
+        // the step budget): per-prompt grants must sum to <= leftover.
+        let s = sched(64, SchedulerPolicy::ChunkedPrefill);
+        for n_running in [0usize, 4, 32] {
+            let waiting: VecDeque<_> = (0..8).map(|i| seq(i, 700)).collect();
+            let running = vec![seq(100, 50); n_running];
+            let leftover = 4096 - n_running;
+            match s.decide(&waiting, &running, &kv()) {
+                ScheduleDecision::Mixed { grants } => {
+                    let total: usize = grants.iter().map(|g| g.tokens).sum();
+                    assert!(
+                        total <= leftover,
+                        "grants {total} exceed leftover {leftover}"
+                    );
+                    for g in &grants {
+                        assert!(g.tokens <= waiting[g.queue_idx].remaining_prefill());
+                    }
+                    // FCFS prefix shape.
+                    for (k, g) in grants.iter().enumerate() {
+                        assert_eq!(g.queue_idx, k);
+                    }
+                }
+                d => panic!("{d:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_priority_admits_an_oversized_head_alone() {
+        // Without chunking, a head prompt longer than the whole step
+        // budget must still admit (alone) rather than deadlock FCFS.
+        let s = sched(64, SchedulerPolicy::PrefillPriority);
+        let waiting: VecDeque<_> = vec![seq(0, 5000), seq(1, 100)].into();
+        match s.decide(&waiting, &[], &kv()) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0]),
             d => panic!("{d:?}"),
         }
     }

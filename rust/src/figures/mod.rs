@@ -14,6 +14,7 @@ pub mod replication_figs;
 pub mod roofline_figs;
 pub mod serving;
 pub mod stalls;
+pub mod tp_figs;
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -136,7 +137,7 @@ impl FigOpts {
 /// the repo's own online-serving and prefix-cache artefacts.
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix",
+    "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp",
 ];
 
 /// Generate one artefact by id.
@@ -161,6 +162,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "table4" => replication_figs::table4(opts),
         "online" => online_figs::online(opts),
         "prefix" => prefix_figs::prefix_sweep(opts),
+        "tp" => tp_figs::tp_sweep(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

@@ -131,6 +131,7 @@ pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
         &[
             "max_batch",
             "replicas",
+            "tp",
             "feasible",
             "p99_itl_ms",
             "attainment_pct",
@@ -143,11 +144,12 @@ pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
         let recommended = plan
             .best
             .as_ref()
-            .map(|b| b.max_batch == p.max_batch && b.replicas == p.replicas)
+            .map(|b| b.max_batch == p.max_batch && b.replicas == p.replicas && b.tp == p.tp)
             .unwrap_or(false);
         t.push_row(vec![
             p.max_batch.to_string(),
             p.replicas.to_string(),
+            p.tp.to_string(),
             p.feasible.to_string(),
             format!("{:.3}", p.itl.p99 * 1e3),
             format!("{:.1}", 100.0 * p.attainment),
@@ -209,10 +211,12 @@ mod tests {
         let rec_rows: Vec<&Vec<String>> = plan
             .rows
             .iter()
-            .filter(|r| r[7] == "true")
+            .filter(|r| r[8] == "true")
             .collect();
         assert_eq!(rec_rows.len(), 1, "{:?}", plan.rows);
-        assert_eq!(rec_rows[0][2], "true");
+        assert_eq!(rec_rows[0][3], "true");
+        // The single-GPU artefact plans over unsharded engines only.
+        assert!(plan.rows.iter().all(|r| r[2] == "1"));
 
         let frontier = &tables[1];
         assert_eq!(frontier.name, "online_frontier");

@@ -48,7 +48,12 @@ pub fn fig13(opts: &FigOpts) -> Result<Vec<Table>> {
             t.push_row(vec![
                 label.to_string(),
                 p.replica.to_string(),
-                if p.is_gpu { "gpu" } else { "cpu" }.to_string(),
+                match p.kind {
+                    crate::gpusim::mps::PlacedKind::Gpu => "gpu",
+                    crate::gpusim::mps::PlacedKind::Cpu => "cpu",
+                    crate::gpusim::mps::PlacedKind::Swap => "swap",
+                }
+                .to_string(),
                 format!("{:.3}", p.start * 1e3),
                 format!("{:.3}", p.end * 1e3),
                 format!("{:.2}", p.slowdown),

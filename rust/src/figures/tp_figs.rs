@@ -1,0 +1,172 @@
+//! Tensor-parallel artefact (beyond the paper's figure set): per-engine
+//! throughput vs batch for tp ∈ {1,2,4,8}, and the replication-vs-
+//! sharding frontier on a fixed GPU budget — the §VI-B prescription
+//! derived from the collective cost model instead of assumed.
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::coordinator::offline::OfflineConfig;
+use crate::gpusim::mps::SharePolicy;
+use crate::models::spec::{ModelSpec, TpShard};
+use crate::replication::run_cluster;
+use crate::util::par;
+
+/// Batch grid for the throughput-vs-batch sweep.
+fn batch_grid(opts: &FigOpts) -> Vec<usize> {
+    if opts.quick {
+        vec![8, 32, 96, 256]
+    } else {
+        vec![1, 8, 32, 96, 256, 512]
+    }
+}
+
+/// GPU budget of the frontier table.
+fn budget(opts: &FigOpts) -> usize {
+    if opts.quick {
+        4
+    } else {
+        8
+    }
+}
+
+/// The `tp` artefact: throughput vs batch per tp degree, plus the
+/// replication-vs-sharding frontier over the GPU budget.
+pub fn tp_sweep(opts: &FigOpts) -> Result<Vec<Table>> {
+    let spec = ModelSpec::opt_1_3b();
+
+    // --- table 1: one engine, throughput vs batch for each tp --------
+    let mut sweep = Table::new(
+        "tp_throughput",
+        "Tensor parallelism: single-engine throughput vs batch, tp ∈ {1,2,4,8} (OPT-1.3B)",
+        &[
+            "tp",
+            "max_batch",
+            "throughput_tps",
+            "mean_itl_ms",
+            "kv_blocks",
+        ],
+    );
+    let tps: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&tp| TpShard::new(&spec, tp).is_ok())
+        .collect();
+    let grid: Vec<(usize, usize)> = tps
+        .iter()
+        .flat_map(|&tp| batch_grid(opts).into_iter().map(move |b| (tp, b)))
+        .collect();
+    let cap = if opts.quick { 256 } else { 1024 };
+    let runs = par::par_map(&grid, |&(tp, b)| {
+        let mut cfg = OfflineConfig::new(spec.clone(), b);
+        cfg.tp = tp;
+        cfg.num_requests = (2 * b).clamp(64, cap);
+        cfg.output_len = 64;
+        cfg.run()
+    });
+    let gpu = crate::gpusim::GpuSpec::h100_64g();
+    for (&(tp, b), run) in grid.iter().zip(runs) {
+        let r = run?;
+        let kv_blocks = crate::kvcache::capacity_blocks_tp(&gpu, &spec, 16, 1.0, tp);
+        sweep.push_row(vec![
+            tp.to_string(),
+            b.to_string(),
+            format!("{:.0}", r.metrics.throughput_tps),
+            format!("{:.3}", r.metrics.mean_itl * 1e3),
+            kv_blocks.to_string(),
+        ]);
+    }
+
+    // --- table 2: spend the budget on replicas vs shards -------------
+    let gpus = budget(opts);
+    let mut frontier = Table::new(
+        "tp_frontier",
+        &format!(
+            "Replication vs sharding: {gpus}-GPU budget spent on (replicas x tp) (OPT-1.3B, B=96)"
+        ),
+        &[
+            "config",
+            "replicas",
+            "tp",
+            "throughput_tps",
+            "mean_itl_ms",
+            "cpu_time_pct",
+            "dram_util_pct",
+        ],
+    );
+    // One full B=96 wave per tp1 engine (the most replicated config),
+    // so every configuration runs at its full configured batch.
+    let n_req = 96 * gpus;
+    let reqs = crate::workload::generate(&crate::workload::WorkloadConfig::offline(
+        n_req, 161, 64,
+    ));
+    let configs: Vec<(usize, usize)> = tps
+        .iter()
+        .filter(|&&tp| tp <= gpus)
+        .map(|&tp| (gpus / tp, tp))
+        .collect();
+    let frontier_runs = par::par_map(&configs, |&(engines, tp)| {
+        let base = OfflineConfig::new(spec.clone(), 96);
+        run_cluster(&base, engines, tp, gpus, SharePolicy::Mps, &reqs)
+    });
+    for (&(engines, tp), run) in configs.iter().zip(frontier_runs) {
+        let r = run?;
+        frontier.push_row(vec![
+            format!("{engines}x tp{tp}"),
+            engines.to_string(),
+            tp.to_string(),
+            format!("{:.0}", r.throughput_tps),
+            format!("{:.3}", r.mean_itl * 1e3),
+            format!("{:.1}", 100.0 * r.cpu_time_frac),
+            format!("{:.1}", 100.0 * r.mean_dram_util),
+        ]);
+    }
+    Ok(vec![sweep, frontier])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tp_artefact_shows_sharding_speedup_and_replication_win() {
+        let tables = tp_sweep(&FigOpts::quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+
+        let sweep = &tables[0];
+        assert_eq!(sweep.name, "tp_throughput");
+        // 4 tp degrees x 4 quick batches.
+        assert_eq!(sweep.rows.len(), 16);
+        // At B=96, tp=2 outruns tp=1 per engine (halved GPU bursts,
+        // same host gap) — sharding does speed one engine up.
+        let tput = |tp: &str, b: &str| -> f64 {
+            sweep
+                .rows
+                .iter()
+                .find(|r| r[0] == tp && r[1] == b)
+                .unwrap()[2]
+                .parse()
+                .unwrap()
+        };
+        assert!(tput("2", "96") > tput("1", "96"));
+        // ...with diminishing returns: 8 ranks don't give 8x.
+        assert!(tput("8", "96") < 4.0 * tput("1", "96"));
+
+        let frontier = &tables[1];
+        assert_eq!(frontier.name, "tp_frontier");
+        // Quick budget: 4 GPUs -> 4x tp1, 2x tp2, 1x tp4.
+        assert_eq!(frontier.rows.len(), 3);
+        let by_tp = |tp: &str| -> f64 {
+            frontier
+                .rows
+                .iter()
+                .find(|r| r[2] == tp)
+                .unwrap()[3]
+                .parse()
+                .unwrap()
+        };
+        // The frontier's headline: full replication beats full sharding
+        // on the same budget, monotonically across the middle point.
+        assert!(by_tp("1") > by_tp("2"), "{} vs {}", by_tp("1"), by_tp("2"));
+        assert!(by_tp("2") > by_tp("4"), "{} vs {}", by_tp("2"), by_tp("4"));
+    }
+}

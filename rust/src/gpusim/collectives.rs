@@ -1,0 +1,163 @@
+//! Analytic cost model for tensor-parallel collectives and the
+//! multi-GPU cluster budget.
+//!
+//! Ring algorithms over `n` ranks on NVLink (the standard NCCL
+//! schedule):
+//!
+//! - **all-reduce** moves each byte twice around the ring
+//!   (reduce-scatter + all-gather): `2(n-1)/n * bytes / link_bw`, plus
+//!   `2(n-1)` hop latencies;
+//! - **all-gather** moves each byte once: `(n-1)/n * bytes / link_bw`
+//!   plus `(n-1)` hop latencies.
+//!
+//! The per-hop latency term is what makes decode-time collectives
+//! expensive: a decode step's all-reduce payload (`batch x d_model` at
+//! fp16) is tiny, so the 2(n-1) synchronization hops dominate —
+//! LIMINAL's observation that multi-GPU decode is limited by
+//! synchronization and interconnect latency exactly where single-GPU
+//! decode is limited by DRAM. This is the mechanism that lets the
+//! joint planner *derive* the paper's §VI-B replication-over-sharding
+//! prescription instead of assuming it.
+
+use super::hardware::GpuSpec;
+
+/// Seconds for a ring all-reduce of `bytes` across `n` ranks.
+/// `n <= 1` is free (no collective is launched).
+pub fn ring_all_reduce_time(gpu: &GpuSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) / nf * bytes / gpu.nvlink_bw + 2.0 * (nf - 1.0) * gpu.nvlink_latency_s
+}
+
+/// Seconds for a ring all-gather assembling `bytes` total (the full
+/// gathered tensor, of which each rank contributes `bytes / n`).
+pub fn ring_all_gather_time(gpu: &GpuSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) / nf * bytes / gpu.nvlink_bw + (nf - 1.0) * gpu.nvlink_latency_s
+}
+
+/// A fixed GPU budget: `num_gpus` identical cards with an all-to-all
+/// NVLink fabric between them. Tensor-parallel engines occupy `tp`
+/// GPUs each; the joint planner spends this budget on replicas, shards,
+/// or both.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    pub num_gpus: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(gpu: GpuSpec, num_gpus: usize) -> Self {
+        Self {
+            gpu,
+            num_gpus: num_gpus.max(1),
+        }
+    }
+
+    /// How many disjoint tensor-parallel groups of degree `tp` the
+    /// budget holds (each group is one engine's set of GPUs).
+    pub fn tp_groups(&self, tp: usize) -> usize {
+        if tp == 0 {
+            0
+        } else {
+            self.num_gpus / tp
+        }
+    }
+
+    /// Whether at least one engine of degree `tp` fits the budget.
+    pub fn fits(&self, tp: usize) -> bool {
+        self.tp_groups(tp) >= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::h100_64g()
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        assert_eq!(ring_all_reduce_time(&gpu(), 1, 1e9), 0.0);
+        assert_eq!(ring_all_gather_time(&gpu(), 1, 1e9), 0.0);
+        assert_eq!(ring_all_reduce_time(&gpu(), 0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn all_reduce_golden_values() {
+        // OPT-1.3B decode step at B=96: payload 96 x 2048 x 2B = 393216.
+        // H100 defaults: link 0.8 x 450e9 = 360e9 B/s, 2us/hop.
+        let g = gpu();
+        assert_eq!(g.nvlink_bw, 360.0e9);
+        assert_eq!(g.nvlink_latency_s, 2.0e-6);
+        let bytes = 393_216.0;
+        // n=2: 2*(1/2) = 1 full traversal + 2 hops.
+        assert_eq!(
+            ring_all_reduce_time(&g, 2, bytes),
+            2.0 * (1.0 / 2.0) * bytes / 360.0e9 + 2.0 * 2.0e-6
+        );
+        // n=4: 2*(3/4) of the bytes + 6 hops.
+        assert_eq!(
+            ring_all_reduce_time(&g, 4, bytes),
+            2.0 * (3.0 / 4.0) * bytes / 360.0e9 + 6.0 * 2.0e-6
+        );
+        // n=8, Llama-2-7B hidden 4096 at B=32: 32 x 4096 x 2 = 262144.
+        assert_eq!(
+            ring_all_reduce_time(&g, 8, 262_144.0),
+            2.0 * (7.0 / 8.0) * 262_144.0 / 360.0e9 + 14.0 * 2.0e-6
+        );
+    }
+
+    #[test]
+    fn all_gather_is_half_an_all_reduce() {
+        let g = gpu();
+        for n in [2usize, 4, 8] {
+            for bytes in [4096.0, 1.0e8] {
+                let ar = ring_all_reduce_time(&g, n, bytes);
+                let ag = ring_all_gather_time(&g, n, bytes);
+                assert!((ar - 2.0 * ag).abs() < 1e-15 * ar.max(1.0), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn latency_dominates_small_decode_payloads() {
+        // A batch-1 decode all-reduce (2048 x 2B = 4 KiB) is almost
+        // pure hop latency; a 100 MB prefill payload is bandwidth-bound.
+        let g = gpu();
+        let small = ring_all_reduce_time(&g, 4, 4096.0);
+        assert!(small > 0.95 * 6.0 * g.nvlink_latency_s, "{small}");
+        let big = ring_all_reduce_time(&g, 4, 1.0e8);
+        let bw_term = 2.0 * 0.75 * 1.0e8 / g.nvlink_bw;
+        assert!(big < 1.05 * bw_term, "{big} vs {bw_term}");
+    }
+
+    #[test]
+    fn collective_time_grows_with_ranks() {
+        let g = gpu();
+        let t: Vec<f64> = [2usize, 4, 8]
+            .iter()
+            .map(|&n| ring_all_reduce_time(&g, n, 1.0e6))
+            .collect();
+        assert!(t[0] < t[1] && t[1] < t[2], "{t:?}");
+    }
+
+    #[test]
+    fn cluster_budget_partitions_into_tp_groups() {
+        let c = ClusterSpec::new(gpu(), 8);
+        assert_eq!(c.tp_groups(1), 8);
+        assert_eq!(c.tp_groups(2), 4);
+        assert_eq!(c.tp_groups(8), 1);
+        assert_eq!(c.tp_groups(16), 0);
+        assert!(c.fits(8));
+        assert!(!c.fits(16));
+        assert_eq!(ClusterSpec::new(gpu(), 0).num_gpus, 1);
+    }
+}

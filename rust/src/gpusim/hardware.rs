@@ -35,6 +35,16 @@ pub struct GpuSpec {
     /// preemption transfers are costed at. H100 PCIe Gen5 x16 peaks at
     /// 64 GB/s; ~80% is achievable on large pinned copies.
     pub pcie_bw: f64,
+    /// Effective per-direction NVLink bandwidth (bytes/s) one rank can
+    /// push around a tensor-parallel ring. NVLink4 peaks at 450 GB/s
+    /// per direction; ~80% is achievable on large collective payloads
+    /// (what `gpusim::collectives` costs ring steps at).
+    pub nvlink_bw: f64,
+    /// Per-hop latency of one ring step (launch + sync; seconds). The
+    /// fixed-cost term that makes small-payload decode collectives
+    /// latency-bound — the LIMINAL observation that multi-GPU decode is
+    /// synchronization-limited.
+    pub nvlink_latency_s: f64,
     /// Fixed kernel launch + driver overhead per kernel (seconds).
     pub kernel_launch_s: f64,
 
@@ -80,6 +90,8 @@ impl GpuSpec {
             mem_bytes: 64 * 1024 * 1024 * 1024,
             mem_utilization: 0.90,
             pcie_bw: 0.8 * 64.0e9,
+            nvlink_bw: 0.8 * 450.0e9,
+            nvlink_latency_s: 2.0e-6,
             kernel_launch_s: 3.0e-6,
             c_util_b1: 1536.0,
             util_gamma_scale: 0.15,

@@ -26,12 +26,17 @@ pub enum KernelClass {
     Embedding,
     Sampling,
     CacheWrite,
+    /// Tensor-parallel collective (ring all-reduce / all-gather over
+    /// NVLink). Costed by `gpusim::collectives`, not the DRAM roofline;
+    /// only appears in sharded (tp >= 2) step plans, so tp = 1 kernel
+    /// inventories are untouched.
+    Collective,
 }
 
 impl KernelClass {
     /// Every class in declaration order; [`KernelClass::index`] is the
     /// position in this array.
-    pub const ALL: [KernelClass; 7] = [
+    pub const ALL: [KernelClass; 8] = [
         KernelClass::MatMul,
         KernelClass::AttentionDecode,
         KernelClass::AttentionPrefill,
@@ -39,6 +44,7 @@ impl KernelClass {
         KernelClass::Embedding,
         KernelClass::Sampling,
         KernelClass::CacheWrite,
+        KernelClass::Collective,
     ];
 
     /// Number of kernel classes (length of [`KernelClass::ALL`] and of
@@ -63,6 +69,7 @@ impl KernelClass {
             KernelClass::Embedding => "embedding",
             KernelClass::Sampling => "sampling",
             KernelClass::CacheWrite => "cache_write",
+            KernelClass::Collective => "collective",
         }
     }
 
@@ -474,6 +481,25 @@ pub fn cache_write(spec: &ModelSpec, tokens: usize) -> KernelInvocation {
         blocks: (tokens as f64).max(1.0),
         working_set: spec.kv_bytes_per_token_per_layer() as f64,
         batch: tokens,
+    }
+}
+
+/// A tensor-parallel collective as a schedulable step segment. The
+/// payload rides NVLink, not HBM, so every roofline input is zeroed and
+/// `bytes_read` carries the collective payload for
+/// `gpusim::collectives` to cost (the plan compiler special-cases the
+/// class). Names: `tp_*_all_reduce` cost as ring all-reduce,
+/// `tp_*_all_gather` as ring all-gather.
+pub fn collective(name: &'static str, payload_bytes: f64, batch: usize) -> KernelInvocation {
+    KernelInvocation {
+        class: KernelClass::Collective,
+        name,
+        flops: 0.0,
+        bytes_read: payload_bytes,
+        bytes_written: 0.0,
+        blocks: 1.0,
+        working_set: 0.0,
+        batch,
     }
 }
 

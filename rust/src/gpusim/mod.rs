@@ -31,8 +31,12 @@
 //!   Table II) and the TPU VMEM/MXU estimates for the Pallas kernels.
 //! - [`mps`]      — processor-sharing executor for replicated engines
 //!   (Fig 13, Table IV).
+//! - [`collectives`] — ring all-reduce/all-gather costs over
+//!   `GpuSpec::nvlink_bw` and the multi-GPU [`ClusterSpec`] budget the
+//!   tensor-parallel planner spends (replication vs sharding).
 
 pub mod cache;
+pub mod collectives;
 pub mod cpu;
 pub mod dram;
 pub mod hardware;
@@ -45,6 +49,7 @@ pub mod step;
 pub mod timeline;
 pub mod warp;
 
+pub use collectives::ClusterSpec;
 pub use hardware::GpuSpec;
 pub use kernels::{CtxAggregates, KernelClass, KernelInvocation, PromptAggregates};
 pub use plan::{PlanScratch, StepPlan, StepSummary};

@@ -49,6 +49,17 @@ pub enum SharePolicy {
     Mps,
 }
 
+/// What kind of trace segment a placement came from. `Swap` rides the
+/// PCIe link (scheduled like a CPU gap — it does not contend for DRAM)
+/// but stays distinct so swap cost remains visible in traces, as the
+/// [`Segment::Swap`] contract promises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacedKind {
+    Cpu,
+    Gpu,
+    Swap,
+}
+
 /// A placed interval in the shared schedule (for Fig 13 timelines).
 #[derive(Debug, Clone)]
 pub struct PlacedSegment {
@@ -56,6 +67,8 @@ pub struct PlacedSegment {
     pub start: f64,
     pub end: f64,
     pub is_gpu: bool,
+    /// Source segment kind (`is_gpu` is `kind == PlacedKind::Gpu`).
+    pub kind: PlacedKind,
     /// Mean slowdown factor experienced (1.0 = ran at solo speed).
     pub slowdown: f64,
 }
@@ -75,7 +88,9 @@ pub struct SharedRun {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum RunState {
-    Cpu { remaining: f64 },
+    /// Host-side progress; `swap: true` marks a PCIe swap transfer
+    /// (same scheduling, distinct trace kind).
+    Cpu { remaining: f64, swap: bool },
     GpuRunning { remaining_solo: f64, demand: f64 },
     GpuQueued { solo: f64, demand: f64, queued_at: f64 },
     Done,
@@ -122,7 +137,7 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
         let mut dt = f64::INFINITY;
         for s in state.iter() {
             let d = match s {
-                RunState::Cpu { remaining } => *remaining,
+                RunState::Cpu { remaining, .. } => *remaining,
                 RunState::GpuRunning { remaining_solo, .. } => *remaining_solo / rate,
                 _ => f64::INFINITY,
             };
@@ -143,7 +158,8 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
         t += dt;
         for r in 0..n {
             match &mut state[r] {
-                RunState::Cpu { remaining } => {
+                RunState::Cpu { remaining, swap } => {
+                    let was_swap = *swap;
                     *remaining -= dt;
                     seg_slowdown_acc[r] += dt;
                     if *remaining <= eps {
@@ -152,6 +168,11 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
                             start: seg_start[r],
                             end: t,
                             is_gpu: false,
+                            kind: if was_swap {
+                                PlacedKind::Swap
+                            } else {
+                                PlacedKind::Cpu
+                            },
                             slowdown: 1.0,
                         });
                         state[r] = next_state(&replicas[r], &mut idx[r], t);
@@ -174,6 +195,7 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
                             start: seg_start[r],
                             end: t,
                             is_gpu: true,
+                            kind: PlacedKind::Gpu,
                             slowdown: (t - seg_start[r]) / solo_done,
                         });
                         state[r] = next_state(&replicas[r], &mut idx[r], t);
@@ -228,8 +250,15 @@ fn next_state(trace: &[Segment], idx: &mut usize, now: f64) -> RunState {
     match seg {
         // Swap transfers progress like CPU gaps: the PCIe link is not
         // the contended resource this model shares (DRAM bandwidth).
-        Segment::Cpu { duration } | Segment::Swap { duration } => RunState::Cpu {
+        // The kind tag survives into the placement, so swap cost stays
+        // visible in traces.
+        Segment::Cpu { duration } => RunState::Cpu {
             remaining: duration,
+            swap: false,
+        },
+        Segment::Swap { duration } => RunState::Cpu {
+            remaining: duration,
+            swap: true,
         },
         Segment::Gpu {
             duration,
@@ -390,6 +419,49 @@ mod tests {
         for p in &run.placements {
             assert!(p.end > p.start);
             assert!(p.slowdown >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn swap_segments_stay_visible_in_placements() {
+        // Segment::Swap documents that swap cost "stays visible in
+        // traces": the co-scheduler must tag swap placements as such
+        // instead of collapsing them into anonymous CPU gaps.
+        let tr = vec![
+            Segment::Cpu { duration: 0.001 },
+            Segment::Gpu {
+                duration: 0.002,
+                dram_demand: 0.5,
+            },
+            Segment::Swap { duration: 0.004 },
+            Segment::Gpu {
+                duration: 0.002,
+                dram_demand: 0.5,
+            },
+        ];
+        for policy in [SharePolicy::Fcfs, SharePolicy::Mps] {
+            let run = run_shared(&[tr.clone()], policy);
+            let kinds: Vec<PlacedKind> = run.placements.iter().map(|p| p.kind).collect();
+            assert_eq!(
+                kinds,
+                vec![
+                    PlacedKind::Cpu,
+                    PlacedKind::Gpu,
+                    PlacedKind::Swap,
+                    PlacedKind::Gpu
+                ],
+                "{policy:?}"
+            );
+            let swap = &run.placements[2];
+            assert!(!swap.is_gpu, "swap rides PCIe, not the SMs");
+            assert!((swap.end - swap.start - 0.004).abs() < 1e-12);
+            // `is_gpu` stays consistent with the kind tag everywhere.
+            for p in &run.placements {
+                assert_eq!(p.is_gpu, p.kind == PlacedKind::Gpu);
+            }
+            // Scheduling semantics are unchanged: swap behaves like a
+            // host-side gap in the makespan.
+            assert!((run.makespan - 0.009).abs() < 1e-12, "{policy:?}");
         }
     }
 }

@@ -21,6 +21,7 @@
 //! `tests/plan_equivalence.rs`), so the python-mirrored golden values
 //! in `kernels.rs` remain authoritative for both paths.
 
+use super::collectives;
 use super::cpu;
 use super::dram;
 use super::hardware::GpuSpec;
@@ -29,7 +30,7 @@ use super::kernels::{
 };
 use super::step::{KernelExec, StepSim};
 use super::warp;
-use crate::models::spec::{AttentionBackendKind, FfnKind, ModelSpec};
+use crate::models::spec::{AttentionBackendKind, FfnKind, ModelSpec, TpShard};
 
 /// Schedule layout of one step over a flat unique-kernel list:
 /// `invs[..prologue]` runs once at entry, `invs[prologue..prologue +
@@ -58,18 +59,46 @@ pub struct PlanScratch {
     invs: Vec<KernelInvocation>,
 }
 
-/// A compiled step schedule for one `(ModelSpec, AttentionBackendKind)`
-/// pair. Compile once (cheap — it captures the spec), then drive every
-/// step of a run through it; `SimBackend` holds one per engine.
+/// A compiled step schedule for one `(ModelSpec, AttentionBackendKind,
+/// tp)` triple. Compile once (cheap — it captures the spec), then drive
+/// every step of a run through it; `SimBackend` holds one per engine.
+///
+/// With `tp >= 2` the plan is the **per-rank** schedule of a Megatron-
+/// style sharding: head-local kernels (attention, KV writes) and the
+/// sharded GEMM dimensions shrink `1/tp`, and the two per-layer
+/// all-reduces (attention output + FFN down-proj), the vocab-parallel
+/// embedding all-reduce and the logits all-gather appear as explicit
+/// [`KernelClass::Collective`] segments costed by
+/// [`collectives`](super::collectives). Ranks run the same shapes in
+/// lockstep, so one rank's schedule is the step time. At `tp = 1` the
+/// kernel list is byte-for-byte the unsharded one — no collectives, no
+/// altered dimensions — which the plan-equivalence suite pins.
 #[derive(Debug, Clone)]
 pub struct StepPlan {
     spec: ModelSpec,
     backend: AttentionBackendKind,
+    /// Per-rank shard view; tp() == 1 means unsharded.
+    shard: TpShard,
 }
 
 impl StepPlan {
     pub fn new(spec: ModelSpec, backend: AttentionBackendKind) -> Self {
-        Self { spec, backend }
+        Self::with_tp(spec, backend, 1).expect("tp=1 is always a valid sharding")
+    }
+
+    /// Compile the per-rank plan of a `tp`-way tensor-parallel engine.
+    /// Fails if `tp` does not divide the model's sharded dimensions.
+    pub fn with_tp(
+        spec: ModelSpec,
+        backend: AttentionBackendKind,
+        tp: usize,
+    ) -> anyhow::Result<Self> {
+        let shard = TpShard::new(&spec, tp)?;
+        Ok(Self {
+            spec,
+            backend,
+            shard,
+        })
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -80,41 +109,87 @@ impl StepPlan {
         self.backend
     }
 
+    /// Tensor-parallel degree this plan was compiled for.
+    pub fn tp(&self) -> usize {
+        self.shard.tp()
+    }
+
     /// Fill `buf` with the *unique* kernels of one decode step —
     /// prologue, ONE layer block, epilogue — mirroring
     /// `kernels::decode_step_kernels` without the `n_layers` repeat.
+    ///
+    /// Sharded dimensions come from the per-rank spec (`dr`/`fr`/`vr`
+    /// all equal the full dims at tp = 1, so the unsharded list is
+    /// reproduced bit-for-bit); activation-width kernels (norms,
+    /// residuals, embedding, sampling) keep the full `d_model`/`vocab`
+    /// because those tensors are replicated on every rank.
     fn build_decode(&self, agg: &CtxAggregates, buf: &mut Vec<KernelInvocation>) -> Layout {
         let spec = &self.spec;
+        let rank = self.shard.rank();
+        let tp = self.shard.tp();
         let b = agg.count;
         let d = spec.d_model;
-        let f = spec.d_ffn;
+        let dr = rank.d_model; // attention hidden shard
+        let fr = rank.d_ffn; // FFN shard
         let dt = spec.dtype_bytes;
         buf.clear();
         buf.push(kernels::embedding(spec, b));
+        if tp > 1 {
+            // Vocab-parallel embedding: combine the per-rank partial rows.
+            buf.push(kernels::collective(
+                "tp_embed_all_reduce",
+                self.shard.allreduce_bytes(b),
+                b,
+            ));
+        }
         let prologue = buf.len();
         buf.push(kernels::elementwise("pre_attn_norm", b, d, dt, b));
-        buf.push(kernels::gemm("qkv_proj", b, d, 3 * d, dt, b));
-        buf.push(kernels::cache_write(spec, b));
-        buf.push(kernels::attention_decode_aggregated(spec, self.backend, agg));
-        buf.push(kernels::gemm("out_proj", b, d, d, dt, b));
+        buf.push(kernels::gemm("qkv_proj", b, d, 3 * dr, dt, b));
+        buf.push(kernels::cache_write(rank, b));
+        buf.push(kernels::attention_decode_aggregated(rank, self.backend, agg));
+        buf.push(kernels::gemm("out_proj", b, dr, d, dt, b));
+        if tp > 1 {
+            // Megatron all-reduce #1: row-parallel attention output.
+            buf.push(kernels::collective(
+                "tp_attn_all_reduce",
+                self.shard.allreduce_bytes(b),
+                b,
+            ));
+        }
         buf.push(kernels::elementwise("residual_add", b, d, dt, b));
         buf.push(kernels::elementwise("pre_ffn_norm", b, d, dt, b));
         match spec.ffn {
             FfnKind::Relu => {
-                buf.push(kernels::gemm("ffn_up", b, d, f, dt, b));
-                buf.push(kernels::elementwise("ffn_act", b, f, dt, b));
-                buf.push(kernels::gemm("ffn_down", b, f, d, dt, b));
+                buf.push(kernels::gemm("ffn_up", b, d, fr, dt, b));
+                buf.push(kernels::elementwise("ffn_act", b, fr, dt, b));
+                buf.push(kernels::gemm("ffn_down", b, fr, d, dt, b));
             }
             FfnKind::SwiGlu => {
-                buf.push(kernels::gemm("ffn_gate_up", b, d, 2 * f, dt, b));
-                buf.push(kernels::elementwise("ffn_act", b, f, dt, b));
-                buf.push(kernels::gemm("ffn_down", b, f, d, dt, b));
+                buf.push(kernels::gemm("ffn_gate_up", b, d, 2 * fr, dt, b));
+                buf.push(kernels::elementwise("ffn_act", b, fr, dt, b));
+                buf.push(kernels::gemm("ffn_down", b, fr, d, dt, b));
             }
+        }
+        if tp > 1 {
+            // Megatron all-reduce #2: row-parallel FFN down-projection.
+            buf.push(kernels::collective(
+                "tp_ffn_all_reduce",
+                self.shard.allreduce_bytes(b),
+                b,
+            ));
         }
         buf.push(kernels::elementwise("residual_add", b, d, dt, b));
         let block = buf.len() - prologue;
         buf.push(kernels::elementwise("final_norm", b, d, dt, b));
-        buf.push(kernels::gemm("lm_head", b, d, spec.vocab, dt, b));
+        buf.push(kernels::gemm("lm_head", b, d, rank.vocab, dt, b));
+        if tp > 1 {
+            // Vocab-parallel LM head: assemble full logits for sampling.
+            buf.push(kernels::collective(
+                "tp_logits_all_gather",
+                self.shard.logits_gather_bytes(b),
+                b,
+            ));
+        }
         buf.push(kernels::sampling(spec, b));
         Layout { prologue, block }
     }
@@ -123,43 +198,76 @@ impl StepPlan {
     /// `kernels::prefill_step_kernels`.
     fn build_prefill(&self, agg: &PromptAggregates, buf: &mut Vec<KernelInvocation>) -> Layout {
         let spec = &self.spec;
+        let rank = self.shard.rank();
+        let tp = self.shard.tp();
         let tokens = agg.token_sum;
         let b = agg.count;
         let d = spec.d_model;
-        let f = spec.d_ffn;
+        let dr = rank.d_model;
+        let fr = rank.d_ffn;
         let dt = spec.dtype_bytes;
         buf.clear();
         buf.push(kernels::embedding(spec, tokens));
+        if tp > 1 {
+            buf.push(kernels::collective(
+                "tp_embed_all_reduce",
+                self.shard.allreduce_bytes(tokens),
+                b,
+            ));
+        }
         let prologue = buf.len();
         buf.push(kernels::elementwise("pre_attn_norm", tokens, d, dt, b));
-        buf.push(kernels::gemm("qkv_proj", tokens, d, 3 * d, dt, b));
-        buf.push(kernels::cache_write(spec, tokens));
-        buf.push(kernels::attention_prefill_aggregated(spec, self.backend, agg));
-        buf.push(kernels::gemm("out_proj", tokens, d, d, dt, b));
+        buf.push(kernels::gemm("qkv_proj", tokens, d, 3 * dr, dt, b));
+        buf.push(kernels::cache_write(rank, tokens));
+        buf.push(kernels::attention_prefill_aggregated(rank, self.backend, agg));
+        buf.push(kernels::gemm("out_proj", tokens, dr, d, dt, b));
+        if tp > 1 {
+            buf.push(kernels::collective(
+                "tp_attn_all_reduce",
+                self.shard.allreduce_bytes(tokens),
+                b,
+            ));
+        }
         buf.push(kernels::elementwise("residual_add", tokens, d, dt, b));
         buf.push(kernels::elementwise("pre_ffn_norm", tokens, d, dt, b));
         match spec.ffn {
             FfnKind::Relu => {
-                buf.push(kernels::gemm("ffn_up", tokens, d, f, dt, b));
-                buf.push(kernels::elementwise("ffn_act", tokens, f, dt, b));
-                buf.push(kernels::gemm("ffn_down", tokens, f, d, dt, b));
+                buf.push(kernels::gemm("ffn_up", tokens, d, fr, dt, b));
+                buf.push(kernels::elementwise("ffn_act", tokens, fr, dt, b));
+                buf.push(kernels::gemm("ffn_down", tokens, fr, d, dt, b));
             }
             FfnKind::SwiGlu => {
-                buf.push(kernels::gemm("ffn_gate_up", tokens, d, 2 * f, dt, b));
-                buf.push(kernels::elementwise("ffn_act", tokens, f, dt, b));
-                buf.push(kernels::gemm("ffn_down", tokens, f, d, dt, b));
+                buf.push(kernels::gemm("ffn_gate_up", tokens, d, 2 * fr, dt, b));
+                buf.push(kernels::elementwise("ffn_act", tokens, fr, dt, b));
+                buf.push(kernels::gemm("ffn_down", tokens, fr, d, dt, b));
             }
+        }
+        if tp > 1 {
+            buf.push(kernels::collective(
+                "tp_ffn_all_reduce",
+                self.shard.allreduce_bytes(tokens),
+                b,
+            ));
         }
         buf.push(kernels::elementwise("residual_add", tokens, d, dt, b));
         let block = buf.len() - prologue;
         buf.push(kernels::elementwise("final_norm", b, d, dt, b));
-        buf.push(kernels::gemm("lm_head", b, d, spec.vocab, dt, b));
+        buf.push(kernels::gemm("lm_head", b, d, rank.vocab, dt, b));
+        if tp > 1 {
+            buf.push(kernels::collective(
+                "tp_logits_all_gather",
+                self.shard.logits_gather_bytes(b),
+                b,
+            ));
+        }
         buf.push(kernels::sampling(spec, b));
         Layout { prologue, block }
     }
 
     /// Roofline cost of one kernel — the exact math of the legacy
     /// `step::exec_kernels`, evaluated once per *unique* kernel.
+    /// Collectives bypass the roofline entirely: they are costed by the
+    /// ring model against NVLink and stress neither DRAM nor the SMs.
     fn cost(
         &self,
         gpu: &GpuSpec,
@@ -167,15 +275,34 @@ impl StepPlan {
         batch: usize,
         mean_ctx: f64,
     ) -> KernelCost {
-        let duration = dram::kernel_time(gpu, &self.spec, inv);
-        let util = dram::utilization(gpu, &self.spec, inv);
+        if inv.class == KernelClass::Collective {
+            let n = self.shard.tp();
+            let duration = if inv.name.ends_with("all_gather") {
+                collectives::ring_all_gather_time(gpu, n, inv.bytes_read)
+            } else {
+                collectives::ring_all_reduce_time(gpu, n, inv.bytes_read)
+            };
+            return KernelCost {
+                duration,
+                dram_read_util: 0.0,
+                dram_write_util: 0.0,
+                warps_in_flight_pct: 0.0,
+                active_sm_pct: 0.0,
+                stall_frac: 0.0,
+            };
+        }
+        // Attention and KV-write kernels see the per-rank geometry
+        // (identical to the full spec at tp = 1).
+        let spec = self.shard.rank();
+        let duration = dram::kernel_time(gpu, spec, inv);
+        let util = dram::utilization(gpu, spec, inv);
         let total = inv.bytes_total().max(1.0);
         let read_share = inv.bytes_read / total;
         let stall = if inv.class == KernelClass::AttentionDecode {
-            warp::attention_stall_frac(gpu, &self.spec, self.backend, batch, mean_ctx)
+            warp::attention_stall_frac(gpu, spec, self.backend, batch, mean_ctx)
         } else if inv.class == KernelClass::AttentionPrefill {
             // Prefill attention is compute-leaning; stalls stay moderate.
-            0.5 * warp::attention_stall_frac(gpu, &self.spec, self.backend, batch, mean_ctx)
+            0.5 * warp::attention_stall_frac(gpu, spec, self.backend, batch, mean_ctx)
         } else {
             0.0
         };
@@ -183,7 +310,7 @@ impl StepPlan {
             duration,
             dram_read_util: util * read_share,
             dram_write_util: util * (1.0 - read_share),
-            warps_in_flight_pct: warp::warps_in_flight_pct(gpu, &self.spec, inv),
+            warps_in_flight_pct: warp::warps_in_flight_pct(gpu, spec, inv),
             active_sm_pct: 100.0 * warp::active_sm_frac(gpu, inv),
             stall_frac: stall,
         }
@@ -545,6 +672,77 @@ mod tests {
         times[KernelClass::MatMul.index()] = 4.0;
         let labels = class_times_to_labels(&times);
         assert_eq!(labels, vec![("matmul", 4.0), ("attention", 3.0)]);
+    }
+
+    #[test]
+    fn tp1_plan_is_bit_identical_to_default() {
+        for spec in [ModelSpec::opt_1_3b(), ModelSpec::llama2_7b()] {
+            let a = StepPlan::new(spec.clone(), AttentionBackendKind::XFormers);
+            let b = StepPlan::with_tp(spec, AttentionBackendKind::XFormers, 1).unwrap();
+            let ctx: Vec<usize> = (0..48usize).map(|i| 1 + (i * 53) % 700).collect();
+            let sa = a.decode_sim(&gpu(), &ctx, 16);
+            let sb = b.decode_sim(&gpu(), &ctx, 16);
+            assert_eq!(sa.kernels.len(), sb.kernels.len());
+            assert_eq!(sa.gpu_time, sb.gpu_time);
+            assert_eq!(sa.cpu_gap, sb.cpu_gap);
+            let pa = a.prefill_sim(&gpu(), &[161; 8]);
+            let pb = b.prefill_sim(&gpu(), &[161; 8]);
+            assert_eq!(pa.gpu_time, pb.gpu_time);
+            assert_eq!(pa.kernels.len(), pb.kernels.len());
+        }
+    }
+
+    #[test]
+    fn sharded_plan_adds_collectives_and_cuts_rank_work() {
+        let spec = ModelSpec::opt_1_3b();
+        let solo = StepPlan::new(spec.clone(), AttentionBackendKind::XFormers);
+        let tp4 = StepPlan::with_tp(spec.clone(), AttentionBackendKind::XFormers, 4).unwrap();
+        assert_eq!(tp4.tp(), 4);
+        let ctx = vec![338usize; 96];
+        let s1 = solo.decode_sim(&gpu(), &ctx, 16);
+        let s4 = tp4.decode_sim(&gpu(), &ctx, 16);
+        // Collectives appear: embed all-reduce + 2 per layer + logits
+        // all-gather, each an extra kernel record.
+        assert_eq!(
+            s4.kernels.len(),
+            s1.kernels.len() + 2 * spec.n_layers + 2
+        );
+        let sum1 = StepSummary::from_sim(&s1);
+        let sum4 = StepSummary::from_sim(&s4);
+        assert!(sum4.time_by_class(KernelClass::Collective) > 0.0);
+        assert_eq!(sum1.time_by_class(KernelClass::Collective), 0.0);
+        // Per-rank memory-bound work shrinks: matmul + attention time
+        // drop well below the unsharded step.
+        let heavy = |s: &StepSummary| {
+            s.time_by_class(KernelClass::MatMul)
+                + s.time_by_class(KernelClass::AttentionDecode)
+        };
+        assert!(heavy(&sum4) < 0.5 * heavy(&sum1), "{} vs {}", heavy(&sum4), heavy(&sum1));
+        // The host gap is untouched — sharding does nothing for the
+        // CPU-bound share (the paper/LIMINAL point).
+        assert_eq!(s4.cpu_gap, s1.cpu_gap);
+    }
+
+    #[test]
+    fn collective_segment_time_matches_the_ring_model() {
+        use crate::gpusim::collectives::{ring_all_gather_time, ring_all_reduce_time};
+        let spec = ModelSpec::opt_1_3b();
+        let plan = StepPlan::with_tp(spec.clone(), AttentionBackendKind::XFormers, 2).unwrap();
+        let b = 96usize;
+        let agg = CtxAggregates::from_lens(&vec![338; b], 16);
+        let mut scratch = PlanScratch::default();
+        let summary = plan.decode_summary(&gpu(), &agg, &mut scratch);
+        let ar_bytes = (b * spec.d_model * spec.dtype_bytes) as f64;
+        let ag_bytes = (b * spec.vocab * 4) as f64;
+        // Embed all-reduce + 2 per layer, then the logits all-gather.
+        let expect = (1 + 2 * spec.n_layers) as f64
+            * ring_all_reduce_time(&gpu(), 2, ar_bytes)
+            + ring_all_gather_time(&gpu(), 2, ag_bytes);
+        let got = summary.time_by_class(KernelClass::Collective);
+        assert!(
+            (got - expect).abs() <= 1e-12 * expect,
+            "{got} vs {expect}"
+        );
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub fn occupancy_ceiling(class: KernelClass) -> f64 {
         KernelClass::Embedding => 0.75,
         KernelClass::Sampling => 0.50,
         KernelClass::CacheWrite => 0.75,
+        // NVLink collectives occupy no meaningful warp slots; the plan
+        // compiler short-circuits their cost before consulting this.
+        KernelClass::Collective => 0.0,
     }
 }
 

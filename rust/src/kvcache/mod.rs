@@ -36,12 +36,36 @@ pub fn capacity_blocks(
     block_size: usize,
     mem_fraction: f64,
 ) -> usize {
+    capacity_blocks_tp(gpu, spec, block_size, mem_fraction, 1)
+}
+
+/// [`capacity_blocks`] for a `tp`-way tensor-parallel engine: every
+/// rank holds `1/tp` of the weights and `1/tp` of each token's KV, so
+/// the per-rank budget bounds the *logical* (all-rank) block count —
+/// sharding both frees weight bytes per GPU and spreads the cache.
+/// `tp = 1` reduces to the single-GPU formula exactly.
+pub fn capacity_blocks_tp(
+    gpu: &GpuSpec,
+    spec: &ModelSpec,
+    block_size: usize,
+    mem_fraction: f64,
+    tp: usize,
+) -> usize {
+    let tp = tp.max(1);
+    // Exact per-rank weights when the sharding is valid (replicated
+    // norms/positions included); plain division as the fallback so the
+    // capacity question never hard-fails here — engine construction is
+    // where an invalid tp is rejected.
+    let per_rank_weights = match crate::models::spec::TpShard::new(spec, tp) {
+        Ok(shard) => shard.weight_bytes_per_rank() as f64,
+        Err(_) => spec.weight_bytes() as f64 / tp as f64,
+    };
     let usable = gpu.usable_mem_bytes() as f64 * mem_fraction;
-    let for_kv = usable - spec.weight_bytes() as f64;
+    let for_kv = usable - per_rank_weights;
     if for_kv <= 0.0 {
         return 0;
     }
-    let per_block = (spec.kv_bytes_per_token() * block_size as u64) as f64;
+    let per_block = (spec.kv_bytes_per_token() * block_size as u64) as f64 / tp as f64;
     (for_kv / per_block) as usize
 }
 
@@ -89,6 +113,27 @@ mod tests {
         let half = capacity_blocks(&gpu, &spec, 16, 0.5);
         assert!(half < full);
         assert!(half > 0);
+    }
+
+    #[test]
+    fn tp_capacity_reduces_to_single_gpu_at_tp1_and_grows_with_ranks() {
+        let gpu = GpuSpec::h100_64g();
+        let spec = ModelSpec::opt_1_3b();
+        assert_eq!(
+            capacity_blocks_tp(&gpu, &spec, 16, 1.0, 1),
+            capacity_blocks(&gpu, &spec, 16, 1.0)
+        );
+        // Sharding frees weight bytes on every rank and splits each
+        // token's KV, so the logical block budget grows with tp —
+        // roughly tp x, plus the freed-weights bonus.
+        let b1 = capacity_blocks_tp(&gpu, &spec, 16, 1.0, 1);
+        let b2 = capacity_blocks_tp(&gpu, &spec, 16, 1.0, 2);
+        let b4 = capacity_blocks_tp(&gpu, &spec, 16, 1.0, 4);
+        assert!(b2 > 2 * b1 && b4 > 2 * b2, "{b1} {b2} {b4}");
+        // A model whose weights drown one GPU fits once sharded.
+        let big = ModelSpec::llama2_13b();
+        assert_eq!(capacity_blocks_tp(&gpu, &big, 16, 0.3, 1), 0);
+        assert!(capacity_blocks_tp(&gpu, &big, 16, 0.3, 4) > 0);
     }
 
     #[test]

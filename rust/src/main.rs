@@ -35,15 +35,16 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
 
   serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
-            [--prefix-cache] [--preempt-mode recompute|swap]
+            [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
-            [--pattern poisson|bursty] [--period S] [--duty F]
+            [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
-            [--replicas 1,2,4] [--slo-itl-ms X] [--csv PATH]
+            [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
+            [--slo-itl-ms X] [--csv PATH]
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -61,6 +62,15 @@ fn backend_arg(args: &Args) -> AttentionBackendKind {
         "flash" | "flashattention" => AttentionBackendKind::FlashAttention,
         _ => AttentionBackendKind::XFormers,
     }
+}
+
+/// Tensor-parallel degree for one engine, validated against the model
+/// (invalid degrees fail loudly here instead of panicking deep in
+/// engine construction).
+fn tp_arg(args: &Args, spec: &ModelSpec) -> Result<usize> {
+    let tp = args.usize_or("tp", 1);
+    memgap::models::spec::TpShard::new(spec, tp)?;
+    Ok(tp)
 }
 
 fn preempt_arg(args: &Args) -> Result<memgap::coordinator::scheduler::PreemptMode> {
@@ -171,8 +181,12 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.prefix_cache = args.bool_or("prefix-cache", false);
     cfg.preempt = preempt_arg(args)?;
     cfg.prefix = prefix_args(args)?;
+    cfg.tp = tp_arg(args, &cfg.model)?;
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
+    if cfg.tp > 1 {
+        println!("tensor parallel  : {} ranks", cfg.tp);
+    }
     println!("max batch        : {max_seqs}");
     println!(
         "requests         : {} (completed {})",
@@ -270,6 +284,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     }
     cfg.engine.prefix_cache = args.bool_or("prefix-cache", false);
     cfg.engine.preempt = preempt_arg(args)?;
+    cfg.engine.tp = tp_arg(args, &cfg.engine.model)?;
     cfg.workload.prefix = prefix_args(args)?;
     cfg.slo = slo_arg(args)?;
     let rep = run_online(&cfg)?;
@@ -337,17 +352,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     let maxb = memgap::figures::roofline_figs::max_batch(&base.gpu, &spec);
     let (def_batches, def_replicas) = online_figs::plan_grids(maxb);
+    let gpus = args.usize_or("gpus", 1);
     let mut cfg = JointPlannerConfig::new(
         args.usize_list("batches", &def_batches),
         args.usize_list("replicas", &def_replicas),
-    );
+    )
+    .with_cluster(args.usize_list("tp", &[1]), gpus);
     if let Some(ms) = f64_flag(args, "slo-itl-ms")? {
         cfg.slo_itl = Some(ms / 1e3);
     }
     let reqs = generate(&WorkloadConfig::poisson(num_requests, rate, seed));
     eprintln!(
-        "planning {} over {:?} x {:?} at {rate:.2} req/s ...",
-        spec.name, cfg.batch_grid, cfg.replica_grid
+        "planning {} over {:?} x {:?} x tp {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",
+        spec.name, cfg.batch_grid, cfg.replica_grid, cfg.tp_grid
     );
     let plan = plan_joint(&base, &reqs, &cfg)?;
     let table = online_figs::plan_table(&plan);
@@ -359,9 +376,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     match &plan.best {
         Some(b) => {
             println!(
-                "recommendation: max_batch={} x {} replicas (p99 ITL {:.2} ms <= SLO {:.2} ms)",
+                "recommendation: max_batch={} x {} replicas x tp{} (p99 ITL {:.2} ms <= SLO {:.2} ms)",
                 b.max_batch,
                 b.replicas,
+                b.tp,
                 b.itl.p99 * 1e3,
                 plan.slo_itl * 1e3
             );
@@ -381,6 +399,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 println!(
                     "  vs best single replica ({}x1): {:.2} req/s goodput",
                     single.max_batch, single.goodput_rps
+                );
+            }
+            if let Some(sharded) = plan.best_sharded() {
+                println!(
+                    "  vs best sharded ({} x tp{})   : {:.2} req/s goodput",
+                    sharded.replicas, sharded.tp, sharded.goodput_rps
                 );
             }
         }

@@ -1,8 +1,11 @@
 //! Architecture specs for the paper's models (plus the tiny e2e model).
 //!
 //! All byte/FLOP accounting the simulator and the KV-cache manager rely
-//! on lives here, so the formulas exist in exactly one place.
+//! on lives here, so the formulas exist in exactly one place. The
+//! tensor-parallel shard view ([`TpShard`]) also lives here: per-rank
+//! weight and KV bytes are model facts, not simulator facts.
 
+use anyhow::{ensure, Result};
 
 /// Feed-forward block style. OPT uses a plain ReLU MLP (2 matrices);
 /// Llama uses SwiGLU (3 matrices), which changes FFN FLOPs and weight
@@ -197,6 +200,141 @@ impl ModelSpec {
     }
 }
 
+/// Per-rank view of a Megatron-style tensor-parallel sharding over
+/// `tp` ranks: attention heads and the attention hidden width split
+/// column-parallel (QKV) / row-parallel (output projection), FFN
+/// columns split likewise, embedding and LM head split vocab-parallel.
+/// Norms, biases, positional embeddings and the residual stream stay
+/// replicated on every rank — that replication is why `tp x` per-rank
+/// weights slightly exceed the unsharded total.
+///
+/// `tp = 1` degenerates to the unsharded model exactly (the derived
+/// rank spec equals the full spec bit-for-bit), which is what anchors
+/// the tp=1 plan-equivalence and determinism suites.
+#[derive(Debug, Clone)]
+pub struct TpShard {
+    full: ModelSpec,
+    tp: usize,
+    rank: ModelSpec,
+}
+
+impl TpShard {
+    /// Validate and build the shard view. Every sharded dimension must
+    /// divide evenly by `tp` (true for all paper models at tp <= 8).
+    pub fn new(spec: &ModelSpec, tp: usize) -> Result<TpShard> {
+        ensure!(tp >= 1, "tensor-parallel degree must be >= 1, got {tp}");
+        ensure!(
+            spec.n_heads % tp == 0
+                && spec.n_kv_heads % tp == 0
+                && spec.d_model % tp == 0
+                && spec.d_ffn % tp == 0
+                && spec.vocab % tp == 0,
+            "{}: tp={tp} must divide heads ({}/{}), d_model ({}), d_ffn ({}) and vocab ({})",
+            spec.name,
+            spec.n_heads,
+            spec.n_kv_heads,
+            spec.d_model,
+            spec.d_ffn,
+            spec.vocab
+        );
+        // The per-rank spec shrinks n_heads, n_kv_heads, d_model, d_ffn
+        // and vocab together, so head_dim() is preserved and per-rank
+        // KV accounting (n_kv_heads x head_dim) falls out of the
+        // existing formulas. NOTE: d_model here is the *attention
+        // hidden shard* (d/tp); activation-width kernels (norms,
+        // residuals) must keep using the full spec.
+        let mut rank = spec.clone();
+        rank.n_heads /= tp;
+        rank.n_kv_heads /= tp;
+        rank.d_model /= tp;
+        rank.d_ffn /= tp;
+        rank.vocab /= tp;
+        Ok(TpShard {
+            full: spec.clone(),
+            tp,
+            rank,
+        })
+    }
+
+    /// Tensor-parallel degree of this shard view (1 = unsharded).
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+
+    /// The unsharded model.
+    pub fn full(&self) -> &ModelSpec {
+        &self.full
+    }
+
+    /// The per-rank spec for head-local kernels (attention, KV cache
+    /// writes). Its `param_count`/`weight_bytes` are NOT per-rank
+    /// weights — use [`TpShard::weight_bytes_per_rank`] for memory.
+    pub fn rank(&self) -> &ModelSpec {
+        &self.rank
+    }
+
+    /// Query heads one rank computes.
+    pub fn heads_per_rank(&self) -> usize {
+        self.rank.n_heads
+    }
+
+    /// Distinct K/V heads one rank stores.
+    pub fn kv_heads_per_rank(&self) -> usize {
+        self.rank.n_kv_heads
+    }
+
+    /// FFN columns one rank holds (column-parallel up, row-parallel down).
+    pub fn d_ffn_per_rank(&self) -> usize {
+        self.rank.d_ffn
+    }
+
+    /// Vocabulary rows one rank holds (vocab-parallel embedding/LM head).
+    pub fn vocab_per_rank(&self) -> usize {
+        self.rank.vocab
+    }
+
+    /// KV-cache bytes one rank stores per token: the KV heads split
+    /// evenly, so this is an exact `1/tp` of the unsharded footprint.
+    pub fn kv_bytes_per_token_per_rank(&self) -> u64 {
+        self.full.kv_bytes_per_token() / self.tp as u64
+    }
+
+    /// Bytes of model weights resident on ONE rank: big matrices
+    /// (attention projections, FFN, vocab embedding / LM head) shard
+    /// `1/tp`; norms, biases and positional embeddings replicate.
+    /// At tp=1 this equals [`ModelSpec::weight_bytes`] exactly.
+    pub fn weight_bytes_per_rank(&self) -> u64 {
+        let d = self.full.d_model as u64;
+        let f = self.full.d_ffn as u64;
+        let v = self.full.vocab as u64;
+        let l = self.full.n_layers as u64;
+        let t = self.tp as u64;
+        let attn = 4 * d * d / t + 4 * d;
+        let ffn = match self.full.ffn {
+            FfnKind::Relu => 2 * d * f / t + d + f / t,
+            FfnKind::SwiGlu => 3 * d * f / t,
+        };
+        let norms = 4 * d;
+        let params =
+            v * d / t + (self.full.max_seq as u64) * d + l * (attn + ffn + norms) + 2 * d;
+        params * self.full.dtype_bytes as u64
+    }
+
+    /// Per-layer all-reduce payload for a step feeding `tokens` tokens:
+    /// the full-width activation (attention output and FFN down-proj
+    /// both reduce a `[tokens, d_model]` tensor).
+    pub fn allreduce_bytes(&self, tokens: usize) -> f64 {
+        (tokens * self.full.d_model * self.full.dtype_bytes) as f64
+    }
+
+    /// Gathered-logits payload for sampling `batch` next tokens
+    /// (vocab-parallel LM head; logits are f32, as in the sampling
+    /// kernel's cost model).
+    pub fn logits_gather_bytes(&self, batch: usize) -> f64 {
+        (batch * self.full.vocab * 4) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +385,58 @@ mod tests {
             assert_eq!(ModelSpec::by_name(&spec.name).unwrap().name, spec.name);
         }
         assert!(ModelSpec::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn tp1_shard_is_the_identity() {
+        for spec in ModelSpec::paper_models() {
+            let s = TpShard::new(&spec, 1).unwrap();
+            assert_eq!(s.weight_bytes_per_rank(), spec.weight_bytes());
+            assert_eq!(s.kv_bytes_per_token_per_rank(), spec.kv_bytes_per_token());
+            assert_eq!(s.rank().n_heads, spec.n_heads);
+            assert_eq!(s.rank().d_model, spec.d_model);
+            assert_eq!(s.rank().vocab, spec.vocab);
+        }
+    }
+
+    #[test]
+    fn shard_preserves_head_dim_and_splits_kv_exactly() {
+        for spec in ModelSpec::paper_models() {
+            for tp in [2usize, 4, 8] {
+                if spec.n_heads % tp != 0 || spec.vocab % tp != 0 {
+                    continue;
+                }
+                let s = TpShard::new(&spec, tp).unwrap();
+                assert_eq!(s.rank().head_dim(), spec.head_dim(), "{}", spec.name);
+                assert_eq!(s.heads_per_rank() * tp, spec.n_heads);
+                assert_eq!(
+                    s.kv_bytes_per_token_per_rank() * tp as u64,
+                    spec.kv_bytes_per_token()
+                );
+                // Sharding shrinks per-rank weights, but replicated
+                // norms/positions keep the sum above the total.
+                assert!(s.weight_bytes_per_rank() < spec.weight_bytes());
+                assert!(s.weight_bytes_per_rank() * tp as u64 >= spec.weight_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_rejects_non_dividing_degrees() {
+        // OPT-1.3B has 32 heads: tp=3 cannot split them.
+        assert!(TpShard::new(&ModelSpec::opt_1_3b(), 3).is_err());
+        assert!(TpShard::new(&ModelSpec::opt_1_3b(), 0).is_err());
+        // Llama-2-13B has 40 heads: tp=8 splits heads but not 40 % 16.
+        assert!(TpShard::new(&ModelSpec::llama2_13b(), 8).is_ok());
+        assert!(TpShard::new(&ModelSpec::llama2_13b(), 16).is_err());
+    }
+
+    #[test]
+    fn allreduce_payload_is_full_width_activation() {
+        let s = TpShard::new(&ModelSpec::opt_1_3b(), 4).unwrap();
+        // 96 tokens x 2048 wide x fp16 = 393216 bytes, tp-independent.
+        assert_eq!(s.allreduce_bytes(96), 393_216.0);
+        assert_eq!(s.logits_gather_bytes(1), (50_272 * 4) as f64);
     }
 
     #[test]

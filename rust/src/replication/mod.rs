@@ -1,4 +1,5 @@
-//! Model replication on one GPU (paper §VI-B, Fig 13, Table IV).
+//! Model replication on one GPU (paper §VI-B, Fig 13, Table IV) and
+//! tensor-parallel group co-scheduling on a multi-GPU budget.
 //!
 //! With BCA freeing most of the KV allocation, multiple engine replicas
 //! fit on the same device. Each replica gets an equal share of the
@@ -7,6 +8,15 @@
 //! co-scheduled by the MPS processor-sharing executor (or FCFS
 //! time-sharing as the baseline).
 //!
+//! [`run_cluster`] generalizes this to a fixed GPU budget with
+//! tensor-parallel engines: a tp=k engine occupies k GPUs (one TP
+//! *group*), the budget partitions into `gpus / tp` groups, and engines
+//! assigned to the same group share its DRAM via the same MPS model.
+//! Engines on different groups touch disjoint GPUs and never contend —
+//! which is exactly why replication across GPUs beats sharding for
+//! small models: it buys parallel HBM *and* parallel host loops, where
+//! sharding pays collectives for parallel HBM only.
+//!
 //! Methodology note (documented in DESIGN.md §2): each replica's engine
 //! runs against the simulator in its own virtual time producing an
 //! alternating CPU-gap / GPU-burst trace; `gpusim::mps::run_shared`
@@ -14,11 +24,12 @@
 //! from contention is applied to the latency metrics; throughput comes
 //! from total tokens over the shared makespan.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::coordinator::offline::OfflineConfig;
 use crate::coordinator::router::{RoutePolicy, Router};
 use crate::gpusim::mps::{run_shared, Segment, SharePolicy, SharedRun};
+use crate::metrics::RunMetrics;
 use crate::workload::Request;
 
 /// Result of a replicated serving run.
@@ -167,6 +178,195 @@ pub fn run_replicated(
     })
 }
 
+/// Result of a multi-GPU cluster run: `engines` tensor-parallel engines
+/// of degree `tp` on a `gpus`-GPU budget.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub engines: usize,
+    pub tp: usize,
+    pub gpus: usize,
+    /// TP groups the budget partitions into (`gpus / tp`); engines are
+    /// assigned round-robin, so group populations differ by at most 1.
+    pub groups: usize,
+    /// Memory fraction granted to the most crowded group's engines
+    /// (1 / max engines-per-group).
+    pub mem_fraction_each: f64,
+    /// Total (input+output) tokens/s over the cluster makespan.
+    pub throughput_tps: f64,
+    /// Slowest group's shared makespan (seconds).
+    pub makespan: f64,
+    /// Mean ITL across engines, contention-stretched (seconds).
+    pub mean_itl: f64,
+    /// Group-span-weighted mean aggregate DRAM demand.
+    pub mean_dram_util: f64,
+    /// Group-span-weighted GPU-idle share.
+    pub cpu_time_frac: f64,
+    /// Per-engine contention stretch (shared finish / solo makespan).
+    pub stretch: Vec<f64>,
+    /// Per-engine solo run metrics (virtual time, pre-contention).
+    pub solo_metrics: Vec<RunMetrics>,
+}
+
+impl ClusterReport {
+    /// Per-request mean ITLs across all engines, stretched by each
+    /// engine's contention factor (mirrors
+    /// [`ReplicatedReport::stretched_itls`]).
+    pub fn stretched_itls(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (m, &s) in self.solo_metrics.iter().zip(&self.stretch) {
+            out.extend(m.latencies.iter().filter_map(|l| l.itl.map(|i| i * s)));
+        }
+        out
+    }
+
+    /// Completed requests across all engines.
+    pub fn completed(&self) -> usize {
+        self.solo_metrics.iter().map(|m| m.completed).sum()
+    }
+}
+
+/// Run `engines` tensor-parallel engines of degree `tp` over a budget
+/// of `gpus` GPUs.
+///
+/// The budget splits into `gpus / tp` TP groups. Unsharded (tp = 1)
+/// engines land on groups round-robin; engines sharing a group split
+/// its memory evenly and contend for its DRAM under `policy` (the
+/// single-GPU MPS model, applied per group) — the paper's §VI-B
+/// co-location. Sharded (tp >= 2) engines are never co-located:
+/// stacking several multi-rank engines on one GPU set is not a
+/// supported deployment (vLLM requires `instances × tp <= #GPUs`), and
+/// the DRAM-only contention model would flatter it by overlapping
+/// their collectives for free. Requests are routed round-robin across
+/// engines — the same distribution [`run_replicated`] uses, so
+/// `(engines = n, tp = 1, gpus = 1)` reproduces its partitioning.
+pub fn run_cluster(
+    base: &OfflineConfig,
+    engines: usize,
+    tp: usize,
+    gpus: usize,
+    policy: SharePolicy,
+    requests: &[Request],
+) -> Result<ClusterReport> {
+    ensure!(engines >= 1, "need at least one engine");
+    ensure!(tp >= 1, "tensor-parallel degree must be >= 1");
+    let groups_avail = gpus.max(1) / tp;
+    ensure!(
+        groups_avail >= 1,
+        "a tp={tp} engine does not fit a {gpus}-GPU budget"
+    );
+    ensure!(
+        tp == 1 || engines <= groups_avail,
+        "co-locating tensor-parallel engines is unsupported: {engines} tp={tp} engines \
+         need {} GPUs, budget is {gpus}",
+        engines * tp
+    );
+    let groups = groups_avail.min(engines);
+    // Round-robin engine -> group; group g hosts engines g, g+groups, ...
+    let group_of = |e: usize| e % groups;
+    let group_size = |g: usize| (engines - g + groups - 1) / groups;
+
+    let mut router = Router::new(RoutePolicy::RoundRobin, engines);
+    let parts = router.partition(requests);
+
+    // Solo traces, each engine right-sized to its group's split.
+    let mut traces: Vec<Vec<Segment>> = Vec::with_capacity(engines);
+    let mut solo_reports = Vec::with_capacity(engines);
+    for (e, part) in parts.iter().enumerate() {
+        let g = group_of(e);
+        let mut cfg = base.clone();
+        cfg.tp = tp;
+        cfg.mem_fraction = base.mem_fraction / group_size(g) as f64;
+        let mut engine = cfg.build_engine();
+        engine.submit(part);
+        let report = engine.run_to_completion()?;
+        let mut trace = report.segments.clone();
+        // Stagger co-located engines by a fraction of one step so their
+        // bursts interleave (same policy as run_replicated).
+        let idx_in_group = e / groups;
+        let n_in_group = group_size(g);
+        if idx_in_group > 0 && !trace.is_empty() {
+            let first_step = trace.iter().take(2).map(|s| s.duration()).sum::<f64>();
+            traces.push(
+                std::iter::once(Segment::Cpu {
+                    duration: first_step * idx_in_group as f64 / n_in_group as f64,
+                })
+                .chain(trace.drain(..))
+                .collect(),
+            );
+        } else {
+            traces.push(trace);
+        }
+        solo_reports.push(report);
+    }
+
+    // Co-schedule each group's engines on its GPUs; groups are disjoint
+    // hardware, so the cluster makespan is the slowest group's.
+    let mut finish = vec![0.0f64; engines];
+    let mut makespan = 0.0f64;
+    let mut dram_weighted = 0.0f64;
+    let mut idle_weighted = 0.0f64;
+    let mut span_sum = 0.0f64;
+    for g in 0..groups {
+        let members: Vec<usize> = (g..engines).step_by(groups).collect();
+        let group_traces: Vec<Vec<Segment>> =
+            members.iter().map(|&e| traces[e].clone()).collect();
+        let shared = run_shared(&group_traces, policy);
+        for (slot, &e) in members.iter().enumerate() {
+            finish[e] = shared.finish_times[slot];
+        }
+        makespan = makespan.max(shared.makespan);
+        dram_weighted += shared.mean_dram_util * shared.makespan;
+        idle_weighted += shared.gpu_idle_frac * shared.makespan;
+        span_sum += shared.makespan;
+    }
+
+    let stretch: Vec<f64> = solo_reports
+        .iter()
+        .zip(&finish)
+        .map(|(r, &f)| {
+            if r.metrics.makespan > 0.0 {
+                f / r.metrics.makespan
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let total_tokens: usize = solo_reports
+        .iter()
+        .map(|r| r.metrics.total_input_tokens + r.metrics.total_output_tokens)
+        .sum();
+    let mean_itl = solo_reports
+        .iter()
+        .zip(&stretch)
+        .map(|(r, s)| r.metrics.mean_itl * s)
+        .sum::<f64>()
+        / engines as f64;
+    let max_group = (0..groups).map(group_size).max().unwrap_or(1);
+
+    Ok(ClusterReport {
+        engines,
+        tp,
+        gpus: gpus.max(1),
+        groups,
+        mem_fraction_each: base.mem_fraction / max_group as f64,
+        throughput_tps: total_tokens as f64 / makespan.max(1e-12),
+        makespan,
+        mean_itl,
+        mean_dram_util: if span_sum > 0.0 {
+            dram_weighted / span_sum
+        } else {
+            0.0
+        },
+        cpu_time_frac: if span_sum > 0.0 {
+            idle_weighted / span_sum
+        } else {
+            0.0
+        },
+        stretch,
+        solo_metrics: solo_reports.into_iter().map(|r| r.metrics).collect(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +443,61 @@ mod tests {
             .sum();
         // Contention can only stretch latencies.
         assert!(stretched.iter().sum::<f64>() >= solo * 0.999);
+    }
+
+    #[test]
+    fn single_group_cluster_matches_run_replicated() {
+        // (2 engines, tp=1, 1 GPU) is exactly run_replicated's setup:
+        // same partitioning, same stagger, same shared schedule.
+        let reqs = opt13_requests(64);
+        let rep = run_replicated(&base(32), 2, SharePolicy::Mps, &reqs, 0.5).unwrap();
+        let clu = run_cluster(&base(32), 2, 1, 1, SharePolicy::Mps, &reqs).unwrap();
+        assert_eq!(clu.groups, 1);
+        assert_eq!(clu.makespan, rep.makespan);
+        assert_eq!(clu.completed(), rep.completed());
+        assert_eq!(clu.stretched_itls(), rep.stretched_itls());
+    }
+
+    #[test]
+    fn dedicated_gpus_run_contention_free() {
+        let reqs = opt13_requests(64);
+        let clu = run_cluster(&base(32), 2, 1, 2, SharePolicy::Mps, &reqs).unwrap();
+        assert_eq!(clu.groups, 2);
+        assert_eq!(clu.mem_fraction_each, 1.0);
+        // Each engine owns its GPU: no stretch beyond numerical noise.
+        for &s in &clu.stretch {
+            assert!((s - 1.0).abs() < 1e-9, "{s}");
+        }
+        // And the two halves overlap, so the cluster finishes in about
+        // half the single-engine time.
+        let solo = run_cluster(&base(32), 1, 1, 1, SharePolicy::Mps, &reqs).unwrap();
+        assert!(clu.makespan < 0.75 * solo.makespan);
+        assert!(clu.throughput_tps > 1.5 * solo.throughput_tps);
+    }
+
+    #[test]
+    fn replication_beats_tp_sharding_for_a_small_model_on_two_gpus() {
+        // The derived §VI-B claim: on the same 2-GPU budget, two tp=1
+        // replicas outperform one tp=2 sharded engine for OPT-1.3B —
+        // replication parallelizes the host loop and both HBMs, while
+        // sharding halves only the GPU burst and pays collectives.
+        // 192 requests = one full B=96 wave per replica.
+        let reqs = opt13_requests(192);
+        let rep = run_cluster(&base(96), 2, 1, 2, SharePolicy::Mps, &reqs).unwrap();
+        let shard = run_cluster(&base(96), 1, 2, 2, SharePolicy::Mps, &reqs).unwrap();
+        assert_eq!(rep.completed(), shard.completed());
+        assert!(
+            rep.throughput_tps > 1.1 * shard.throughput_tps,
+            "replication {} vs sharding {}",
+            rep.throughput_tps,
+            shard.throughput_tps
+        );
+    }
+
+    #[test]
+    fn cluster_rejects_oversized_tp() {
+        let reqs = opt13_requests(8);
+        assert!(run_cluster(&base(8), 1, 4, 2, SharePolicy::Mps, &reqs).is_err());
     }
 
     #[test]

@@ -101,6 +101,48 @@ fn online_report_is_bit_identical_for_both_preempt_modes_and_cache_states() {
     assert_ne!(reports[0], reports[2]);
 }
 
+/// Determinism extends across the (scheduler policy × tensor-parallel
+/// degree) matrix: every combination replays bit-identically, including
+/// under a nested fan-out, and the combinations that must differ do
+/// (chunking changes the schedule; sharding changes step timings —
+/// while tp=1 is bit-identical to the pre-TP engine).
+#[test]
+fn online_report_is_bit_identical_across_policy_and_tp_combos() {
+    let cfg_for = |chunked: bool, tp: usize| {
+        let mut cfg = online_cfg(7);
+        cfg.engine.chunked_prefill = chunked;
+        cfg.engine.tp = tp;
+        cfg
+    };
+    let combos = [(false, 1usize), (false, 2), (true, 1), (true, 2)];
+    let mut reports = Vec::new();
+    for (chunked, tp) in combos {
+        let cfg = cfg_for(chunked, tp);
+        let a = run_online(&cfg).unwrap().to_json().to_string();
+        let b = run_online(&cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b, "chunked={chunked}/tp={tp} not reproducible");
+        let lanes: Vec<usize> = (0..2).collect();
+        for lane in par_map(&lanes, |_| run_online(&cfg).unwrap().to_json().to_string()) {
+            assert_eq!(lane, a, "chunked={chunked}/tp={tp} diverged under fan-out");
+        }
+        reports.push(a);
+    }
+    // tp changes timings within a policy; chunking changes the step
+    // schedule within a tp degree.
+    assert_ne!(reports[0], reports[1], "tp must alter the report");
+    assert_ne!(reports[0], reports[2], "chunking must alter the report");
+    assert_ne!(reports[2], reports[3]);
+    // And the tp=1 path is the pre-TP engine: the default config (no tp
+    // field touched) replays identically to an explicit tp=1.
+    let untouched = run_online(&online_cfg(7)).unwrap().to_json().to_string();
+    let explicit = {
+        let mut cfg = online_cfg(7);
+        cfg.engine.tp = 1;
+        run_online(&cfg).unwrap().to_json().to_string()
+    };
+    assert_eq!(untouched, explicit);
+}
+
 #[test]
 fn rate_sweep_is_order_preserving_under_nested_fan_out() {
     let rates = [10.0, 25.0, 60.0];

@@ -269,6 +269,59 @@ fn time_by_label_matches_summary_grouping() {
     assert_close(total, sim.gpu_time, "label times sum to gpu_time");
 }
 
+/// tp = 1 anchors the tensor-parallel layer: a plan compiled through
+/// `with_tp(…, 1)` must reproduce the default plan bit-for-bit — same
+/// kernel inventory (no collectives), same shapes, same timings — for
+/// every paper model and backend.
+#[test]
+fn tp1_plans_are_bit_identical_to_unsharded_plans() {
+    let gpu = GpuSpec::h100_64g();
+    prop::check("tp1-plan-equivalence", 8, |rng| {
+        for spec in ModelSpec::paper_models() {
+            for backend in BACKENDS {
+                let plain = StepPlan::new(spec.clone(), backend);
+                let tp1 = StepPlan::with_tp(spec.clone(), backend, 1).unwrap();
+                let batch = 1 + rng.range(0, 96);
+                let ctx = ragged_ctx(rng, batch, 900);
+                assert_sims_match(
+                    &tp1.decode_sim(&gpu, &ctx, 16),
+                    &plain.decode_sim(&gpu, &ctx, 16),
+                    &format!("{} {backend:?} decode", spec.name),
+                );
+                let lens = ragged_ctx(rng, 1 + rng.range(0, 16), 512);
+                assert_sims_match(
+                    &tp1.prefill_sim(&gpu, &lens),
+                    &plain.prefill_sim(&gpu, &lens),
+                    &format!("{} {backend:?} prefill", spec.name),
+                );
+            }
+        }
+    });
+}
+
+/// The same anchor at the engine level: an OfflineConfig with `tp = 1`
+/// spelled explicitly produces bit-identical reports to the default
+/// construction (same KV capacity, same step timings, same makespan).
+#[test]
+fn tp1_engine_runs_are_bit_identical() {
+    let mut base = OfflineConfig::new(ModelSpec::opt_1_3b(), 24);
+    base.num_requests = 48;
+    base.input_len = 120;
+    base.output_len = 24;
+    let default_run = base.run().expect("default run");
+    let mut tp1 = base.clone();
+    tp1.tp = 1;
+    let tp1_run = tp1.run().expect("tp=1 run");
+    assert_eq!(default_run.metrics.completed, tp1_run.metrics.completed);
+    assert_eq!(default_run.steps, tp1_run.steps);
+    assert_eq!(default_run.metrics.makespan, tp1_run.metrics.makespan);
+    assert_eq!(
+        default_run.metrics.throughput_tps,
+        tp1_run.metrics.throughput_tps
+    );
+    assert_eq!(default_run.peak_kv_blocks, tp1_run.peak_kv_blocks);
+}
+
 /// The figures contract: a full engine run produces the same serving
 /// numbers whether steps are recorded (StepSim) or summarized — so
 /// flipping `record_steps` off for the big sweeps changes nothing in

@@ -499,3 +499,57 @@ fn prop_workload_respects_context() {
         }
     });
 }
+
+/// Tensor-parallel shard view: per-rank KV splits exactly `1/tp`;
+/// per-rank weights shrink monotonically with tp, never below the
+/// ideal `1/tp` split (replicated norms/positions), and never lose
+/// more than the replicated overhead to that ideal.
+#[test]
+fn prop_tp_shard_memory_halving_invariants() {
+    use memgap::models::spec::TpShard;
+    check("tp-shard-memory", 40, |rng: &mut Rng| {
+        let models = ModelSpec::paper_models();
+        let spec = models.get(rng.range(0, models.len())).unwrap();
+        let degrees: Vec<usize> = [1usize, 2, 4, 8]
+            .into_iter()
+            .filter(|&tp| TpShard::new(spec, tp).is_ok())
+            .collect();
+        assert!(degrees.contains(&1) && degrees.contains(&2));
+        let total_w = spec.weight_bytes();
+        let total_kv = spec.kv_bytes_per_token();
+        let mut prev_w = u64::MAX;
+        for &tp in &degrees {
+            let shard = TpShard::new(spec, tp).unwrap();
+            // KV heads split evenly: the per-rank split is exact.
+            assert_eq!(
+                shard.kv_bytes_per_token_per_rank() * tp as u64,
+                total_kv,
+                "{} tp={tp}",
+                spec.name
+            );
+            // Weights: ideal/tp <= per-rank < previous degree's.
+            let w = shard.weight_bytes_per_rank();
+            assert!(w * tp as u64 >= total_w, "{} tp={tp}", spec.name);
+            assert!(w < prev_w || tp == 1, "{} tp={tp}", spec.name);
+            prev_w = w;
+            // Replication overhead stays small: doubling tp halves the
+            // sharded matrices, so 2*w(2t) - w(t) is exactly the
+            // replicated bytes — under 10% of the model for all paper
+            // configs.
+            if tp >= 2 {
+                let half = TpShard::new(spec, tp / 2).unwrap().weight_bytes_per_rank();
+                let replicated = 2 * w - half;
+                assert!(
+                    replicated < total_w / 10,
+                    "{} tp={tp}: replicated {replicated}",
+                    spec.name
+                );
+            }
+            // The per-rank spec keeps head geometry intact.
+            assert_eq!(shard.rank().head_dim(), spec.head_dim());
+            assert_eq!(shard.heads_per_rank() * tp, spec.n_heads);
+            assert_eq!(shard.vocab_per_rank() * tp, spec.vocab);
+            assert_eq!(shard.d_ffn_per_rank() * tp, spec.d_ffn);
+        }
+    });
+}
