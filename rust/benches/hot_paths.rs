@@ -179,6 +179,35 @@ fn main() {
         engine.run_to_completion().unwrap().steps
     }));
 
+    // 4b/4c. Event-driven fast-forward vs stepwise at batch >= 256
+    // (ISSUE 6 headline: the sweep speedup must be >= 10x). All 512
+    // fixed-length requests decode in lockstep, so nearly the whole run
+    // is one steady streak per wave — the best case fast-forward is
+    // built for, and exactly the shape of every figure sweep point.
+    let big_reqs = generate(&WorkloadConfig::offline(
+        512,
+        memgap::workload::SHAREGPT_MEAN_INPUT,
+        memgap::workload::SHAREGPT_MEAN_OUTPUT,
+    ));
+    let big_run = |ff: bool| {
+        let backend = SimBackend::new(
+            gpu.clone(),
+            spec.clone(),
+            AttentionBackendKind::XFormers,
+        );
+        let mut cfg = EngineConfig::new(256, 32 * 1024, 16);
+        cfg.fast_forward = ff;
+        let mut engine = Engine::new(backend, cfg);
+        engine.submit(&big_reqs);
+        engine.run_to_completion().unwrap().steps
+    };
+    let ff_res = run_heavy("engine_run_512reqs_b256_fast_forward", || big_run(true));
+    let step_res = run_heavy("engine_run_512reqs_b256_stepwise", || big_run(false));
+    let speedup = step_res.ns_per_iter() / ff_res.ns_per_iter().max(1.0);
+    record(ff_res);
+    record(step_res);
+    println!("fast-forward sweep speedup at B=256: {speedup:.1}x");
+
     // 5. MPS co-scheduling: 4 replicas x 2000 segments.
     let trace: Vec<Segment> = (0..1000)
         .flat_map(|i| {
@@ -201,6 +230,9 @@ fn main() {
     // 6. PJRT real decode step (needs the `pjrt` feature + artifacts).
     pjrt_benches(&mut record);
     drop(record);
+    // The stepwise-vs-fast-forward ratio travels with the trajectory
+    // (`_x` suffix: derived scalar, exempt from the CI slowdown gate).
+    json.push("fast_forward_speedup_b256_x", speedup);
 
     // 7. Machine-readable trajectory for the next PR's comparison.
     // Smoke numbers are canaries, not trajectory points: never let a

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::gpusim::kernels::{CtxAggregates, PromptAggregates};
-use crate::gpusim::plan::{PlanScratch, StepPlan, StepSummary};
+use crate::gpusim::plan::{DecodeCostModel, PlanScratch, StepPlan, StepSummary};
 use crate::gpusim::step::StepSim;
 use crate::gpusim::{self, GpuSpec};
 use crate::kvcache::SeqId;
@@ -119,6 +119,26 @@ pub trait Backend {
         bytes as f64 / self.link_bw()
     }
 
+    /// A closed-form per-step cost model for a steady decode streak over
+    /// the given context lengths, or `None` if this backend cannot price
+    /// steps analytically (PJRT) or its outputs would not be bit-stable
+    /// against [`Backend::decode`] (recording mode). Each
+    /// [`DecodeCostModel::next_step`] must reproduce *exactly* — same
+    /// floating-point result, not approximately — the `StepSummary` that
+    /// `decode` would return for the batch after every context length has
+    /// grown by one token per emitted step.
+    fn decode_cost_model(&self, _ctx_lens: &[usize]) -> Option<DecodeCostModel> {
+        None
+    }
+
+    /// The token [`Backend::decode`] would emit for `seq` at
+    /// `context_len` during a steady decode streak. Fast-forward uses
+    /// this to synthesize the skipped tokens; it must match what `decode`
+    /// puts in `StepOutput::next_tokens` for the same entry.
+    fn steady_decode_token(&self, _seq: SeqId, _context_len: usize) -> i32 {
+        0
+    }
+
     /// Process prompts and produce each sequence's first token.
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput>;
 
@@ -214,6 +234,21 @@ impl Backend for SimBackend {
 
     fn link_bw(&self) -> f64 {
         self.gpu.pcie_bw
+    }
+
+    fn decode_cost_model(&self, ctx_lens: &[usize]) -> Option<DecodeCostModel> {
+        if self.record {
+            // Recording mode folds per-kernel durations in a different
+            // order (`StepSummary::from_sim`), so the closed-form model
+            // would diverge by ULPs. Decline; the engine stays stepwise.
+            return None;
+        }
+        Some(self.plan.decode_cost_model(&self.gpu, ctx_lens, self.kv_block))
+    }
+
+    fn steady_decode_token(&self, seq: SeqId, context_len: usize) -> i32 {
+        // Must match `fake_tokens` term-for-term.
+        ((seq as usize * 31 + context_len) % self.model.vocab) as i32
     }
 
     fn prefill(&mut self, batch: &StepBatch) -> Result<StepOutput> {

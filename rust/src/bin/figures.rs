@@ -2,6 +2,10 @@
 //!
 //!   cargo run --release --bin figures -- --all [--quick] [--out results]
 //!   cargo run --release --bin figures -- --fig table4
+//!
+//! Artefacts are cached content-addressed under `<out>/.fig_cache`
+//! (keyed by figure id, options fingerprint, and crate version), so
+//! repeat invocations are incremental; `--no-cache` forces a rerun.
 
 use anyhow::{bail, Result};
 
@@ -10,11 +14,12 @@ use memgap::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let opts = if args.bool_or("quick", false) {
+    let mut opts = if args.bool_or("quick", false) {
         FigOpts::quick()
     } else {
         FigOpts::default()
     };
+    opts.no_cache = args.bool_or("no-cache", false);
     let out = std::path::PathBuf::from(args.get_or("out", "results"));
     let ids: Vec<&str> = if args.bool_or("all", false) {
         figures::ALL_IDS.to_vec()

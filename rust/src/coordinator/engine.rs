@@ -56,6 +56,14 @@ pub struct EngineConfig {
     /// Capture per-step kernel sims for timelines (memory-heavy; the
     /// figure harness enables it only where needed).
     pub record_steps: bool,
+    /// Event-driven fast-forward: between scheduler-relevant events
+    /// (arrival, finish, preemption, chunk grant, swap) decode steps
+    /// are replayed arithmetically from the backend's closed-form cost
+    /// model instead of stepwise — bit-identical reports, large-batch
+    /// sweeps run orders of magnitude faster. The stepwise path stays
+    /// the golden reference (`--no-fast-forward`); recording mode
+    /// always steps (per-kernel sims cannot be fast-forwarded).
+    pub fast_forward: bool,
 }
 
 impl EngineConfig {
@@ -71,6 +79,7 @@ impl EngineConfig {
             prefix_cache: false,
             cpu_swap_blocks: kv_blocks,
             record_steps: false,
+            fast_forward: true,
         }
     }
 }
@@ -342,6 +351,9 @@ impl<B: Backend> Engine<B> {
             }
             ScheduleDecision::Decode => {
                 self.run_decode()?;
+                // The running set is now in a uniform decode streak;
+                // replay it arithmetically up to the next event.
+                self.fast_forward_decode()?;
                 Ok(true)
             }
             ScheduleDecision::Mixed { grants } => {
@@ -536,6 +548,148 @@ impl<B: Backend> Engine<B> {
             }
             self.metrics.on_token(s.id, self.clock);
         }
+        self.retire_or_keep(seqs);
+        Ok(())
+    }
+
+    /// Would [`Engine::try_swap_in`] admit the parked front sequence
+    /// right now? Mirrors its loop-entry conditions exactly; a ready
+    /// swap-in is a fast-forward event boundary (the next stepwise
+    /// iteration performs the transfer).
+    fn swap_in_ready(&self) -> bool {
+        match self.swapped.front() {
+            Some(front) => {
+                self.running.len() < self.cfg.max_num_seqs
+                    && match self.kv.swapped_need(front.id) {
+                        Some(need) => self.kv.reclaimable_blocks() >= need,
+                        None => false,
+                    }
+            }
+            None => false,
+        }
+    }
+
+    /// Event-driven fast-forward of a *uniform decode streak*. After a
+    /// stepwise [`Engine::run_decode`], batch composition is static
+    /// until the next scheduler-relevant event — arrival, sequence
+    /// finish, KV-pool exhaustion (preemption), context-window cap,
+    /// swap-in readiness, chunk grant — and every step appends exactly
+    /// one token per running sequence. Within that window the per-step
+    /// work is replayed arithmetically from the backend's closed-form
+    /// [`decode_cost_model`](Backend::decode_cost_model) instead of
+    /// rebuilding a `StepBatch` per step: virtual time, KV block usage,
+    /// per-request token clocks and `StepSummary` aggregates all
+    /// advance in bulk, bit-identically to the stepwise path (pinned by
+    /// `tests/fast_forward.rs`).
+    fn fast_forward_decode(&mut self) -> Result<()> {
+        if !self.cfg.fast_forward || self.cfg.record_steps || self.running.is_empty() {
+            return Ok(());
+        }
+        // A chunk-split step absorbs sub-batch summaries with different
+        // rounding; keep the stepwise path whenever the backend cannot
+        // take the whole batch at once.
+        if self.running.len() > self.backend.max_batch().max(1) {
+            return Ok(());
+        }
+        // `run_decode` may have freed seats or blocks (finishes,
+        // swap-outs): if a parked sequence could swap back in, the
+        // streak is over before it starts. During the streak the pool
+        // only shrinks and no seats free up, so this cannot *become*
+        // true mid-streak — checking once at entry is exact.
+        if self.swap_in_ready() {
+            return Ok(());
+        }
+        // `run_decode` may also have pushed preemption victims onto the
+        // waiting queue; only a pure-decode decision is a streak. A
+        // blocked prompt stays blocked while the pool shrinks, so this
+        // too is stable for the whole streak.
+        if !matches!(
+            self.scheduler.decide(&self.waiting, &self.running, &self.kv),
+            ScheduleDecision::Decode
+        ) {
+            return Ok(());
+        }
+        let ctx: Vec<usize> = self.running.iter().map(|s| s.context_len()).collect();
+        let Some(mut model) = self.backend.decode_cost_model(&ctx) else {
+            return Ok(()); // backend opted out: stepwise only
+        };
+        // Streak length upper bound: stop at (and including) the step
+        // where the first sequence emits its final token, and *before*
+        // any sequence would overflow its context window — the stepwise
+        // path force-finishes it there, which is an event.
+        let bs = self.kv.block_size().max(1);
+        let cap_tokens = self.kv.max_blocks_per_seq() * bs;
+        let mut limit = usize::MAX;
+        for s in &self.running {
+            limit = limit.min(s.target_output - s.generated);
+            limit = limit.min((cap_tokens + 1).saturating_sub(s.context_len()));
+        }
+        if limit == 0 {
+            return Ok(());
+        }
+        // KV-pool budget: step t allocates one block for every sequence
+        // whose context crosses a block boundary at t (its pre-append
+        // token count is ≡ 0 mod block_size); stop before the first
+        // step the pool cannot serve — stepwise preempts there.
+        let mut hist = vec![0usize; bs];
+        for &c in &ctx {
+            hist[(c - 1) % bs] += 1;
+        }
+        let mut budget = self.kv.reclaimable_blocks();
+        let n = self.running.len();
+        let mut done = 0usize;
+        let mut clocks: Vec<f64> = Vec::with_capacity(limit.min(4096));
+        while done < limit {
+            // Arrival boundary: the stepwise loop would absorb this
+            // request at the top of its next iteration.
+            if self.pending.last().is_some_and(|r| r.arrival <= self.clock) {
+                break;
+            }
+            let allocs = hist[(bs - done % bs) % bs];
+            if allocs > budget {
+                break;
+            }
+            budget -= allocs;
+            let summary = model.next_step();
+            // The exact `after_step` bookkeeping of one decode step.
+            self.clock += summary.cpu_gap + summary.gpu_time;
+            self.steps += 1;
+            self.decode_time += summary.cpu_gap + summary.gpu_time;
+            self.metrics
+                .on_step(self.clock, n, summary.cpu_gap, summary.gpu_time);
+            self.segments.push(Segment::Cpu {
+                duration: summary.cpu_gap,
+            });
+            self.segments.push(Segment::Gpu {
+                duration: summary.gpu_time,
+                dram_demand: summary.dram_demand().min(1.0),
+            });
+            clocks.push(self.clock);
+            done += 1;
+        }
+        debug_assert!(done <= limit, "fast-forward overran an event boundary");
+        if done == 0 {
+            return Ok(());
+        }
+        self.peak_step_tokens = self.peak_step_tokens.max(n);
+        // Bulk-extend the KV reservations in exactly the stepwise
+        // allocation order (step-major, running order within a step),
+        // so pool state — free list, LRU, eviction counts, peaks — ends
+        // bit-identical to per-step appends.
+        let ids: Vec<u64> = self.running.iter().map(|s| s.id).collect();
+        self.kv.append_tokens_batch(&ids, done)?;
+        // Per-sequence effects: one generated token per virtual step.
+        for s in &mut self.running {
+            let c0 = s.context_len();
+            for t in 0..done {
+                s.push_token(self.backend.steady_decode_token(s.id, c0 + t));
+            }
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(clocks[0]);
+            }
+            self.metrics.on_tokens(s.id, &clocks);
+        }
+        let seqs = std::mem::take(&mut self.running);
         self.retire_or_keep(seqs);
         Ok(())
     }
@@ -1318,6 +1472,79 @@ mod tests {
             on.peak_kv_blocks,
             off.peak_kv_blocks
         );
+    }
+
+    #[test]
+    fn fast_forward_matches_stepwise_and_saves_iterations() {
+        // Same workload, fast-forward on vs off: every report number is
+        // bit-identical, but the driver loop needs far fewer `step()`
+        // calls because each call covers a whole decode streak.
+        let run = |ff: bool| {
+            let mut e = engine_with(8, 4096, |c| c.fast_forward = ff);
+            e.submit(&generate(&WorkloadConfig::offline(16, 64, 48)));
+            let mut calls = 0usize;
+            let mut fins = Vec::new();
+            while e.has_work() {
+                e.step().unwrap();
+                calls += 1;
+                fins.extend(e.take_finished());
+            }
+            (e.finish(), calls, fins)
+        };
+        let (slow, slow_calls, slow_fins) = run(false);
+        let (fast, fast_calls, fast_fins) = run(true);
+        assert_eq!(fast.metrics.makespan, slow.metrics.makespan);
+        assert_eq!(fast.metrics.throughput_tps, slow.metrics.throughput_tps);
+        assert_eq!(fast.metrics.completed, slow.metrics.completed);
+        assert_eq!(
+            fast.metrics.total_output_tokens,
+            slow.metrics.total_output_tokens
+        );
+        assert_eq!(fast.steps, slow.steps);
+        assert_eq!(fast.prefill_time, slow.prefill_time);
+        assert_eq!(fast.decode_time, slow.decode_time);
+        assert_eq!(fast.peak_kv_blocks, slow.peak_kv_blocks);
+        assert_eq!(fast.peak_kv_usage, slow.peak_kv_usage);
+        assert_eq!(fast.peak_step_tokens, slow.peak_step_tokens);
+        assert_eq!(fast.segments, slow.segments);
+        assert_eq!(fast_fins.len(), slow_fins.len());
+        for (a, b) in fast_fins.iter().zip(&slow_fins) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.token_ids, b.token_ids);
+            assert_eq!(a.first_token_at, b.first_token_at);
+            assert_eq!(a.finished_at, b.finished_at);
+        }
+        assert!(
+            fast_calls * 4 < slow_calls,
+            "fast-forward barely engaged: {fast_calls} vs {slow_calls} step() calls"
+        );
+    }
+
+    #[test]
+    fn fast_forward_stops_at_kv_pressure_events() {
+        // The tight-pool preemption workload: fast-forward must stop at
+        // every pool-exhaustion boundary and hand back to the stepwise
+        // path, reproducing the preemption trace exactly.
+        for mode in [PreemptMode::Recompute, PreemptMode::Swap] {
+            let run = |ff: bool| {
+                let mut e = engine_with(8, 65, |c| {
+                    c.preempt = mode;
+                    c.fast_forward = ff;
+                });
+                e.submit(&generate(&WorkloadConfig::offline(8, 50, 100)));
+                e.run_to_completion().unwrap()
+            };
+            let slow = run(false);
+            let fast = run(true);
+            assert!(slow.preemptions > 0, "workload must preempt");
+            assert_eq!(fast.preemptions, slow.preemptions);
+            assert_eq!(fast.swap_outs, slow.swap_outs);
+            assert_eq!(fast.swap_blocks, slow.swap_blocks);
+            assert_eq!(fast.swap_time, slow.swap_time);
+            assert_eq!(fast.metrics.makespan, slow.metrics.makespan);
+            assert_eq!(fast.steps, slow.steps);
+            assert_eq!(fast.segments, slow.segments);
+        }
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub struct OfflineConfig {
     /// Shared system-prompt classes layered over the workload.
     pub prefix: Option<SharedPrefixConfig>,
     pub record_steps: bool,
+    /// Event-driven fast-forward between scheduler events (default on;
+    /// `--no-fast-forward` falls back to the stepwise golden reference).
+    pub fast_forward: bool,
     pub block_size: usize,
     /// Tensor-parallel degree: the engine shards the model across `tp`
     /// GPUs (Megatron heads/FFN/vocab split + ring collectives) and its
@@ -58,6 +61,7 @@ impl OfflineConfig {
             prefix_cache: false,
             prefix: None,
             record_steps: false,
+            fast_forward: true,
             block_size: 16,
             tp: 1,
         }
@@ -81,6 +85,7 @@ impl OfflineConfig {
         let mut cfg = EngineConfig::new(self.max_num_seqs, kv_blocks + 1, self.block_size);
         cfg.max_blocks_per_seq = (self.model.max_seq + self.block_size - 1) / self.block_size;
         cfg.record_steps = self.record_steps;
+        cfg.fast_forward = self.fast_forward;
         cfg.preempt = self.preempt;
         cfg.prefix_cache = self.prefix_cache;
         if self.chunked_prefill {

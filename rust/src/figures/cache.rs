@@ -1,0 +1,292 @@
+//! Content-addressed sweep cache for figure artefacts.
+//!
+//! `figures --all` regenerates every sweep from scratch on each
+//! invocation even when nothing changed. Each artefact is a pure
+//! function of (figure id, generation options, crate version), so the
+//! harness caches the rendered [`Table`]s under
+//! `<out>/.fig_cache/<id>-<key>.json` where `key` hashes all three.
+//! A hit replays the stored tables byte-for-byte (cells are strings,
+//! so the JSON round-trip is exact and the re-written CSVs are
+//! identical); a config or version change hashes to a different file
+//! and misses; a corrupted or mismatched entry is deleted, never
+//! trusted. `--no-cache` bypasses both lookup and store.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+
+/// The option fields that shape artefact content (deliberately not
+/// `no_cache`, which only controls this module).
+pub fn fingerprint(opts: &FigOpts) -> String {
+    format!("quick={};seed={}", opts.quick, opts.seed)
+}
+
+/// FNV-offset seeded mix64 chain over `bytes` (same digest family the
+/// determinism suite uses; not cryptographic — this guards against
+/// truncation and stale entries, not adversaries).
+pub fn digest(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h = mix64(h ^ b as u64);
+    }
+    h
+}
+
+fn key(id: &str, fp: &str, version: &str) -> u64 {
+    digest(format!("{id}\n{fp}\n{version}").as_bytes())
+}
+
+/// Cache file for one (id, options, version) triple.
+pub fn entry_path(dir: &Path, id: &str, fp: &str, version: &str) -> PathBuf {
+    dir.join(format!("{id}-{:016x}.json", key(id, fp, version)))
+}
+
+fn tables_json(tables: &[Table]) -> Json {
+    Json::arr(
+        tables
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::str(t.name.clone())),
+                    ("title", Json::str(t.title.clone())),
+                    (
+                        "headers",
+                        Json::arr(t.headers.iter().map(|h| Json::str(h.clone())).collect()),
+                    ),
+                    (
+                        "rows",
+                        Json::arr(
+                            t.rows
+                                .iter()
+                                .map(|r| {
+                                    Json::arr(
+                                        r.iter().map(|c| Json::str(c.clone())).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn str_vec(j: &Json) -> Option<Vec<String>> {
+    j.as_arr()?
+        .iter()
+        .map(|s| s.as_str().map(|s| s.to_string()))
+        .collect()
+}
+
+fn table_from_json(j: &Json) -> Option<Table> {
+    Some(Table {
+        name: j.get("name")?.as_str()?.to_string(),
+        title: j.get("title")?.as_str()?.to_string(),
+        headers: str_vec(j.get("headers")?)?,
+        rows: j.get("rows")?.as_arr()?.iter().map(str_vec).collect::<Option<_>>()?,
+    })
+}
+
+/// Store `tables` for the triple. Best-effort callers may ignore the
+/// error (an unwritable cache must never fail figure generation).
+pub fn store(dir: &Path, id: &str, fp: &str, version: &str, tables: &[Table]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let tj = tables_json(tables);
+    let entry = Json::obj(vec![
+        ("id", Json::str(id)),
+        ("version", Json::str(version)),
+        ("fingerprint", Json::str(fp)),
+        (
+            "checksum",
+            Json::str(format!("{:016x}", digest(tj.to_string().as_bytes()))),
+        ),
+        ("tables", tj),
+    ]);
+    std::fs::write(entry_path(dir, id, fp, version), format!("{entry}\n"))?;
+    Ok(())
+}
+
+/// Look up the triple. Returns the stored tables only when the entry
+/// parses, all three key fields match, and the checksum verifies;
+/// anything else deletes the entry and misses (a corrupt cache is
+/// discarded, not trusted).
+pub fn lookup(dir: &Path, id: &str, fp: &str, version: &str) -> Option<Vec<Table>> {
+    let path = entry_path(dir, id, fp, version);
+    let text = std::fs::read_to_string(&path).ok()?;
+    let tables = validate_entry(&text, id, fp, version);
+    if tables.is_none() {
+        let _ = std::fs::remove_file(&path);
+    }
+    tables
+}
+
+fn validate_entry(text: &str, id: &str, fp: &str, version: &str) -> Option<Vec<Table>> {
+    let j = Json::parse(text.trim_end()).ok()?;
+    if j.get("id")?.as_str()? != id
+        || j.get("version")?.as_str()? != version
+        || j.get("fingerprint")?.as_str()? != fp
+    {
+        return None;
+    }
+    let tj = j.get("tables")?;
+    let want = j.get("checksum")?.as_str()?.to_string();
+    if format!("{:016x}", digest(tj.to_string().as_bytes())) != want {
+        return None;
+    }
+    tj.as_arr()?
+        .iter()
+        .map(table_from_json)
+        .collect::<Option<Vec<_>>>()
+}
+
+/// Serve `id` from the cache or run `gen` and populate it. Returns the
+/// tables plus whether they came from the cache. `no_cache` bypasses
+/// both directions.
+pub fn cached<F>(
+    dir: &Path,
+    id: &str,
+    fp: &str,
+    version: &str,
+    no_cache: bool,
+    gen: F,
+) -> Result<(Vec<Table>, bool)>
+where
+    F: FnOnce() -> Result<Vec<Table>>,
+{
+    if !no_cache {
+        if let Some(tables) = lookup(dir, id, fp, version) {
+            return Ok((tables, true));
+        }
+    }
+    let tables = gen()?;
+    if !no_cache {
+        if let Err(e) = store(dir, id, fp, version, &tables) {
+            eprintln!("[figures] {id}: cache store failed ({e}); continuing uncached");
+        }
+    }
+    Ok((tables, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("memgap-figcache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_tables() -> Vec<Table> {
+        let mut a = Table::new("t1", "Title, one", &["batch", "tok/s"]);
+        a.push_row(vec!["8".into(), "123.456".into()]);
+        a.push_row(vec!["256".into(), "999.5".into()]);
+        let mut b = Table::new("t2", "Quote \"me\"", &["x"]);
+        b.push_row(vec!["y,z".into()]);
+        vec![a, b]
+    }
+
+    #[test]
+    fn hit_is_byte_identical_and_skips_regeneration() {
+        let dir = tmp("hit");
+        let tables = sample_tables();
+        let calls = AtomicUsize::new(0);
+        let gen = || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok(sample_tables())
+        };
+        let (first, hit1) = cached(&dir, "tp", "quick=true;seed=0", "1.0", false, gen).unwrap();
+        assert!(!hit1);
+        let (second, hit2) = cached(&dir, "tp", "quick=true;seed=0", "1.0", false, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            unreachable!("cache hit must not regenerate")
+        })
+        .unwrap();
+        assert!(hit2);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // Byte-identical artefacts: the CSV/markdown renderings match.
+        for (x, y) in tables.iter().zip(&second) {
+            assert_eq!(x.to_csv(), y.to_csv());
+            assert_eq!(x.to_markdown(), y.to_markdown());
+        }
+        for (x, y) in first.iter().zip(&second) {
+            assert_eq!(x.to_csv(), y.to_csv());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_or_version_change_misses() {
+        let dir = tmp("miss");
+        store(&dir, "tp", "quick=true;seed=0", "1.0", &sample_tables()).unwrap();
+        assert!(lookup(&dir, "tp", "quick=true;seed=0", "1.0").is_some());
+        assert!(lookup(&dir, "tp", "quick=false;seed=0", "1.0").is_none());
+        assert!(lookup(&dir, "tp", "quick=true;seed=1", "1.0").is_none());
+        assert!(lookup(&dir, "tp", "quick=true;seed=0", "1.1").is_none());
+        assert!(lookup(&dir, "online", "quick=true;seed=0", "1.0").is_none());
+        // The original entry survives the misses (different key files).
+        assert!(lookup(&dir, "tp", "quick=true;seed=0", "1.0").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_entry_is_discarded_not_trusted() {
+        let dir = tmp("corrupt");
+        let (id, fp, v) = ("tp", "quick=true;seed=0", "1.0");
+        // Unparseable garbage.
+        store(&dir, id, fp, v, &sample_tables()).unwrap();
+        let path = entry_path(&dir, id, fp, v);
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(lookup(&dir, id, fp, v).is_none());
+        assert!(!path.exists(), "corrupt entry must be deleted");
+        // Valid JSON whose payload was tampered with (checksum mismatch).
+        store(&dir, id, fp, v, &sample_tables()).unwrap();
+        let tampered = std::fs::read_to_string(&path).unwrap().replace("123.456", "0.0");
+        std::fs::write(&path, tampered).unwrap();
+        assert!(lookup(&dir, id, fp, v).is_none());
+        assert!(!path.exists());
+        // An entry for the wrong id sitting at the right path.
+        store(&dir, id, fp, v, &sample_tables()).unwrap();
+        let swapped = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"id\":\"tp\"", "\"id\":\"online\"");
+        std::fs::write(&path, swapped).unwrap();
+        assert!(lookup(&dir, id, fp, v).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_cache_bypasses_lookup_and_store() {
+        let dir = tmp("bypass");
+        store(&dir, "tp", "fp", "1.0", &sample_tables()).unwrap();
+        let calls = AtomicUsize::new(0);
+        let (_, hit) = cached(&dir, "tp", "fp", "1.0", true, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok(vec![Table::new("fresh", "Fresh", &["a"])])
+        })
+        .unwrap();
+        assert!(!hit, "--no-cache must not serve a hit");
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // ... and the bypassing run must not overwrite the entry either.
+        let kept = lookup(&dir, "tp", "fp", "1.0").unwrap();
+        assert_eq!(kept[0].name, "t1");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_failure_is_propagated_and_not_cached() {
+        let dir = tmp("err");
+        let r = cached(&dir, "tp", "fp", "1.0", false, || {
+            anyhow::bail!("sweep exploded")
+        });
+        assert!(r.is_err());
+        assert!(lookup(&dir, "tp", "fp", "1.0").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

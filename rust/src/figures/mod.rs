@@ -7,6 +7,7 @@
 //! and benches can assert the shapes without touching the filesystem.
 
 pub mod bca_figs;
+pub mod cache;
 pub mod online_figs;
 pub mod phases;
 pub mod prefix_figs;
@@ -105,6 +106,9 @@ pub struct FigOpts {
     pub quick: bool,
     /// Workload seed threaded into the serving sweeps.
     pub seed: u64,
+    /// Bypass the content-addressed sweep cache (`--no-cache`); the
+    /// default `false` keeps `figures --all` incremental across runs.
+    pub no_cache: bool,
 }
 
 impl FigOpts {
@@ -173,16 +177,30 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
 /// parallel (each serving sweep additionally fans out its own grid
 /// points); files and the report are written sequentially afterwards in
 /// the requested (paper) order, so outputs are deterministic.
+///
+/// Each artefact is served from the content-addressed cache under
+/// `<out>/.fig_cache` when an entry keyed by (id, options fingerprint,
+/// crate version) exists — see [`cache`] — making repeat invocations
+/// incremental. `FigOpts::no_cache` bypasses it.
 pub fn run_to_dir(ids: &[&str], opts: &FigOpts, out: &Path) -> Result<Vec<Table>> {
     std::fs::create_dir_all(out).with_context(|| format!("mkdir {}", out.display()))?;
+    let cache_dir = out.join(".fig_cache");
+    let fp = cache::fingerprint(opts);
+    let version = env!("CARGO_PKG_VERSION");
     let generated = crate::util::par::par_map(ids, |id| {
-        eprintln!("[figures] generating {id} ...");
-        generate(id, opts)
+        cache::cached(&cache_dir, id, &fp, version, opts.no_cache, || {
+            eprintln!("[figures] generating {id} ...");
+            generate(id, opts)
+        })
     });
     let mut all = Vec::new();
     let mut report = String::from("# memgap — regenerated paper artefacts\n\n");
-    for tables in generated {
-        let tables = tables?;
+    for (id, tables) in ids.iter().zip(generated) {
+        let (tables, hit) = tables?;
+        if hit {
+            // Grep'd by the CI release smoke to assert incrementality.
+            eprintln!("[figures] {id}: cache hit");
+        }
         for t in &tables {
             let csv_path = out.join(format!("{}.csv", t.name));
             std::fs::write(&csv_path, t.to_csv())?;

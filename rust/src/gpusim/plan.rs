@@ -452,6 +452,144 @@ impl StepPlan {
         let layout = self.build_prefill(agg, &mut scratch.invs);
         self.replay_summary(gpu, &scratch.invs, layout, agg.count, agg.mean_len())
     }
+
+    /// Compile a closed-form cost stream for a *uniform decode streak*
+    /// starting at `ctx_lens`: a run of steps where the batch is static
+    /// and every sequence appends exactly one token per step. Each
+    /// [`DecodeCostModel::next_step`] call returns the exact
+    /// [`StepPlan::decode_summary`] of the current context lengths and
+    /// then advances every sequence by one token. Only the attention
+    /// kernel changes shape along the streak (its reads grow with the
+    /// context — an arithmetic series over [`CtxAggregates`]), so it
+    /// alone is re-costed per step; every other kernel's roofline is
+    /// computed once and replayed.
+    pub fn decode_cost_model(
+        &self,
+        gpu: &GpuSpec,
+        ctx_lens: &[usize],
+        kv_block: usize,
+    ) -> DecodeCostModel {
+        let kv_block = kv_block.max(1);
+        let agg = CtxAggregates::from_lens(ctx_lens, kv_block);
+        let mut invs = Vec::new();
+        let layout = self.build_decode(&agg, &mut invs);
+        let costs: Vec<KernelCost> = invs
+            .iter()
+            .map(|inv| self.cost(gpu, inv, agg.count, agg.mean_ctx()))
+            .collect();
+        let attn_idx = invs
+            .iter()
+            .position(|inv| inv.class == KernelClass::AttentionDecode)
+            .expect("decode step always schedules an attention kernel");
+        let mut residues = vec![0usize; kv_block];
+        for &c in ctx_lens {
+            residues[c % kv_block] += 1;
+        }
+        DecodeCostModel {
+            plan: self.clone(),
+            gpu: gpu.clone(),
+            kv_block,
+            agg,
+            residues,
+            invs,
+            layout,
+            costs,
+            attn_idx,
+            advances: 0,
+        }
+    }
+}
+
+/// Per-step decode cost stream of a uniform decode streak — the
+/// engine's fast-forward path. See [`StepPlan::decode_cost_model`].
+///
+/// Bit-equivalence contract: the summary returned by `next_step` is
+/// byte-identical to what `decode_summary` would report for the same
+/// context lengths. The fold below therefore mirrors `replay_summary`
+/// term-for-term (FP addition is non-associative, so even the
+/// accumulation order is preserved), and the cached non-attention
+/// [`KernelCost`]s are exact because `cost()` depends only on
+/// `(gpu, inv)` outside the attention classes — `batch` and `mean_ctx`
+/// feed nothing but the attention stall model.
+#[derive(Debug, Clone)]
+pub struct DecodeCostModel {
+    plan: StepPlan,
+    gpu: GpuSpec,
+    kv_block: usize,
+    agg: CtxAggregates,
+    /// `residues[r]` = sequences whose *initial* context length is
+    /// `r (mod kv_block)` — drives the exact `padded_sum` advance.
+    residues: Vec<usize>,
+    invs: Vec<KernelInvocation>,
+    layout: Layout,
+    costs: Vec<KernelCost>,
+    attn_idx: usize,
+    advances: usize,
+}
+
+impl DecodeCostModel {
+    /// Batch size of the streak (constant by construction).
+    pub fn batch(&self) -> usize {
+        self.agg.count
+    }
+
+    /// Steps already consumed via [`DecodeCostModel::next_step`].
+    pub fn steps_advanced(&self) -> usize {
+        self.advances
+    }
+
+    /// Aggregates describing the *next* step's context lengths.
+    pub fn aggregates(&self) -> &CtxAggregates {
+        &self.agg
+    }
+
+    /// Summary of the current step, then advance every sequence by one
+    /// token. Bit-identical to `decode_summary` at the same lengths.
+    pub fn next_step(&mut self) -> StepSummary {
+        let batch = self.agg.count;
+        let mean_ctx = self.agg.mean_ctx();
+        // Re-synthesize and re-cost the one context-dependent kernel.
+        let attn = kernels::attention_decode_aggregated(
+            self.plan.shard.rank(),
+            self.plan.backend,
+            &self.agg,
+        );
+        self.costs[self.attn_idx] = self.plan.cost(&self.gpu, &attn, batch, mean_ctx);
+        self.invs[self.attn_idx] = attn;
+        // Fold in `replay_summary` order, term for term.
+        let n_layers = self.plan.spec.n_layers;
+        let mut s = StepSummary {
+            batch,
+            cpu_gap: cpu::step_gap(&self.gpu, batch),
+            ..StepSummary::default()
+        };
+        for (i, inv) in self.invs.iter().enumerate() {
+            let c = self.costs[i];
+            let reps = if i >= self.layout.prologue && i < self.layout.prologue + self.layout.block
+            {
+                n_layers
+            } else {
+                1
+            };
+            let d = c.duration * reps as f64;
+            s.gpu_time += d;
+            s.num_kernels += reps;
+            s.time_by_class[inv.class.index()] += d;
+            s.read_util_time += c.dram_read_util * d;
+            s.write_util_time += c.dram_write_util * d;
+            s.warps_pct_time += c.warps_in_flight_pct * d;
+        }
+        // Advance the aggregates to the next step's context lengths:
+        // `sum` grows by one per sequence; `padded_sum` grows by one
+        // kv_block per sequence whose context crosses a block boundary
+        // this step (ctx % kv_block == 0 before the increment).
+        let phase = (self.kv_block - self.advances % self.kv_block) % self.kv_block;
+        let crossing = self.residues[phase];
+        self.agg.sum += self.agg.count;
+        self.agg.padded_sum += self.kv_block * crossing;
+        self.advances += 1;
+        s
+    }
 }
 
 /// Heap-free digest of one simulated step — what `SimBackend` returns
@@ -743,6 +881,52 @@ mod tests {
             (got - expect).abs() <= 1e-12 * expect,
             "{got} vs {expect}"
         );
+    }
+
+    #[test]
+    fn decode_cost_model_matches_stepwise_summaries_exactly() {
+        let spec = ModelSpec::opt_1_3b();
+        for (tp, backend) in [
+            (1usize, AttentionBackendKind::XFormers),
+            (2, AttentionBackendKind::XFormers),
+            (1, AttentionBackendKind::FlashAttention),
+        ] {
+            let plan = StepPlan::with_tp(spec.clone(), backend, tp).unwrap();
+            let mut ctx: Vec<usize> = (0..33usize).map(|i| 1 + (i * 37) % 230).collect();
+            let mut model = plan.decode_cost_model(&gpu(), &ctx, 16);
+            let mut scratch = PlanScratch::default();
+            assert_eq!(model.batch(), ctx.len());
+            // Walk 40 virtual steps: every summary must be bit-identical
+            // to a stepwise decode_summary at the same context lengths.
+            for step in 0..40usize {
+                let fast = model.next_step();
+                let agg = CtxAggregates::from_lens(&ctx, 16);
+                let slow = plan.decode_summary(&gpu(), &agg, &mut scratch);
+                assert_eq!(fast.batch, slow.batch, "step {step}");
+                assert_eq!(fast.cpu_gap, slow.cpu_gap, "step {step}");
+                assert_eq!(fast.gpu_time, slow.gpu_time, "step {step}");
+                assert_eq!(fast.num_kernels, slow.num_kernels, "step {step}");
+                for c in KernelClass::ALL {
+                    assert_eq!(fast.time_by_class(c), slow.time_by_class(c), "step {step}");
+                }
+                assert_eq!(fast.mean_dram_read_util(), slow.mean_dram_read_util());
+                assert_eq!(fast.mean_dram_write_util(), slow.mean_dram_write_util());
+                assert_eq!(
+                    fast.mean_warps_in_flight_pct(),
+                    slow.mean_warps_in_flight_pct()
+                );
+                assert_eq!(fast.dram_demand(), slow.dram_demand());
+                for c in ctx.iter_mut() {
+                    *c += 1;
+                }
+            }
+            assert_eq!(model.steps_advanced(), 40);
+            assert_eq!(model.aggregates().sum, CtxAggregates::from_lens(&ctx, 16).sum);
+            assert_eq!(
+                model.aggregates().padded_sum,
+                CtxAggregates::from_lens(&ctx, 16).padded_sum
+            );
+        }
     }
 
     #[test]

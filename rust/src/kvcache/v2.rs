@@ -481,6 +481,90 @@ impl KvCacheV2 {
         Ok(false)
     }
 
+    /// Extend every sequence in `ids` (distinct, resident) by `steps`
+    /// generated tokens in bulk — the engine's fast-forward path.
+    /// Equivalent to `steps` rounds of per-sequence
+    /// [`Self::append_token`] calls in `ids` order: fresh blocks (and
+    /// any first-write copy-on-write) are taken in exactly that order,
+    /// so free-list, LRU, eviction and peak accounting end
+    /// bit-identical to the stepwise loop. All-or-nothing: capacity and
+    /// per-sequence caps are validated up front and no state changes on
+    /// error. Returns the number of fresh blocks taken.
+    pub fn append_tokens_batch(&mut self, ids: &[SeqId], steps: usize) -> Result<usize, KvError> {
+        if steps == 0 || ids.is_empty() {
+            return Ok(0);
+        }
+        let bs = self.cfg.block_size;
+        // Validate everything before any mutation.
+        let mut fresh_needed = 0usize;
+        for &id in ids {
+            let state = self.seqs.get(&id).ok_or(KvError::UnknownSeq(id))?;
+            let need = (state.tokens + steps + bs - 1) / bs;
+            if need > self.cfg.max_blocks_per_seq {
+                return Err(KvError::SeqTooLong {
+                    seq: id,
+                    max: self.cfg.max_blocks_per_seq,
+                });
+            }
+            fresh_needed += need - state.blocks.len();
+            if state.tokens % bs != 0 {
+                let tail = *state.blocks.last().expect("resident sequence has blocks");
+                if self.ref_count[tail as usize] > 1 {
+                    fresh_needed += 1; // the first write copies the shared tail
+                }
+            }
+        }
+        if self.reclaimable_blocks() < fresh_needed {
+            return Err(KvError::OutOfBlocks {
+                need: fresh_needed,
+                free: self.reclaimable_blocks(),
+            });
+        }
+        // Round 0, in `ids` order: a block-boundary crossing allocates;
+        // a shared partial tail copies-on-write. COW is only possible on
+        // this first write — afterwards every written block is private.
+        for &id in ids {
+            let (tokens, tail) = {
+                let s = &self.seqs[&id];
+                (
+                    s.tokens,
+                    *s.blocks.last().expect("resident sequence has blocks"),
+                )
+            };
+            if tokens % bs == 0 {
+                let fresh = self.alloc_private(1).expect("capacity validated above");
+                self.seqs.get_mut(&id).unwrap().blocks.extend(fresh);
+            } else if self.ref_count[tail as usize] > 1 {
+                let fresh = self.alloc_private(1).expect("capacity validated above");
+                let copy = fresh[0];
+                self.unref(tail);
+                self.stats.cow_copies += 1;
+                let state = self.seqs.get_mut(&id).unwrap();
+                let last = state.blocks.len() - 1;
+                state.blocks[last] = copy;
+            }
+        }
+        // Rounds 1..steps: only boundary-crossing sequences allocate.
+        // Bucketing ids by crossing phase makes the loop cost
+        // O(steps + blocks allocated) instead of O(steps x ids).
+        let mut by_phase: Vec<Vec<SeqId>> = vec![Vec::new(); bs];
+        for &id in ids {
+            let t0 = self.seqs[&id].tokens;
+            by_phase[(bs - t0 % bs) % bs].push(id);
+        }
+        for t in 1..steps {
+            for &id in &by_phase[t % bs] {
+                let fresh = self.alloc_private(1).expect("capacity validated above");
+                self.seqs.get_mut(&id).unwrap().blocks.extend(fresh);
+            }
+        }
+        // Token counts advance uniformly (one per sequence per round).
+        for &id in ids {
+            self.seqs.get_mut(&id).unwrap().tokens += steps;
+        }
+        Ok(fresh_needed)
+    }
+
     /// Fork `child` from `parent`: the child shares every block
     /// (including a partial tail, which the first divergent append will
     /// copy-on-write). The beam-search / parallel-sampling hook.
@@ -764,6 +848,84 @@ mod tests {
         kv.admit(2, &toks(2, 31)).unwrap();
         kv.append_token(2).unwrap(); // 32 tokens = 2 blocks, ok
         assert!(matches!(kv.append_token(2), Err(KvError::SeqTooLong { .. })));
+    }
+
+    #[test]
+    fn append_tokens_batch_matches_stepwise_appends_exactly() {
+        // The bulk path must reproduce the interleaved per-step append
+        // order bit for bit: same block tables, same stats, same pool.
+        let run = |bulk: bool| {
+            let mut kv = cache_on(64);
+            let t = toks(42, 32);
+            kv.admit(1, &t).unwrap();
+            kv.admit(2, &toks(2, 21)).unwrap();
+            kv.admit(3, &toks(3, 7)).unwrap();
+            kv.free(1).unwrap();
+            kv.admit(4, &t).unwrap(); // re-hits the cached chain
+            let ids = [4u64, 2, 3];
+            let steps = 40;
+            if bulk {
+                kv.append_tokens_batch(&ids, steps).unwrap();
+            } else {
+                for _ in 0..steps {
+                    for &id in &ids {
+                        kv.append_token(id).unwrap();
+                    }
+                }
+            }
+            (
+                ids.iter()
+                    .map(|&id| kv.block_table(id).unwrap().to_vec())
+                    .collect::<Vec<_>>(),
+                ids.iter().map(|&id| kv.tokens_of(id)).collect::<Vec<_>>(),
+                kv.stats(),
+                kv.free_blocks(),
+                kv.cached_unreferenced_blocks(),
+                kv.allocated_blocks(),
+                kv.peak_allocated_blocks(),
+            )
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn append_tokens_batch_cows_a_shared_partial_tail_once() {
+        let mut kv = cache_on(64);
+        kv.admit(1, &toks(5, 24)).unwrap(); // 1 full + 1 partial block
+        kv.fork(1, 2).unwrap();
+        let parent = kv.block_table(1).unwrap().to_vec();
+        kv.append_tokens_batch(&[2], 10).unwrap();
+        assert_eq!(kv.stats().cow_copies, 1);
+        assert_eq!(kv.block_table(1).unwrap(), parent.as_slice());
+        assert_eq!(kv.tokens_of(2), Some(34));
+        assert_eq!(kv.block_table(2).unwrap().len(), 3);
+        assert_ne!(kv.block_table(2).unwrap()[1], parent[1]);
+        // Parent appends still land in its own (never-copied) tail.
+        assert!(!kv.append_token(1).unwrap());
+    }
+
+    #[test]
+    fn append_tokens_batch_is_all_or_nothing() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(8, 16, 8)); // 7 usable
+        kv.admit(1, &toks(1, 16)).unwrap();
+        kv.admit(2, &toks(2, 16)).unwrap();
+        let before_free = kv.free_blocks();
+        // 100 more tokens each -> 7 fresh blocks per seq = 14 > 5 free.
+        assert!(matches!(
+            kv.append_tokens_batch(&[1, 2], 100),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+        assert_eq!(kv.free_blocks(), before_free);
+        assert_eq!(kv.tokens_of(1), Some(16));
+        assert_eq!(kv.block_table(1).unwrap().len(), 1);
+        assert!(matches!(
+            kv.append_tokens_batch(&[1], 1000),
+            Err(KvError::SeqTooLong { .. })
+        ));
+        assert_eq!(kv.append_tokens_batch(&[9], 1), Err(KvError::UnknownSeq(9)));
+        assert_eq!(kv.append_tokens_batch(&[], 5), Ok(0));
+        assert_eq!(kv.append_tokens_batch(&[1], 0), Ok(0));
+        assert_eq!(kv.tokens_of(1), Some(16));
     }
 
     #[test]

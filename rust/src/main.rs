@@ -37,18 +37,20 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
             [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
+            [--no-fast-forward]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
+            [--no-fast-forward]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
             [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
             [--slo-itl-ms X] [--csv PATH]
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
-  figures   --all | --fig figN/tableN [--out results] [--quick]
+  figures   --all | --fig figN/tableN [--out results] [--quick] [--no-cache]
 
 Models: OPT-1.3B, OPT-2.7B, Llama-2-7B, Llama-2-13B, tiny-opt";
 
@@ -179,6 +181,7 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.output_len = args.usize_or("out", cfg.output_len);
     cfg.chunked_prefill = args.bool_or("chunked-prefill", false);
     cfg.prefix_cache = args.bool_or("prefix-cache", false);
+    cfg.fast_forward = !args.bool_or("no-fast-forward", false);
     cfg.preempt = preempt_arg(args)?;
     cfg.prefix = prefix_args(args)?;
     cfg.tp = tp_arg(args, &cfg.model)?;
@@ -283,6 +286,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         bail!("--rate must be a positive number");
     }
     cfg.engine.prefix_cache = args.bool_or("prefix-cache", false);
+    cfg.engine.fast_forward = !args.bool_or("no-fast-forward", false);
     cfg.engine.preempt = preempt_arg(args)?;
     cfg.engine.tp = tp_arg(args, &cfg.engine.model)?;
     cfg.workload.prefix = prefix_args(args)?;
@@ -555,11 +559,12 @@ fn cmd_profile(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    let opts = if args.bool_or("quick", false) {
+    let mut opts = if args.bool_or("quick", false) {
         FigOpts::quick()
     } else {
         FigOpts::default()
     };
+    opts.no_cache = args.bool_or("no-cache", false);
     let out = std::path::PathBuf::from(args.get_or("out", "results"));
     let ids: Vec<&str> = if args.bool_or("all", false) {
         figures::ALL_IDS.to_vec()

@@ -197,6 +197,16 @@ impl MetricsCollector {
         }
     }
 
+    /// Bulk form of [`MetricsCollector::on_token`]: appends one
+    /// completion time per skipped step in order. The fast-forward path
+    /// uses this so per-request `token_times` end up identical to the
+    /// stepwise run's interleaved `on_token` calls.
+    pub fn on_tokens(&mut self, id: u64, times: &[f64]) {
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.token_times.extend_from_slice(times);
+        }
+    }
+
     pub fn on_step(&mut self, now: f64, batch: usize, cpu: f64, gpu: f64) {
         self.batch_samples.push((now, batch));
         self.total_cpu_time += cpu;

@@ -122,6 +122,14 @@ impl JsonReport {
         self.entries.push((r.name.clone(), r.ns_per_iter()));
     }
 
+    /// Record a derived scalar next to the raw benches (e.g. a speedup
+    /// ratio). By convention such names end in `_x`; the CI regression
+    /// gate skips them (bigger is *better* for a ratio, so the
+    /// `>10x slower` rule would misfire on improvements).
+    pub fn push(&mut self, name: &str, value: f64) {
+        self.entries.push((name.to_string(), value));
+    }
+
     /// Flat JSON object, one `"name": ns_per_iter` pair per bench.
     pub fn to_json(&self) -> String {
         let mut s = String::from("{\n");

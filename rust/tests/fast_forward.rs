@@ -1,0 +1,226 @@
+//! Bit-equivalence harness for the event-driven fast-forward engine.
+//!
+//! Fast-forward (`EngineConfig::fast_forward`, default on) replaces
+//! per-step `StepPlan` replay during steady decode streaks with a
+//! closed-form advance of virtual time, KV blocks, token counts, and
+//! `StepSummary` aggregates. It is only allowed to exist because it is
+//! *bit-identical* to the stepwise golden reference — not approximately
+//! equal: every float in the report must match exactly, which is why
+//! every assertion below is `assert_eq!` on `f64`s with no tolerance.
+//!
+//! The grid covers the feature axes whose interactions could perturb
+//! event boundaries: prefix cache x preempt mode x tensor parallelism x
+//! chunked prefill x arrival pattern.
+
+use memgap::backend::SimBackend;
+use memgap::coordinator::engine::{Engine, EngineConfig, EngineReport};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::online::{run_online, OnlineConfig};
+use memgap::coordinator::scheduler::PreemptMode;
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::workload::{
+    generate, ArrivalPattern, LengthDistribution, SharedPrefixConfig, WorkloadConfig,
+};
+
+/// Every observable field of the two reports must match bit-for-bit.
+fn assert_reports_identical(tag: &str, fast: &EngineReport, slow: &EngineReport) {
+    let (f, s) = (&fast.metrics, &slow.metrics);
+    assert_eq!(f.num_requests, s.num_requests, "{tag}: num_requests");
+    assert_eq!(f.completed, s.completed, "{tag}: completed");
+    assert_eq!(f.makespan, s.makespan, "{tag}: makespan");
+    assert_eq!(f.total_input_tokens, s.total_input_tokens, "{tag}: input tokens");
+    assert_eq!(f.total_output_tokens, s.total_output_tokens, "{tag}: output tokens");
+    assert_eq!(f.throughput_tps, s.throughput_tps, "{tag}: throughput");
+    assert_eq!(f.mean_itl, s.mean_itl, "{tag}: mean ITL");
+    assert_eq!(f.p99_itl, s.p99_itl, "{tag}: p99 ITL");
+    assert_eq!(f.mean_e2e, s.mean_e2e, "{tag}: mean E2E");
+    assert_eq!(f.avg_batch, s.avg_batch, "{tag}: avg batch");
+    assert_eq!(f.cpu_time_frac, s.cpu_time_frac, "{tag}: cpu frac");
+    // Per-request latencies: id, arrival, TTFT, ITL, E2E, output count.
+    assert_eq!(f.latencies, s.latencies, "{tag}: per-request latencies");
+    assert_eq!(fast.peak_kv_usage, slow.peak_kv_usage, "{tag}: peak KV usage");
+    assert_eq!(fast.peak_kv_blocks, slow.peak_kv_blocks, "{tag}: peak KV blocks");
+    assert_eq!(fast.preemptions, slow.preemptions, "{tag}: preemptions");
+    assert_eq!(fast.swap_outs, slow.swap_outs, "{tag}: swap outs");
+    assert_eq!(fast.swap_blocks, slow.swap_blocks, "{tag}: swap blocks");
+    assert_eq!(fast.swap_time, slow.swap_time, "{tag}: swap time");
+    assert_eq!(fast.prefix_cache, slow.prefix_cache, "{tag}: prefix-cache stats");
+    assert_eq!(fast.peak_step_tokens, slow.peak_step_tokens, "{tag}: peak step tokens");
+    assert_eq!(fast.steps, slow.steps, "{tag}: steps");
+    assert_eq!(fast.prefill_time, slow.prefill_time, "{tag}: prefill time");
+    assert_eq!(fast.decode_time, slow.decode_time, "{tag}: decode time");
+    // The full MPS segment trace (every per-step Cpu/Gpu burst).
+    assert_eq!(fast.segments, slow.segments, "{tag}: segment trace");
+}
+
+fn run_pair(cfg: &OfflineConfig, tag: &str) -> (EngineReport, EngineReport) {
+    let mut fast_cfg = cfg.clone();
+    fast_cfg.fast_forward = true;
+    let mut slow_cfg = cfg.clone();
+    slow_cfg.fast_forward = false;
+    let fast = fast_cfg.run().unwrap_or_else(|e| panic!("{tag} (fast): {e}"));
+    let slow = slow_cfg.run().unwrap_or_else(|e| panic!("{tag} (slow): {e}"));
+    (fast, slow)
+}
+
+#[test]
+fn fast_forward_defaults_on_with_stepwise_escape_hatch() {
+    assert!(OfflineConfig::new(ModelSpec::opt_1_3b(), 8).fast_forward);
+    assert!(EngineConfig::new(8, 64, 16).fast_forward);
+}
+
+/// The full offline feature grid: prefix cache x preempt mode x tp x
+/// chunked prefill, fixed lengths.
+#[test]
+fn offline_feature_grid_is_bit_identical() {
+    for prefix_cache in [false, true] {
+        for preempt in [PreemptMode::Recompute, PreemptMode::Swap] {
+            for tp in [1usize, 2] {
+                for chunked in [false, true] {
+                    let tag = format!(
+                        "prefix_cache={prefix_cache} preempt={preempt:?} tp={tp} chunked={chunked}"
+                    );
+                    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 12);
+                    cfg.num_requests = 36;
+                    cfg.input_len = 72;
+                    cfg.output_len = 44;
+                    cfg.prefix_cache = prefix_cache;
+                    cfg.preempt = preempt;
+                    cfg.tp = tp;
+                    cfg.chunked_prefill = chunked;
+                    if prefix_cache {
+                        // Shared stems so the prefix cache actually hits.
+                        cfg.prefix = Some(SharedPrefixConfig {
+                            classes: 2,
+                            prefix_len: 32,
+                            share: 0.75,
+                        });
+                    }
+                    let (fast, slow) = run_pair(&cfg, &tag);
+                    assert_eq!(fast.metrics.completed, 36, "{tag}");
+                    if prefix_cache {
+                        assert!(fast.prefix_cache.queries > 0, "{tag}: cache untouched");
+                    }
+                    assert_reports_identical(&tag, &fast, &slow);
+                }
+            }
+        }
+    }
+}
+
+/// Variable (ShareGPT-like) lengths: per-sequence finish events land on
+/// different steps, exercising the per-sequence jump bound.
+#[test]
+fn sharegpt_lengths_are_bit_identical() {
+    for tp in [1usize, 2] {
+        for chunked in [false, true] {
+            let tag = format!("sharegpt tp={tp} chunked={chunked}");
+            let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+            cfg.tp = tp;
+            cfg.chunked_prefill = chunked;
+            let run = |ff: bool| {
+                let mut c = cfg.clone();
+                c.fast_forward = ff;
+                c.run_sharegpt(48, 3).unwrap_or_else(|e| panic!("{tag}: {e}"))
+            };
+            let (fast, slow) = (run(true), run(false));
+            assert_eq!(fast.metrics.completed, 48, "{tag}");
+            assert_reports_identical(&tag, &fast, &slow);
+        }
+    }
+}
+
+/// KV pressure: a pool too small for the working set forces preemption
+/// (recompute and swap), so fast-forward must stop exactly at the
+/// pool-exhaustion boundary and replay the preemption stepwise.
+#[test]
+fn kv_pressure_preemptions_are_bit_identical() {
+    for preempt in [PreemptMode::Recompute, PreemptMode::Swap] {
+        for prefix_cache in [false, true] {
+            let tag = format!("pressure preempt={preempt:?} prefix_cache={prefix_cache}");
+            let run = |ff: bool| {
+                let backend = SimBackend::new(
+                    GpuSpec::h100_64g(),
+                    ModelSpec::opt_1_3b(),
+                    AttentionBackendKind::XFormers,
+                );
+                let mut cfg = EngineConfig::new(8, 70, 16);
+                cfg.max_blocks_per_seq = 64;
+                cfg.preempt = preempt;
+                cfg.prefix_cache = prefix_cache;
+                cfg.fast_forward = ff;
+                let mut engine = Engine::new(backend, cfg);
+                engine.submit(&generate(&WorkloadConfig::offline(10, 50, 90)));
+                engine.run_to_completion().unwrap_or_else(|e| panic!("{tag}: {e}"))
+            };
+            let (fast, slow) = (run(true), run(false));
+            assert!(slow.preemptions > 0, "{tag}: config failed to force preemption");
+            if preempt == PreemptMode::Swap {
+                assert!(slow.swap_outs > 0, "{tag}: swap path untouched");
+            }
+            assert_reports_identical(&tag, &fast, &slow);
+        }
+    }
+}
+
+/// Arrival-driven serving: Poisson and bursty arrivals interrupt decode
+/// streaks mid-flight, so fast-forward must stop exactly at the next
+/// arrival boundary. The whole OnlineReport (percentiles, SLO surface,
+/// queue depth) must serialize byte-identically.
+#[test]
+fn online_arrival_patterns_are_bit_identical() {
+    let patterns = [
+        ("poisson", ArrivalPattern::Poisson { rate: 30.0 }),
+        (
+            "bursty",
+            ArrivalPattern::Bursty {
+                rate: 40.0,
+                period: 4.0,
+                duty: 0.3,
+            },
+        ),
+    ];
+    for (name, pattern) in patterns {
+        let tag = format!("online {name}");
+        let mut cfg =
+            OnlineConfig::poisson(OfflineConfig::new(ModelSpec::opt_1_3b(), 8), 48, 30.0, 7);
+        cfg.workload.lengths = LengthDistribution::Fixed {
+            input: 64,
+            output: 24,
+        };
+        cfg.workload.arrivals = pattern;
+        let run = |ff: bool| {
+            let mut c = cfg.clone();
+            c.engine.fast_forward = ff;
+            run_online(&c).unwrap_or_else(|e| panic!("{tag}: {e}"))
+        };
+        let (fast, slow) = (run(true), run(false));
+        assert_eq!(fast.completed, 48, "{tag}");
+        assert_eq!(
+            fast.to_json().to_string(),
+            slow.to_json().to_string(),
+            "{tag}: serialized report"
+        );
+        assert_eq!(fast.peak_queue_depth, slow.peak_queue_depth, "{tag}: queue depth");
+        assert_eq!(
+            fast.metrics.latencies, slow.metrics.latencies,
+            "{tag}: per-request latencies"
+        );
+    }
+}
+
+/// Recording mode keeps the stepwise path (fast-forward declines), so
+/// `record_steps` runs still carry the full per-step kernel traces.
+#[test]
+fn record_steps_still_produces_full_traces() {
+    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 8);
+    cfg.num_requests = 8;
+    cfg.input_len = 32;
+    cfg.output_len = 12;
+    cfg.record_steps = true;
+    cfg.fast_forward = true; // must be ignored under recording
+    let r = cfg.run().unwrap();
+    assert_eq!(r.recorded.len(), r.steps, "recording lost steps");
+    assert!(r.recorded.iter().all(|s| !s.kernels.is_empty()));
+}

@@ -6,8 +6,9 @@
 use std::collections::HashSet;
 
 use memgap::backend::SimBackend;
-use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::engine::{Engine, EngineConfig, EngineReport};
 use memgap::coordinator::router::{RoutePolicy, Router};
+use memgap::coordinator::scheduler::{PreemptMode, SchedulerPolicy};
 use memgap::gpusim::mps::{run_shared, Segment, SharePolicy};
 use memgap::gpusim::GpuSpec;
 use memgap::kvcache::{BlockAllocator, KvCacheManager, KvCacheV2, KvV2Config};
@@ -497,6 +498,101 @@ fn prop_workload_respects_context() {
             assert!(r.prompt_tokens + r.output_tokens <= cfg.max_context);
             assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
         }
+    });
+}
+
+/// Fast-forward vs stepwise: for any randomized workload, scheduler
+/// policy, preempt mode, and (possibly tight) KV pool, the
+/// `EngineReport` is bit-identical — throughput, peak blocks,
+/// peak_step_tokens, per-request latencies, and the full segment trace.
+/// Equality of `steps` doubles as the no-negative-residual check: if
+/// fast-forward ever jumped past an event boundary it would emit a
+/// different step count and clock than the stepwise replay (and the
+/// in-engine `debug_assert!(done <= limit)` fires under this build).
+#[test]
+fn prop_fast_forward_bit_equivalent() {
+    check("fast-forward-equivalence", 12, |rng| {
+        let n_req = rng.range(2, 24);
+        // Non-decreasing arrivals: half the cases all-at-once (offline),
+        // half spread out (arrival events interrupt decode streaks).
+        let spread = rng.f64() < 0.5;
+        let mut arrival = 0.0;
+        let reqs: Vec<Request> = (0..n_req)
+            .map(|i| {
+                if spread {
+                    arrival += rng.f64() * 0.35;
+                }
+                Request {
+                    id: i as u64,
+                    arrival,
+                    prompt_tokens: rng.range(1, 200),
+                    output_tokens: rng.range(1, 90),
+                    prefix: None,
+                }
+            })
+            .collect();
+        let biggest = reqs
+            .iter()
+            .map(|r| (r.prompt_tokens + r.output_tokens + 15) / 16)
+            .max()
+            .unwrap();
+        let blocks = rng.range(2 * biggest + 2, 4 * biggest + 256);
+        let max_seqs = rng.range(1, 32);
+        let preempt = if rng.f64() < 0.5 {
+            PreemptMode::Recompute
+        } else {
+            PreemptMode::Swap
+        };
+        let chunked = rng.f64() < 0.3;
+        let prefix_cache = rng.f64() < 0.3;
+        let run = |ff: bool| -> EngineReport {
+            let backend = SimBackend::new(
+                GpuSpec::h100_64g(),
+                ModelSpec::opt_1_3b(),
+                AttentionBackendKind::XFormers,
+            );
+            let mut cfg = EngineConfig::new(max_seqs, blocks, 16);
+            cfg.max_blocks_per_seq = 2048 / 16;
+            cfg.preempt = preempt;
+            cfg.prefix_cache = prefix_cache;
+            if chunked {
+                cfg.policy = SchedulerPolicy::ChunkedPrefill;
+            }
+            cfg.fast_forward = ff;
+            let mut engine = Engine::new(backend, cfg);
+            engine.submit(&reqs);
+            engine.run_to_completion().expect("run")
+        };
+        let (fast, slow) = (run(true), run(false));
+        let tag = format!(
+            "n={n_req} blocks={blocks} max_seqs={max_seqs} preempt={preempt:?} \
+             chunked={chunked} prefix_cache={prefix_cache} spread={spread}"
+        );
+        assert_eq!(fast.metrics.completed, slow.metrics.completed, "{tag}");
+        assert_eq!(fast.metrics.makespan, slow.metrics.makespan, "{tag}: makespan");
+        assert_eq!(
+            fast.metrics.throughput_tps, slow.metrics.throughput_tps,
+            "{tag}: throughput"
+        );
+        assert_eq!(
+            fast.metrics.total_output_tokens, slow.metrics.total_output_tokens,
+            "{tag}: output tokens"
+        );
+        assert_eq!(fast.metrics.avg_batch, slow.metrics.avg_batch, "{tag}: avg batch");
+        assert_eq!(fast.metrics.latencies, slow.metrics.latencies, "{tag}: latencies");
+        assert_eq!(fast.peak_kv_blocks, slow.peak_kv_blocks, "{tag}: peak blocks");
+        assert_eq!(fast.peak_kv_usage, slow.peak_kv_usage, "{tag}: peak usage");
+        assert_eq!(
+            fast.peak_step_tokens, slow.peak_step_tokens,
+            "{tag}: peak step tokens"
+        );
+        assert_eq!(fast.preemptions, slow.preemptions, "{tag}: preemptions");
+        assert_eq!(fast.swap_outs, slow.swap_outs, "{tag}: swap outs");
+        assert_eq!(fast.swap_time, slow.swap_time, "{tag}: swap time");
+        assert_eq!(fast.steps, slow.steps, "{tag}: steps (residual mismatch)");
+        assert_eq!(fast.prefill_time, slow.prefill_time, "{tag}: prefill time");
+        assert_eq!(fast.decode_time, slow.decode_time, "{tag}: decode time");
+        assert_eq!(fast.segments, slow.segments, "{tag}: segments");
     });
 }
 
