@@ -26,10 +26,11 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::offline::OfflineConfig;
+use crate::faults::FaultPlan;
 use crate::gpusim::mps::SharePolicy;
 use crate::metrics::Percentiles;
 use crate::models::spec::TpShard;
-use crate::replication::{run_cluster, run_replicated};
+use crate::replication::{run_cluster_with_faults, run_replicated_with_faults};
 use crate::workload::Request;
 
 /// Planner knobs.
@@ -56,6 +57,10 @@ pub struct JointPlannerConfig {
     /// Multiplier for the auto-anchored SLO (between the paper's
     /// strict 2× and relaxed 4×).
     pub anchor_factor: f64,
+    /// Optional fleet-wide fault plan injected into every probed grid
+    /// point (split across that point's replicas), so plans can be
+    /// drawn under failure instead of assuming a fault-free fleet.
+    pub faults: Option<FaultPlan>,
 }
 
 impl JointPlannerConfig {
@@ -69,6 +74,7 @@ impl JointPlannerConfig {
             gpus: 1,
             slo_itl: None,
             anchor_factor: 3.0,
+            faults: None,
         }
     }
 
@@ -193,7 +199,12 @@ pub fn measure_point(
     let mut cfg = base.clone();
     cfg.max_num_seqs = max_batch;
     let frac = 1.0 / replicas as f64;
-    let rep = run_replicated(&cfg, replicas, SharePolicy::Mps, requests, frac)?;
+    // `base.faults` carries a *fleet* plan here: hand it to the
+    // replication layer to split across replicas instead of duplicating
+    // the whole schedule into every engine.
+    let plan = cfg.faults.take();
+    let rep =
+        run_replicated_with_faults(&cfg, replicas, SharePolicy::Mps, requests, frac, plan.as_ref())?;
     Ok(MeasuredPoint {
         max_batch,
         replicas,
@@ -223,7 +234,16 @@ pub fn measure_point_cluster(
     }
     let mut cfg = base.clone();
     cfg.max_num_seqs = max_batch;
-    let rep = run_cluster(&cfg, replicas, tp, gpus, SharePolicy::Mps, requests)?;
+    let plan = cfg.faults.take();
+    let rep = run_cluster_with_faults(
+        &cfg,
+        replicas,
+        tp,
+        gpus,
+        SharePolicy::Mps,
+        requests,
+        plan.as_ref(),
+    )?;
     Ok(MeasuredPoint {
         max_batch,
         replicas,
@@ -353,6 +373,13 @@ pub fn plan_joint(
     if grid.is_empty() {
         bail!("no (batch, replicas, tp) grid point fits the {gpus}-GPU budget");
     }
+    // The fleet fault plan (if any) rides on the OfflineConfig so the
+    // measure functions can hand it to the replication layer.
+    let mut base = base.clone();
+    if cfg.faults.is_some() {
+        base.faults = cfg.faults.clone();
+    }
+    let base = &base;
     let measured = crate::util::par::par_map(&grid, |&(b, r, tp)| {
         measure_point_cluster(base, b, r, tp, gpus, requests)
     });

@@ -19,7 +19,7 @@
 //! The same engine drives the H100 simulator (figures) and the PJRT CPU
 //! runtime (end-to-end example); only the backend differs.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
@@ -28,6 +28,7 @@ use crate::coordinator::request::{RequestState, RunningSeq};
 use crate::coordinator::scheduler::{
     PreemptMode, ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
 };
+use crate::faults::{FaultEvent, FaultKind, FaultPlan, FaultStats};
 use crate::gpusim::mps::Segment;
 use crate::gpusim::plan::StepSummary;
 use crate::gpusim::step::StepSim;
@@ -64,6 +65,10 @@ pub struct EngineConfig {
     /// the golden reference (`--no-fast-forward`); recording mode
     /// always steps (per-kernel sims cannot be fast-forwarded).
     pub fast_forward: bool,
+    /// Deterministic fault schedule (crash/slowdown/pool-shrink/
+    /// swap-fail events at virtual times). `None` (the default) is a
+    /// fault-free run, bit-identical to the pre-fault engine.
+    pub faults: Option<FaultPlan>,
 }
 
 impl EngineConfig {
@@ -80,6 +85,7 @@ impl EngineConfig {
             cpu_swap_blocks: kv_blocks,
             record_steps: false,
             fast_forward: true,
+            faults: None,
         }
     }
 }
@@ -115,6 +121,8 @@ pub struct EngineReport {
     pub recorded: Vec<StepSim>,
     /// CPU/GPU burst trace for the replication executor (Fig 13).
     pub segments: Vec<Segment>,
+    /// Availability accounting (all-default on a fault-free run).
+    pub faults: FaultStats,
 }
 
 /// A completed sequence with its generated tokens (drained via
@@ -172,6 +180,24 @@ pub struct Engine<B: Backend> {
     recorded: Vec<StepSim>,
     segments: Vec<Segment>,
     finished: Vec<FinishedSeq>,
+    /// Scheduled fault events (sorted ascending), taken from
+    /// `cfg.faults` at construction; `fault_cursor` is the next undue
+    /// event.
+    fault_events: Vec<FaultEvent>,
+    fault_cursor: usize,
+    /// End of the active slowdown window (`NEG_INFINITY` = none); GPU
+    /// bursts stretch by `slow_factor` while `clock < slow_until`.
+    slow_until: f64,
+    slow_factor: f64,
+    /// End of the active swap-failure window (`NEG_INFINITY` = none).
+    swap_fail_until: f64,
+    /// Open pool-shrink windows: (end time, blocks quarantined), each
+    /// released when the clock reaches its end.
+    shrink_windows: Vec<(f64, usize)>,
+    /// Per-request attempt counts, tracked only for requests a crash
+    /// (or failed swap) ever re-queued: the first re-queue sets 2.
+    attempts: BTreeMap<u64, u64>,
+    faults: FaultStats,
 }
 
 impl<B: Backend> Engine<B> {
@@ -192,6 +218,11 @@ impl<B: Backend> Engine<B> {
         // Without step recording the backend may take its summary-only
         // fast path (no per-kernel records to throw away).
         backend.set_record(cfg.record_steps);
+        let fault_events = cfg
+            .faults
+            .as_ref()
+            .map(|p| p.events().to_vec())
+            .unwrap_or_default();
         Self {
             backend,
             cfg,
@@ -215,6 +246,14 @@ impl<B: Backend> Engine<B> {
             recorded: Vec::new(),
             segments: Vec::new(),
             finished: Vec::new(),
+            fault_events,
+            fault_cursor: 0,
+            slow_until: f64::NEG_INFINITY,
+            slow_factor: 1.0,
+            swap_fail_until: f64::NEG_INFINITY,
+            shrink_windows: Vec::new(),
+            attempts: BTreeMap::new(),
+            faults: FaultStats::default(),
         }
     }
 
@@ -318,7 +357,9 @@ impl<B: Backend> Engine<B> {
             || !self.swapped.is_empty()
     }
 
-    pub fn finish(self) -> EngineReport {
+    pub fn finish(mut self) -> EngineReport {
+        self.faults.max_attempts = self.attempts.values().copied().max().unwrap_or(0);
+        self.faults.shed_ids.sort_unstable();
         EngineReport {
             metrics: self.metrics.finish(self.clock),
             peak_kv_usage: self.kv.peak_usage(),
@@ -334,11 +375,17 @@ impl<B: Backend> Engine<B> {
             decode_time: self.decode_time,
             recorded: self.recorded,
             segments: self.segments,
+            faults: self.faults,
         }
     }
 
     /// One engine iteration. Returns false if idle with nothing pending.
     pub fn step(&mut self) -> Result<bool> {
+        // Faults land at step boundaries: every event whose time has
+        // passed applies before arrivals are absorbed, so an event at
+        // `t` takes effect at the first step boundary >= `t` on both
+        // the stepwise and fast-forward paths.
+        self.apply_due_faults();
         self.absorb_arrivals();
         // Swapped sequences have priority over fresh admissions: they
         // already hold CPU-resident KV and resume without re-prefill.
@@ -367,13 +414,25 @@ impl<B: Backend> Engine<B> {
                 Ok(true)
             }
             ScheduleDecision::Idle => {
-                // Jump to the next arrival, if any. The wait is recorded
-                // as a CPU segment so arrival-driven traces keep their
-                // true extent under the replication co-scheduler.
-                if let Some(r) = self.pending.last() {
-                    let gap = r.arrival - self.clock;
+                // Jump to the next arrival or fault boundary, whichever
+                // comes first. The wait is recorded as a CPU segment so
+                // arrival-driven traces keep their true extent under the
+                // replication co-scheduler. With faults disabled the
+                // boundary is infinite and this is exactly the original
+                // next-arrival jump. The fault boundary matters when a
+                // shrink window blocks the whole waiting queue: the
+                // scheduler idles until the window end releases the
+                // quarantined blocks (applied at the next step top).
+                let arrival = self.pending.last().map(|r| r.arrival);
+                let boundary = self.next_fault_boundary();
+                let target = match arrival {
+                    Some(a) => a.min(boundary),
+                    None => boundary,
+                };
+                if target.is_finite() {
+                    let gap = target - self.clock;
                     if gap > 0.0 {
-                        self.clock = r.arrival;
+                        self.clock = target;
                         self.segments.push(Segment::Cpu { duration: gap });
                     }
                     self.absorb_arrivals();
@@ -407,8 +466,12 @@ impl<B: Backend> Engine<B> {
 
     /// Swap back as many parked sequences as fit (FCFS), charging the
     /// PCIe transfer. They rejoin the running set and resume decoding
-    /// without re-prefill.
+    /// without re-prefill. A swap-failure window blocks the PCIe path
+    /// entirely (mirrored exactly by [`Engine::swap_in_ready`]).
     fn try_swap_in(&mut self) {
+        if self.swap_fail_active() {
+            return;
+        }
         while let Some(front) = self.swapped.front() {
             if self.running.len() >= self.cfg.max_num_seqs {
                 break;
@@ -553,10 +616,13 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Would [`Engine::try_swap_in`] admit the parked front sequence
-    /// right now? Mirrors its loop-entry conditions exactly; a ready
-    /// swap-in is a fast-forward event boundary (the next stepwise
-    /// iteration performs the transfer).
+    /// right now? Mirrors its loop-entry conditions exactly — including
+    /// the swap-failure gate; a ready swap-in is a fast-forward event
+    /// boundary (the next stepwise iteration performs the transfer).
     fn swap_in_ready(&self) -> bool {
+        if self.swap_fail_active() {
+            return false;
+        }
         match self.swapped.front() {
             Some(front) => {
                 self.running.len() < self.cfg.max_num_seqs
@@ -583,6 +649,13 @@ impl<B: Backend> Engine<B> {
     /// `tests/fast_forward.rs`).
     fn fast_forward_decode(&mut self) -> Result<()> {
         if !self.cfg.fast_forward || self.cfg.record_steps || self.running.is_empty() {
+            return Ok(());
+        }
+        // An active slowdown window stretches every GPU burst; the cost
+        // model cannot reproduce that, so slowed streaks stay stepwise
+        // (the window end is a fault boundary, so fast-forward resumes
+        // right after it).
+        if self.clock < self.slow_until {
             return Ok(());
         }
         // A chunk-split step absorbs sub-batch summaries with different
@@ -635,6 +708,10 @@ impl<B: Backend> Engine<B> {
         for &c in &ctx {
             hist[(c - 1) % bs] += 1;
         }
+        // Fault boundary: the next scheduled event or open window end.
+        // Nothing in the fault schedule changes mid-streak (events only
+        // apply at step tops), so computing it once at entry is exact.
+        let fault_boundary = self.next_fault_boundary();
         let mut budget = self.kv.reclaimable_blocks();
         let n = self.running.len();
         let mut done = 0usize;
@@ -643,6 +720,11 @@ impl<B: Backend> Engine<B> {
             // Arrival boundary: the stepwise loop would absorb this
             // request at the top of its next iteration.
             if self.pending.last().is_some_and(|r| r.arrival <= self.clock) {
+                break;
+            }
+            // Fault boundary: a due event (or window end) applies at
+            // the top of the next stepwise iteration.
+            if fault_boundary <= self.clock {
                 break;
             }
             let allocs = hist[(bs - done % bs) % bs];
@@ -892,14 +974,18 @@ impl<B: Backend> Engine<B> {
         let mut victim = self.running.remove(pos);
         self.preemptions += 1;
         if self.cfg.preempt == PreemptMode::Swap {
-            if let Ok(moved) = self.kv.swap_out(victim.id) {
+            if self.swap_fail_active() {
+                // PCIe degradation window: the swap-out is denied and
+                // the victim falls back to recompute below.
+                self.faults.swap_denied += 1;
+            } else if let Ok(moved) = self.kv.swap_out(victim.id) {
                 self.swap_outs += 1;
                 self.charge_swap(moved);
                 victim.state = RequestState::Swapped;
                 self.swapped.push_back(victim);
                 return true;
             }
-            // CPU pool full: fall through to recompute.
+            // CPU pool full (or swap denied): fall through to recompute.
         }
         self.kv.free(victim.id).ok();
         victim.preempt();
@@ -951,14 +1037,21 @@ impl<B: Backend> Engine<B> {
     }
 
     fn after_step(&mut self, out: &StepOutput, batch: usize, phase: Phase) {
-        self.clock += out.cpu_gap + out.gpu_time;
+        // A straggler window stretches the GPU burst. The multiply is
+        // conditional — never `* 1.0` on the fault-free path — so runs
+        // without faults keep bit-identical float trajectories.
+        let gpu = if self.clock < self.slow_until {
+            out.gpu_time * self.slow_factor
+        } else {
+            out.gpu_time
+        };
+        self.clock += out.cpu_gap + gpu;
         self.steps += 1;
         match phase {
-            Phase::Prefill => self.prefill_time += out.cpu_gap + out.gpu_time,
-            _ => self.decode_time += out.cpu_gap + out.gpu_time,
+            Phase::Prefill => self.prefill_time += out.cpu_gap + gpu,
+            _ => self.decode_time += out.cpu_gap + gpu,
         }
-        self.metrics
-            .on_step(self.clock, batch, out.cpu_gap, out.gpu_time);
+        self.metrics.on_step(self.clock, batch, out.cpu_gap, gpu);
         let demand = if let Some(s) = &out.summary {
             s.dram_demand()
         } else if let Some(s) = &out.sim {
@@ -975,7 +1068,7 @@ impl<B: Backend> Engine<B> {
             duration: out.cpu_gap,
         });
         self.segments.push(Segment::Gpu {
-            duration: out.gpu_time,
+            duration: gpu,
             dram_demand: demand.min(1.0),
         });
         if self.cfg.record_steps {
@@ -983,6 +1076,181 @@ impl<B: Backend> Engine<B> {
                 self.recorded.push(sim.clone());
             }
         }
+    }
+
+    // --- fault injection & recovery --------------------------------------
+
+    /// Is a PCIe swap-failure window active right now?
+    fn swap_fail_active(&self) -> bool {
+        self.clock < self.swap_fail_until
+    }
+
+    /// The earliest future virtual time the fault schedule changes
+    /// engine behavior: the next scheduled event, an open pool-shrink
+    /// window end (blocks return), the swap-failure window end (the
+    /// PCIe path reopens), or the slowdown window end (fast-forward may
+    /// resume). `INFINITY` when the schedule is exhausted — i.e. always
+    /// on a fault-free run.
+    fn next_fault_boundary(&self) -> f64 {
+        let mut b = f64::INFINITY;
+        if let Some(e) = self.fault_events.get(self.fault_cursor) {
+            b = b.min(e.at);
+        }
+        for &(end, _) in &self.shrink_windows {
+            b = b.min(end);
+        }
+        if self.swap_fail_until > self.clock {
+            b = b.min(self.swap_fail_until);
+        }
+        if self.slow_until > self.clock {
+            b = b.min(self.slow_until);
+        }
+        b
+    }
+
+    /// Apply every fault event and window transition whose time has
+    /// passed. Called at the top of every step, so faults always land
+    /// at step boundaries — the granularity both the stepwise and
+    /// fast-forward paths agree on.
+    fn apply_due_faults(&mut self) {
+        if self.fault_events.is_empty() && self.shrink_windows.is_empty() {
+            // Fast path for fault-free runs; expired slow/swap-fail
+            // sentinels (below) only exist when events were scheduled.
+            if self.slow_until == f64::NEG_INFINITY && self.swap_fail_until == f64::NEG_INFINITY {
+                return;
+            }
+        }
+        // Expired windows reset to the inactive sentinel (the active
+        // tests compare against the clock, so this is cleanliness, not
+        // correctness — it keeps `next_fault_boundary` cheap).
+        if self.slow_until != f64::NEG_INFINITY && self.clock >= self.slow_until {
+            self.slow_until = f64::NEG_INFINITY;
+            self.slow_factor = 1.0;
+        }
+        if self.swap_fail_until != f64::NEG_INFINITY && self.clock >= self.swap_fail_until {
+            self.swap_fail_until = f64::NEG_INFINITY;
+        }
+        // Close due pool-shrink windows: quarantined blocks return.
+        let mut i = 0;
+        while i < self.shrink_windows.len() {
+            if self.clock >= self.shrink_windows[i].0 {
+                let (_, blocks) = self.shrink_windows.remove(i);
+                self.kv.release_quarantined(blocks);
+            } else {
+                i += 1;
+            }
+        }
+        // Apply due events in schedule order.
+        while let Some(&e) = self.fault_events.get(self.fault_cursor) {
+            if e.at > self.clock {
+                break;
+            }
+            self.fault_cursor += 1;
+            match e.kind {
+                FaultKind::Crash { restart_after } => self.apply_crash(restart_after),
+                FaultKind::Slowdown { duration, factor } => {
+                    // Overlapping windows: last one wins.
+                    self.faults.slowdowns += 1;
+                    self.slow_until = self.clock + duration;
+                    self.slow_factor = factor;
+                }
+                FaultKind::PoolShrink { duration, blocks } => {
+                    self.apply_pool_shrink(duration, blocks);
+                }
+                FaultKind::SwapFail { duration } => {
+                    self.swap_fail_until = self.clock + duration;
+                }
+            }
+        }
+    }
+
+    /// Replica crash: every in-flight sequence (running, waiting,
+    /// swapped) is lost with all its KV; its request is rebuilt from
+    /// the surviving metadata — crucially with its *original* arrival,
+    /// so re-queued requests keep their FCFS order key — and
+    /// re-submitted for recompute-from-prompt. Generated tokens are
+    /// written off as lost work; the restart delay advances the clock
+    /// as recorded downtime.
+    fn apply_crash(&mut self, restart_after: f64) {
+        self.faults.crashes += 1;
+        let running = std::mem::take(&mut self.running);
+        let waiting = std::mem::take(&mut self.waiting);
+        let swapped = std::mem::take(&mut self.swapped);
+        let mut rebuilt: Vec<Request> = Vec::new();
+        for s in running.into_iter().chain(waiting).chain(swapped) {
+            self.kv.free(s.id).ok();
+            self.kv.drop_swapped(s.id).ok();
+            self.faults.lost_tokens += s.generated as u64;
+            self.faults.retries += 1;
+            *self.attempts.entry(s.id).or_insert(1) += 1;
+            self.metrics.on_requeue(s.id);
+            // NOT `RunningSeq::preempt()`: preemption keeps generated
+            // tokens for re-prefill, but a crash loses them — the
+            // request restarts from its original prompt, and the prefix
+            // tag makes the token resynthesis bit-identical.
+            rebuilt.push(Request {
+                id: s.id,
+                arrival: s.arrival,
+                prompt_tokens: s.prompt_tokens,
+                output_tokens: s.target_output,
+                prefix: s.prefix,
+            });
+        }
+        // Deterministic re-queue order regardless of which set each
+        // victim came from: by (arrival, id). All rebuilt arrivals are
+        // <= clock < any still-pending arrival, so `submit`'s stable
+        // sort puts them ahead of future traffic — FCFS survives.
+        rebuilt.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        if restart_after > 0.0 {
+            self.clock += restart_after;
+            self.faults.downtime += restart_after;
+            self.segments.push(Segment::Cpu {
+                duration: restart_after,
+            });
+        }
+        // `submit` re-registers each id with `on_admit`, which is an
+        // entry-or-insert: the original timing record (and arrival)
+        // survives untouched.
+        self.submit(&rebuilt);
+    }
+
+    /// GPU OOM / ECC-throttle window: quarantine `blocks` KV blocks for
+    /// `duration` seconds, preempting victims until the reclaimable
+    /// pool covers the shrink (graceful degradation, never a panic).
+    /// Waiting requests that cannot fit even the shrunken pool are shed
+    /// by policy — reported, not silently dropped.
+    fn apply_pool_shrink(&mut self, duration: f64, blocks: usize) {
+        self.faults.pool_shrinks += 1;
+        let want = blocks.min(self.kv.capacity());
+        let mut got = self.kv.quarantine_blocks(want);
+        while got < want {
+            if !self.preempt_newest_except(u64::MAX) {
+                break; // nothing left to evict; shrink what we can
+            }
+            got += self.kv.quarantine_blocks(want - got);
+        }
+        self.shrink_windows.push((self.clock + duration, got));
+        // Shed waiting requests that can never be admitted while the
+        // window holds (their prompt alone exceeds the usable pool).
+        let usable = self.kv.capacity() - self.kv.quarantined_blocks();
+        let mut kept = VecDeque::new();
+        for s in std::mem::take(&mut self.waiting) {
+            if self.kv.blocks_needed(s.prefill_len()) > usable {
+                // A chunk-partial victim may still hold blocks.
+                self.kv.free(s.id).ok();
+                self.metrics.on_shed(s.id);
+                self.attempts.remove(&s.id);
+                self.faults.shed_ids.push(s.id);
+            } else {
+                kept.push_back(s);
+            }
+        }
+        self.waiting = kept;
     }
 
     fn retire_or_keep(&mut self, seqs: Vec<RunningSeq>) {
@@ -1132,6 +1400,52 @@ mod tests {
             order.extend(e.take_finished().into_iter().map(|f| f.id));
         }
         assert_eq!(order, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn crash_requeue_preserves_fcfs_order() {
+        // Satellite regression test: requests re-queued by a crash keep
+        // their *original* arrival keys, so they neither jump the queue
+        // nor lose their place. The crash lands mid-run while requests
+        // 1/2/0 are in flight or queued; with max_num_seqs = 1 the
+        // completion order equals the admission order, which must be
+        // the same FCFS order the tie-break test above pins.
+        let reqs: Vec<crate::workload::Request> = [(0u64, 0.2), (1, 0.1), (2, 0.1), (3, 0.3)]
+            .iter()
+            .map(|&(id, arrival)| crate::workload::Request {
+                id,
+                arrival,
+                prompt_tokens: 16,
+                // Long enough that requests 1 and 2 are still in flight
+                // (running/waiting) when the crash lands 10 ms after
+                // their arrival.
+                output_tokens: 64,
+                prefix: None,
+            })
+            .collect();
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at: 0.11,
+            kind: FaultKind::Crash {
+                restart_after: 0.01,
+            },
+        }])
+        .unwrap();
+        let mut e = engine_with(1, 1024, |c| c.faults = Some(plan.clone()));
+        e.submit(&reqs);
+        let mut order = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            e.step().unwrap();
+            order.extend(e.take_finished().into_iter().map(|f| f.id));
+            guard += 1;
+            assert!(guard < 100_000, "crash recovery livelocked");
+        }
+        let report = e.finish();
+        assert_eq!(report.faults.crashes, 1);
+        assert!(report.faults.retries > 0, "crash must re-queue work");
+        assert_eq!(report.faults.max_attempts, 2);
+        assert_eq!(order, vec![1, 2, 0, 3], "FCFS broken by crash re-queue");
+        assert_eq!(report.metrics.completed, 4);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::backend::SimBackend;
 use crate::coordinator::engine::{Engine, EngineConfig, EngineReport};
 use crate::coordinator::scheduler::{PreemptMode, SchedulerPolicy};
+use crate::faults::FaultPlan;
 use crate::gpusim::GpuSpec;
 use crate::kvcache;
 use crate::models::spec::{AttentionBackendKind, ModelSpec};
@@ -43,6 +44,9 @@ pub struct OfflineConfig {
     /// KV pool is sized per rank. 1 = today's single-GPU engine,
     /// bit-identical to before the knob existed.
     pub tp: usize,
+    /// Deterministic fault schedule (`--fault-*` flags); `None` is a
+    /// fault-free run, bit-identical to the pre-fault engine.
+    pub faults: Option<FaultPlan>,
 }
 
 impl OfflineConfig {
@@ -64,6 +68,7 @@ impl OfflineConfig {
             fast_forward: true,
             block_size: 16,
             tp: 1,
+            faults: None,
         }
     }
 
@@ -88,6 +93,7 @@ impl OfflineConfig {
         cfg.fast_forward = self.fast_forward;
         cfg.preempt = self.preempt;
         cfg.prefix_cache = self.prefix_cache;
+        cfg.faults = self.faults.clone();
         if self.chunked_prefill {
             cfg.policy = SchedulerPolicy::ChunkedPrefill;
         }

@@ -21,6 +21,7 @@
 use anyhow::Result;
 
 use crate::coordinator::offline::OfflineConfig;
+use crate::faults::FaultStats;
 use crate::metrics::{Percentiles, RequestLatency, RunMetrics, Slo, StreamingSummary};
 use crate::util::json::Json;
 use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
@@ -83,6 +84,9 @@ pub struct OnlineReport {
     /// Prefix-cache hit rate over full prompt blocks (0 when disabled).
     pub prefix_hit_rate: f64,
     pub steps: usize,
+    /// Availability accounting from injected faults (all-zero when the
+    /// run was fault-free).
+    pub faults: FaultStats,
     /// The underlying aggregate metrics (incl. per-request latencies).
     pub metrics: RunMetrics,
 }
@@ -136,6 +140,7 @@ impl OnlineReport {
             ("swap_outs", Json::num(self.swap_outs as f64)),
             ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
             ("steps", Json::num(self.steps as f64)),
+            ("faults", self.faults.to_json()),
         ])
     }
 }
@@ -219,6 +224,7 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
         swap_outs: report.swap_outs,
         prefix_hit_rate: report.prefix_cache.hit_rate(),
         steps: report.steps,
+        faults: report.faults.clone(),
         metrics: report.metrics,
     })
 }

@@ -41,6 +41,10 @@ pub struct RunningSeq {
     /// sequence starts decoding. Reset by recompute-preemption, which
     /// frees the blocks and re-prefills from scratch.
     pub prefilled: usize,
+    /// The originating request's shared-prefix tag, kept so a replica
+    /// crash can rebuild the *original* request (same prefix class ⇒
+    /// bit-identical token resynthesis) for recompute-from-prompt.
+    pub prefix: Option<crate::workload::SharedPrefix>,
 }
 
 impl RunningSeq {
@@ -82,6 +86,7 @@ impl RunningSeq {
             preemptions: 0,
             first_token_at: None,
             prefilled: 0,
+            prefix: req.prefix,
         }
     }
 

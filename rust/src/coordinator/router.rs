@@ -25,6 +25,9 @@ pub struct Router {
     next: usize,
     /// Outstanding token load per replica (LeastLoaded bookkeeping).
     load: Vec<u64>,
+    /// Health flags: a downed replica is skipped by
+    /// [`Router::route_healthy`] until [`Router::mark_up`].
+    down: Vec<bool>,
 }
 
 impl Router {
@@ -35,6 +38,7 @@ impl Router {
             n,
             next: 0,
             load: vec![0; n],
+            down: vec![false; n],
         }
     }
 
@@ -42,9 +46,9 @@ impl Router {
         self.n
     }
 
-    /// Pick the replica for `req`.
-    pub fn route(&mut self, req: &Request) -> usize {
-        let r = match self.policy {
+    /// Policy choice alone, no load bookkeeping.
+    fn pick(&mut self, req: &Request) -> usize {
+        match self.policy {
             RoutePolicy::RoundRobin => {
                 let r = self.next;
                 self.next = (self.next + 1) % self.n;
@@ -62,9 +66,55 @@ impl Router {
             RoutePolicy::Hash => {
                 (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.n
             }
-        };
+        }
+    }
+
+    /// Pick the replica for `req`.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let r = self.pick(req);
         self.load[r] += req.total_tokens() as u64;
         r
+    }
+
+    /// Mark a replica unhealthy (crash window entered).
+    pub fn mark_down(&mut self, replica: usize) {
+        self.down[replica] = true;
+    }
+
+    /// Mark a replica healthy again (restart completed).
+    pub fn mark_up(&mut self, replica: usize) {
+        self.down[replica] = false;
+    }
+
+    pub fn is_up(&self, replica: usize) -> bool {
+        !self.down[replica]
+    }
+
+    /// Health-aware routing: run the policy as usual, but if it lands on
+    /// a downed replica, re-route to a healthy one (least-loaded picks
+    /// the lightest healthy replica; round-robin/hash take the next
+    /// healthy index cyclically). Returns `(replica, rerouted)`. When
+    /// *every* replica is down the policy choice stands — requests queue
+    /// at the dead replica and recover when it restarts, mirroring a
+    /// real front-end with nowhere else to send traffic.
+    pub fn route_healthy(&mut self, req: &Request) -> (usize, bool) {
+        let first = self.pick(req);
+        if !self.down[first] || self.down.iter().all(|&d| d) {
+            self.load[first] += req.total_tokens() as u64;
+            return (first, false);
+        }
+        let r = match self.policy {
+            RoutePolicy::LeastLoaded => (0..self.n)
+                .filter(|&i| !self.down[i])
+                .min_by_key(|&i| self.load[i])
+                .unwrap(),
+            _ => (first + 1..first + self.n)
+                .map(|i| i % self.n)
+                .find(|&i| !self.down[i])
+                .unwrap(),
+        };
+        self.load[r] += req.total_tokens() as u64;
+        (r, true)
     }
 
     /// Report completion so LeastLoaded stays accurate.
@@ -141,5 +191,41 @@ mod tests {
         let ra = r.route(&a);
         r.complete(ra, &a);
         assert_eq!(r.load[ra], 0);
+    }
+
+    #[test]
+    fn route_healthy_skips_downed_replicas() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        r.mark_down(1);
+        let picks: Vec<_> = (0..6).map(|i| r.route_healthy(&req(i, 10, 10))).collect();
+        // RR order 0,1,2,... with 1 rerouted to its next healthy neighbor.
+        assert_eq!(
+            picks,
+            vec![(0, false), (2, true), (2, false), (0, false), (2, true), (2, false)]
+        );
+        assert!(!r.is_up(1));
+    }
+
+    #[test]
+    fn route_healthy_falls_back_when_all_down() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        r.mark_down(0);
+        r.mark_down(1);
+        // Nowhere to go: the policy pick stands, unrerouted.
+        assert_eq!(r.route_healthy(&req(0, 10, 10)), (0, false));
+        assert_eq!(r.route_healthy(&req(1, 10, 10)), (1, false));
+    }
+
+    #[test]
+    fn mark_up_restores_routing_and_least_loaded_prefers_healthy() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.mark_down(0);
+        let (a, rerouted) = r.route_healthy(&req(0, 100, 100));
+        // Replica 0 is both least loaded and down -> rerouted to 1.
+        assert_eq!((a, rerouted), (1, true));
+        r.mark_up(0);
+        assert!(r.is_up(0));
+        let (b, rerouted) = r.route_healthy(&req(1, 10, 10));
+        assert_eq!((b, rerouted), (0, false));
     }
 }

@@ -36,6 +36,27 @@ struct Submission {
     submitted_wall: std::time::Instant,
 }
 
+/// Per-connection timeout knobs (`--reply-timeout-s`/`--read-timeout-s`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// How long a generate op waits for the engine's reply before the
+    /// connection gets a structured `{"error":"timeout","id":...}` line.
+    pub reply_timeout: Duration,
+    /// Per-connection read timeout: a client that connects and then
+    /// goes silent is dropped after this long instead of pinning its
+    /// handler thread forever (`None` = wait indefinitely).
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            reply_timeout: Duration::from_secs(600),
+            read_timeout: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
 /// Shared server state.
 struct Shared {
     tx: Sender<Submission>,
@@ -48,10 +69,15 @@ struct Shared {
     shutdown: AtomicBool,
 }
 
-/// Serve `engine` on `addr` until a shutdown op arrives.
-/// Returns the number of requests served.
+/// Serve `engine` on `addr` until a shutdown op arrives, with default
+/// timeouts. Returns the number of requests served.
 pub fn serve<B: Backend>(engine: Engine<B>, addr: &str) -> Result<u64> {
     serve_listener(engine, TcpListener::bind(addr)?)
+}
+
+/// [`serve`] with explicit timeout configuration.
+pub fn serve_with<B: Backend>(engine: Engine<B>, addr: &str, cfg: ServerConfig) -> Result<u64> {
+    serve_listener_with(engine, TcpListener::bind(addr)?, cfg)
 }
 
 /// Serve `engine` on an already-bound listener (tests bind port 0 and
@@ -62,6 +88,15 @@ pub fn serve<B: Backend>(engine: Engine<B>, addr: &str) -> Result<u64> {
 /// non-Send FFI handles); a spawned acceptor thread owns the listener
 /// and hands submissions over an mpsc channel.
 pub fn serve_listener<B: Backend>(engine: Engine<B>, listener: TcpListener) -> Result<u64> {
+    serve_listener_with(engine, listener, ServerConfig::default())
+}
+
+/// [`serve_listener`] with explicit timeout configuration.
+pub fn serve_listener_with<B: Backend>(
+    engine: Engine<B>,
+    listener: TcpListener,
+    cfg: ServerConfig,
+) -> Result<u64> {
     listener.set_nonblocking(true)?;
     let (tx, rx) = channel::<Submission>();
     let shared = Arc::new(Shared {
@@ -74,7 +109,7 @@ pub fn serve_listener<B: Backend>(engine: Engine<B>, listener: TcpListener) -> R
     });
 
     let acceptor_shared = shared.clone();
-    let acceptor = std::thread::spawn(move || accept_loop(listener, acceptor_shared));
+    let acceptor = std::thread::spawn(move || accept_loop(listener, acceptor_shared, cfg));
 
     // Engine worker: continuous batching over whatever has arrived.
     let served = engine_worker(engine, rx, shared);
@@ -82,14 +117,14 @@ pub fn serve_listener<B: Backend>(engine: Engine<B>, listener: TcpListener) -> R
     Ok(served)
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Result<()> {
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServerConfig) -> Result<()> {
     let mut conns = Vec::new();
     while !shared.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let s = shared.clone();
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, s);
+                    let _ = handle_conn(stream, s, cfg);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -173,12 +208,26 @@ fn engine_worker<B: Backend>(
     shared.served.load(Ordering::SeqCst)
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>, cfg: ServerConfig) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(cfg.read_timeout)?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            // Read timeout fired: drop the wedged connection so its
+            // handler thread does not hang forever.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -221,12 +270,18 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                         submitted_wall: std::time::Instant::now(),
                     })
                     .ok();
-                match reply_rx.recv_timeout(Duration::from_secs(600)) {
+                match reply_rx.recv_timeout(cfg.reply_timeout) {
                     Ok(resp) => writeln!(writer, "{resp}")?,
+                    // Structured error carrying the request id, so a
+                    // client can correlate the timeout with what it
+                    // submitted (and retry idempotently).
                     Err(_) => writeln!(
                         writer,
                         "{}",
-                        Json::obj(vec![("error", Json::str("timeout"))])
+                        Json::obj(vec![
+                            ("error", Json::str("timeout")),
+                            ("id", Json::num(id as f64)),
+                        ])
                     )?,
                 }
             }
@@ -346,5 +401,33 @@ mod tests {
         client_shutdown(addr).unwrap();
         let served = server.join().unwrap();
         assert!(served >= 5, "served {served}");
+    }
+
+    #[test]
+    fn reply_timeout_returns_structured_error_with_id() {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        let engine = Engine::new(backend, EngineConfig::new(8, 4096, 16));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // A zero reply deadline times out every generate immediately.
+        let cfg = ServerConfig {
+            reply_timeout: Duration::ZERO,
+            read_timeout: Some(Duration::from_secs(5)),
+        };
+        let server =
+            std::thread::spawn(move || serve_listener_with(engine, listener, cfg).unwrap());
+        std::thread::sleep(Duration::from_millis(100));
+
+        let resp = client_generate(&addr, 16, 4).unwrap();
+        assert_eq!(resp.get("error").and_then(|e| e.as_str()), Some("timeout"));
+        // The error carries the request id the server assigned.
+        assert!(resp.get("id").and_then(|i| i.as_usize()).is_some(), "{resp}");
+
+        client_shutdown(&addr).unwrap();
+        server.join().unwrap();
     }
 }

@@ -1,0 +1,581 @@
+//! Deterministic fault injection & failure recovery.
+//!
+//! A [`FaultPlan`] compiles a set of fault specifications (from config
+//! or CLI flags) into a time-sorted schedule of virtual-time
+//! [`FaultEvent`]s. The engine applies every due event at the top of
+//! each `step()` — so an event scheduled at `t` takes effect at the
+//! first step boundary at or after `t` — which keeps the contract that
+//! the same seed + fault plan reproduces bit-identical reports, with or
+//! without fast-forward (fault event times and window ends become
+//! fast-forward boundaries).
+//!
+//! Four fault kinds model the failure modes a shared fleet actually
+//! sees:
+//!
+//! - [`FaultKind::Crash`]: the replica dies and restarts after a fixed
+//!   delay. In-flight sequences are lost; their requests are re-queued
+//!   for recompute-from-prompt with their *original* arrival keys so
+//!   FCFS fairness survives the crash.
+//! - [`FaultKind::Slowdown`]: a transient straggler window — every GPU
+//!   burst is stretched by a factor until the window ends.
+//! - [`FaultKind::PoolShrink`]: a GPU OOM / ECC-throttle window — a
+//!   number of KV blocks are quarantined out of the usable pool
+//!   (preempting victims if the free+LRU pool cannot cover it) and
+//!   returned when the window ends; waiting requests that can no longer
+//!   ever fit are shed.
+//! - [`FaultKind::SwapFail`]: a PCIe degradation window — swap-out is
+//!   denied (preemption falls back to recompute) and swapped sequences
+//!   cannot return until the window ends.
+//!
+//! [`FaultStats`] is the availability ledger the engine fills in:
+//! crashes, retries, lost-work tokens, downtime, shed requests,
+//! per-request attempt counts.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::{mix64, Rng};
+
+/// What goes wrong, and for how long.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies; all engine state is lost. The engine is back
+    /// up (and its clock has advanced by) `restart_after` seconds.
+    Crash {
+        /// Downtime before the replica accepts work again, seconds.
+        restart_after: f64,
+    },
+    /// A transient straggler: GPU bursts stretch by `factor` until the
+    /// window closes.
+    Slowdown {
+        /// Window length, seconds, measured from when the event lands.
+        duration: f64,
+        /// Multiplier (≥ 1.0) applied to every GPU burst in the window.
+        factor: f64,
+    },
+    /// An OOM / ECC-throttle window: `blocks` KV blocks leave the
+    /// usable pool for `duration` seconds.
+    PoolShrink {
+        /// Window length, seconds.
+        duration: f64,
+        /// Number of KV blocks quarantined for the window.
+        blocks: usize,
+    },
+    /// A PCIe degradation window: swap-out is denied and swapped
+    /// sequences cannot swap back in until the window closes.
+    SwapFail {
+        /// Window length, seconds.
+        duration: f64,
+    },
+}
+
+/// One scheduled fault: `kind` lands at virtual time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time (seconds) at which the fault is due. It takes
+    /// effect at the first engine step boundary at or after `at`.
+    pub at: f64,
+    /// The fault itself.
+    pub kind: FaultKind,
+}
+
+/// A validated, time-sorted schedule of fault events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Validate and sort a set of events into a plan.
+    ///
+    /// Rejects non-finite or negative times, non-positive or
+    /// non-finite durations, slowdown factors below 1.0, and
+    /// zero-block shrinks. The sort is stable, so events sharing a
+    /// timestamp apply in the order given.
+    pub fn new(mut events: Vec<FaultEvent>) -> Result<Self> {
+        for e in &events {
+            ensure!(
+                e.at.is_finite() && e.at >= 0.0,
+                "fault time must be finite and >= 0, got {}",
+                e.at
+            );
+            match e.kind {
+                FaultKind::Crash { restart_after } => ensure!(
+                    restart_after.is_finite() && restart_after >= 0.0,
+                    "crash restart_after must be finite and >= 0, got {restart_after}"
+                ),
+                FaultKind::Slowdown { duration, factor } => {
+                    ensure!(
+                        duration.is_finite() && duration > 0.0,
+                        "slowdown duration must be finite and > 0, got {duration}"
+                    );
+                    ensure!(
+                        factor.is_finite() && factor >= 1.0,
+                        "slowdown factor must be finite and >= 1.0, got {factor}"
+                    );
+                }
+                FaultKind::PoolShrink { duration, blocks } => {
+                    ensure!(
+                        duration.is_finite() && duration > 0.0,
+                        "pool-shrink duration must be finite and > 0, got {duration}"
+                    );
+                    ensure!(blocks >= 1, "pool-shrink must quarantine >= 1 block");
+                }
+                FaultKind::SwapFail { duration } => ensure!(
+                    duration.is_finite() && duration > 0.0,
+                    "swap-fail duration must be finite and > 0, got {duration}"
+                ),
+            }
+        }
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        Ok(Self { events })
+    }
+
+    /// The events, sorted ascending by time.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Parse the `--fault-*` CLI flags into a plan.
+    ///
+    /// Each flag is a comma-separated list of colon-separated specs:
+    ///
+    /// - `--fault-crash T:RESTART` — crash at `T`, back up after
+    ///   `RESTART` seconds.
+    /// - `--fault-slow T:DUR:FACTOR` — straggler window.
+    /// - `--fault-shrink T:DUR:BLOCKS` — KV pool shrink window.
+    /// - `--fault-swapfail T:DUR` — PCIe swap-failure window.
+    ///
+    /// Returns `Ok(None)` when every flag is absent (fault-free run).
+    pub fn from_cli(
+        crash: Option<&str>,
+        slow: Option<&str>,
+        shrink: Option<&str>,
+        swapfail: Option<&str>,
+    ) -> Result<Option<Self>> {
+        let mut events = Vec::new();
+        if let Some(spec) = crash {
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let f = fields(part, 2, "crash", "T:RESTART")?;
+                events.push(FaultEvent {
+                    at: f[0],
+                    kind: FaultKind::Crash { restart_after: f[1] },
+                });
+            }
+        }
+        if let Some(spec) = slow {
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let f = fields(part, 3, "slow", "T:DUR:FACTOR")?;
+                events.push(FaultEvent {
+                    at: f[0],
+                    kind: FaultKind::Slowdown {
+                        duration: f[1],
+                        factor: f[2],
+                    },
+                });
+            }
+        }
+        if let Some(spec) = shrink {
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let f = fields(part, 3, "shrink", "T:DUR:BLOCKS")?;
+                ensure!(
+                    f[2].fract() == 0.0 && f[2] >= 0.0,
+                    "shrink BLOCKS must be a non-negative integer, got {}",
+                    f[2]
+                );
+                events.push(FaultEvent {
+                    at: f[0],
+                    kind: FaultKind::PoolShrink {
+                        duration: f[1],
+                        blocks: f[2] as usize,
+                    },
+                });
+            }
+        }
+        if let Some(spec) = swapfail {
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let f = fields(part, 2, "swapfail", "T:DUR")?;
+                events.push(FaultEvent {
+                    at: f[0],
+                    kind: FaultKind::SwapFail { duration: f[1] },
+                });
+            }
+        }
+        if events.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Self::new(events)?))
+    }
+
+    /// A seeded Poisson process of crashes over `[0, horizon)`.
+    ///
+    /// Crash gaps are exponential with rate `rate` (crashes per
+    /// second of *uptime*); each crash is followed by `restart_after`
+    /// seconds of downtime before the process resumes. Deterministic
+    /// for a fixed `seed`; non-positive `rate` or `horizon` yields an
+    /// empty plan.
+    pub fn random_crashes(seed: u64, rate: f64, horizon: f64, restart_after: f64) -> Self {
+        let mut events = Vec::new();
+        if rate > 0.0 && horizon > 0.0 {
+            let mut rng = Rng::new(mix64(seed ^ 0xFA17_7E57));
+            let mut t = rng.exponential(rate);
+            while t < horizon {
+                events.push(FaultEvent {
+                    at: t,
+                    kind: FaultKind::Crash { restart_after },
+                });
+                t += restart_after + rng.exponential(rate);
+            }
+        }
+        Self { events }
+    }
+
+    /// Deal the plan's events round-robin across `n` replicas by event
+    /// index. Sorted inputs produce sorted subsets, so each part is a
+    /// valid plan on its own.
+    pub fn split(&self, n: usize) -> Vec<Self> {
+        let mut out = vec![Self::default(); n.max(1)];
+        for (i, e) in self.events.iter().enumerate() {
+            out[i % n.max(1)].events.push(*e);
+        }
+        out
+    }
+
+    /// The `[at, at + restart_after)` downtime windows of every crash
+    /// in the plan, in schedule order. The router uses these as an
+    /// a-priori health map when partitioning arrivals.
+    pub fn crash_windows(&self) -> Vec<(f64, f64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Crash { restart_after } => Some((e.at, e.at + restart_after)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Parse `sep`-free colon spec `part` into exactly `n` finite floats.
+fn fields(part: &str, n: usize, flag: &str, shape: &str) -> Result<Vec<f64>> {
+    let fs: Vec<&str> = part.split(':').collect();
+    if fs.len() != n {
+        bail!("--fault-{flag}: expected {shape}, got {part:?}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for f in fs {
+        let v: f64 = f
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--fault-{flag}: bad number {f:?} in {part:?}"))?;
+        ensure!(v.is_finite(), "--fault-{flag}: non-finite {f:?} in {part:?}");
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Availability accounting for a (possibly fault-free) run.
+///
+/// All-zero (`== FaultStats::default()`) whenever no fault plan was
+/// configured, so fault-free reports stay bit-identical to the
+/// pre-fault output.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Crash events applied.
+    pub crashes: u64,
+    /// Requests re-queued for recompute-from-prompt (one per in-flight
+    /// sequence per crash).
+    pub retries: u64,
+    /// Maximum per-request attempt count (0 when nothing was ever
+    /// re-queued; a request's first re-queue makes its count 2).
+    pub max_attempts: u64,
+    /// Generated-but-lost tokens across all crashes (work thrown away).
+    pub lost_tokens: u64,
+    /// Total replica downtime, seconds (sum of crash restart delays).
+    pub downtime: f64,
+    /// Swap-outs denied by an active swap-failure window (each falls
+    /// back to recompute preemption).
+    pub swap_denied: u64,
+    /// Slowdown windows applied.
+    pub slowdowns: u64,
+    /// Pool-shrink windows applied.
+    pub pool_shrinks: u64,
+    /// Requests re-routed away from a down replica by the router.
+    pub reroutes: u64,
+    /// Ids of requests shed under pool pressure (sorted ascending in
+    /// finished reports). A shed request is reported, never silently
+    /// dropped — conservation is `completed + shed == submitted`.
+    pub shed_ids: Vec<u64>,
+}
+
+impl FaultStats {
+    /// Number of shed requests.
+    pub fn shed(&self) -> usize {
+        self.shed_ids.len()
+    }
+
+    /// True when any fault touched the run.
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+
+    /// Fold another replica's stats into this one (sums counters,
+    /// takes the max attempt count, merges + re-sorts shed ids).
+    pub fn merge(&mut self, other: &Self) {
+        self.crashes += other.crashes;
+        self.retries += other.retries;
+        self.max_attempts = self.max_attempts.max(other.max_attempts);
+        self.lost_tokens += other.lost_tokens;
+        self.downtime += other.downtime;
+        self.swap_denied += other.swap_denied;
+        self.slowdowns += other.slowdowns;
+        self.pool_shrinks += other.pool_shrinks;
+        self.reroutes += other.reroutes;
+        self.shed_ids.extend_from_slice(&other.shed_ids);
+        self.shed_ids.sort_unstable();
+    }
+
+    /// JSON view (keys sorted by the `Json::Obj` BTreeMap).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("max_attempts", Json::num(self.max_attempts as f64)),
+            ("lost_tokens", Json::num(self.lost_tokens as f64)),
+            ("downtime_s", Json::num(self.downtime)),
+            ("swap_denied", Json::num(self.swap_denied as f64)),
+            ("slowdowns", Json::num(self.slowdowns as f64)),
+            ("pool_shrinks", Json::num(self.pool_shrinks as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("shed", Json::num(self.shed_ids.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sorts_events_by_time_stably() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                at: 2.0,
+                kind: FaultKind::SwapFail { duration: 1.0 },
+            },
+            FaultEvent {
+                at: 0.5,
+                kind: FaultKind::Crash { restart_after: 0.1 },
+            },
+            FaultEvent {
+                at: 2.0,
+                kind: FaultKind::Slowdown {
+                    duration: 1.0,
+                    factor: 2.0,
+                },
+            },
+        ])
+        .unwrap();
+        let ats: Vec<f64> = plan.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![0.5, 2.0, 2.0]);
+        // Stable sort: the SwapFail listed first stays ahead of the
+        // equal-time Slowdown.
+        assert!(matches!(plan.events()[1].kind, FaultKind::SwapFail { .. }));
+        assert!(matches!(plan.events()[2].kind, FaultKind::Slowdown { .. }));
+    }
+
+    #[test]
+    fn plan_rejects_invalid_events() {
+        for bad in [
+            FaultEvent {
+                at: -1.0,
+                kind: FaultKind::Crash { restart_after: 0.1 },
+            },
+            FaultEvent {
+                at: 0.0,
+                kind: FaultKind::Crash {
+                    restart_after: f64::NAN,
+                },
+            },
+            FaultEvent {
+                at: 0.0,
+                kind: FaultKind::Slowdown {
+                    duration: 0.0,
+                    factor: 2.0,
+                },
+            },
+            FaultEvent {
+                at: 0.0,
+                kind: FaultKind::Slowdown {
+                    duration: 1.0,
+                    factor: 0.5,
+                },
+            },
+            FaultEvent {
+                at: 0.0,
+                kind: FaultKind::PoolShrink {
+                    duration: 1.0,
+                    blocks: 0,
+                },
+            },
+            FaultEvent {
+                at: 0.0,
+                kind: FaultKind::SwapFail {
+                    duration: f64::INFINITY,
+                },
+            },
+        ] {
+            assert!(FaultPlan::new(vec![bad]).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn from_cli_parses_all_flags() {
+        let plan = FaultPlan::from_cli(
+            Some("1.5:0.25,4:0.5"),
+            Some("2:1:3.5"),
+            Some("0.5:2:64"),
+            Some("3:0.75"),
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent {
+                at: 0.5,
+                kind: FaultKind::PoolShrink {
+                    duration: 2.0,
+                    blocks: 64,
+                },
+            }
+        );
+        assert_eq!(
+            plan.events()[1],
+            FaultEvent {
+                at: 1.5,
+                kind: FaultKind::Crash { restart_after: 0.25 },
+            }
+        );
+        assert_eq!(
+            plan.events()[4],
+            FaultEvent {
+                at: 4.0,
+                kind: FaultKind::Crash { restart_after: 0.5 },
+            }
+        );
+        assert!(FaultPlan::from_cli(None, None, None, None).unwrap().is_none());
+        assert!(FaultPlan::from_cli(Some("1.5"), None, None, None).is_err());
+        assert!(FaultPlan::from_cli(None, Some("2:1"), None, None).is_err());
+        assert!(FaultPlan::from_cli(None, None, Some("0.5:2:1.5"), None).is_err());
+        assert!(FaultPlan::from_cli(None, None, None, Some("x:1")).is_err());
+    }
+
+    #[test]
+    fn random_crashes_are_seed_deterministic() {
+        let a = FaultPlan::random_crashes(7, 0.5, 60.0, 0.25);
+        let b = FaultPlan::random_crashes(7, 0.5, 60.0, 0.25);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "rate 0.5 over 60s should crash at least once");
+        let c = FaultPlan::random_crashes(8, 0.5, 60.0, 0.25);
+        assert_ne!(a, c, "different seeds should differ");
+        assert!(FaultPlan::random_crashes(7, 0.0, 60.0, 0.25).is_empty());
+        assert!(FaultPlan::random_crashes(7, 0.5, 0.0, 0.25).is_empty());
+        // Sorted ascending, all within the horizon.
+        let ats: Vec<f64> = a.events().iter().map(|e| e.at).collect();
+        assert!(ats.windows(2).all(|w| w[0] <= w[1]));
+        assert!(ats.iter().all(|&t| t >= 0.0 && t < 60.0));
+    }
+
+    #[test]
+    fn split_deals_round_robin_and_stays_sorted() {
+        let plan = FaultPlan::new(
+            (0..5)
+                .map(|i| FaultEvent {
+                    at: i as f64,
+                    kind: FaultKind::Crash { restart_after: 0.1 },
+                })
+                .collect(),
+        )
+        .unwrap();
+        let parts = plan.split(2);
+        assert_eq!(parts.len(), 2);
+        let ats = |p: &FaultPlan| p.events().iter().map(|e| e.at).collect::<Vec<_>>();
+        assert_eq!(ats(&parts[0]), vec![0.0, 2.0, 4.0]);
+        assert_eq!(ats(&parts[1]), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn crash_windows_cover_downtime() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                at: 1.0,
+                kind: FaultKind::Crash { restart_after: 0.5 },
+            },
+            FaultEvent {
+                at: 0.5,
+                kind: FaultKind::Slowdown {
+                    duration: 1.0,
+                    factor: 2.0,
+                },
+            },
+            FaultEvent {
+                at: 3.0,
+                kind: FaultKind::Crash { restart_after: 0.25 },
+            },
+        ])
+        .unwrap();
+        assert_eq!(plan.crash_windows(), vec![(1.0, 1.5), (3.0, 3.25)]);
+    }
+
+    #[test]
+    fn stats_merge_and_default_roundtrip() {
+        let mut a = FaultStats {
+            crashes: 1,
+            retries: 3,
+            max_attempts: 2,
+            lost_tokens: 40,
+            downtime: 0.5,
+            swap_denied: 1,
+            slowdowns: 0,
+            pool_shrinks: 1,
+            reroutes: 0,
+            shed_ids: vec![9, 3],
+        };
+        let b = FaultStats {
+            crashes: 2,
+            retries: 1,
+            max_attempts: 4,
+            lost_tokens: 10,
+            downtime: 0.25,
+            swap_denied: 0,
+            slowdowns: 2,
+            pool_shrinks: 0,
+            reroutes: 5,
+            shed_ids: vec![7],
+        };
+        a.merge(&b);
+        assert_eq!(a.crashes, 3);
+        assert_eq!(a.retries, 4);
+        assert_eq!(a.max_attempts, 4);
+        assert_eq!(a.lost_tokens, 50);
+        assert_eq!(a.downtime, 0.75);
+        assert_eq!(a.slowdowns, 2);
+        assert_eq!(a.pool_shrinks, 1);
+        assert_eq!(a.reroutes, 5);
+        assert_eq!(a.shed_ids, vec![3, 7, 9]);
+        assert!(a.any());
+        assert!(!FaultStats::default().any());
+        let j = FaultStats::default().to_json().to_string();
+        assert!(j.contains("\"retries\":0"), "{j}");
+        assert!(j.contains("\"shed\":0"), "{j}");
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod bca_figs;
 pub mod cache;
+pub mod faults_figs;
 pub mod online_figs;
 pub mod phases;
 pub mod prefix_figs;
@@ -141,7 +142,7 @@ impl FigOpts {
 /// the repo's own online-serving and prefix-cache artefacts.
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp",
+    "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp", "faults",
 ];
 
 /// Generate one artefact by id.
@@ -167,6 +168,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "online" => online_figs::online(opts),
         "prefix" => prefix_figs::prefix_sweep(opts),
         "tp" => tp_figs::tp_sweep(opts),
+        "faults" => faults_figs::faults_sweep(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

@@ -29,8 +29,10 @@
 //! the allocation sequence is identical to v1 (`rust/tests/kv_v2.rs`).
 //!
 //! Pool invariant (property-tested in `rust/tests/proptests.rs`):
-//! `free + cached_unreferenced + unique_allocated == num_blocks - 1`
-//! (block 0 stays reserved for padded rows, as in v1).
+//! `free + cached_unreferenced + unique_allocated + quarantined ==
+//! num_blocks - 1` (block 0 stays reserved for padded rows, as in v1;
+//! `quarantined` is the fault-injection OOM/ECC-throttle set, zero
+//! outside an active pool-shrink window).
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -137,6 +139,10 @@ pub struct KvCacheV2 {
     lru: VecDeque<u32>,
     seqs: BTreeMap<SeqId, SeqV2>,
     swapped: BTreeMap<SeqId, SwappedSeq>,
+    /// Blocks removed from the usable pool by a fault-injection
+    /// pool-shrink window (GPU OOM / ECC throttle). Stack order: a
+    /// matched quarantine/release pair restores the free list exactly.
+    quarantined: Vec<u32>,
     cpu_blocks_used: usize,
     /// Blocks with `ref_count > 0` (unique, shared blocks count once).
     in_use: usize,
@@ -160,6 +166,7 @@ impl KvCacheV2 {
             lru: VecDeque::new(),
             seqs: BTreeMap::new(),
             swapped: BTreeMap::new(),
+            quarantined: Vec::new(),
             cpu_blocks_used: 0,
             in_use: 0,
             peak_in_use: 0,
@@ -237,6 +244,11 @@ impl KvCacheV2 {
     /// CPU-pool blocks currently occupied by swapped sequences.
     pub fn cpu_blocks_used(&self) -> usize {
         self.cpu_blocks_used
+    }
+
+    /// Blocks currently quarantined by a fault-injection pool shrink.
+    pub fn quarantined_blocks(&self) -> usize {
+        self.quarantined.len()
     }
 
     /// Prefix-cache / COW counters.
@@ -368,6 +380,46 @@ impl KvCacheV2 {
             }
         }
         self.hash_of[b as usize] = Some(h);
+    }
+
+    // --- fault injection: pool quarantine --------------------------------
+
+    /// Remove up to `n` unreferenced blocks from the usable pool (the
+    /// fault-injection OOM / ECC-throttle window). Draws from the free
+    /// list first (as one `split_off` slice, so a matched
+    /// [`Self::release_quarantined`] restores the exact free-list
+    /// order), then evicts unreferenced cached blocks off the LRU.
+    /// Returns how many blocks were actually quarantined — fewer than
+    /// `n` when the reclaimable pool is smaller (callers preempt and
+    /// retry). Referenced blocks are never touched.
+    pub fn quarantine_blocks(&mut self, n: usize) -> usize {
+        let from_free = n.min(self.free.len());
+        let at = self.free.len() - from_free;
+        self.quarantined.extend(self.free.split_off(at));
+        let mut taken = from_free;
+        while taken < n {
+            let Some(b) = self.lru.pop_front() else { break };
+            if let Some(h) = self.hash_of[b as usize].take() {
+                if self.cache.get(&h) == Some(&b) {
+                    self.cache.remove(&h);
+                }
+            }
+            self.stats.evictions += 1;
+            self.quarantined.push(b);
+            taken += 1;
+        }
+        taken
+    }
+
+    /// Return up to `n` quarantined blocks to the free list (the shrink
+    /// window closing), newest quarantined first, so a quarantine /
+    /// release pair over an idle pool round-trips the free list bit for
+    /// bit. Returns how many blocks came back.
+    pub fn release_quarantined(&mut self, n: usize) -> usize {
+        let take = n.min(self.quarantined.len());
+        let start = self.quarantined.len() - take;
+        self.free.extend(self.quarantined.drain(start..));
+        take
     }
 
     // --- sequence lifecycle ----------------------------------------------
@@ -633,6 +685,15 @@ impl KvCacheV2 {
     /// sequence is not in the CPU pool).
     pub fn swapped_need(&self, id: SeqId) -> Option<usize> {
         self.swapped.get(&id).map(|s| s.blocks)
+    }
+
+    /// Discard a swapped-out sequence without bringing it back (crash
+    /// recovery: the CPU copy of a dead replica's KV is worthless).
+    /// Returns the CPU-pool blocks released.
+    pub fn drop_swapped(&mut self, id: SeqId) -> Result<usize, KvError> {
+        let entry = self.swapped.remove(&id).ok_or(KvError::UnknownSeq(id))?;
+        self.cpu_blocks_used -= entry.blocks;
+        Ok(entry.blocks)
     }
 
     /// Bring a swapped sequence back onto the GPU pool. Returns the
@@ -926,6 +987,80 @@ mod tests {
         assert_eq!(kv.append_tokens_batch(&[], 5), Ok(0));
         assert_eq!(kv.append_tokens_batch(&[1], 0), Ok(0));
         assert_eq!(kv.tokens_of(1), Some(16));
+    }
+
+    #[test]
+    fn quarantine_release_roundtrips_the_free_list_exactly() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(16, 16, 8));
+        let before = kv.free.clone();
+        assert_eq!(kv.quarantine_blocks(5), 5);
+        assert_eq!(kv.quarantined_blocks(), 5);
+        assert_eq!(kv.free_blocks(), 10);
+        assert_eq!(kv.reclaimable_blocks(), 10);
+        assert_eq!(kv.release_quarantined(5), 5);
+        assert_eq!(kv.quarantined_blocks(), 0);
+        assert_eq!(kv.free, before, "free-list order must round-trip");
+        // Partial release keeps stack order.
+        kv.quarantine_blocks(4);
+        kv.release_quarantined(2);
+        kv.release_quarantined(99); // over-release is clamped
+        assert_eq!(kv.free, before);
+    }
+
+    #[test]
+    fn quarantine_is_capped_by_the_reclaimable_pool() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(8, 16, 8)); // 7 usable
+        kv.admit(1, &toks(1, 40)).unwrap(); // 3 blocks referenced
+        assert_eq!(kv.quarantine_blocks(100), 4, "only unreferenced blocks");
+        assert_eq!(kv.allocated_blocks(), 3);
+        assert_eq!(
+            kv.free_blocks() + kv.cached_unreferenced_blocks() + kv.allocated_blocks()
+                + kv.quarantined_blocks(),
+            kv.capacity()
+        );
+        // Admission now fails: the usable pool is gone.
+        assert!(matches!(
+            kv.admit(2, &toks(2, 16)),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+        kv.release_quarantined(4);
+        kv.admit(2, &toks(2, 16)).unwrap();
+    }
+
+    #[test]
+    fn quarantine_evicts_cached_blocks_when_the_free_list_runs_dry() {
+        let mut kv = cache_on(8); // 7 usable
+        kv.admit(1, &toks(7, 48)).unwrap(); // 3 full cached blocks
+        kv.free(1).unwrap();
+        assert_eq!(kv.cached_unreferenced_blocks(), 3);
+        let evictions_before = kv.stats().evictions;
+        assert_eq!(kv.quarantine_blocks(6), 6); // 4 free + 2 LRU-evicted
+        assert_eq!(kv.stats().evictions, evictions_before + 2);
+        assert_eq!(kv.cached_unreferenced_blocks(), 1);
+        kv.release_quarantined(6);
+        // Evicted chain blocks are gone from the cache: a re-admit of
+        // the same content cannot fully hit.
+        kv.admit(2, &toks(7, 48)).unwrap();
+        assert!(kv.stats().hits < 3 + 3, "evicted blocks must not re-hit");
+        assert_eq!(
+            kv.free_blocks() + kv.cached_unreferenced_blocks() + kv.allocated_blocks()
+                + kv.quarantined_blocks(),
+            kv.capacity()
+        );
+    }
+
+    #[test]
+    fn drop_swapped_releases_the_cpu_pool() {
+        let mut kv = KvCacheV2::new(KvV2Config::new(32, 16, 8));
+        kv.admit(1, &toks(3, 40)).unwrap(); // 3 blocks
+        kv.swap_out(1).unwrap();
+        assert_eq!(kv.cpu_blocks_used(), 3);
+        assert_eq!(kv.drop_swapped(1), Ok(3));
+        assert_eq!(kv.cpu_blocks_used(), 0);
+        assert_eq!(kv.num_swapped(), 0);
+        assert_eq!(kv.drop_swapped(1), Err(KvError::UnknownSeq(1)));
+        // The id is free again after the drop.
+        kv.admit(1, &toks(3, 40)).unwrap();
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod backend;
 #[warn(missing_docs)]
 pub mod bca;
 pub mod coordinator;
+pub mod faults;
 pub mod figures;
 pub mod gpusim;
 #[warn(missing_docs)]

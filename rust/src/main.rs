@@ -34,19 +34,27 @@ memgap — 'Mind the Memory Gap' reproduction
 USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
 
   serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
+            [--reply-timeout-s S] [--read-timeout-s S]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
             [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
-            [--no-fast-forward]
+            [--no-fast-forward] [--fault-* ...]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
-            [--no-fast-forward]
+            [--no-fast-forward] [--fault-* ...]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
             [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
-            [--slo-itl-ms X] [--csv PATH]
+            [--slo-itl-ms X] [--csv PATH] [--fault-* ...]
+
+  Fault injection (offline/online take the schedule verbatim; plan splits
+  it across each grid point's replicas). Comma-separated specs:
+    --fault-crash T:RESTART      replica crash at T, restart RESTART s later
+    --fault-slow T:DUR:FACTOR    straggler: GPU time x FACTOR for DUR s
+    --fault-shrink T:DUR:BLOCKS  quarantine BLOCKS KV blocks for DUR s
+    --fault-swapfail T:DUR       PCIe swap path down for DUR s
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -82,6 +90,39 @@ fn preempt_arg(args: &Args) -> Result<memgap::coordinator::scheduler::PreemptMod
         "swap" => PreemptMode::Swap,
         other => bail!("unknown --preempt-mode '{other}' (known: recompute, swap)"),
     })
+}
+
+/// Deterministic fault schedule from the `--fault-*` flags (absent ->
+/// `None`, a fault-free run).
+fn fault_args(args: &Args) -> Result<Option<memgap::faults::FaultPlan>> {
+    memgap::faults::FaultPlan::from_cli(
+        args.get("fault-crash"),
+        args.get("fault-slow"),
+        args.get("fault-shrink"),
+        args.get("fault-swapfail"),
+    )
+}
+
+/// Availability summary lines shared by `offline` and `online`.
+fn print_fault_stats(f: &memgap::faults::FaultStats) {
+    if !f.any() {
+        return;
+    }
+    println!(
+        "faults           : {} crashes, {} slowdowns, {} pool shrinks",
+        f.crashes, f.slowdowns, f.pool_shrinks
+    );
+    println!(
+        "recovery         : {} retries (max {} attempts), {} shed, {} tokens lost",
+        f.retries,
+        f.max_attempts,
+        f.shed(),
+        f.lost_tokens
+    );
+    println!("downtime         : {:.3} s", f.downtime);
+    if f.swap_denied > 0 {
+        println!("swap denials     : {} (fell back to recompute)", f.swap_denied);
+    }
 }
 
 /// Shared-prefix workload shaping: present iff any `--prefix-*`
@@ -125,16 +166,35 @@ fn main() -> Result<()> {
     }
 }
 
+/// Server timeout knobs from `--reply-timeout-s` / `--read-timeout-s`.
+fn server_cfg(args: &Args) -> Result<server::ServerConfig> {
+    let mut cfg = server::ServerConfig::default();
+    if let Some(s) = f64_flag(args, "reply-timeout-s")? {
+        if !s.is_finite() || s <= 0.0 {
+            bail!("--reply-timeout-s must be a positive number");
+        }
+        cfg.reply_timeout = std::time::Duration::from_secs_f64(s);
+    }
+    if let Some(s) = f64_flag(args, "read-timeout-s")? {
+        if !s.is_finite() || s <= 0.0 {
+            bail!("--read-timeout-s must be a positive number");
+        }
+        cfg.read_timeout = Some(std::time::Duration::from_secs_f64(s));
+    }
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8078");
     let max_seqs = args.usize_or("max-seqs", 8);
+    let scfg = server_cfg(args)?;
     if let Some(model) = args.get("sim") {
         let spec = ModelSpec::by_name(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
         let backend = SimBackend::new(GpuSpec::h100_64g(), spec, backend_arg(args));
         let engine = Engine::new(backend, EngineConfig::new(max_seqs, 64 * 1024, 16));
         eprintln!("serving SIMULATED {model} on {addr} (JSON lines; op=generate/stats/shutdown)");
-        let served = server::serve(engine, addr)?;
+        let served = server::serve_with(engine, addr, scfg)?;
         eprintln!("served {served} requests");
         return Ok(());
     }
@@ -158,7 +218,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.max_batched_tokens = 512;
         let engine = Engine::new(backend, cfg);
         eprintln!("serving on {addr} (JSON lines; op=generate/stats/shutdown)");
-        let served = server::serve(engine, addr)?;
+        let served = server::serve_with(engine, addr, scfg)?;
         eprintln!("served {served} requests");
         Ok(())
     }
@@ -185,6 +245,7 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.preempt = preempt_arg(args)?;
     cfg.prefix = prefix_args(args)?;
     cfg.tp = tp_arg(args, &cfg.model)?;
+    cfg.faults = fault_args(args)?;
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
     if cfg.tp > 1 {
@@ -227,6 +288,7 @@ fn cmd_offline(args: &Args) -> Result<()> {
             1e3 * r.swap_time
         );
     }
+    print_fault_stats(&r.faults);
     Ok(())
 }
 
@@ -289,6 +351,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     cfg.engine.fast_forward = !args.bool_or("no-fast-forward", false);
     cfg.engine.preempt = preempt_arg(args)?;
     cfg.engine.tp = tp_arg(args, &cfg.engine.model)?;
+    cfg.engine.faults = fault_args(args)?;
     cfg.workload.prefix = prefix_args(args)?;
     cfg.slo = slo_arg(args)?;
     let rep = run_online(&cfg)?;
@@ -329,6 +392,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     if rep.swap_outs > 0 {
         println!("swap-outs        : {}", rep.swap_outs);
     }
+    print_fault_stats(&rep.faults);
     if let Some(path) = args.get("json") {
         std::fs::write(path, format!("{}\n", rep.to_json()))?;
         eprintln!("wrote {path}");
@@ -365,6 +429,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if let Some(ms) = f64_flag(args, "slo-itl-ms")? {
         cfg.slo_itl = Some(ms / 1e3);
     }
+    cfg.faults = fault_args(args)?;
     let reqs = generate(&WorkloadConfig::poisson(num_requests, rate, seed));
     eprintln!(
         "planning {} over {:?} x {:?} x tp {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",

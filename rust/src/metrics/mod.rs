@@ -207,6 +207,24 @@ impl MetricsCollector {
         }
     }
 
+    /// A crash re-queued the request for recompute-from-prompt: the
+    /// tokens it had delivered are void (they will be re-generated),
+    /// but the record — and with it the *original* arrival — stays, so
+    /// the retried request keeps its FCFS key and its eventual TTFT is
+    /// measured from the true arrival.
+    pub fn on_requeue(&mut self, id: u64) {
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.token_times.clear();
+        }
+    }
+
+    /// The request was shed (degraded-mode load shedding): remove its
+    /// record entirely so it counts neither as admitted nor completed —
+    /// shed requests are accounted separately in `FaultStats::shed_ids`.
+    pub fn on_shed(&mut self, id: u64) {
+        self.requests.remove(&id);
+    }
+
     pub fn on_step(&mut self, now: f64, batch: usize, cpu: f64, gpu: f64) {
         self.batch_samples.push((now, batch));
         self.total_cpu_time += cpu;

@@ -28,6 +28,7 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::offline::OfflineConfig;
 use crate::coordinator::router::{RoutePolicy, Router};
+use crate::faults::{FaultPlan, FaultStats};
 use crate::gpusim::mps::{run_shared, Segment, SharePolicy, SharedRun};
 use crate::metrics::RunMetrics;
 use crate::workload::Request;
@@ -58,6 +59,9 @@ pub struct ReplicatedReport {
     /// combined with `stretch` they give per-request latencies under
     /// contention — the SLO planner's percentile surface.
     pub solo_metrics: Vec<crate::metrics::RunMetrics>,
+    /// Availability accounting merged across replicas, plus front-end
+    /// reroutes (all-zero on a fault-free run).
+    pub faults: FaultStats,
     /// The shared schedule, for Fig-13-style timelines.
     pub shared: SharedRun,
 }
@@ -90,9 +94,58 @@ pub fn run_replicated(
     requests: &[Request],
     mem_fraction_each: f64,
 ) -> Result<ReplicatedReport> {
+    run_replicated_with_faults(base, n, policy, requests, mem_fraction_each, None)
+}
+
+/// [`run_replicated`] with an optional fleet-wide fault plan.
+///
+/// The plan's events are dealt round-robin across replicas
+/// ([`FaultPlan::split`]), each replica injects its share into its own
+/// engine, and the front-end router becomes health-aware: a request
+/// whose arrival falls inside a replica's crash window
+/// ([`FaultPlan::crash_windows`]) is re-routed to a healthy replica
+/// (counted in `faults.reroutes`). Everything stays deterministic —
+/// the same plan + seed reproduces the same report bit for bit — and
+/// `plan = None` is byte-identical to the fault-free path.
+pub fn run_replicated_with_faults(
+    base: &OfflineConfig,
+    n: usize,
+    policy: SharePolicy,
+    requests: &[Request],
+    mem_fraction_each: f64,
+    plan: Option<&FaultPlan>,
+) -> Result<ReplicatedReport> {
     assert!(n >= 1);
     let mut router = Router::new(RoutePolicy::RoundRobin, n);
-    let parts = router.partition(requests);
+    let plans = plan.map(|p| p.split(n));
+    let mut reroutes = 0u64;
+    let parts = match &plans {
+        None => router.partition(requests),
+        Some(plans) => {
+            // Health-aware partition: walk arrivals in submission order,
+            // tracking which replicas sit inside a crash window at each
+            // request's arrival instant.
+            let windows: Vec<Vec<(f64, f64)>> =
+                plans.iter().map(|p| p.crash_windows()).collect();
+            let mut out = vec![Vec::new(); n];
+            for r in requests {
+                for (i, w) in windows.iter().enumerate() {
+                    let dead = w.iter().any(|&(s, e)| r.arrival >= s && r.arrival < e);
+                    if dead {
+                        router.mark_down(i);
+                    } else {
+                        router.mark_up(i);
+                    }
+                }
+                let (i, rerouted) = router.route_healthy(r);
+                if rerouted {
+                    reroutes += 1;
+                }
+                out[i].push(r.clone());
+            }
+            out
+        }
+    };
 
     // Run each replica solo (virtual time) to obtain its trace.
     let mut traces: Vec<Vec<Segment>> = Vec::with_capacity(n);
@@ -100,6 +153,9 @@ pub fn run_replicated(
     for (i, part) in parts.iter().enumerate() {
         let mut cfg = base.clone();
         cfg.mem_fraction = mem_fraction_each;
+        if let Some(plans) = &plans {
+            cfg.faults = Some(plans[i].clone());
+        }
         let mut engine = cfg.build_engine();
         engine.submit(part);
         let report = engine.run_to_completion()?;
@@ -161,6 +217,11 @@ pub fn run_replicated(
         .iter()
         .map(|r| r.peak_kv_usage)
         .fold(0.0, f64::max);
+    let mut faults = FaultStats::default();
+    for r in &solo_reports {
+        faults.merge(&r.faults);
+    }
+    faults.reroutes += reroutes;
 
     Ok(ReplicatedReport {
         replicas: n,
@@ -174,6 +235,7 @@ pub fn run_replicated(
         mean_dram_util: shared.mean_dram_util,
         stretch,
         solo_metrics: solo_reports.into_iter().map(|r| r.metrics).collect(),
+        faults,
         shared,
     })
 }
@@ -205,6 +267,9 @@ pub struct ClusterReport {
     pub stretch: Vec<f64>,
     /// Per-engine solo run metrics (virtual time, pre-contention).
     pub solo_metrics: Vec<RunMetrics>,
+    /// Availability accounting merged across engines (all-zero on a
+    /// fault-free run).
+    pub faults: FaultStats,
 }
 
 impl ClusterReport {
@@ -247,6 +312,26 @@ pub fn run_cluster(
     policy: SharePolicy,
     requests: &[Request],
 ) -> Result<ClusterReport> {
+    run_cluster_with_faults(base, engines, tp, gpus, policy, requests, None)
+}
+
+/// [`run_cluster`] with an optional fleet-wide fault plan, dealt
+/// round-robin across engines like [`run_replicated_with_faults`].
+///
+/// Limitation: the engine→group mapping stays the fixed `e % groups`
+/// round-robin, so the front end does *not* re-route around crash
+/// windows here (each engine recovers its own requeued work instead);
+/// health-aware routing is exercised on the single-GPU replication
+/// path.
+pub fn run_cluster_with_faults(
+    base: &OfflineConfig,
+    engines: usize,
+    tp: usize,
+    gpus: usize,
+    policy: SharePolicy,
+    requests: &[Request],
+    plan: Option<&FaultPlan>,
+) -> Result<ClusterReport> {
     ensure!(engines >= 1, "need at least one engine");
     ensure!(tp >= 1, "tensor-parallel degree must be >= 1");
     let groups_avail = gpus.max(1) / tp;
@@ -267,6 +352,7 @@ pub fn run_cluster(
 
     let mut router = Router::new(RoutePolicy::RoundRobin, engines);
     let parts = router.partition(requests);
+    let plans = plan.map(|p| p.split(engines));
 
     // Solo traces, each engine right-sized to its group's split.
     let mut traces: Vec<Vec<Segment>> = Vec::with_capacity(engines);
@@ -276,6 +362,9 @@ pub fn run_cluster(
         let mut cfg = base.clone();
         cfg.tp = tp;
         cfg.mem_fraction = base.mem_fraction / group_size(g) as f64;
+        if let Some(plans) = &plans {
+            cfg.faults = Some(plans[e].clone());
+        }
         let mut engine = cfg.build_engine();
         engine.submit(part);
         let report = engine.run_to_completion()?;
@@ -342,6 +431,10 @@ pub fn run_cluster(
         .sum::<f64>()
         / engines as f64;
     let max_group = (0..groups).map(group_size).max().unwrap_or(1);
+    let mut faults = FaultStats::default();
+    for r in &solo_reports {
+        faults.merge(&r.faults);
+    }
 
     Ok(ClusterReport {
         engines,
@@ -364,6 +457,7 @@ pub fn run_cluster(
         },
         stretch,
         solo_metrics: solo_reports.into_iter().map(|r| r.metrics).collect(),
+        faults,
     })
 }
 

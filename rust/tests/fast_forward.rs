@@ -52,6 +52,7 @@ fn assert_reports_identical(tag: &str, fast: &EngineReport, slow: &EngineReport)
     assert_eq!(fast.decode_time, slow.decode_time, "{tag}: decode time");
     // The full MPS segment trace (every per-step Cpu/Gpu burst).
     assert_eq!(fast.segments, slow.segments, "{tag}: segment trace");
+    assert_eq!(fast.faults, slow.faults, "{tag}: fault stats");
 }
 
 fn run_pair(cfg: &OfflineConfig, tag: &str) -> (EngineReport, EngineReport) {

@@ -1,0 +1,366 @@
+//! Fault-injection suite: determinism of faulted runs, fast-forward
+//! bit-equivalence under every fault kind, request conservation under
+//! randomized fault schedules, and the replicated crash-recovery
+//! acceptance scenario.
+//!
+//! The core contract mirrors the fast-forward harness: faults are not
+//! approximately reproducible — the same seed + fault plan must yield
+//! the same report **bit for bit**, so every float comparison below is
+//! exact.
+
+use memgap::coordinator::engine::EngineReport;
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::online::{run_online, OnlineConfig};
+use memgap::coordinator::scheduler::PreemptMode;
+use memgap::faults::{FaultEvent, FaultKind, FaultPlan, FaultStats};
+use memgap::gpusim::mps::SharePolicy;
+use memgap::models::spec::ModelSpec;
+use memgap::replication::run_replicated_with_faults;
+use memgap::util::par::par_map;
+use memgap::util::prop;
+use memgap::util::rng::Rng;
+use memgap::workload::{generate, LengthDistribution, WorkloadConfig};
+
+fn plan(events: Vec<FaultEvent>) -> FaultPlan {
+    FaultPlan::new(events).unwrap()
+}
+
+fn crash(at: f64, restart_after: f64) -> FaultEvent {
+    FaultEvent {
+        at,
+        kind: FaultKind::Crash { restart_after },
+    }
+}
+
+fn slow(at: f64, duration: f64, factor: f64) -> FaultEvent {
+    FaultEvent {
+        at,
+        kind: FaultKind::Slowdown { duration, factor },
+    }
+}
+
+fn shrink(at: f64, duration: f64, blocks: usize) -> FaultEvent {
+    FaultEvent {
+        at,
+        kind: FaultKind::PoolShrink { duration, blocks },
+    }
+}
+
+fn swapfail(at: f64, duration: f64) -> FaultEvent {
+    FaultEvent {
+        at,
+        kind: FaultKind::SwapFail { duration },
+    }
+}
+
+fn online_cfg(seed: u64) -> OnlineConfig {
+    let mut cfg = OnlineConfig::poisson(
+        OfflineConfig::new(ModelSpec::opt_1_3b(), 8),
+        48,
+        20.0,
+        seed,
+    );
+    cfg.workload.lengths = LengthDistribution::Fixed {
+        input: 64,
+        output: 24,
+    };
+    cfg
+}
+
+/// Same seed + same fault plan -> byte-identical serialized reports,
+/// across repeated runs and worker budgets; and the plan genuinely
+/// changes the run relative to fault-free.
+#[test]
+fn fault_runs_are_bit_deterministic() {
+    let mut cfg = online_cfg(7);
+    cfg.engine.faults = Some(plan(vec![
+        swapfail(0.2, 1.0),
+        crash(0.4, 0.1),
+        slow(0.8, 0.3, 2.5),
+        shrink(1.2, 0.4, 64),
+    ]));
+    let probe = run_online(&cfg).unwrap();
+    assert_eq!(probe.faults.crashes, 1, "crash never landed");
+    assert!(probe.faults.retries > 0, "nothing was in flight at the crash");
+    assert_eq!(probe.faults.slowdowns, 1);
+    assert_eq!(probe.faults.pool_shrinks, 1);
+
+    let reference = run_online(&cfg).unwrap().to_json().to_string();
+    assert_eq!(probe.to_json().to_string(), reference);
+    let lanes: Vec<usize> = (0..3).collect();
+    for (i, lane) in par_map(&lanes, |_| run_online(&cfg).unwrap().to_json().to_string())
+        .into_iter()
+        .enumerate()
+    {
+        assert_eq!(lane, reference, "lane {i} diverged");
+    }
+    // Faults off: a different run entirely (the comparison is not vacuous).
+    let mut clean = online_cfg(7);
+    clean.engine.faults = None;
+    assert_ne!(run_online(&clean).unwrap().to_json().to_string(), reference);
+}
+
+/// A fault-free run reports all-zero fault stats — the new accounting
+/// adds nothing to the pre-fault engine's output.
+#[test]
+fn faults_disabled_reports_default_stats() {
+    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 12);
+    cfg.num_requests = 24;
+    cfg.input_len = 64;
+    cfg.output_len = 24;
+    let r = cfg.run().unwrap();
+    assert_eq!(r.faults, FaultStats::default());
+    assert!(!r.faults.any());
+}
+
+/// Mirror of the fast-forward harness assertion, including the fault
+/// accounting itself.
+fn assert_reports_identical(tag: &str, fast: &EngineReport, slow: &EngineReport) {
+    let (f, s) = (&fast.metrics, &slow.metrics);
+    assert_eq!(f.completed, s.completed, "{tag}: completed");
+    assert_eq!(f.makespan, s.makespan, "{tag}: makespan");
+    assert_eq!(f.throughput_tps, s.throughput_tps, "{tag}: throughput");
+    assert_eq!(f.latencies, s.latencies, "{tag}: per-request latencies");
+    assert_eq!(fast.peak_kv_usage, slow.peak_kv_usage, "{tag}: peak KV usage");
+    assert_eq!(fast.preemptions, slow.preemptions, "{tag}: preemptions");
+    assert_eq!(fast.swap_outs, slow.swap_outs, "{tag}: swap outs");
+    assert_eq!(fast.steps, slow.steps, "{tag}: steps");
+    assert_eq!(fast.prefill_time, slow.prefill_time, "{tag}: prefill time");
+    assert_eq!(fast.decode_time, slow.decode_time, "{tag}: decode time");
+    assert_eq!(fast.segments, slow.segments, "{tag}: segment trace");
+    assert_eq!(fast.faults, slow.faults, "{tag}: fault stats");
+}
+
+fn run_pair(cfg: &OfflineConfig, tag: &str) -> (EngineReport, EngineReport) {
+    let mut fast_cfg = cfg.clone();
+    fast_cfg.fast_forward = true;
+    let mut slow_cfg = cfg.clone();
+    slow_cfg.fast_forward = false;
+    let fast = fast_cfg.run().unwrap_or_else(|e| panic!("{tag} (fast): {e}"));
+    let slow = slow_cfg.run().unwrap_or_else(|e| panic!("{tag} (slow): {e}"));
+    (fast, slow)
+}
+
+/// Fault event times are fast-forward boundaries: for every fault kind
+/// (and a combination), the fast-forwarded run must match the stepwise
+/// golden reference bit for bit. Event times are anchored to the
+/// calibrated fault-free makespan so they provably land mid-run.
+#[test]
+fn fast_forward_is_bit_identical_under_faults() {
+    let mut base = OfflineConfig::new(ModelSpec::opt_1_3b(), 12);
+    base.num_requests = 36;
+    base.input_len = 72;
+    base.output_len = 44;
+    let ms = base.run().unwrap().metrics.makespan;
+    let cap = base.build_engine().kv().capacity();
+
+    let cases: Vec<(&str, OfflineConfig)> = vec![
+        ("crash", {
+            let mut c = base.clone();
+            c.faults = Some(plan(vec![crash(0.3 * ms, 0.05 * ms)]));
+            c
+        }),
+        ("slowdown", {
+            let mut c = base.clone();
+            c.faults = Some(plan(vec![slow(0.2 * ms, 0.3 * ms, 3.0)]));
+            c
+        }),
+        ("pool-shrink", {
+            let mut c = base.clone();
+            // Tight pool + a big quarantine window so the shrink bites.
+            c.mem_fraction = 0.05;
+            let tight_cap = c.build_engine().kv().capacity();
+            c.faults = Some(plan(vec![shrink(0.2 * ms, 0.5 * ms, tight_cap / 2)]));
+            c
+        }),
+        ("swap-fail", {
+            let mut c = base.clone();
+            c.mem_fraction = 0.05;
+            c.preempt = PreemptMode::Swap;
+            c.faults = Some(plan(vec![swapfail(0.0, 2.0 * ms)]));
+            c
+        }),
+        ("combined", {
+            let mut c = base.clone();
+            c.faults = Some(plan(vec![
+                swapfail(0.1 * ms, 0.4 * ms),
+                slow(0.25 * ms, 0.2 * ms, 2.0),
+                crash(0.5 * ms, 0.04 * ms),
+                shrink(0.6 * ms, 0.3 * ms, cap / 4),
+            ]));
+            c
+        }),
+    ];
+    for (tag, cfg) in &cases {
+        let (fast, slow) = run_pair(cfg, tag);
+        // Non-vacuous: the injected fault actually fired.
+        match *tag {
+            "crash" => assert_eq!(slow.faults.crashes, 1, "{tag}"),
+            "slowdown" => assert_eq!(slow.faults.slowdowns, 1, "{tag}"),
+            "pool-shrink" => assert_eq!(slow.faults.pool_shrinks, 1, "{tag}"),
+            "swap-fail" => assert!(slow.faults.swap_denied > 0, "{tag}: swap never denied"),
+            _ => assert!(slow.faults.crashes == 1 && slow.faults.slowdowns == 1, "{tag}"),
+        }
+        assert_reports_identical(tag, &fast, &slow);
+    }
+}
+
+/// And under arrival-driven serving: the whole online report (faults
+/// included) serializes byte-identically with fast-forward on and off.
+#[test]
+fn online_fault_runs_are_bit_identical_across_fast_forward() {
+    let mut cfg = online_cfg(7);
+    cfg.engine.faults = Some(plan(vec![crash(0.5, 0.1), slow(1.0, 0.4, 2.0)]));
+    let run = |ff: bool| {
+        let mut c = cfg.clone();
+        c.engine.fast_forward = ff;
+        run_online(&c).unwrap()
+    };
+    let (fast, slow) = (run(true), run(false));
+    assert_eq!(slow.faults.crashes, 1, "crash never landed");
+    assert_eq!(
+        fast.to_json().to_string(),
+        slow.to_json().to_string(),
+        "serialized online report"
+    );
+}
+
+/// Conservation under ANY randomized fault schedule: every submitted
+/// request finishes exactly once or is reported shed — none lost, none
+/// duplicated — and KV accounting (GPU and CPU pools) returns to zero
+/// once the engine drains.
+#[test]
+fn randomized_fault_schedules_conserve_requests() {
+    prop::check("fault-conservation", 32, |rng: &mut Rng| {
+        let n = rng.range(8, 24);
+        let mut cfg = OfflineConfig::new(
+            ModelSpec::opt_1_3b(),
+            rng.range(4, 12),
+        );
+        cfg.mem_fraction = 0.1 + 0.9 * rng.f64();
+        cfg.preempt = if rng.range(0, 2) == 0 {
+            PreemptMode::Recompute
+        } else {
+            PreemptMode::Swap
+        };
+        cfg.fast_forward = rng.range(0, 2) == 0;
+        let cap = cfg.build_engine().kv().capacity();
+        let mut events = Vec::new();
+        for _ in 0..rng.range(1, 6) {
+            let at = 2.0 * rng.f64();
+            let dur = 0.05 + 0.45 * rng.f64();
+            events.push(match rng.range(0, 4) {
+                0 => crash(at, 0.05 + 0.25 * rng.f64()),
+                1 => slow(at, dur, 1.5 + 2.5 * rng.f64()),
+                2 => shrink(at, dur, rng.range(1, (cap / 2).max(2))),
+                _ => swapfail(at, dur),
+            });
+        }
+        cfg.faults = Some(plan(events));
+
+        let mut workload = WorkloadConfig::poisson(n, 5.0 + 35.0 * rng.f64(), rng.next_u64());
+        workload.lengths = LengthDistribution::Fixed {
+            input: rng.range(16, 96),
+            output: rng.range(8, 48),
+        };
+        let reqs = generate(&workload);
+        let submitted: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+
+        let mut engine = cfg.build_engine();
+        engine.submit(&reqs);
+        let mut finished: Vec<u64> = Vec::new();
+        let mut guard = 0usize;
+        while engine.has_work() {
+            engine.step().unwrap();
+            finished.extend(engine.take_finished().into_iter().map(|f| f.id));
+            guard += 1;
+            assert!(guard < 200_000, "engine failed to drain");
+        }
+        finished.extend(engine.take_finished().into_iter().map(|f| f.id));
+        // All pools returned to zero (quarantined blocks may remain if a
+        // shrink window outlives the work; they are not leaked — they
+        // are accounted, and release on window expiry).
+        assert_eq!(engine.kv().allocated_blocks(), 0, "leaked GPU blocks");
+        assert_eq!(engine.kv().cpu_blocks_used(), 0, "leaked CPU swap blocks");
+
+        let report = engine.finish();
+        let shed = &report.faults.shed_ids;
+        let mut sorted = finished.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), finished.len(), "a request finished twice");
+        for id in &submitted {
+            let done = finished.contains(id);
+            let was_shed = shed.contains(id);
+            assert!(
+                done ^ was_shed,
+                "request {id}: finished={done} shed={was_shed}"
+            );
+        }
+        assert_eq!(
+            report.metrics.completed + shed.len(),
+            submitted.len(),
+            "conservation: completed + shed != submitted"
+        );
+    });
+}
+
+/// The acceptance scenario: a mid-run crash on a 2-replica fleet ends
+/// with every request finished-or-shed, and the fleet's goodput under
+/// the SAME fault plan beats the single engine's — replication degrades
+/// gracefully where the lone engine eats the whole outage.
+#[test]
+fn two_replica_crash_beats_single_engine_goodput() {
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+    let mut workload = WorkloadConfig::poisson(96, 30.0, 11);
+    workload.lengths = LengthDistribution::Fixed {
+        input: 64,
+        output: 24,
+    };
+    let reqs = generate(&workload);
+    // Calibrate the fault-free single-engine makespan, then land the
+    // crash ~30% into it so work is provably in flight.
+    let clean = run_replicated_with_faults(&base, 1, SharePolicy::Mps, &reqs, 1.0, None).unwrap();
+    let ms = clean.makespan;
+    let fault_plan = plan(vec![crash(0.3 * ms, 0.1 * ms)]);
+
+    let goodput = |n: usize| {
+        let rep = run_replicated_with_faults(
+            &base,
+            n,
+            SharePolicy::Mps,
+            &reqs,
+            1.0 / n as f64,
+            Some(&fault_plan),
+        )
+        .unwrap();
+        // Conservation across the fleet.
+        assert_eq!(
+            rep.completed() + rep.faults.shed(),
+            reqs.len(),
+            "{n} replica(s): completed + shed != submitted"
+        );
+        assert_eq!(rep.faults.crashes, 1, "{n} replica(s): crash never landed");
+        assert!(rep.faults.retries > 0, "{n} replica(s): nothing requeued");
+        (rep.completed() as f64 / rep.makespan, rep)
+    };
+    let (g1, _) = goodput(1);
+    let (g2, rep2) = goodput(2);
+    assert!(
+        g2 > g1,
+        "2-replica goodput {g2:.3} must beat single-engine {g1:.3} under the same crash plan"
+    );
+    // Determinism of the faulted fleet run.
+    let again = run_replicated_with_faults(
+        &base,
+        2,
+        SharePolicy::Mps,
+        &reqs,
+        0.5,
+        Some(&fault_plan),
+    )
+    .unwrap();
+    assert_eq!(again.makespan.to_bits(), rep2.makespan.to_bits());
+    assert_eq!(again.throughput_tps.to_bits(), rep2.throughput_tps.to_bits());
+    assert_eq!(again.faults, rep2.faults);
+}
