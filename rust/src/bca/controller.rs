@@ -1,0 +1,361 @@
+//! Closed-loop adaptive admission control (ROADMAP item 2; the
+//! SLA-constrained dynamic batching literature, arXiv 2503.05248).
+//!
+//! The static BCA/planner picks one `max_num_seqs` offline; bursty and
+//! trace-replay arrivals immediately invalidate it — the knee moves
+//! with the offered load. [`AdaptiveController`] closes the loop at
+//! runtime: at fixed virtual-time decision boundaries it inspects
+//!
+//! - a **streaming p99 ITL estimate** — per-decode-step durations
+//!   (CPU gap + GPU time, exactly the gap between consecutive tokens
+//!   of every running sequence) collected since the last decision,
+//! - **KV pool pressure** — the cache usage fraction plus the count of
+//!   preemptions/swap-outs in the window (each one means admission
+//!   overcommitted the pool), and
+//! - the **prefix-cache hit rate** — high sharing means an extra admit
+//!   costs less physical KV than its charge suggests,
+//!
+//! and moves the effective admission budget AIMD-style: multiplicative
+//! decrease on an SLO/pressure violation, additive increase (doubled
+//! under high prefix sharing) while healthy. Decisions happen at the
+//! boundary times themselves, so the controller joins the engine's
+//! fast-forward event horizon exactly like fault events do: both the
+//! stepwise and fast-forward paths observe identical windows and make
+//! identical decisions, bit for bit.
+
+/// Knobs of the closed-loop admission controller.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Virtual-time seconds between decisions.
+    pub interval: f64,
+    /// p99 inter-token-latency SLO (seconds) the controller defends.
+    pub slo_itl: f64,
+    /// Floor for the admission budget (never throttle below this).
+    pub min_seqs: usize,
+    /// Additive increase per healthy decision (seats).
+    pub additive_step: usize,
+    /// Multiplicative decrease factor on violation, in (0, 1).
+    pub decrease_factor: f64,
+    /// KV usage fraction above which the pool counts as pressured.
+    pub kv_high: f64,
+}
+
+impl ControllerConfig {
+    /// A controller defending the given p99 ITL SLO with the default
+    /// AIMD gains (decide every 250 ms of virtual time, halve on
+    /// violation, +1 seat while healthy, pool pressured above 90%).
+    pub fn new(slo_itl: f64) -> Self {
+        Self {
+            interval: 0.25,
+            slo_itl,
+            min_seqs: 1,
+            additive_step: 1,
+            decrease_factor: 0.5,
+            kv_high: 0.90,
+        }
+    }
+}
+
+/// Control signals the engine samples at a decision boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlSignals {
+    /// Current KV cache usage fraction, in [0, 1].
+    pub kv_usage: f64,
+    /// Cumulative preemption count (the controller differences it).
+    pub preemptions: u64,
+    /// Cumulative swap-out count (the controller differences it).
+    pub swap_outs: u64,
+    /// Cumulative prefix-cache hit rate, in [0, 1] (0 when disabled).
+    pub prefix_hit_rate: f64,
+}
+
+/// Summary of one run's controller activity, carried on the engine
+/// report (all-default when the controller was disabled).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ControllerReport {
+    /// Total decisions taken.
+    pub decisions: u64,
+    /// Decisions that raised the budget.
+    pub increases: u64,
+    /// Decisions that lowered the budget.
+    pub decreases: u64,
+    /// Budget in force when the run ended.
+    pub final_budget: usize,
+    /// Lowest budget ever in force.
+    pub min_budget: usize,
+    /// Highest budget ever in force.
+    pub max_budget: usize,
+    /// `(decision time, budget after decision)` trajectory.
+    pub trajectory: Vec<(f64, usize)>,
+}
+
+impl ControllerReport {
+    /// Deterministic JSON rendering for reports and figure artifacts.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("decisions", Json::num(self.decisions as f64)),
+            ("increases", Json::num(self.increases as f64)),
+            ("decreases", Json::num(self.decreases as f64)),
+            ("final_budget", Json::num(self.final_budget as f64)),
+            ("min_budget", Json::num(self.min_budget as f64)),
+            ("max_budget", Json::num(self.max_budget as f64)),
+            (
+                "trajectory",
+                Json::arr(
+                    self.trajectory
+                        .iter()
+                        .map(|&(t, b)| Json::arr(vec![Json::num(t), Json::num(b as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The closed-loop AIMD admission controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    cfg: ControllerConfig,
+    /// Hard ceiling: the engine's configured `max_num_seqs`.
+    ceiling: usize,
+    /// Current effective admission budget.
+    budget: usize,
+    /// Virtual time of the next decision boundary.
+    next_decision: f64,
+    /// Per-decode-step durations observed since the last decision.
+    window: Vec<f64>,
+    last_preemptions: u64,
+    last_swap_outs: u64,
+    report: ControllerReport,
+}
+
+impl AdaptiveController {
+    /// A controller bounded above by `ceiling` (the configured
+    /// `max_num_seqs`), starting wide open at the ceiling — the first
+    /// violation walks it down.
+    pub fn new(cfg: ControllerConfig, ceiling: usize) -> Self {
+        let ceiling = ceiling.max(1);
+        let budget = ceiling;
+        let min_seqs = cfg.min_seqs.clamp(1, ceiling);
+        let cfg = ControllerConfig { min_seqs, ..cfg };
+        Self {
+            next_decision: cfg.interval,
+            report: ControllerReport {
+                final_budget: budget,
+                min_budget: budget,
+                max_budget: budget,
+                ..ControllerReport::default()
+            },
+            cfg,
+            ceiling,
+            budget,
+            window: Vec::new(),
+            last_preemptions: 0,
+            last_swap_outs: 0,
+        }
+    }
+
+    /// Current effective admission budget (seats).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The next decision boundary in virtual time — the engine folds
+    /// this into its fast-forward event horizon.
+    pub fn next_boundary(&self) -> f64 {
+        self.next_decision
+    }
+
+    /// True once the virtual clock has reached the next boundary.
+    pub fn due(&self, clock: f64) -> bool {
+        self.next_decision <= clock
+    }
+
+    /// Record one decode step's duration (CPU gap + GPU time — the gap
+    /// between consecutive tokens of every running sequence).
+    pub fn observe_step(&mut self, step_duration: f64) {
+        self.window.push(step_duration);
+    }
+
+    /// Nearest-rank p99 of the current window (None when empty).
+    fn window_p99(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let mut s = self.window.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        Some(s[((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1])
+    }
+
+    /// Take the decision for the boundary at `at`, then advance the
+    /// boundary by one interval. Deterministic: pure arithmetic over
+    /// the window and the differenced counters.
+    pub fn decide(&mut self, at: f64, sig: &ControlSignals) {
+        let p99 = self.window_p99();
+        let preempt_delta = sig.preemptions.saturating_sub(self.last_preemptions)
+            + sig.swap_outs.saturating_sub(self.last_swap_outs);
+        let violated = p99.map(|p| p > self.cfg.slo_itl).unwrap_or(false)
+            || sig.kv_usage > self.cfg.kv_high
+            || preempt_delta > 0;
+        if violated {
+            let cut = (self.budget as f64 * self.cfg.decrease_factor).floor() as usize;
+            self.budget = cut.max(self.cfg.min_seqs);
+            self.report.decreases += 1;
+        } else {
+            // High prefix sharing: an extra admit costs less physical
+            // KV than charged, so probe upward twice as fast.
+            let step = if sig.prefix_hit_rate >= 0.5 {
+                2 * self.cfg.additive_step
+            } else {
+                self.cfg.additive_step
+            };
+            self.budget = (self.budget + step).min(self.ceiling);
+            self.report.increases += 1;
+        }
+        self.report.decisions += 1;
+        self.report.final_budget = self.budget;
+        self.report.min_budget = self.report.min_budget.min(self.budget);
+        self.report.max_budget = self.report.max_budget.max(self.budget);
+        self.report.trajectory.push((at, self.budget));
+        self.window.clear();
+        self.last_preemptions = sig.preemptions;
+        self.last_swap_outs = sig.swap_outs;
+        self.next_decision += self.cfg.interval;
+    }
+
+    /// The run summary (cloned onto the engine report).
+    pub fn report(&self) -> &ControllerReport {
+        &self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet() -> ControlSignals {
+        ControlSignals {
+            kv_usage: 0.1,
+            preemptions: 0,
+            swap_outs: 0,
+            prefix_hit_rate: 0.0,
+        }
+    }
+
+    #[test]
+    fn healthy_windows_probe_additively_up_to_the_ceiling() {
+        let mut c = AdaptiveController::new(ControllerConfig::new(0.05), 8);
+        // Start at the ceiling: increases saturate there.
+        assert_eq!(c.budget(), 8);
+        for i in 0..3 {
+            c.observe_step(0.01);
+            c.decide((i + 1) as f64 * 0.25, &quiet());
+        }
+        assert_eq!(c.budget(), 8);
+        assert_eq!(c.report().increases, 3);
+        assert_eq!(c.report().max_budget, 8);
+    }
+
+    #[test]
+    fn slo_violation_halves_and_recovery_climbs_back() {
+        let mut c = AdaptiveController::new(ControllerConfig::new(0.05), 32);
+        c.observe_step(0.10); // p99 breaches 50 ms
+        c.decide(0.25, &quiet());
+        assert_eq!(c.budget(), 16);
+        c.observe_step(0.10);
+        c.decide(0.50, &quiet());
+        assert_eq!(c.budget(), 8);
+        // Healthy again: +1 per decision.
+        c.observe_step(0.01);
+        c.decide(0.75, &quiet());
+        assert_eq!(c.budget(), 9);
+        assert_eq!(c.report().min_budget, 8);
+        assert_eq!(c.report().decreases, 2);
+        assert_eq!(
+            c.report().trajectory,
+            vec![(0.25, 16), (0.50, 8), (0.75, 9)]
+        );
+    }
+
+    #[test]
+    fn kv_pressure_and_preemptions_trigger_decrease_without_itl_samples() {
+        let mut c = AdaptiveController::new(ControllerConfig::new(0.05), 20);
+        // Empty window but pressured pool.
+        c.decide(0.25, &ControlSignals {
+            kv_usage: 0.95,
+            ..quiet()
+        });
+        assert_eq!(c.budget(), 10);
+        // Preemption delta (first seen now) also violates.
+        c.decide(0.50, &ControlSignals {
+            preemptions: 2,
+            ..quiet()
+        });
+        assert_eq!(c.budget(), 5);
+        // Same cumulative count next window: delta 0, healthy.
+        c.decide(0.75, &ControlSignals {
+            preemptions: 2,
+            ..quiet()
+        });
+        assert_eq!(c.budget(), 6);
+    }
+
+    #[test]
+    fn budget_never_falls_below_the_floor() {
+        let mut cfg = ControllerConfig::new(0.05);
+        cfg.min_seqs = 3;
+        let mut c = AdaptiveController::new(cfg, 8);
+        for i in 0..6 {
+            c.observe_step(1.0);
+            c.decide((i + 1) as f64 * 0.25, &quiet());
+        }
+        assert_eq!(c.budget(), 3);
+    }
+
+    #[test]
+    fn prefix_sharing_doubles_the_additive_step() {
+        let mut c = AdaptiveController::new(ControllerConfig::new(0.05), 64);
+        c.observe_step(1.0);
+        c.decide(0.25, &quiet()); // 32
+        c.observe_step(1.0);
+        c.decide(0.50, &quiet()); // 16
+        c.decide(0.75, &ControlSignals {
+            prefix_hit_rate: 0.8,
+            ..quiet()
+        });
+        assert_eq!(c.budget(), 18);
+        c.decide(1.00, &quiet());
+        assert_eq!(c.budget(), 19);
+    }
+
+    #[test]
+    fn boundaries_advance_by_the_interval() {
+        let mut cfg = ControllerConfig::new(0.05);
+        cfg.interval = 0.5;
+        let mut c = AdaptiveController::new(cfg, 8);
+        assert_eq!(c.next_boundary(), 0.5);
+        assert!(!c.due(0.49));
+        assert!(c.due(0.5));
+        c.decide(0.5, &quiet());
+        assert_eq!(c.next_boundary(), 1.0);
+    }
+
+    #[test]
+    fn window_p99_is_nearest_rank_and_clears_per_decision() {
+        let mut cfg = ControllerConfig::new(0.095);
+        cfg.kv_high = 2.0; // isolate the latency signal
+        let mut c = AdaptiveController::new(cfg, 100);
+        // 100 samples 0.001..=0.100: nearest-rank p99 = 0.099 > 0.095.
+        for i in 1..=100 {
+            c.observe_step(i as f64 * 0.001);
+        }
+        c.decide(0.25, &quiet());
+        assert_eq!(c.budget(), 50);
+        // The window cleared: a single small sample now reads healthy.
+        c.observe_step(0.001);
+        c.decide(0.50, &quiet());
+        assert_eq!(c.budget(), 51);
+    }
+}

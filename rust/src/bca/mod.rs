@@ -16,9 +16,12 @@
 //! online scenario: a joint (batch × replica-count) sweep that
 //! maximizes goodput under a p99-ITL SLO.
 
+/// Closed-loop adaptive admission control (runtime AIMD budget).
+pub mod controller;
 /// Joint batch×replica SLO planning for online serving.
 pub mod planner;
 
+pub use controller::{AdaptiveController, ControlSignals, ControllerConfig, ControllerReport};
 pub use planner::{plan_joint, JointPlan, JointPlannerConfig, PlanPoint};
 
 use anyhow::Result;

@@ -14,12 +14,7 @@ use memgap::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let mut opts = if args.bool_or("quick", false) {
-        FigOpts::quick()
-    } else {
-        FigOpts::default()
-    };
-    opts.no_cache = args.bool_or("no-cache", false);
+    let opts = FigOpts::from_args(&args)?;
     let out = std::path::PathBuf::from(args.get_or("out", "results"));
     let ids: Vec<&str> = if args.bool_or("all", false) {
         figures::ALL_IDS.to_vec()

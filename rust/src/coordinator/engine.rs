@@ -24,6 +24,7 @@ use std::collections::{BTreeMap, VecDeque};
 use anyhow::Result;
 
 use crate::backend::{Backend, SeqBatchEntry, StepBatch, StepOutput};
+use crate::bca::controller::{AdaptiveController, ControlSignals, ControllerConfig, ControllerReport};
 use crate::coordinator::request::{RequestState, RunningSeq};
 use crate::coordinator::scheduler::{
     PreemptMode, ScheduleDecision, Scheduler, SchedulerConfig, SchedulerPolicy,
@@ -33,7 +34,7 @@ use crate::gpusim::mps::Segment;
 use crate::gpusim::plan::StepSummary;
 use crate::gpusim::step::StepSim;
 use crate::kvcache::{KvCacheV2, KvV2Config, PrefixCacheStats};
-use crate::metrics::{MetricsCollector, RunMetrics};
+use crate::metrics::{MetricsCollector, PredictionStats, RunMetrics};
 use crate::workload::Request;
 
 /// Engine configuration (one replica).
@@ -69,6 +70,14 @@ pub struct EngineConfig {
     /// swap-fail events at virtual times). `None` (the default) is a
     /// fault-free run, bit-identical to the pre-fault engine.
     pub faults: Option<FaultPlan>,
+    /// Closed-loop AIMD admission controller: adjusts the effective
+    /// `max_num_seqs` at fixed virtual-time boundaries from KV
+    /// pressure, preemption rate, prefix-cache hit rate and a
+    /// streaming p99 ITL estimate against its SLO. `None` (default)
+    /// keeps the static budget, bit-identical to the pre-controller
+    /// engine. Decision boundaries join the fast-forward event horizon
+    /// exactly like fault events.
+    pub controller: Option<ControllerConfig>,
 }
 
 impl EngineConfig {
@@ -86,6 +95,7 @@ impl EngineConfig {
             record_steps: false,
             fast_forward: true,
             faults: None,
+            controller: None,
         }
     }
 }
@@ -123,6 +133,12 @@ pub struct EngineReport {
     pub segments: Vec<Segment>,
     /// Availability accounting (all-default on a fault-free run).
     pub faults: FaultStats,
+    /// Adaptive-controller activity (`None` when disabled): budget
+    /// trajectory and decision counts.
+    pub controller: Option<ControllerReport>,
+    /// Output-length prediction error over completed requests
+    /// (all-default when the workload carries no predictions).
+    pub prediction: PredictionStats,
 }
 
 /// A completed sequence with its generated tokens (drained via
@@ -198,6 +214,10 @@ pub struct Engine<B: Backend> {
     /// (or failed swap) ever re-queued: the first re-queue sets 2.
     attempts: BTreeMap<u64, u64>,
     faults: FaultStats,
+    /// Closed-loop admission controller (`None` when disabled).
+    controller: Option<AdaptiveController>,
+    /// Prediction-error accumulator over completed requests.
+    prediction: PredictionStats,
 }
 
 impl<B: Backend> Engine<B> {
@@ -223,6 +243,10 @@ impl<B: Backend> Engine<B> {
             .as_ref()
             .map(|p| p.events().to_vec())
             .unwrap_or_default();
+        let controller = cfg
+            .controller
+            .clone()
+            .map(|c| AdaptiveController::new(c, cfg.max_num_seqs));
         Self {
             backend,
             cfg,
@@ -254,6 +278,8 @@ impl<B: Backend> Engine<B> {
             shrink_windows: Vec::new(),
             attempts: BTreeMap::new(),
             faults: FaultStats::default(),
+            controller,
+            prediction: PredictionStats::default(),
         }
     }
 
@@ -376,6 +402,8 @@ impl<B: Backend> Engine<B> {
             recorded: self.recorded,
             segments: self.segments,
             faults: self.faults,
+            controller: self.controller.as_ref().map(|c| c.report().clone()),
+            prediction: self.prediction,
         }
     }
 
@@ -386,6 +414,9 @@ impl<B: Backend> Engine<B> {
         // `t` takes effect at the first step boundary >= `t` on both
         // the stepwise and fast-forward paths.
         self.apply_due_faults();
+        // Controller decisions land at step boundaries too, with the
+        // same stepwise/fast-forward agreement.
+        self.apply_due_controller();
         self.absorb_arrivals();
         // Swapped sequences have priority over fresh admissions: they
         // already hold CPU-resident KV and resume without re-prefill.
@@ -424,7 +455,15 @@ impl<B: Backend> Engine<B> {
                 // scheduler idles until the window end releases the
                 // quarantined blocks (applied at the next step top).
                 let arrival = self.pending.last().map(|r| r.arrival);
-                let boundary = self.next_fault_boundary();
+                let mut boundary = self.next_fault_boundary();
+                // Controller boundaries join the horizon only while
+                // work remains: a budget decision can unblock a waiting
+                // queue throttled by an earlier decrease. An engine
+                // with nothing to do must still report idle (false),
+                // not spin through an infinite decision schedule.
+                if self.controller.is_some() && self.has_work() {
+                    boundary = boundary.min(self.next_controller_boundary());
+                }
                 let target = match arrival {
                     Some(a) => a.min(boundary),
                     None => boundary,
@@ -473,7 +512,7 @@ impl<B: Backend> Engine<B> {
             return;
         }
         while let Some(front) = self.swapped.front() {
-            if self.running.len() >= self.cfg.max_num_seqs {
+            if self.running.len() >= self.effective_max_seqs() {
                 break;
             }
             let need = match self.kv.swapped_need(front.id) {
@@ -625,7 +664,7 @@ impl<B: Backend> Engine<B> {
         }
         match self.swapped.front() {
             Some(front) => {
-                self.running.len() < self.cfg.max_num_seqs
+                self.running.len() < self.effective_max_seqs()
                     && match self.kv.swapped_need(front.id) {
                         Some(need) => self.kv.reclaimable_blocks() >= need,
                         None => false,
@@ -712,6 +751,9 @@ impl<B: Backend> Engine<B> {
         // Nothing in the fault schedule changes mid-streak (events only
         // apply at step tops), so computing it once at entry is exact.
         let fault_boundary = self.next_fault_boundary();
+        // Controller boundary: decisions only fire at step tops, so the
+        // next boundary is likewise fixed for the whole streak.
+        let ctrl_boundary = self.next_controller_boundary();
         let mut budget = self.kv.reclaimable_blocks();
         let n = self.running.len();
         let mut done = 0usize;
@@ -727,6 +769,12 @@ impl<B: Backend> Engine<B> {
             if fault_boundary <= self.clock {
                 break;
             }
+            // Controller boundary: the due decision applies at the top
+            // of the next stepwise iteration, observing exactly the
+            // samples pushed so far.
+            if ctrl_boundary <= self.clock {
+                break;
+            }
             let allocs = hist[(bs - done % bs) % bs];
             if allocs > budget {
                 break;
@@ -737,6 +785,9 @@ impl<B: Backend> Engine<B> {
             self.clock += summary.cpu_gap + summary.gpu_time;
             self.steps += 1;
             self.decode_time += summary.cpu_gap + summary.gpu_time;
+            if let Some(c) = self.controller.as_mut() {
+                c.observe_step(summary.cpu_gap + summary.gpu_time);
+            }
             self.metrics
                 .on_step(self.clock, n, summary.cpu_gap, summary.gpu_time);
             self.segments.push(Segment::Cpu {
@@ -955,18 +1006,26 @@ impl<B: Backend> Engine<B> {
         self.retire_or_keep(seqs);
     }
 
-    /// Preempt the newest-arrived running sequence other than `keep`,
-    /// per the configured [`PreemptMode`]: recompute frees the blocks
-    /// and re-prefills later; swap parks them in the CPU pool (falling
-    /// back to recompute when the pool is full). Returns false if there
-    /// is no eligible victim.
+    /// Preempt one running sequence other than `keep`, per the
+    /// configured [`PreemptMode`]: recompute frees the blocks and
+    /// re-prefills later; swap parks them in the CPU pool (falling back
+    /// to recompute when the pool is full). The victim is the sequence
+    /// furthest past its predicted output length (it holds KV blocks
+    /// admission never budgeted for), ties broken by newest arrival —
+    /// which, with no predictions in play (every overrun 0), reduces
+    /// bit-exactly to the legacy newest-arrival policy. Returns false
+    /// if there is no eligible victim.
     fn preempt_newest_except(&mut self, keep: u64) -> bool {
         let Some(pos) = self
             .running
             .iter()
             .enumerate()
             .filter(|(_, s)| s.id != keep)
-            .max_by(|a, b| a.1.arrival.partial_cmp(&b.1.arrival).unwrap())
+            .max_by(|a, b| {
+                a.1.overrun()
+                    .cmp(&b.1.overrun())
+                    .then(a.1.arrival.partial_cmp(&b.1.arrival).unwrap())
+            })
             .map(|(i, _)| i)
         else {
             return false;
@@ -1051,6 +1110,15 @@ impl<B: Backend> Engine<B> {
             Phase::Prefill => self.prefill_time += out.cpu_gap + gpu,
             _ => self.decode_time += out.cpu_gap + gpu,
         }
+        // Token-producing steps (decode and fused) feed the streaming
+        // ITL window: the step duration is exactly the gap between
+        // consecutive tokens of every running sequence. Fast-forwarded
+        // decode steps push the bit-identical sample inline.
+        if phase != Phase::Prefill {
+            if let Some(c) = self.controller.as_mut() {
+                c.observe_step(out.cpu_gap + gpu);
+            }
+        }
         self.metrics.on_step(self.clock, batch, out.cpu_gap, gpu);
         let demand = if let Some(s) = &out.summary {
             s.dram_demand()
@@ -1076,6 +1144,55 @@ impl<B: Backend> Engine<B> {
                 self.recorded.push(sim.clone());
             }
         }
+    }
+
+    // --- closed-loop admission control ------------------------------------
+
+    /// The admission budget in force: the controller's current budget,
+    /// or the static `max_num_seqs` when the controller is disabled.
+    fn effective_max_seqs(&self) -> usize {
+        self.controller
+            .as_ref()
+            .map_or(self.cfg.max_num_seqs, |c| c.budget())
+    }
+
+    /// The next controller decision boundary (`INFINITY` when the
+    /// controller is disabled) — folded into the fast-forward event
+    /// horizon exactly like [`Engine::next_fault_boundary`].
+    fn next_controller_boundary(&self) -> f64 {
+        self.controller
+            .as_ref()
+            .map_or(f64::INFINITY, |c| c.next_boundary())
+    }
+
+    /// Take every controller decision whose boundary has passed and
+    /// push the resulting budget into the scheduler. Called at the top
+    /// of every step, so decisions always land at step boundaries —
+    /// the granularity both the stepwise and fast-forward paths agree
+    /// on (fast-forward breaks its streak *before* crossing a
+    /// boundary, so the decision fires at the same virtual clock on
+    /// both paths, observing the same ITL window).
+    fn apply_due_controller(&mut self) {
+        let Some(c) = self.controller.as_mut() else {
+            return;
+        };
+        if !c.due(self.clock) {
+            return;
+        }
+        let sig = ControlSignals {
+            kv_usage: self.kv.usage(),
+            preemptions: self.preemptions,
+            swap_outs: self.swap_outs,
+            prefix_hit_rate: self.kv.stats().hit_rate(),
+        };
+        // A long idle jump may skip several boundaries; each fires (on
+        // identical signals) to keep the decision schedule aligned
+        // with virtual time regardless of step cadence.
+        while c.due(self.clock) {
+            let at = c.next_boundary();
+            c.decide(at, &sig);
+        }
+        self.scheduler.cfg.max_num_seqs = c.budget();
     }
 
     // --- fault injection & recovery --------------------------------------
@@ -1194,6 +1311,7 @@ impl<B: Backend> Engine<B> {
                 prompt_tokens: s.prompt_tokens,
                 output_tokens: s.target_output,
                 prefix: s.prefix,
+                predicted: s.predicted,
             });
         }
         // Deterministic re-queue order regardless of which set each
@@ -1257,6 +1375,9 @@ impl<B: Backend> Engine<B> {
         for mut s in seqs {
             if s.is_finished() {
                 s.state = RequestState::Finished;
+                if let Some(p) = s.predicted {
+                    self.prediction.observe(p, s.generated);
+                }
                 self.kv.free(s.id).ok();
                 self.finished.push(FinishedSeq {
                     id: s.id,
@@ -1390,6 +1511,7 @@ mod tests {
                 prompt_tokens: 16,
                 output_tokens: 4,
                 prefix: None,
+                predicted: None,
             })
             .collect();
         let mut e = engine(1, 1024);
@@ -1421,6 +1543,7 @@ mod tests {
                 // their arrival.
                 output_tokens: 64,
                 prefix: None,
+                predicted: None,
             })
             .collect();
         let plan = FaultPlan::new(vec![FaultEvent {
@@ -1582,6 +1705,7 @@ mod tests {
             prompt_tokens: 900, // > 512 budget
             output_tokens: 20,
             prefix: None,
+            predicted: None,
         });
         for i in 1..9u64 {
             reqs.push(crate::workload::Request {
@@ -1590,6 +1714,7 @@ mod tests {
                 prompt_tokens: 100,
                 output_tokens: 20,
                 prefix: None,
+                predicted: None,
             });
         }
         e.submit(&reqs);
@@ -1871,6 +1996,172 @@ mod tests {
             assert!(matches!(pair[0], Segment::Cpu { .. }));
             if pair.len() > 1 {
                 assert!(matches!(pair[1], Segment::Gpu { .. }));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_controller_reports_none_and_stays_bit_identical() {
+        // cfg.controller = None must leave every report number exactly
+        // as the pre-controller engine produced it — the integration
+        // hooks are all behind the Option.
+        let run = || {
+            let mut e = engine(8, 4096);
+            e.submit(&generate(&WorkloadConfig::offline(16, 64, 48)));
+            e.run_to_completion().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert!(a.controller.is_none());
+        assert_eq!(a.prediction, PredictionStats::default());
+        assert_eq!(a.metrics.makespan, b.metrics.makespan);
+        assert_eq!(a.segments, b.segments);
+    }
+
+    #[test]
+    fn controller_takes_decisions_on_the_virtual_clock() {
+        // An SLO far above any real step duration: every decision is
+        // healthy, the budget stays pinned at the ceiling, and the
+        // decision count matches the virtual-time extent.
+        let mut e = engine_with(8, 4096, |c| {
+            c.controller = Some(ControllerConfig::new(10.0));
+        });
+        e.submit(&generate(&WorkloadConfig::offline(16, 64, 48)));
+        let report = e.run_to_completion().unwrap();
+        let ctrl = report.controller.expect("controller enabled");
+        assert!(ctrl.decisions > 0, "no decisions over the run");
+        assert_eq!(ctrl.decisions, ctrl.increases + ctrl.decreases);
+        assert_eq!(ctrl.decreases, 0, "10 s SLO can never be violated");
+        assert_eq!(ctrl.final_budget, 8);
+        // Boundaries every 0.25 s of virtual time.
+        let expected = (report.metrics.makespan / 0.25).floor() as u64;
+        assert!(
+            ctrl.decisions >= expected.saturating_sub(1) && ctrl.decisions <= expected + 1,
+            "decisions {} vs makespan {}",
+            ctrl.decisions,
+            report.metrics.makespan
+        );
+    }
+
+    #[test]
+    fn tight_slo_throttles_the_admission_budget() {
+        // An impossible SLO (1 ns): every window with a sample
+        // violates, so the budget collapses to the floor and stays
+        // there while decode traffic flows.
+        let mut e = engine_with(16, 4096, |c| {
+            let mut ctrl = ControllerConfig::new(1e-9);
+            ctrl.min_seqs = 2;
+            c.controller = Some(ctrl);
+        });
+        e.submit(&generate(&WorkloadConfig::offline(32, 64, 128)));
+        let report = e.run_to_completion().unwrap();
+        let ctrl = report.controller.expect("controller enabled");
+        assert!(ctrl.decreases > 0, "SLO violations must throttle");
+        assert_eq!(ctrl.min_budget, 2, "floor respected: {ctrl:?}");
+        assert_eq!(report.metrics.completed, 32, "throttling must not shed");
+        // The trajectory is recorded for the figure artefact.
+        assert_eq!(ctrl.trajectory.len(), ctrl.decisions as usize);
+        assert!(ctrl.trajectory.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn controller_run_is_deterministic() {
+        let run = || {
+            let mut e = engine_with(8, 4096, |c| {
+                c.controller = Some(ControllerConfig::new(0.02));
+            });
+            let cfg = WorkloadConfig {
+                arrivals: crate::workload::ArrivalPattern::Poisson { rate: 20.0 },
+                ..WorkloadConfig::offline(24, 64, 48)
+            };
+            e.submit(&generate(&cfg));
+            e.run_to_completion().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.metrics.makespan, b.metrics.makespan);
+        assert_eq!(a.controller, b.controller);
+        assert_eq!(a.segments, b.segments);
+    }
+
+    #[test]
+    fn predicted_workload_reports_prediction_error() {
+        let mut e = engine(8, 4096);
+        let mut cfg = WorkloadConfig::offline(16, 64, 32);
+        cfg.predictor = Some(crate::workload::PredictorConfig::default());
+        e.submit(&generate(&cfg));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.prediction.predicted_requests, 16);
+        assert!(report.prediction.mean_abs_err() > 0.0);
+        // An oracle predictor (sigma = 0) reports zero error.
+        let mut e = engine(8, 4096);
+        let mut cfg = WorkloadConfig::offline(16, 64, 32);
+        cfg.predictor = Some(crate::workload::PredictorConfig {
+            rel_err_sigma: 0.0,
+            seed: 0,
+        });
+        e.submit(&generate(&cfg));
+        let report = e.run_to_completion().unwrap();
+        assert_eq!(report.prediction.predicted_requests, 16);
+        assert_eq!(report.prediction.mean_abs_err(), 0.0);
+        assert_eq!(report.prediction.overruns, 0);
+    }
+
+    #[test]
+    fn overrun_targeted_preemption_evicts_past_prediction_first() {
+        // Tight pool forces preemption. With severe underprediction on
+        // every request, victims are overrunning sequences; the run
+        // still completes all work and reports the overruns.
+        let mut e = engine(8, 65);
+        let mut reqs = generate(&WorkloadConfig::offline(8, 50, 100));
+        for r in &mut reqs {
+            r.predicted = Some(10); // everything overruns by 90
+        }
+        e.submit(&reqs);
+        let report = e.run_to_completion().unwrap();
+        assert!(report.preemptions > 0, "expected KV pressure");
+        assert_eq!(report.metrics.completed, 8);
+        assert_eq!(report.prediction.predicted_requests, 8);
+        assert_eq!(report.prediction.overruns, 8);
+    }
+
+    #[test]
+    fn controller_fast_forward_matches_stepwise() {
+        // The tentpole bit-equivalence: with the controller enabled,
+        // the fast-forward path must break at every decision boundary
+        // and reproduce the stepwise run exactly — same decisions,
+        // same budgets, same clock.
+        for slo in [10.0, 0.02, 1e-9] {
+            let run = |ff: bool| {
+                let mut e = engine_with(8, 4096, |c| {
+                    c.fast_forward = ff;
+                    c.controller = Some(ControllerConfig::new(slo));
+                });
+                let cfg = WorkloadConfig {
+                    arrivals: crate::workload::ArrivalPattern::Poisson { rate: 20.0 },
+                    ..WorkloadConfig::offline(24, 64, 48)
+                };
+                e.submit(&generate(&cfg));
+                let mut calls = 0usize;
+                while e.has_work() {
+                    e.step().unwrap();
+                    calls += 1;
+                }
+                (e.finish(), calls)
+            };
+            let (slow, slow_calls) = run(false);
+            let (fast, fast_calls) = run(true);
+            assert_eq!(fast.metrics.makespan, slow.metrics.makespan, "slo {slo}");
+            assert_eq!(fast.steps, slow.steps, "slo {slo}");
+            assert_eq!(fast.segments, slow.segments, "slo {slo}");
+            assert_eq!(fast.controller, slow.controller, "slo {slo}");
+            assert_eq!(fast.preemptions, slow.preemptions, "slo {slo}");
+            if slo > 1.0 {
+                // Healthy runs still fast-forward between boundaries.
+                assert!(
+                    fast_calls < slow_calls,
+                    "slo {slo}: ff never engaged ({fast_calls} vs {slow_calls})"
+                );
             }
         }
     }

@@ -5,13 +5,14 @@
 use anyhow::Result;
 
 use crate::backend::SimBackend;
+use crate::bca::controller::ControllerConfig;
 use crate::coordinator::engine::{Engine, EngineConfig, EngineReport};
 use crate::coordinator::scheduler::{PreemptMode, SchedulerPolicy};
 use crate::faults::FaultPlan;
 use crate::gpusim::GpuSpec;
 use crate::kvcache;
 use crate::models::spec::{AttentionBackendKind, ModelSpec};
-use crate::workload::{generate, SharedPrefixConfig, WorkloadConfig};
+use crate::workload::{generate, PredictorConfig, SharedPrefixConfig, WorkloadConfig};
 
 /// Configuration of one offline simulated run.
 #[derive(Debug, Clone)]
@@ -47,6 +48,14 @@ pub struct OfflineConfig {
     /// Deterministic fault schedule (`--fault-*` flags); `None` is a
     /// fault-free run, bit-identical to the pre-fault engine.
     pub faults: Option<FaultPlan>,
+    /// Closed-loop AIMD admission controller (`--controller-*` flags);
+    /// `None` keeps the static `max_num_seqs`, bit-identical to the
+    /// pre-controller engine.
+    pub controller: Option<ControllerConfig>,
+    /// S³-style output-length predictor attached to the generated
+    /// workload (`--predict-*` flags); `None` leaves requests
+    /// unpredicted (legacy admission and preemption).
+    pub predictor: Option<PredictorConfig>,
 }
 
 impl OfflineConfig {
@@ -69,6 +78,8 @@ impl OfflineConfig {
             block_size: 16,
             tp: 1,
             faults: None,
+            controller: None,
+            predictor: None,
         }
     }
 
@@ -94,6 +105,7 @@ impl OfflineConfig {
         cfg.preempt = self.preempt;
         cfg.prefix_cache = self.prefix_cache;
         cfg.faults = self.faults.clone();
+        cfg.controller = self.controller.clone();
         if self.chunked_prefill {
             cfg.policy = SchedulerPolicy::ChunkedPrefill;
         }
@@ -105,6 +117,7 @@ impl OfflineConfig {
         let mut engine = self.build_engine();
         engine.submit(&generate(&WorkloadConfig {
             prefix: self.prefix,
+            predictor: self.predictor,
             ..WorkloadConfig::offline(self.num_requests, self.input_len, self.output_len)
         }));
         engine.run_to_completion()
@@ -116,6 +129,7 @@ impl OfflineConfig {
         let mut engine = self.build_engine();
         engine.submit(&generate(&WorkloadConfig {
             prefix: self.prefix,
+            predictor: self.predictor,
             ..WorkloadConfig::sharegpt(num_requests, seed)
         }));
         engine.run_to_completion()

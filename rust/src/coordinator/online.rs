@@ -20,9 +20,10 @@
 
 use anyhow::Result;
 
+use crate::bca::controller::ControllerReport;
 use crate::coordinator::offline::OfflineConfig;
 use crate::faults::FaultStats;
-use crate::metrics::{Percentiles, RequestLatency, RunMetrics, Slo, StreamingSummary};
+use crate::metrics::{Percentiles, PredictionStats, RequestLatency, RunMetrics, Slo, StreamingSummary};
 use crate::util::json::Json;
 use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
 
@@ -87,6 +88,11 @@ pub struct OnlineReport {
     /// Availability accounting from injected faults (all-zero when the
     /// run was fault-free).
     pub faults: FaultStats,
+    /// Adaptive-controller summary (`None` when the run used a static
+    /// admission budget).
+    pub controller: Option<ControllerReport>,
+    /// Output-length prediction accuracy (all-zero without a predictor).
+    pub prediction: PredictionStats,
     /// The underlying aggregate metrics (incl. per-request latencies).
     pub metrics: RunMetrics,
 }
@@ -141,6 +147,14 @@ impl OnlineReport {
             ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
             ("steps", Json::num(self.steps as f64)),
             ("faults", self.faults.to_json()),
+            (
+                "controller",
+                match &self.controller {
+                    Some(c) => c.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("prediction", self.prediction.to_json()),
         ])
     }
 }
@@ -162,7 +176,13 @@ pub fn offered_rps(cfg: &WorkloadConfig, last_arrival: f64) -> f64 {
 
 /// Run one arrival-driven serving experiment in virtual time.
 pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
-    let reqs = generate(&cfg.workload);
+    // The engine config's predictor flows into the workload unless the
+    // workload already carries its own (single CLI knob, both drivers).
+    let mut workload = cfg.workload.clone();
+    if workload.predictor.is_none() {
+        workload.predictor = cfg.engine.predictor;
+    }
+    let reqs = generate(&workload);
     let last_arrival = reqs.last().map(|r| r.arrival).unwrap_or(0.0);
     let mut engine = cfg.engine.build_engine();
     engine.submit(&reqs);
@@ -225,6 +245,8 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
         prefix_hit_rate: report.prefix_cache.hit_rate(),
         steps: report.steps,
         faults: report.faults.clone(),
+        controller: report.controller.clone(),
+        prediction: report.prediction,
         metrics: report.metrics,
     })
 }
@@ -330,6 +352,24 @@ mod tests {
         other.workload.seed = 4;
         let c = run_online(&other).unwrap().to_json().to_string();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn controller_and_prediction_surface_in_the_report() {
+        let mut cfg = online_cfg(8, 24, 20.0);
+        cfg.engine.controller = Some(crate::bca::controller::ControllerConfig::new(0.05));
+        cfg.engine.predictor = Some(crate::workload::PredictorConfig::default());
+        let rep = run_online(&cfg).unwrap();
+        let c = rep.controller.as_ref().expect("controller report missing");
+        assert!(c.decisions > 0, "no decisions over a >1s run");
+        // Every generated request carried a prediction; all retired.
+        assert_eq!(rep.prediction.predicted_requests, rep.completed);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"controller\"") && j.contains("\"prediction\""));
+        // A static run renders controller as null but keeps the key.
+        let plain = run_online(&online_cfg(8, 8, 20.0)).unwrap();
+        assert!(plain.controller.is_none());
+        assert!(plain.to_json().to_string().contains("\"controller\":null"));
     }
 
     #[test]

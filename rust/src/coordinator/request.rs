@@ -45,6 +45,10 @@ pub struct RunningSeq {
     /// crash can rebuild the *original* request (same prefix class ⇒
     /// bit-identical token resynthesis) for recompute-from-prompt.
     pub prefix: Option<crate::workload::SharedPrefix>,
+    /// S³-style predicted output length carried from the request:
+    /// expected-footprint admission and overrun-targeted preemption
+    /// consult it; decoding itself always runs to `target_output`.
+    pub predicted: Option<usize>,
 }
 
 impl RunningSeq {
@@ -87,6 +91,19 @@ impl RunningSeq {
             first_token_at: None,
             prefilled: 0,
             prefix: req.prefix,
+            predicted: req.predicted,
+        }
+    }
+
+    /// How far generation has run past the predicted output length
+    /// (0 while at or under prediction, or when unpredicted). The
+    /// preemption policy victimizes the largest overrun first: a
+    /// sequence past its prediction holds KV blocks the admission
+    /// charge never budgeted for.
+    pub fn overrun(&self) -> usize {
+        match self.predicted {
+            Some(p) => self.generated.saturating_sub(p),
+            None => 0,
         }
     }
 
@@ -136,7 +153,26 @@ mod tests {
             prompt_tokens: p,
             output_tokens: o,
             prefix: None,
+            predicted: None,
         }
+    }
+
+    #[test]
+    fn overrun_counts_tokens_past_prediction() {
+        let mut r = req(1, 5, 10);
+        r.predicted = Some(2);
+        let mut s = RunningSeq::from_request(&r, 100);
+        assert_eq!(s.predicted, Some(2));
+        assert_eq!(s.overrun(), 0);
+        s.push_token(7);
+        s.push_token(8);
+        assert_eq!(s.overrun(), 0);
+        s.push_token(9);
+        assert_eq!(s.overrun(), 1);
+        // Unpredicted sequences never report overrun.
+        let mut plain = RunningSeq::from_request(&req(2, 5, 10), 100);
+        plain.push_token(7);
+        assert_eq!(plain.overrun(), 0);
     }
 
     #[test]

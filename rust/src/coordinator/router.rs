@@ -145,6 +145,7 @@ mod tests {
             prompt_tokens: p,
             output_tokens: o,
             prefix: None,
+            predicted: None,
         }
     }
 

@@ -100,6 +100,20 @@ pub struct Scheduler {
     pub cfg: SchedulerConfig,
 }
 
+/// Extra blocks an admission is expected to grow into while decoding:
+/// the S³-style predicted output, converted to net-new blocks past the
+/// prompt. Zero for unpredicted sequences, so charging it is a no-op
+/// unless the workload carries predictions.
+fn expected_decode_blocks(kv: &KvCacheV2, seq: &RunningSeq) -> usize {
+    match seq.predicted {
+        Some(p) => {
+            let prompt = seq.prefill_len();
+            kv.blocks_needed(prompt + p).saturating_sub(kv.blocks_needed(prompt))
+        }
+        None => 0,
+    }
+}
+
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
         Self { cfg }
@@ -139,8 +153,20 @@ impl Scheduler {
                 break;
             }
             let need_tokens = seq.prefill_len();
-            let need_blocks = kv.charged_blocks_needed(&seq.token_ids);
+            // Expected-footprint admission: charge the prompt's net-new
+            // blocks plus the blocks the predicted output will grow
+            // into, instead of letting every admit discover the decode
+            // cost via preemption. Unpredicted sequences charge exactly
+            // the legacy prompt-only amount.
+            let base_blocks = kv.charged_blocks_needed(&seq.token_ids);
+            let need_blocks = base_blocks + expected_decode_blocks(kv, seq);
             if need_blocks > free_blocks {
+                // Liveness: a head-of-line prompt whose *prompt* fits
+                // still admits on the legacy charge — the expected
+                // footprint throttles the tail, never deadlocks FCFS.
+                if idx.is_empty() && base_blocks <= free_blocks {
+                    idx.push(i);
+                }
                 break; // strict FCFS: no skipping ahead
             }
             if need_tokens > tokens {
@@ -223,7 +249,8 @@ impl Scheduler {
                 break;
             }
             let grant = remaining.min(tokens);
-            let need_blocks = if seq.prefilled == 0 && grant == remaining {
+            let fresh_whole = seq.prefilled == 0 && grant == remaining;
+            let base_blocks = if fresh_whole {
                 // Fresh whole-prompt admission: net-new blocks, with
                 // prefix-cache credit (same charge as PrefillPriority).
                 kv.charged_blocks_needed(&seq.token_ids)
@@ -235,7 +262,25 @@ impl Scheduler {
                 let end_blocks = (seq.prefilled + grant).div_ceil(bs);
                 end_blocks - have_blocks
             };
+            // Fresh admissions additionally charge the predicted decode
+            // growth (expected-footprint admission); continuations were
+            // charged at their own admission.
+            let need_blocks = base_blocks
+                + if fresh_whole {
+                    expected_decode_blocks(kv, seq)
+                } else {
+                    0
+                };
             if need_blocks > free_blocks {
+                // Same head-of-line liveness rule as PrefillPriority:
+                // the queue head falls back to the legacy charge and is
+                // granted alone (the pool is knowingly overcommitted).
+                if grants.is_empty() && base_blocks <= free_blocks {
+                    grants.push(ChunkGrant {
+                        queue_idx: i,
+                        tokens: grant,
+                    });
+                }
                 break; // strict FCFS: no skipping ahead
             }
             grants.push(ChunkGrant {
@@ -268,9 +313,16 @@ mod tests {
                 prompt_tokens: prompt,
                 output_tokens: 10,
                 prefix: None,
+                predicted: None,
             },
             1000,
         )
+    }
+
+    fn predicted(id: u64, prompt: usize, pred: usize) -> RunningSeq {
+        let mut s = seq(id, prompt);
+        s.predicted = Some(pred);
+        s
     }
 
     fn kv() -> KvCacheV2 {
@@ -474,6 +526,72 @@ mod tests {
                 }
                 d => panic!("{d:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn expected_footprint_charges_predicted_decode_growth() {
+        let s = sched(64, SchedulerPolicy::PrefillPriority);
+        // 8 usable blocks of 16 tokens.
+        let kv = KvCacheV2::new(crate::kvcache::KvV2Config::new(9, 16, 8));
+        // Two 32-token prompts (2 blocks each) fit by the legacy
+        // charge; predicting 64 output tokens (+4 blocks) each makes
+        // the second inadmissible: 2+4 charged twice exceeds 8.
+        let mut waiting = VecDeque::new();
+        waiting.push_back(predicted(0, 32, 64));
+        waiting.push_back(predicted(1, 32, 64));
+        match s.decide(&waiting, &[], &kv) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0]),
+            d => panic!("{d:?}"),
+        }
+        // Without predictions the same pair admits together — the
+        // expected-footprint charge is bit-inert when disabled.
+        let legacy: VecDeque<_> = vec![seq(0, 32), seq(1, 32)].into();
+        match s.decide(&legacy, &[], &kv) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0, 1]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn predicted_head_of_line_still_admits_on_the_legacy_charge() {
+        // A head whose prompt fits but whose expected footprint does
+        // not must still admit (alone) — expected-footprint admission
+        // throttles the tail, never deadlocks strict FCFS.
+        let s = sched(64, SchedulerPolicy::PrefillPriority);
+        let kv = KvCacheV2::new(crate::kvcache::KvV2Config::new(5, 16, 8)); // 4 usable
+        let mut waiting = VecDeque::new();
+        waiting.push_back(predicted(0, 32, 1000)); // 2 blocks prompt, huge prediction
+        waiting.push_back(seq(1, 16));
+        match s.decide(&waiting, &[], &kv) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0]),
+            d => panic!("{d:?}"),
+        }
+        // Chunked path: same liveness rule for the fused grant.
+        let s = sched(64, SchedulerPolicy::ChunkedPrefill);
+        match s.decide(&waiting, &[], &kv) {
+            ScheduleDecision::Mixed { grants } => {
+                assert_eq!(grants.len(), 1);
+                assert_eq!(grants[0].queue_idx, 0);
+                assert_eq!(grants[0].tokens, 32);
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_fresh_admission_charges_expected_footprint() {
+        let s = sched(64, SchedulerPolicy::ChunkedPrefill);
+        let kv = KvCacheV2::new(crate::kvcache::KvV2Config::new(9, 16, 8)); // 8 usable
+        let mut waiting = VecDeque::new();
+        waiting.push_back(predicted(0, 32, 64)); // 2 + 4 expected
+        waiting.push_back(predicted(1, 32, 64)); // 6 more: over the pool
+        match s.decide(&waiting, &[], &kv) {
+            ScheduleDecision::Mixed { grants } => {
+                assert_eq!(grants.len(), 1);
+                assert_eq!(grants[0].queue_idx, 0);
+            }
+            d => panic!("{d:?}"),
         }
     }
 

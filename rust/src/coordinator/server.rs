@@ -265,6 +265,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, cfg: ServerConfig) -> Res
                             prompt_tokens: prompt_len,
                             output_tokens: max_tokens,
                             prefix: None,
+                            predicted: None,
                         },
                         reply: reply_tx,
                         submitted_wall: std::time::Instant::now(),

@@ -20,9 +20,22 @@ use crate::util::json::Json;
 use crate::util::rng::mix64;
 
 /// The option fields that shape artefact content (deliberately not
-/// `no_cache`, which only controls this module).
+/// `no_cache`, which only controls this module and never the tables).
+/// The exhaustive destructuring is the point: adding a `FigOpts` field
+/// without deciding whether it belongs in the cache key is a compile
+/// error here, so a new knob can never silently serve stale artefacts.
 pub fn fingerprint(opts: &FigOpts) -> String {
-    format!("quick={};seed={}", opts.quick, opts.seed)
+    let FigOpts {
+        quick,
+        seed,
+        no_cache: _,
+        fast_forward,
+        slo_itl_ms,
+        predict_err,
+    } = opts;
+    format!(
+        "quick={quick};seed={seed};ff={fast_forward};slo_itl_ms={slo_itl_ms:?};predict_err={predict_err:?}"
+    )
 }
 
 /// FNV-offset seeded mix64 chain over `bytes` (same digest family the
@@ -218,6 +231,54 @@ mod tests {
         for (x, y) in first.iter().zip(&second) {
             assert_eq!(x.to_csv(), y.to_csv());
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// One variant per output-shaping knob, each differing from
+    /// `FigOpts::default()` in exactly that knob.
+    fn knob_variants() -> Vec<(&'static str, FigOpts)> {
+        let base = FigOpts::default();
+        vec![
+            ("quick", FigOpts { quick: true, ..base.clone() }),
+            ("seed", FigOpts { seed: 7, ..base.clone() }),
+            ("fast_forward", FigOpts { fast_forward: false, ..base.clone() }),
+            ("slo_itl_ms", FigOpts { slo_itl_ms: Some(12.5), ..base.clone() }),
+            ("predict_err", FigOpts { predict_err: Some(0.5), ..base }),
+        ]
+    }
+
+    #[test]
+    fn fingerprint_covers_every_output_shaping_knob() {
+        let fp = fingerprint(&FigOpts::default());
+        for (knob, v) in knob_variants() {
+            assert_ne!(
+                fingerprint(&v),
+                fp,
+                "flipping `{knob}` must change the fingerprint"
+            );
+        }
+        // `no_cache` only controls this module and is deliberately
+        // excluded: bypassing the cache must not re-key it.
+        let bypass = FigOpts {
+            no_cache: true,
+            ..FigOpts::default()
+        };
+        assert_eq!(fingerprint(&bypass), fp);
+    }
+
+    #[test]
+    fn each_knob_flip_misses_the_cache() {
+        let dir = tmp("knobs");
+        let base_fp = fingerprint(&FigOpts::default());
+        store(&dir, "adaptive", &base_fp, "1.0", &sample_tables()).unwrap();
+        for (knob, v) in knob_variants() {
+            assert!(
+                lookup(&dir, "adaptive", &fingerprint(&v), "1.0").is_none(),
+                "flipping `{knob}` must miss the cache"
+            );
+        }
+        // The misses key to different files; the original entry survives.
+        assert!(lookup(&dir, "adaptive", &base_fp, "1.0").is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

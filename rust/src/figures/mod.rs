@@ -6,6 +6,7 @@
 //! `figN()`/`tableN()` function returns [`Table`]s so integration tests
 //! and benches can assert the shapes without touching the filesystem.
 
+pub mod adaptive_figs;
 pub mod bca_figs;
 pub mod cache;
 pub mod faults_figs;
@@ -101,7 +102,7 @@ impl Table {
 }
 
 /// Generation options.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct FigOpts {
     /// Reduced request counts / grids for CI and benches.
     pub quick: bool,
@@ -110,6 +111,31 @@ pub struct FigOpts {
     /// Bypass the content-addressed sweep cache (`--no-cache`); the
     /// default `false` keeps `figures --all` incremental across runs.
     pub no_cache: bool,
+    /// Event-driven fast-forward in the engines driving the sweeps
+    /// (`--no-fast-forward` disables it). Reports are bit-equivalent
+    /// either way by construction, but the cache key must NOT assume
+    /// that equivalence — flipping this misses the cache.
+    pub fast_forward: bool,
+    /// Override the `adaptive` artefact's auto-anchored p99-ITL SLO
+    /// (milliseconds); `None` anchors it between the measured grid
+    /// extremes.
+    pub slo_itl_ms: Option<f64>,
+    /// Relative log-error sigma of the `adaptive` artefact's
+    /// output-length predictor; `None` uses the S3-style default (0.3).
+    pub predict_err: Option<f64>,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            seed: 0,
+            no_cache: false,
+            fast_forward: true,
+            slo_itl_ms: None,
+            predict_err: None,
+        }
+    }
 }
 
 impl FigOpts {
@@ -136,6 +162,48 @@ impl FigOpts {
             vec![1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256, 384, 512]
         }
     }
+
+    /// Parse the figure-generation flags shared by `memgap figures` and
+    /// the standalone `figures` binary: `--quick`, `--seed`,
+    /// `--no-cache`, `--no-fast-forward`, `--controller-slo-itl-ms`,
+    /// `--predict-err`.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<Self> {
+        let strict_f64 = |key: &str| -> Result<Option<f64>> {
+            match args.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let x: f64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'"))?;
+                    if !x.is_finite() {
+                        bail!("--{key} must be finite, got {x}");
+                    }
+                    Ok(Some(x))
+                }
+            }
+        };
+        let mut opts = if args.bool_or("quick", false) {
+            Self::quick()
+        } else {
+            Self::default()
+        };
+        opts.seed = args.u64_or("seed", opts.seed);
+        opts.no_cache = args.bool_or("no-cache", false);
+        opts.fast_forward = !args.bool_or("no-fast-forward", false);
+        opts.slo_itl_ms = strict_f64("controller-slo-itl-ms")?;
+        if let Some(ms) = opts.slo_itl_ms {
+            if ms <= 0.0 {
+                bail!("--controller-slo-itl-ms must be positive, got {ms}");
+            }
+        }
+        opts.predict_err = strict_f64("predict-err")?;
+        if let Some(s) = opts.predict_err {
+            if s < 0.0 {
+                bail!("--predict-err must be >= 0, got {s}");
+            }
+        }
+        Ok(opts)
+    }
 }
 
 /// All artefact ids: the paper's figures/tables in paper order, then
@@ -143,6 +211,7 @@ impl FigOpts {
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp", "faults",
+    "adaptive",
 ];
 
 /// Generate one artefact by id.
@@ -169,6 +238,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "prefix" => prefix_figs::prefix_sweep(opts),
         "tp" => tp_figs::tp_sweep(opts),
         "faults" => faults_figs::faults_sweep(opts),
+        "adaptive" => adaptive_figs::adaptive(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

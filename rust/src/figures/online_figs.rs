@@ -165,7 +165,8 @@ pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
 /// OPT-1.3B.
 pub fn online(opts: &FigOpts) -> Result<Vec<Table>> {
     let spec = ModelSpec::opt_1_3b();
-    let base = OfflineConfig::new(spec.clone(), 96);
+    let mut base = OfflineConfig::new(spec.clone(), 96);
+    base.fast_forward = opts.fast_forward;
     let n_req = opts.requests();
     let cap = calibrate_capacity_rps(&base, 96, n_req, opts.seed)?;
 

@@ -38,16 +38,31 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
             [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
-            [--no-fast-forward] [--fault-* ...]
+            [--no-fast-forward] [--fault-* ...] [--controller-* ...]
+            [--predict-* ...]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
-            [--no-fast-forward] [--fault-* ...]
+            [--no-fast-forward] [--fault-* ...] [--controller-* ...]
+            [--predict-* ...]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
             [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
             [--slo-itl-ms X] [--csv PATH] [--fault-* ...]
+            [--controller-* ...] [--predict-* ...]
+
+  Adaptive admission control (offline/online apply it to the engine; plan
+  applies it to every probed grid point):
+    --controller-slo-itl-ms X   enable: defend a p99 ITL SLO of X ms
+    --controller-interval-ms X  virtual-time decision period (default 250)
+    --controller-min-seqs N     budget floor (default 1)
+    --controller-step N         additive increase per healthy decision
+    --controller-decrease F     multiplicative decrease in (0,1) (default 0.5)
+    --controller-kv-high F      KV-pressure threshold (default 0.9)
+  Output-length prediction (S3-style, seeded noise around true lengths):
+    --predict-err SIGMA         relative log-error sigma (default 0.3; 0 = oracle)
+    --predict-seed S            predictor noise seed (default 0)
 
   Fault injection (offline/online take the schedule verbatim; plan splits
   it across each grid point's replicas). Comma-separated specs:
@@ -58,7 +73,8 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
-  figures   --all | --fig figN/tableN [--out results] [--quick] [--no-cache]
+  figures   --all | --fig figN/tableN/adaptive [--out results] [--quick] [--no-cache]
+            [--seed N] [--no-fast-forward] [--controller-slo-itl-ms MS] [--predict-err S]
 
 Models: OPT-1.3B, OPT-2.7B, Llama-2-7B, Llama-2-13B, tiny-opt";
 
@@ -122,6 +138,90 @@ fn print_fault_stats(f: &memgap::faults::FaultStats) {
     println!("downtime         : {:.3} s", f.downtime);
     if f.swap_denied > 0 {
         println!("swap denials     : {} (fell back to recompute)", f.swap_denied);
+    }
+}
+
+/// Closed-loop admission controller: enabled iff `--controller-slo-itl-ms`
+/// is given (the SLO it defends); the remaining `--controller-*` flags
+/// tune the AIMD gains and error out when passed without it.
+fn controller_args(args: &Args) -> Result<Option<memgap::bca::controller::ControllerConfig>> {
+    use memgap::bca::controller::ControllerConfig;
+    let tuning = [
+        "controller-interval-ms",
+        "controller-min-seqs",
+        "controller-step",
+        "controller-decrease",
+        "controller-kv-high",
+    ];
+    let Some(ms) = f64_flag(args, "controller-slo-itl-ms")? else {
+        if let Some(k) = tuning.iter().copied().find(|&k| args.has(k)) {
+            bail!("--{k} needs --controller-slo-itl-ms to enable the controller");
+        }
+        return Ok(None);
+    };
+    if !ms.is_finite() || ms <= 0.0 {
+        bail!("--controller-slo-itl-ms must be a positive number");
+    }
+    let mut cfg = ControllerConfig::new(ms / 1e3);
+    if let Some(iv) = f64_flag(args, "controller-interval-ms")? {
+        if !iv.is_finite() || iv <= 0.0 {
+            bail!("--controller-interval-ms must be a positive number");
+        }
+        cfg.interval = iv / 1e3;
+    }
+    cfg.min_seqs = args.usize_or("controller-min-seqs", cfg.min_seqs);
+    cfg.additive_step = args.usize_or("controller-step", cfg.additive_step).max(1);
+    if let Some(f) = f64_flag(args, "controller-decrease")? {
+        if !(f > 0.0 && f < 1.0) {
+            bail!("--controller-decrease must be in (0, 1)");
+        }
+        cfg.decrease_factor = f;
+    }
+    if let Some(k) = f64_flag(args, "controller-kv-high")? {
+        if !(0.0..=1.0).contains(&k) {
+            bail!("--controller-kv-high must be in [0, 1]");
+        }
+        cfg.kv_high = k;
+    }
+    Ok(Some(cfg))
+}
+
+/// S³-style output-length predictor: enabled iff any `--predict-*` flag
+/// is given (default sigma 0.3, seed 0; `--predict-err 0` is an oracle).
+fn predictor_args(args: &Args) -> Result<Option<memgap::workload::PredictorConfig>> {
+    if !args.has("predict-err") && !args.has("predict-seed") {
+        return Ok(None);
+    }
+    let mut p = memgap::workload::PredictorConfig::default();
+    if let Some(s) = f64_flag(args, "predict-err")? {
+        if !s.is_finite() || s < 0.0 {
+            bail!("--predict-err must be >= 0");
+        }
+        p.rel_err_sigma = s;
+    }
+    p.seed = args.u64_or("predict-seed", p.seed);
+    Ok(Some(p))
+}
+
+/// Controller/prediction summary lines shared by `offline` and `online`.
+fn print_controller_stats(
+    c: Option<&memgap::bca::controller::ControllerReport>,
+    pred: &memgap::metrics::PredictionStats,
+) {
+    if let Some(c) = c {
+        println!(
+            "controller       : {} decisions ({} up, {} down), budget {}..{}, final {}",
+            c.decisions, c.increases, c.decreases, c.min_budget, c.max_budget, c.final_budget
+        );
+    }
+    if pred.predicted_requests > 0 {
+        println!(
+            "prediction       : {} requests, mean |err| {:.1} tok (signed {:+.1}), {} overruns",
+            pred.predicted_requests,
+            pred.mean_abs_err(),
+            pred.mean_signed_err(),
+            pred.overruns
+        );
     }
 }
 
@@ -246,6 +346,8 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.prefix = prefix_args(args)?;
     cfg.tp = tp_arg(args, &cfg.model)?;
     cfg.faults = fault_args(args)?;
+    cfg.controller = controller_args(args)?;
+    cfg.predictor = predictor_args(args)?;
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
     if cfg.tp > 1 {
@@ -289,6 +391,7 @@ fn cmd_offline(args: &Args) -> Result<()> {
         );
     }
     print_fault_stats(&r.faults);
+    print_controller_stats(r.controller.as_ref(), &r.prediction);
     Ok(())
 }
 
@@ -352,6 +455,8 @@ fn cmd_online(args: &Args) -> Result<()> {
     cfg.engine.preempt = preempt_arg(args)?;
     cfg.engine.tp = tp_arg(args, &cfg.engine.model)?;
     cfg.engine.faults = fault_args(args)?;
+    cfg.engine.controller = controller_args(args)?;
+    cfg.engine.predictor = predictor_args(args)?;
     cfg.workload.prefix = prefix_args(args)?;
     cfg.slo = slo_arg(args)?;
     let rep = run_online(&cfg)?;
@@ -393,6 +498,7 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("swap-outs        : {}", rep.swap_outs);
     }
     print_fault_stats(&rep.faults);
+    print_controller_stats(rep.controller.as_ref(), &rep.prediction);
     if let Some(path) = args.get("json") {
         std::fs::write(path, format!("{}\n", rep.to_json()))?;
         eprintln!("wrote {path}");
@@ -430,7 +536,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         cfg.slo_itl = Some(ms / 1e3);
     }
     cfg.faults = fault_args(args)?;
-    let reqs = generate(&WorkloadConfig::poisson(num_requests, rate, seed));
+    // Controller/predictor ride on every probed grid point (the
+    // controller's ceiling is each point's probed batch).
+    let mut base = base;
+    base.controller = controller_args(args)?;
+    base.predictor = predictor_args(args)?;
+    let mut wl = WorkloadConfig::poisson(num_requests, rate, seed);
+    wl.predictor = base.predictor;
+    let reqs = generate(&wl);
     eprintln!(
         "planning {} over {:?} x {:?} x tp {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",
         spec.name, cfg.batch_grid, cfg.replica_grid, cfg.tp_grid
@@ -624,12 +737,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    let mut opts = if args.bool_or("quick", false) {
-        FigOpts::quick()
-    } else {
-        FigOpts::default()
-    };
-    opts.no_cache = args.bool_or("no-cache", false);
+    let opts = FigOpts::from_args(args)?;
     let out = std::path::PathBuf::from(args.get_or("out", "results"));
     let ids: Vec<&str> = if args.bool_or("all", false) {
         figures::ALL_IDS.to_vec()

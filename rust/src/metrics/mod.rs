@@ -167,6 +167,66 @@ impl Slo {
     }
 }
 
+/// Output-length prediction accuracy over finished requests (all-zero
+/// when the workload carried no predictor). Accumulated by the engine
+/// at retirement — the single place a sequence's final `generated`
+/// count is known.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PredictionStats {
+    /// Finished requests that carried a prediction.
+    pub predicted_requests: usize,
+    /// Sum of |generated - predicted| over those requests (tokens).
+    pub abs_err_sum: f64,
+    /// Sum of (generated - predicted): positive = underprediction.
+    pub signed_err_sum: f64,
+    /// Requests whose generation exceeded the prediction.
+    pub overruns: usize,
+}
+
+impl PredictionStats {
+    /// Fold one finished request's (predicted, generated) pair in.
+    pub fn observe(&mut self, predicted: usize, generated: usize) {
+        self.predicted_requests += 1;
+        let err = generated as f64 - predicted as f64;
+        self.abs_err_sum += err.abs();
+        self.signed_err_sum += err;
+        if generated > predicted {
+            self.overruns += 1;
+        }
+    }
+
+    /// Mean absolute prediction error in tokens (0 when nothing was
+    /// predicted — never NaN).
+    pub fn mean_abs_err(&self) -> f64 {
+        if self.predicted_requests == 0 {
+            0.0
+        } else {
+            self.abs_err_sum / self.predicted_requests as f64
+        }
+    }
+
+    /// Mean signed prediction error in tokens (0 when nothing was
+    /// predicted — never NaN).
+    pub fn mean_signed_err(&self) -> f64 {
+        if self.predicted_requests == 0 {
+            0.0
+        } else {
+            self.signed_err_sum / self.predicted_requests as f64
+        }
+    }
+
+    /// Deterministic JSON rendering for reports and figure artifacts.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("predicted_requests", Json::num(self.predicted_requests as f64)),
+            ("mean_abs_err_tokens", Json::num(self.mean_abs_err())),
+            ("mean_signed_err_tokens", Json::num(self.mean_signed_err())),
+            ("overruns", Json::num(self.overruns as f64)),
+        ])
+    }
+}
+
 /// Collector the engine feeds during a run.
 #[derive(Debug, Default, Clone)]
 pub struct MetricsCollector {
@@ -500,6 +560,87 @@ mod tests {
             ..Slo::default()
         };
         assert_eq!(m.attainment(&tight_ttft), 0.0);
+    }
+
+    #[test]
+    fn empty_collector_yields_finite_metrics_and_vacuous_slo() {
+        // Zero admitted/completed requests: every aggregate must be
+        // finite (no 0/0 NaN), attainment vacuously perfect, goodput 0.
+        let m = MetricsCollector::new().finish(0.0);
+        assert_eq!(m.num_requests, 0);
+        assert_eq!(m.completed, 0);
+        assert!(m.latencies.is_empty());
+        for x in [
+            m.throughput_tps,
+            m.mean_itl,
+            m.p99_itl,
+            m.mean_e2e,
+            m.avg_batch,
+            m.cpu_time_frac,
+        ] {
+            assert!(x.is_finite(), "non-finite aggregate {x}");
+            assert_eq!(x, 0.0);
+        }
+        let slo = Slo::itl_only(0.01);
+        assert_eq!(m.attainment(&slo), 1.0);
+        assert_eq!(m.goodput_rps(&slo), 0.0);
+        assert_eq!(m.ttft_percentiles(), Percentiles::default());
+        assert_eq!(m.itl_percentiles(), Percentiles::default());
+        assert_eq!(m.e2e_percentiles(), Percentiles::default());
+    }
+
+    #[test]
+    fn admitted_but_unfinished_requests_do_not_poison_aggregates() {
+        // A request that never produced a token (e.g. still waiting at
+        // shutdown) must not contribute NaN latencies or count as
+        // completed.
+        let mut c = MetricsCollector::new();
+        c.on_admit(1, 0.0, 10);
+        let m = c.finish(1.0);
+        assert_eq!(m.num_requests, 1);
+        assert_eq!(m.completed, 0);
+        assert!(m.latencies.is_empty());
+        assert!(m.mean_e2e.is_finite() && m.mean_itl.is_finite());
+        assert_eq!(m.attainment(&Slo::default()), 1.0);
+    }
+
+    #[test]
+    fn streaming_summary_empty_and_single_sample_edges() {
+        let empty = StreamingSummary::new();
+        assert_eq!(empty.count(), 0);
+        let p = empty.finalize();
+        assert_eq!(p, Percentiles::default());
+        assert!(p.mean.is_finite() && p.p99.is_finite());
+        let mut one = StreamingSummary::new();
+        one.observe(0.25);
+        let p = one.finalize();
+        assert_eq!(p.count, 1);
+        assert_eq!((p.mean, p.p50, p.p90, p.p99), (0.25, 0.25, 0.25, 0.25));
+    }
+
+    #[test]
+    fn zero_makespan_gives_zero_goodput_not_nan() {
+        let m = collector_with_two_requests().finish(0.0);
+        let g = m.goodput_rps(&Slo::default());
+        assert!(g.is_finite());
+        assert_eq!(g, 0.0);
+        assert!(m.throughput_tps.is_finite());
+        assert!(m.cpu_time_frac.is_finite());
+    }
+
+    #[test]
+    fn prediction_stats_edges_and_accumulation() {
+        let z = PredictionStats::default();
+        assert!(z.mean_abs_err().is_finite() && z.mean_signed_err().is_finite());
+        assert_eq!((z.mean_abs_err(), z.mean_signed_err()), (0.0, 0.0));
+        let mut s = PredictionStats::default();
+        s.observe(10, 14); // underprediction: overrun
+        s.observe(20, 12); // overprediction
+        s.observe(5, 5); // exact
+        assert_eq!(s.predicted_requests, 3);
+        assert_eq!(s.overruns, 1);
+        assert!((s.mean_abs_err() - 4.0).abs() < 1e-12);
+        assert!((s.mean_signed_err() + 4.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct Request {
     pub output_tokens: usize,
     /// Shared system-prompt prefix, when the workload models one.
     pub prefix: Option<SharedPrefix>,
+    /// S³-style predicted output length, when the workload carries a
+    /// predictor ([`PredictorConfig`]). Admission and preemption use it
+    /// as the *expected* generation length; the true `output_tokens`
+    /// stays the ground truth the engine decodes.
+    pub predicted: Option<usize>,
 }
 
 impl Request {
@@ -62,6 +67,31 @@ pub struct SharedPrefixConfig {
     pub share: f64,
 }
 
+/// S³-style output-length predictor layered over a workload: each
+/// request carries `predicted ≈ output_tokens · exp(σ·z)` with
+/// `z ~ N(0, 1)` drawn from a side hash of `(seed, id)` — never the
+/// main RNG stream — so attaching or re-seeding the predictor leaves
+/// the lengths, arrivals, and prefix classes of the same workload seed
+/// bit-identical (the same idiom [`SharedPrefixConfig`] uses).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictorConfig {
+    /// Log-space relative error sigma; `0.0` is an oracle predictor
+    /// (predicted == true output length).
+    pub rel_err_sigma: f64,
+    /// Extra seed folded into the side hash so prediction error can be
+    /// re-rolled independently of the workload seed.
+    pub seed: u64,
+}
+
+impl Default for PredictorConfig {
+    fn default() -> Self {
+        Self {
+            rel_err_sigma: 0.3,
+            seed: 0,
+        }
+    }
+}
+
 /// Workload generator configuration.
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -72,6 +102,8 @@ pub struct WorkloadConfig {
     pub lengths: LengthDistribution,
     /// Shared system-prompt classes (None = fully distinct prompts).
     pub prefix: Option<SharedPrefixConfig>,
+    /// Output-length predictor (None = no predictions attached).
+    pub predictor: Option<PredictorConfig>,
 }
 
 #[derive(Debug, Clone)]
@@ -124,6 +156,7 @@ impl Default for WorkloadConfig {
                 mean_output: SHAREGPT_MEAN_OUTPUT,
             },
             prefix: None,
+            predictor: None,
         }
     }
 }
@@ -182,6 +215,27 @@ fn assign_prefix(cfg: &WorkloadConfig, id: usize, input: usize) -> Option<Shared
     } else {
         None
     }
+}
+
+/// Predicted output length for request `id` with true length `output`.
+/// Deterministic in (workload seed, predictor seed, id) via a side
+/// hash — same isolation guarantee as [`assign_prefix`]: the main RNG
+/// stream is untouched, so predictor sweeps reuse identical traces.
+fn predict_output(cfg: &WorkloadConfig, id: usize, output: usize) -> Option<usize> {
+    let p = cfg.predictor?;
+    if p.rel_err_sigma <= 0.0 {
+        return Some(output.max(1));
+    }
+    let h1 = mix64(cfg.seed ^ p.seed.wrapping_mul(0xD1B54A32D192ED03)
+        ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let h2 = mix64(h1 ^ 0x2545F4914F6CDD1D);
+    // Box–Muller over two (0, 1] uniforms; the +1 keeps u1 off zero so
+    // ln(u1) is always finite.
+    let u1 = ((h1 >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64);
+    let u2 = (h2 >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let z = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+    let pred = (output as f64 * (p.rel_err_sigma * z).exp()).round();
+    Some((pred.max(1.0) as usize).min(cfg.max_context))
 }
 
 /// Advance `t` to the next arrival of the on/off-modulated Poisson
@@ -260,12 +314,14 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
                 }
             }
         };
+        let output = output.max(1);
         out.push(Request {
             id: id as u64,
             arrival,
             prompt_tokens: input,
-            output_tokens: output.max(1),
+            output_tokens: output,
             prefix: assign_prefix(cfg, id, input),
+            predicted: predict_output(cfg, id, output),
         });
     }
     // Normalize: traces must leave the generator sorted by arrival
@@ -456,6 +512,58 @@ mod tests {
             }
         }
         assert_eq!(with_share(0.0).iter().filter(|r| r.prefix.is_some()).count(), 0);
+    }
+
+    #[test]
+    fn predictor_is_deterministic_and_never_perturbs_the_trace() {
+        let with_pred = |pred: Option<PredictorConfig>| {
+            let cfg = WorkloadConfig {
+                predictor: pred,
+                ..WorkloadConfig::poisson(500, 20.0, 11)
+            };
+            generate(&cfg)
+        };
+        let none = with_pred(None);
+        let p = PredictorConfig {
+            rel_err_sigma: 0.4,
+            seed: 3,
+        };
+        let a = with_pred(Some(p));
+        let b = with_pred(Some(p));
+        // Side-hash isolation: the trace itself is bit-identical.
+        for ((x, y), z) in none.iter().zip(&a).zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+            assert!(x.predicted.is_none());
+            assert_eq!(y.predicted, z.predicted, "prediction must be deterministic");
+            let pr = y.predicted.unwrap();
+            assert!(pr >= 1 && pr <= 2048, "prediction {pr} out of range");
+        }
+        // Errors are genuinely distributed: not every prediction exact,
+        // and re-seeding the predictor re-rolls them.
+        assert!(a.iter().any(|r| r.predicted != Some(r.output_tokens)));
+        let reseeded = with_pred(Some(PredictorConfig { seed: 4, ..p }));
+        assert!(a.iter().zip(&reseeded).any(|(x, y)| x.predicted != y.predicted));
+        // Mean relative error is moderate for sigma=0.4 (lognormal
+        // around the truth, not a constant bias).
+        let over = a.iter().filter(|r| r.predicted.unwrap() > r.output_tokens).count();
+        assert!((100..400).contains(&over), "overpredictions {over}");
+    }
+
+    #[test]
+    fn oracle_predictor_matches_true_lengths() {
+        let cfg = WorkloadConfig {
+            predictor: Some(PredictorConfig {
+                rel_err_sigma: 0.0,
+                seed: 0,
+            }),
+            ..WorkloadConfig::sharegpt(200, 5)
+        };
+        for r in generate(&cfg) {
+            assert_eq!(r.predicted, Some(r.output_tokens));
+        }
     }
 
     #[test]

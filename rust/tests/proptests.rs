@@ -251,6 +251,7 @@ fn prop_router_total_and_balanced() {
                 prompt_tokens: rng.range(1, 500),
                 output_tokens: rng.range(1, 500),
                 prefix: None,
+                predicted: None,
             })
             .collect();
         for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Hash] {
@@ -284,6 +285,7 @@ fn prop_round_robin_counts_are_ceil_floor_fair() {
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
                 prefix: None,
+                predicted: None,
             })
             .collect();
         let mut router = Router::new(RoutePolicy::RoundRobin, k);
@@ -321,6 +323,7 @@ fn prop_least_loaded_never_picks_a_strictly_heavier_replica() {
                     prompt_tokens: rng.range(1, 2000),
                     output_tokens: rng.range(1, 1000),
                     prefix: None,
+                    predicted: None,
                 };
                 let chosen = router.route(&req);
                 let min = *shadow.iter().min().unwrap();
@@ -353,6 +356,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
                 prefix: None,
+                predicted: None,
             };
             warmed.route(&noise);
         }
@@ -363,6 +367,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 prompt_tokens: rng.range(1, 100),
                 output_tokens: rng.range(1, 100),
                 prefix: None,
+                predicted: None,
             };
             let a = fresh.route(&req);
             let b = warmed.route(&req);
@@ -441,6 +446,7 @@ fn prop_engine_serves_everything() {
                 prompt_tokens: rng.range(1, 300),
                 output_tokens: rng.range(1, 120),
                 prefix: None,
+                predicted: None,
             })
             .collect();
         let expected_out: usize = reqs.iter().map(|r| r.output_tokens).sum();
@@ -493,6 +499,7 @@ fn prop_workload_respects_context() {
                 mean_output: rng.range(10, 600),
             },
             prefix: None,
+            predictor: None,
         };
         for r in generate(&cfg) {
             assert!(r.prompt_tokens + r.output_tokens <= cfg.max_context);
@@ -528,6 +535,7 @@ fn prop_fast_forward_bit_equivalent() {
                     prompt_tokens: rng.range(1, 200),
                     output_tokens: rng.range(1, 90),
                     prefix: None,
+                    predicted: None,
                 }
             })
             .collect();

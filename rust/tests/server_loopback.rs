@@ -5,6 +5,7 @@
 //! submission to last token).
 
 use std::net::TcpListener;
+use std::time::{Duration, Instant};
 
 use memgap::backend::SimBackend;
 use memgap::coordinator::engine::{Engine, EngineConfig};
@@ -74,4 +75,65 @@ fn loopback_generate_stats_shutdown_on_ephemeral_port() {
     client_shutdown(&addr).unwrap();
     let served = server.join().unwrap();
     assert_eq!(served, 6, "served {served}");
+}
+
+/// The `stats` kv_usage gauge must be a *live* reading, refreshed by
+/// the engine worker after every step — not a value that only becomes
+/// visible once requests finish (by which point the pool has drained
+/// back to zero). Long generations keep KV blocks resident while a
+/// poller watches the gauge over the real socket.
+#[test]
+fn stats_kv_usage_gauge_is_live_mid_flight() {
+    let backend = SimBackend::new(
+        GpuSpec::h100_64g(),
+        ModelSpec::opt_1_3b(),
+        AttentionBackendKind::XFormers,
+    );
+    // max_num_seqs 4 with 6 clients forces two admission waves, so the
+    // pool stays occupied for the whole span of the run.
+    let engine = Engine::new(backend, EngineConfig::new(4, 4096, 16));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || serve_listener(engine, listener).unwrap());
+
+    // 64 + 1900 tokens per sequence stays under max_blocks_per_seq
+    // (2048 tokens) while holding ~119 blocks each for thousands of
+    // engine steps.
+    let clients: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || client_generate(&addr, 64, 1900).unwrap())
+        })
+        .collect();
+
+    // Poll until a reading lands mid-flight. The worker stores the
+    // gauge after every step, so any poll while sequences are resident
+    // must see kv_usage > 0; the deadline only bounds the test.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut mid = None;
+    while Instant::now() < deadline {
+        let stats = client_stats(&addr).unwrap();
+        let kv = stats.get("kv_usage").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&kv), "kv_usage out of range: {kv}");
+        if kv > 0.0 {
+            mid = Some((kv, stats.get("steps").unwrap().as_usize().unwrap()));
+            break;
+        }
+    }
+    let (kv_mid, steps_mid) =
+        mid.expect("no non-zero kv_usage observed while generations were in flight");
+    assert!(kv_mid > 0.0 && kv_mid <= 1.0, "kv_usage {kv_mid}");
+    assert!(steps_mid > 0, "a resident sequence implies executed steps");
+
+    for c in clients {
+        let resp = c.join().unwrap();
+        assert!(resp.get("error").is_none(), "{resp}");
+        assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 1900);
+    }
+    let fin = client_stats(&addr).unwrap();
+    assert_eq!(fin.get("served").unwrap().as_usize(), Some(6));
+    assert!(fin.get("steps").unwrap().as_usize().unwrap() >= steps_mid);
+
+    client_shutdown(&addr).unwrap();
+    assert_eq!(server.join().unwrap(), 6);
 }
