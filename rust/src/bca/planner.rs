@@ -13,7 +13,11 @@
 //! collectives of `gpusim::collectives` while replicas buy parallel
 //! host loops, the planner *derives* the paper's
 //! replication-over-sharding prescription from costs instead of
-//! assuming it.
+//! assuming it. Disaggregated prefill/decode pool shapes
+//! ([`measure_point_disagg`]) compete on the same goodput axis: they
+//! buy chunk-interference-free decode ITL at the price of KV migration
+//! and a partitioned fleet, so long prompts under tight ITL SLOs favor
+//! them and short prompts favor co-location.
 //!
 //! Measurement ([`measure_point`] / [`plan_joint`]) is separated from
 //! scoring ([`score_point`]), so the selection logic is pure and unit
@@ -25,6 +29,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::disagg::{run_disagg, DisaggConfig, MigrateLink};
 use crate::coordinator::offline::OfflineConfig;
 use crate::faults::FaultPlan;
 use crate::gpusim::mps::SharePolicy;
@@ -61,6 +66,14 @@ pub struct JointPlannerConfig {
     /// point (split across that point's replicas), so plans can be
     /// drawn under failure instead of assuming a fault-free fleet.
     pub faults: Option<FaultPlan>,
+    /// Disaggregated `(prefill engines, decode engines)` pool shapes to
+    /// probe alongside the co-located grid (default empty: no disagg
+    /// points, the pre-disaggregation plan bit-for-bit). Each pool
+    /// engine is unsharded on its own GPU, so a `(p, d)` shape spends
+    /// `p + d` GPUs of the budget.
+    pub disagg_pools: Vec<(usize, usize)>,
+    /// Interconnect probed disagg points pay for KV handoffs.
+    pub migrate_link: MigrateLink,
 }
 
 impl JointPlannerConfig {
@@ -75,6 +88,8 @@ impl JointPlannerConfig {
             slo_itl: None,
             anchor_factor: 3.0,
             faults: None,
+            disagg_pools: Vec::new(),
+            migrate_link: MigrateLink::NvLink,
         }
     }
 
@@ -85,6 +100,14 @@ impl JointPlannerConfig {
         self.gpus = gpus.max(1);
         self
     }
+
+    /// Also probe disaggregated prefill/decode pool shapes over `link`
+    /// (the disaggregation-vs-co-location frontier).
+    pub fn with_disagg(mut self, pools: Vec<(usize, usize)>, link: MigrateLink) -> Self {
+        self.disagg_pools = pools;
+        self.migrate_link = link;
+        self
+    }
 }
 
 /// Raw measurements of one grid point (SLO-independent).
@@ -92,10 +115,15 @@ impl JointPlannerConfig {
 pub struct MeasuredPoint {
     /// Probed `max_num_seqs` setting.
     pub max_batch: usize,
-    /// Probed replica count.
+    /// Probed replica count (for a disaggregated point: total engines
+    /// across both pools).
     pub replicas: usize,
     /// Probed tensor-parallel degree (1 = unsharded).
     pub tp: usize,
+    /// Prefill-pool engines for a disaggregated point (0 = co-located).
+    pub prefill_engines: usize,
+    /// Decode-pool engines for a disaggregated point (0 = co-located).
+    pub decode_engines: usize,
     /// Memory share each replica ran with (`1/replicas`).
     pub mem_fraction_each: f64,
     /// Aggregate (input+output) tokens/s over the shared makespan.
@@ -115,10 +143,15 @@ pub struct MeasuredPoint {
 pub struct PlanPoint {
     /// Probed `max_num_seqs` setting.
     pub max_batch: usize,
-    /// Probed replica count.
+    /// Probed replica count (for a disaggregated point: total engines
+    /// across both pools).
     pub replicas: usize,
     /// Probed tensor-parallel degree (1 = unsharded).
     pub tp: usize,
+    /// Prefill-pool engines for a disaggregated point (0 = co-located).
+    pub prefill_engines: usize,
+    /// Decode-pool engines for a disaggregated point (0 = co-located).
+    pub decode_engines: usize,
     /// Memory share each replica ran with (`1/replicas`).
     pub mem_fraction_each: f64,
     /// Aggregate (input+output) tokens/s over the shared makespan.
@@ -142,8 +175,9 @@ pub struct PlanPoint {
 pub struct JointPlan {
     /// The p99 ITL SLO the plan was scored against (seconds).
     pub slo_itl: f64,
-    /// All scored points, in (batch-major, replica, tp-minor) grid
-    /// order.
+    /// All scored points: the co-located (batch-major, replica,
+    /// tp-minor) grid first, then any disaggregated (batch-major,
+    /// pool-shape) points.
     pub points: Vec<PlanPoint>,
     /// Feasible point with the highest goodput; ties break toward the
     /// lowest (batch, replicas, tp) — see [`select_best`].
@@ -183,6 +217,19 @@ impl JointPlan {
         }
         best
     }
+
+    /// The best disaggregated prefill/decode point by goodput (`None`
+    /// when no pool shapes were probed) — the disaggregation side of
+    /// the disaggregation-vs-co-location frontier.
+    pub fn best_disagg(&self) -> Option<&PlanPoint> {
+        let mut best: Option<&PlanPoint> = None;
+        for p in self.points.iter().filter(|p| p.prefill_engines > 0) {
+            if best.map(|b| p.goodput_rps > b.goodput_rps).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+        best
+    }
 }
 
 /// Run one (batch, replicas) point over `requests` and collect its
@@ -209,6 +256,8 @@ pub fn measure_point(
         max_batch,
         replicas,
         tp: 1,
+        prefill_engines: 0,
+        decode_engines: 0,
         mem_fraction_each: frac,
         throughput_tps: rep.throughput_tps,
         completed: rep.completed(),
@@ -248,11 +297,48 @@ pub fn measure_point_cluster(
         max_batch,
         replicas,
         tp,
+        prefill_engines: 0,
+        decode_engines: 0,
         mem_fraction_each: rep.mem_fraction_each,
         throughput_tps: rep.throughput_tps,
         completed: rep.completed(),
         makespan: rep.makespan,
         itls: rep.stretched_itls(),
+    })
+}
+
+/// [`measure_point`] for a disaggregated fleet: `prefill_engines` +
+/// `decode_engines` unsharded engines, each at `base`'s full per-engine
+/// memory on its own GPU, with KV handoffs paying `link`
+/// ([`run_disagg`]). ITL samples come merged end-to-end — the gap to a
+/// migrated request's second token includes any exposed migration wait
+/// — so the SLO grades the user-visible token stream, not per-pool
+/// internals.
+pub fn measure_point_disagg(
+    base: &OfflineConfig,
+    max_batch: usize,
+    prefill_engines: usize,
+    decode_engines: usize,
+    link: MigrateLink,
+    requests: &[Request],
+) -> Result<MeasuredPoint> {
+    let mut cfg = base.clone();
+    cfg.max_num_seqs = max_batch;
+    let mut dcfg = DisaggConfig::new(prefill_engines, decode_engines);
+    dcfg.link = link;
+    dcfg.faults = cfg.faults.take();
+    let rep = run_disagg(&cfg, &dcfg, requests)?;
+    Ok(MeasuredPoint {
+        max_batch,
+        replicas: prefill_engines + decode_engines,
+        tp: 1,
+        prefill_engines,
+        decode_engines,
+        mem_fraction_each: cfg.mem_fraction,
+        throughput_tps: rep.throughput_tps,
+        completed: rep.completed,
+        makespan: rep.makespan,
+        itls: rep.itls,
     })
 }
 
@@ -277,6 +363,8 @@ pub fn score_point(m: &MeasuredPoint, slo_itl: f64) -> PlanPoint {
         max_batch: m.max_batch,
         replicas: m.replicas,
         tp: m.tp,
+        prefill_engines: m.prefill_engines,
+        decode_engines: m.decode_engines,
         mem_fraction_each: m.mem_fraction_each,
         throughput_tps: m.throughput_tps,
         completed: m.completed,
@@ -291,8 +379,11 @@ pub fn score_point(m: &MeasuredPoint, slo_itl: f64) -> PlanPoint {
 /// Pick the feasible point with the highest goodput. NaN-safe: a NaN
 /// goodput (degenerate measurement) sorts below every real number
 /// instead of panicking, and exact ties break deterministically toward
-/// the lowest (batch, replicas, tp) — the cheapest configuration that
-/// achieves the best goodput, independent of grid enumeration order.
+/// the lowest (batch, replicas, tp, prefill, decode) — the cheapest
+/// configuration that achieves the best goodput, independent of grid
+/// enumeration order. Co-located points carry (0, 0) pools, so on an
+/// exact goodput tie co-location beats disaggregation (no migration
+/// machinery to operate for the same result).
 pub fn select_best(points: &[PlanPoint]) -> Option<PlanPoint> {
     let key = |p: &PlanPoint| {
         if p.goodput_rps.is_nan() {
@@ -309,7 +400,19 @@ pub fn select_best(points: &[PlanPoint]) -> Option<PlanPoint> {
                 std::cmp::Ordering::Greater => true,
                 std::cmp::Ordering::Less => false,
                 std::cmp::Ordering::Equal => {
-                    (p.max_batch, p.replicas, p.tp) < (b.max_batch, b.replicas, b.tp)
+                    (
+                        p.max_batch,
+                        p.replicas,
+                        p.tp,
+                        p.prefill_engines,
+                        p.decode_engines,
+                    ) < (
+                        b.max_batch,
+                        b.replicas,
+                        b.tp,
+                        b.prefill_engines,
+                        b.decode_engines,
+                    )
                 }
             },
         };
@@ -373,6 +476,26 @@ pub fn plan_joint(
     if grid.is_empty() {
         bail!("no (batch, replicas, tp) grid point fits the {gpus}-GPU budget");
     }
+    // Disaggregated pool shapes ride after the co-located grid; each
+    // engine of a (p, d) shape occupies its own GPU, so the shape must
+    // fit the budget outright.
+    let mut pools = cfg.disagg_pools.clone();
+    pools.sort_unstable();
+    pools.dedup();
+    for &(p, d) in &pools {
+        if p == 0 || d == 0 {
+            bail!("disagg pool shapes need at least one engine per pool (got {p}p+{d}d)");
+        }
+        if p + d > gpus {
+            bail!("disagg pool {p}p+{d}d exceeds the {gpus}-GPU budget");
+        }
+    }
+    let mut dgrid: Vec<(usize, usize, usize)> = Vec::new();
+    for &b in &batches {
+        for &(p, d) in &pools {
+            dgrid.push((b, p, d));
+        }
+    }
     // The fleet fault plan (if any) rides on the OfflineConfig so the
     // measure functions can hand it to the replication layer.
     let mut base = base.clone();
@@ -383,7 +506,13 @@ pub fn plan_joint(
     let measured = crate::util::par::par_map(&grid, |&(b, r, tp)| {
         measure_point_cluster(base, b, r, tp, gpus, requests)
     });
-    let measured: Vec<MeasuredPoint> = measured.into_iter().collect::<Result<_>>()?;
+    let mut measured: Vec<MeasuredPoint> = measured.into_iter().collect::<Result<_>>()?;
+    let dmeasured = crate::util::par::par_map(&dgrid, |&(b, p, d)| {
+        measure_point_disagg(base, b, p, d, cfg.migrate_link, requests)
+    });
+    for m in dmeasured {
+        measured.push(m?);
+    }
     // Auto-anchor: the smallest (batch, replicas, tp) point is the
     // grid's lowest-latency operating regime.
     let slo_itl = match cfg.slo_itl {
@@ -411,6 +540,8 @@ mod tests {
             max_batch: b,
             replicas: r,
             tp: 1,
+            prefill_engines: 0,
+            decode_engines: 0,
             mem_fraction_each: 1.0 / r as f64,
             throughput_tps: rps * 500.0,
             completed: n,
@@ -504,5 +635,36 @@ mod tests {
         let best = select_best(&[infeasible.clone(), mk(32, 2, 1)]).unwrap();
         assert_eq!(best.max_batch, 32);
         assert!(select_best(&[infeasible]).is_none());
+    }
+
+    #[test]
+    fn disagg_points_compete_but_lose_exact_ties_to_colocated() {
+        let slo = 1.0;
+        let mk_disagg = |b: usize, p: usize, d: usize, rps: f64| {
+            let mut m = measured(b, p + d, 0.001, rps, 100);
+            m.prefill_engines = p;
+            m.decode_engines = d;
+            score_point(&m, slo)
+        };
+        let colo = score_point(&measured(32, 2, 0.001, 10.0, 100), slo);
+        // Equal goodput, equal (batch, replicas, tp): co-location wins
+        // the tie — no migration machinery to operate for the same
+        // result — regardless of slice order.
+        for pts in [
+            [mk_disagg(32, 1, 1, 10.0), colo.clone()],
+            [colo.clone(), mk_disagg(32, 1, 1, 10.0)],
+        ] {
+            let best = select_best(&pts).unwrap();
+            assert_eq!((best.prefill_engines, best.decode_engines), (0, 0));
+        }
+        // Strictly better goodput: the disaggregated point wins.
+        let plan = JointPlan {
+            slo_itl: slo,
+            best: select_best(&[colo.clone(), mk_disagg(32, 1, 1, 12.0)]),
+            points: vec![colo, mk_disagg(32, 1, 1, 12.0)],
+        };
+        let best = plan.best.as_ref().unwrap();
+        assert_eq!((best.prefill_engines, best.decode_engines), (1, 1));
+        assert_eq!(plan.best_disagg().unwrap().prefill_engines, 1);
     }
 }

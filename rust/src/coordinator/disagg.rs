@@ -1,0 +1,504 @@
+//! Disaggregated prefill/decode serving (paper §VII discussion;
+//! LIMINAL's decode-disaggregation trade space).
+//!
+//! Co-locating prefill and decode forces one batching configuration to
+//! serve two opposed regimes: prefill is compute-bound, decode is
+//! DRAM-bandwidth-bound, and chunked prefill stretches every co-located
+//! token gap by the chunk's compute time. This module splits the fleet
+//! instead:
+//!
+//! 1. the dispatcher routes every prompt to a **prefill pool** engine
+//!    (round-robin, the replication router's policy);
+//! 2. at first token the sequence is handed off: its KV blocks stream
+//!    over the modeled interconnect (NVLink within a node, PCIe across
+//!    — [`crate::gpusim::collectives::kv_migrate_time`]) as a
+//!    [`MigratedSeq`] whose `ready()` time is handoff + transfer;
+//! 3. a **decode pool** engine resumes it once the stream lands.
+//!    Migration *overlaps* ongoing decode: only an engine with nothing
+//!    else to do waits for a stream, and that exposed wait is recorded
+//!    as [`Segment::KvMigrate`](crate::gpusim::mps::Segment) in its
+//!    trace. Landings join the fast-forward event horizon exactly like
+//!    arrivals, so ff stays bit-equivalent to stepwise.
+//!
+//! With a zero-cost link the decode trajectory is bit-identical to the
+//! co-located run (`tests/disagg.rs` pins this); with realistic link
+//! costs the planner trades migration + pool-partitioning overhead
+//! against chunk-interference-free decode ITL.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::backend::SimBackend;
+use crate::coordinator::engine::{Engine, EngineReport, FinishedSeq, MigratedSeq};
+use crate::coordinator::offline::OfflineConfig;
+use crate::faults::{FaultPlan, FaultStats};
+use crate::gpusim::collectives::kv_migrate_time;
+use crate::gpusim::GpuSpec;
+use crate::metrics::{Percentiles, RequestLatency, Slo};
+use crate::models::spec::ModelSpec;
+use crate::workload::Request;
+
+/// Which interconnect a KV migration rides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrateLink {
+    /// Free handoffs — the bit-equivalence baseline (`tests/disagg.rs`).
+    Zero,
+    /// Intra-node NVLink: one hop latency + payload at `nvlink_bw`.
+    NvLink,
+    /// Cross-node host path: payload at `GpuSpec::pcie_bw`.
+    Pcie,
+}
+
+impl MigrateLink {
+    /// Parse the `--migrate-link` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "zero" => Ok(Self::Zero),
+            "nvlink" => Ok(Self::NvLink),
+            "pcie" => Ok(Self::Pcie),
+            other => bail!("--migrate-link must be zero|nvlink|pcie, got '{other}'"),
+        }
+    }
+
+    /// Transfer seconds for one sequence's KV stream: whole blocks
+    /// (ceil of the prompt over `block_size`, times the per-token KV
+    /// footprint) over the chosen link. The first output token's KV is
+    /// produced decode-side, so only the prompt's blocks move.
+    pub fn time(
+        &self,
+        gpu: &GpuSpec,
+        model: &ModelSpec,
+        prompt_tokens: usize,
+        block_size: usize,
+    ) -> f64 {
+        if *self == MigrateLink::Zero {
+            return 0.0;
+        }
+        let bs = block_size.max(1);
+        let blocks = (prompt_tokens + bs - 1) / bs;
+        let bytes = model.kv_bytes_per_token() as f64 * (blocks * bs) as f64;
+        kv_migrate_time(gpu, bytes, *self == MigrateLink::NvLink)
+    }
+}
+
+/// Fleet shape and link for one disaggregated run.
+#[derive(Debug, Clone)]
+pub struct DisaggConfig {
+    /// Engines in the prefill pool (each on its own GPU set).
+    pub prefill_engines: usize,
+    /// Engines in the decode pool.
+    pub decode_engines: usize,
+    /// Interconnect the KV streams ride.
+    pub link: MigrateLink,
+    /// Fleet-level fault schedule, round-robin split across the
+    /// `prefill + decode` engines (prefill pool first). `None` is a
+    /// fault-free fleet.
+    pub faults: Option<FaultPlan>,
+}
+
+impl DisaggConfig {
+    /// A `prefill`+`decode` fleet on an intra-node NVLink fabric.
+    pub fn new(prefill_engines: usize, decode_engines: usize) -> Self {
+        Self {
+            prefill_engines,
+            decode_engines,
+            link: MigrateLink::NvLink,
+            faults: None,
+        }
+    }
+}
+
+/// Aggregated results of one disaggregated run, merged end-to-end
+/// across both pools: a migrated request's TTFT is measured at its
+/// prefill-side first token, its ITL and E2E at its decode-side finish.
+#[derive(Debug, Clone)]
+pub struct DisaggReport {
+    /// Requests that finished (on either pool).
+    pub completed: usize,
+    /// Requests shed by policy (fault windows, merged over engines).
+    pub shed: usize,
+    /// Latest engine clock across both pools.
+    pub makespan: f64,
+    /// End-to-end tokens (prompt counted once) / makespan.
+    pub throughput_tps: f64,
+    /// TTFT percentile summary over completed requests.
+    pub ttft: Percentiles,
+    /// Per-request mean-ITL percentile summary.
+    pub itl: Percentiles,
+    /// End-to-end latency percentile summary.
+    pub e2e: Percentiles,
+    /// Per-request merged latency records (SLO grading surface).
+    pub latencies: Vec<RequestLatency>,
+    /// Per-request mean-ITL samples (the planner's anchor input).
+    pub itls: Vec<f64>,
+    /// Sequences handed off prefill → decode.
+    pub migrations: usize,
+    /// Total KV-stream transfer seconds (overlapped or exposed).
+    pub migration_time: f64,
+    /// KV blocks still allocated on any engine after its queues
+    /// drained — the conservation invariant; must be 0.
+    pub leaked_blocks: usize,
+    /// Availability accounting, merged over all engines.
+    pub faults: FaultStats,
+    /// Per-engine reports, prefill pool first then decode pool.
+    pub engine_reports: Vec<EngineReport>,
+}
+
+impl DisaggReport {
+    /// Fraction of completed requests meeting `slo` (1.0 when none
+    /// completed, matching [`crate::metrics::RunMetrics::attainment`]).
+    pub fn attainment(&self, slo: &Slo) -> f64 {
+        if self.latencies.is_empty() {
+            return 1.0;
+        }
+        self.latencies.iter().filter(|l| slo.met(l)).count() as f64 / self.latencies.len() as f64
+    }
+
+    /// Completed requests meeting `slo` per second of makespan.
+    pub fn goodput_rps(&self, slo: &Slo) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.latencies.iter().filter(|l| slo.met(l)).count() as f64 / self.makespan
+    }
+}
+
+/// Drive one engine to completion, draining finishes as they land and
+/// capturing the allocated-block count *before* the report consumes it
+/// (the conservation probe).
+fn run_engine(mut engine: Engine<SimBackend>) -> Result<(EngineReport, Vec<FinishedSeq>, usize)> {
+    let mut fins = Vec::new();
+    while engine.has_work() {
+        if !engine.step()? {
+            break; // defensive: idle with nothing actionable
+        }
+        fins.append(&mut engine.take_finished());
+    }
+    fins.append(&mut engine.take_finished());
+    let leaked = engine.kv().allocated_blocks();
+    Ok((engine.finish(), fins, leaked))
+}
+
+/// Run `requests` through a disaggregated fleet built from `base`
+/// (one engine per pool slot, each with `base`'s full per-engine GPU
+/// budget; `base.faults` is ignored in favor of `cfg.faults`).
+///
+/// Prompts round-robin over the prefill pool; every request with more
+/// than one output token is handed off at first token and finishes on
+/// the decode pool. Virtual time makes the two phases separable: the
+/// decode engines' event trajectories depend only on the handoff
+/// timestamps, so the pools run as two deterministic parallel sweeps.
+pub fn run_disagg(
+    base: &OfflineConfig,
+    cfg: &DisaggConfig,
+    requests: &[Request],
+) -> Result<DisaggReport> {
+    if cfg.prefill_engines == 0 || cfg.decode_engines == 0 {
+        bail!(
+            "disaggregation needs at least one engine per pool (got {}p+{}d)",
+            cfg.prefill_engines,
+            cfg.decode_engines
+        );
+    }
+    let mut engine_cfg = base.clone();
+    engine_cfg.faults = None;
+    let fault_slices: Vec<Option<FaultPlan>> = match &cfg.faults {
+        Some(plan) => plan
+            .split(cfg.prefill_engines + cfg.decode_engines)
+            .into_iter()
+            .map(Some)
+            .collect(),
+        None => vec![None; cfg.prefill_engines + cfg.decode_engines],
+    };
+
+    // --- phase 1: prefill pool ------------------------------------------
+    let originals: BTreeMap<u64, Request> = requests.iter().map(|r| (r.id, r.clone())).collect();
+    let mut prefill_work: Vec<Vec<Request>> = vec![Vec::new(); cfg.prefill_engines];
+    for (i, r) in requests.iter().enumerate() {
+        // The prefill copy generates exactly the first token; requests
+        // that only ever wanted one token finish here and never migrate.
+        let mut copy = r.clone();
+        copy.output_tokens = 1;
+        prefill_work[i % cfg.prefill_engines].push(copy);
+    }
+    let prefill_inputs: Vec<(Vec<Request>, Option<FaultPlan>)> = prefill_work
+        .into_iter()
+        .zip(fault_slices[..cfg.prefill_engines].iter().cloned())
+        .collect();
+    let prefill_runs = crate::util::par::par_map(&prefill_inputs, |(reqs, plan)| {
+        let mut ecfg = engine_cfg.clone();
+        ecfg.faults = plan.clone();
+        let mut engine = ecfg.build_engine();
+        engine.submit(reqs);
+        run_engine(engine)
+    });
+
+    let mut reports = Vec::new();
+    let mut leaked_blocks = 0usize;
+    let mut faults = FaultStats::default();
+    let mut prefill_fins: Vec<FinishedSeq> = Vec::new();
+    for run in prefill_runs {
+        let (report, fins, leaked) = run?;
+        leaked_blocks += leaked;
+        faults.merge(&report.faults);
+        prefill_fins.extend(fins);
+        reports.push(report);
+    }
+
+    // --- phase 2: handoffs ----------------------------------------------
+    let mut handoffs: Vec<MigratedSeq> = Vec::new();
+    let mut final_fins: BTreeMap<u64, FinishedSeq> = BTreeMap::new();
+    for f in prefill_fins {
+        let orig = &originals[&f.id];
+        if orig.output_tokens <= 1 {
+            final_fins.insert(f.id, f);
+            continue;
+        }
+        let migration = cfg
+            .link
+            .time(&base.gpu, &base.model, f.prompt_tokens, base.block_size);
+        handoffs.push(MigratedSeq {
+            id: f.id,
+            arrival: orig.arrival,
+            handoff_at: f.first_token_at,
+            migration,
+            prompt_tokens: f.prompt_tokens,
+            first_token: *f.token_ids.last().expect("prefill emits a token"),
+            target_output: orig.output_tokens,
+            prefix: orig.prefix,
+            predicted: orig.predicted,
+        });
+    }
+    // Deterministic dispatch order regardless of which prefill engine
+    // produced each handoff: by (handoff time, id), then round-robin.
+    handoffs.sort_by(|a, b| {
+        a.handoff_at
+            .partial_cmp(&b.handoff_at)
+            .unwrap()
+            .then(a.id.cmp(&b.id))
+    });
+    let migrations = handoffs.len();
+    let migration_time: f64 = handoffs.iter().map(|m| m.migration).sum();
+    let mut decode_work: Vec<Vec<MigratedSeq>> = vec![Vec::new(); cfg.decode_engines];
+    for (i, m) in handoffs.into_iter().enumerate() {
+        decode_work[i % cfg.decode_engines].push(m);
+    }
+
+    // --- phase 3: decode pool -------------------------------------------
+    let decode_inputs: Vec<(Vec<MigratedSeq>, Option<FaultPlan>)> = decode_work
+        .into_iter()
+        .zip(fault_slices[cfg.prefill_engines..].iter().cloned())
+        .collect();
+    let decode_runs = crate::util::par::par_map(&decode_inputs, |(seqs, plan)| {
+        let mut ecfg = engine_cfg.clone();
+        ecfg.faults = plan.clone();
+        let mut engine = ecfg.build_engine();
+        engine.submit_migrated(seqs);
+        run_engine(engine)
+    });
+    for run in decode_runs {
+        let (report, fins, leaked) = run?;
+        leaked_blocks += leaked;
+        faults.merge(&report.faults);
+        for f in fins {
+            final_fins.insert(f.id, f);
+        }
+        reports.push(report);
+    }
+
+    // --- merge -----------------------------------------------------------
+    // A migrated request shed decode-side must not surface as finished
+    // via its single-token prefill copy.
+    let shed_ids: BTreeSet<u64> = faults.shed_ids.iter().copied().collect();
+    final_fins.retain(|id, _| !shed_ids.contains(id));
+    let makespan = reports
+        .iter()
+        .map(|r| r.metrics.makespan)
+        .fold(0.0f64, f64::max);
+    let total_tokens: usize = final_fins
+        .values()
+        .map(|f| f.prompt_tokens + f.generated)
+        .sum();
+    let latencies: Vec<RequestLatency> = final_fins
+        .values()
+        .map(|f| RequestLatency {
+            id: f.id,
+            arrival: f.arrival,
+            ttft: f.first_token_at - f.arrival,
+            itl: f.itl(),
+            e2e: f.finished_at - f.arrival,
+            output_tokens: f.generated,
+        })
+        .collect();
+    let itls: Vec<f64> = latencies.iter().filter_map(|l| l.itl).collect();
+    Ok(DisaggReport {
+        completed: final_fins.len(),
+        shed: shed_ids.len(),
+        makespan,
+        throughput_tps: if makespan > 0.0 {
+            total_tokens as f64 / makespan
+        } else {
+            0.0
+        },
+        ttft: Percentiles::from_samples(
+            &latencies.iter().map(|l| l.ttft).collect::<Vec<_>>(),
+        ),
+        itl: Percentiles::from_samples(&itls),
+        e2e: Percentiles::from_samples(&latencies.iter().map(|l| l.e2e).collect::<Vec<_>>()),
+        latencies,
+        itls,
+        migrations,
+        migration_time,
+        leaked_blocks,
+        faults,
+        engine_reports: reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::spec::ModelSpec;
+    use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
+
+    fn base() -> OfflineConfig {
+        let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+        cfg.num_requests = 8;
+        cfg.input_len = 64;
+        cfg.output_len = 12;
+        cfg
+    }
+
+    fn offline_reqs(cfg: &OfflineConfig) -> Vec<Request> {
+        generate(&WorkloadConfig::offline(
+            cfg.num_requests,
+            cfg.input_len,
+            cfg.output_len,
+        ))
+    }
+
+    #[test]
+    fn disagg_completes_all_requests() {
+        let cfg = base();
+        let d = DisaggConfig::new(1, 1);
+        let rep = run_disagg(&cfg, &d, &offline_reqs(&cfg)).unwrap();
+        assert_eq!(rep.completed, 8);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.migrations, 8);
+        assert_eq!(rep.leaked_blocks, 0);
+        assert!(rep.migration_time > 0.0, "NVLink streams cost time");
+        assert!(rep.makespan > 0.0 && rep.throughput_tps > 0.0);
+        // Every merged record spans both pools: 12 output tokens each.
+        assert!(rep.latencies.iter().all(|l| l.output_tokens == 12));
+    }
+
+    #[test]
+    fn zero_link_costs_nothing_and_pcie_costs_more_than_nvlink() {
+        let cfg = base();
+        let reqs = offline_reqs(&cfg);
+        let mut d = DisaggConfig::new(1, 1);
+        d.link = MigrateLink::Zero;
+        let zero = run_disagg(&cfg, &d, &reqs).unwrap();
+        d.link = MigrateLink::NvLink;
+        let nv = run_disagg(&cfg, &d, &reqs).unwrap();
+        d.link = MigrateLink::Pcie;
+        let pcie = run_disagg(&cfg, &d, &reqs).unwrap();
+        assert_eq!(zero.migration_time, 0.0);
+        assert!(nv.migration_time > 0.0);
+        assert!(pcie.migration_time > nv.migration_time);
+        // A costed link can only delay completions, never speed them up.
+        for (z, p) in zero.latencies.iter().zip(pcie.latencies.iter()) {
+            assert_eq!(z.id, p.id);
+            assert!(p.e2e >= z.e2e - 1e-12, "id {}: {} < {}", z.id, p.e2e, z.e2e);
+        }
+    }
+
+    #[test]
+    fn single_token_requests_never_migrate() {
+        let mut cfg = base();
+        cfg.output_len = 1;
+        let d = DisaggConfig::new(1, 1);
+        let rep = run_disagg(&cfg, &d, &offline_reqs(&cfg)).unwrap();
+        assert_eq!(rep.migrations, 0);
+        assert_eq!(rep.completed, 8);
+        assert!(rep.latencies.iter().all(|l| l.output_tokens == 1));
+    }
+
+    #[test]
+    fn exposed_migration_wait_is_recorded_as_kv_migrate_segment() {
+        use crate::gpusim::mps::Segment;
+        // One request, an otherwise-idle decode engine: the wait for
+        // the stream is fully exposed and must appear in its trace.
+        let mut cfg = base();
+        cfg.num_requests = 1;
+        let mut d = DisaggConfig::new(1, 1);
+        d.link = MigrateLink::Pcie;
+        let rep = run_disagg(&cfg, &d, &offline_reqs(&cfg)).unwrap();
+        let decode_report = rep.engine_reports.last().unwrap();
+        let exposed: f64 = decode_report
+            .segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::KvMigrate { duration } => Some(*duration),
+                _ => None,
+            })
+            .sum();
+        // The jump covers prefill time + migration; at least the
+        // transfer itself is exposed on an idle engine.
+        assert!(
+            exposed >= rep.migration_time,
+            "exposed {exposed} < transfer {}",
+            rep.migration_time
+        );
+    }
+
+    #[test]
+    fn pool_shapes_are_validated() {
+        let cfg = base();
+        assert!(run_disagg(&cfg, &DisaggConfig::new(0, 1), &[]).is_err());
+        assert!(run_disagg(&cfg, &DisaggConfig::new(1, 0), &[]).is_err());
+    }
+
+    #[test]
+    fn decode_pool_crash_still_completes_every_request() {
+        use crate::faults::{FaultEvent, FaultKind};
+        let mut cfg = base();
+        cfg.num_requests = 6;
+        let mut d = DisaggConfig::new(1, 1);
+        // Round-robin split over 2 engines: event 0 -> prefill engine,
+        // event 1 -> decode engine.
+        d.faults = Some(
+            FaultPlan::new(vec![
+                FaultEvent {
+                    at: 0.001,
+                    kind: FaultKind::Crash { restart_after: 0.005 },
+                },
+                FaultEvent {
+                    at: 0.002,
+                    kind: FaultKind::Crash { restart_after: 0.005 },
+                },
+            ])
+            .unwrap(),
+        );
+        let rep = run_disagg(&cfg, &d, &offline_reqs(&cfg)).unwrap();
+        assert_eq!(rep.completed + rep.shed, 6);
+        assert_eq!(rep.leaked_blocks, 0);
+        assert!(rep.faults.crashes >= 1);
+    }
+
+    #[test]
+    fn poisson_arrivals_flow_through_the_prefill_pool() {
+        let cfg = base();
+        let reqs = generate(&WorkloadConfig {
+            arrivals: ArrivalPattern::Poisson { rate: 50.0 },
+            seed: 7,
+            ..WorkloadConfig::offline(10, 64, 8)
+        });
+        let rep = run_disagg(&cfg, &DisaggConfig::new(2, 2), &reqs).unwrap();
+        assert_eq!(rep.completed, 10);
+        assert_eq!(rep.leaked_blocks, 0);
+        // TTFTs are measured from the original arrivals.
+        assert!(rep.latencies.iter().all(|l| l.ttft > 0.0));
+    }
+}

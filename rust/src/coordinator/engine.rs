@@ -40,14 +40,19 @@ use crate::workload::Request;
 /// Engine configuration (one replica).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Admission budget: max concurrently scheduled sequences.
     pub max_num_seqs: usize,
+    /// Chunked-prefill token budget per fused step.
     pub max_batched_tokens: usize,
+    /// Batching policy (prefill-priority vs chunked prefill).
     pub policy: SchedulerPolicy,
     /// What to do with preemption victims (recompute vs swap).
     pub preempt: PreemptMode,
     /// Physical KV blocks (incl. reserved block 0).
     pub kv_blocks: usize,
+    /// Tokens per KV block (vLLM default 16).
     pub block_size: usize,
+    /// Per-sequence block cap (the context-window limit in blocks).
     pub max_blocks_per_seq: usize,
     /// Share full prompt blocks across sequences by content hash
     /// (vLLM automatic-prefix-caching style). Off by default: the
@@ -81,6 +86,8 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
+    /// Defaults for one replica: prefill-priority batching, recompute
+    /// preemption, fast-forward on, no faults or controller.
     pub fn new(max_num_seqs: usize, kv_blocks: usize, block_size: usize) -> Self {
         Self {
             max_num_seqs,
@@ -103,12 +110,14 @@ impl EngineConfig {
 /// Final report of a run.
 #[derive(Debug, Clone)]
 pub struct EngineReport {
+    /// Latency percentiles, throughput, SLO attainment.
     pub metrics: RunMetrics,
     /// Peak KV usage (fraction of usable blocks) — Figs 3/12, Table IV.
     pub peak_kv_usage: f64,
     /// Peak unique referenced blocks (the prefix-sweep artefact's
     /// absolute view of `peak_kv_usage`).
     pub peak_kv_blocks: usize,
+    /// Preemption count (recompute + swap).
     pub preemptions: u64,
     /// Preemptions served by swap (the rest recomputed).
     pub swap_outs: u64,
@@ -124,8 +133,11 @@ pub struct EngineReport {
     /// chunk grants enforce; `PrefillPriority` may exceed it only for
     /// a single oversized head-of-line prompt admitted alone.
     pub peak_step_tokens: usize,
+    /// Engine iterations executed.
     pub steps: usize,
+    /// Virtual seconds spent in prefill steps.
     pub prefill_time: f64,
+    /// Virtual seconds spent in decode (and fused) steps.
     pub decode_time: f64,
     /// Kernel-level step sims when `record_steps` (Figs 5/7).
     pub recorded: Vec<StepSim>,
@@ -146,15 +158,19 @@ pub struct EngineReport {
 /// return these to clients).
 #[derive(Debug, Clone)]
 pub struct FinishedSeq {
+    /// Originating request id.
     pub id: u64,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
     /// Full history: prompt then generated ids.
     pub token_ids: Vec<i32>,
+    /// Generated (output) token count.
     pub generated: usize,
     /// Virtual arrival time of the originating request.
     pub arrival: f64,
     /// Virtual time the first token completed (TTFT = this − arrival).
     pub first_token_at: f64,
+    /// Virtual time the final token completed.
     pub finished_at: f64,
 }
 
@@ -168,14 +184,60 @@ impl FinishedSeq {
     }
 }
 
+/// A sequence handed off from a prefill engine at its first token
+/// (disaggregated serving, [`crate::coordinator::disagg`]).
+///
+/// The decode engine resumes it once its KV stream has landed
+/// ([`MigratedSeq::ready`]), reconstructing exactly the running state a
+/// co-located engine would hold right after the prefill step: same
+/// token ids (resynthesized from the request id and prefix tag), same
+/// context length, same first token. With `migration == 0` the decode
+/// trajectory is therefore bit-identical to the co-located run — the
+/// golden-equivalence contract pinned by `tests/disagg.rs`.
+#[derive(Debug, Clone)]
+pub struct MigratedSeq {
+    /// Original request id (token resynthesis keys off it).
+    pub id: u64,
+    /// Original request arrival (FCFS / TTFT key — *not* handoff time).
+    pub arrival: f64,
+    /// Virtual time the prefill engine emitted the first token.
+    pub handoff_at: f64,
+    /// Interconnect transfer time of the KV stream (0 = free link).
+    pub migration: f64,
+    /// Prompt length prefilled on the source engine.
+    pub prompt_tokens: usize,
+    /// The first output token, produced by the prefill engine.
+    pub first_token: i32,
+    /// Total output budget, including the already-produced first token.
+    pub target_output: usize,
+    /// Shared-prefix tag (crash rebuilds + token resynthesis).
+    pub prefix: Option<crate::workload::SharedPrefix>,
+    /// Predicted output length carried over from the request.
+    pub predicted: Option<usize>,
+}
+
+impl MigratedSeq {
+    /// Virtual time the KV stream is fully resident decode-side; the
+    /// sequence becomes schedulable at the first step boundary past it.
+    pub fn ready(&self) -> f64 {
+        self.handoff_at + self.migration
+    }
+}
+
 /// One serving engine instance.
 pub struct Engine<B: Backend> {
+    /// The execution backend (H100 simulator or PJRT CPU runtime).
     pub backend: B,
     cfg: EngineConfig,
     scheduler: Scheduler,
     kv: KvCacheV2,
     clock: f64,
     pending: Vec<Request>, // not yet arrived (sorted by arrival desc)
+    /// In-flight KV migrations from a prefill engine (sorted by
+    /// `ready()` desc, so pop() yields the earliest-landing stream).
+    /// Empty outside disaggregated serving — every code path it touches
+    /// is bit-inert then.
+    pending_migrations: Vec<MigratedSeq>,
     waiting: VecDeque<RunningSeq>,
     running: Vec<RunningSeq>,
     /// Swap-preempted sequences parked in the CPU pool, FCFS.
@@ -221,6 +283,7 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
+    /// Build an engine over `backend` with the given configuration.
     pub fn new(mut backend: B, cfg: EngineConfig) -> Self {
         let kv = KvCacheV2::new(KvV2Config {
             num_blocks: cfg.kv_blocks,
@@ -254,6 +317,7 @@ impl<B: Backend> Engine<B> {
             kv,
             clock: 0.0,
             pending: Vec::new(),
+            pending_migrations: Vec::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
             swapped: VecDeque::new(),
@@ -288,16 +352,23 @@ impl<B: Backend> Engine<B> {
         std::mem::take(&mut self.finished)
     }
 
+    /// Current virtual time.
     pub fn now(&self) -> f64 {
         self.clock
     }
 
+    /// The KV block manager (read-only view for tests and reports).
     pub fn kv(&self) -> &KvCacheV2 {
         &self.kv
     }
 
+    /// Everything submitted but not running: future arrivals, the
+    /// waiting queue, parked swap victims, and in-flight migrations.
     pub fn queue_depth(&self) -> usize {
-        self.pending.len() + self.waiting.len() + self.swapped.len()
+        self.pending.len()
+            + self.pending_migrations.len()
+            + self.waiting.len()
+            + self.swapped.len()
     }
 
     /// Requests that have arrived but are not currently scheduled —
@@ -314,6 +385,7 @@ impl<B: Backend> Engine<B> {
         self.steps
     }
 
+    /// Sequences currently in the running (decode) set.
     pub fn running_count(&self) -> usize {
         self.running.len()
     }
@@ -356,6 +428,89 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Queue sequences handed off from a prefill engine (disaggregated
+    /// serving). Each becomes schedulable at the first step boundary
+    /// past its [`MigratedSeq::ready`] time; metrics register the
+    /// *original* arrival so TTFT/E2E stay end-to-end across the
+    /// handoff. Handoffs bypass the scheduler's admission queue — they
+    /// were already admitted on the prefill side; only seats and
+    /// physical blocks gate their resumption here.
+    pub fn submit_migrated(&mut self, seqs: &[MigratedSeq]) {
+        for m in seqs {
+            self.metrics.on_admit(m.id, m.arrival, m.prompt_tokens);
+            self.pending_migrations.push(m.clone());
+        }
+        // Sorted by ready() descending (ties by id descending) so pop()
+        // yields the earliest-landing stream, FCFS on equal landings.
+        self.pending_migrations.sort_by(|a, b| {
+            b.ready()
+                .partial_cmp(&a.ready())
+                .unwrap()
+                .then(b.id.cmp(&a.id))
+        });
+    }
+
+    /// Resume every migrated sequence whose KV stream has landed, while
+    /// seats and blocks allow. Reconstructs exactly the running state a
+    /// co-located engine holds right after the prefill step: prompt
+    /// resynthesized from the id/prefix tag, KV admitted by content,
+    /// first token appended, first-token clock at the prefill-side
+    /// handoff time (so the gap to the next decode token — including
+    /// any exposed migration wait — lands in the ITL record).
+    fn absorb_migrations(&mut self) {
+        use crate::kvcache::manager::KvError;
+        let vocab = self.backend.spec().vocab;
+        while let Some(m) = self.pending_migrations.last() {
+            if m.ready() > self.clock || self.running.len() >= self.effective_max_seqs() {
+                break;
+            }
+            let req = Request {
+                id: m.id,
+                arrival: m.arrival,
+                prompt_tokens: m.prompt_tokens,
+                output_tokens: m.target_output,
+                prefix: m.prefix,
+                predicted: m.predicted,
+            };
+            let mut s = RunningSeq::from_request(&req, vocab);
+            match self.kv.admit(s.id, &s.token_ids) {
+                Ok(()) => {}
+                Err(KvError::OutOfBlocks { .. }) => {
+                    // Shed-by-policy when the prompt alone can never fit
+                    // the usable pool (mirrors the pool-shrink shed rule
+                    // and prevents a stuck handoff from idling forever);
+                    // otherwise retry at the next step boundary.
+                    let usable = self.kv.capacity() - self.kv.quarantined_blocks();
+                    if self.kv.blocks_needed(s.prefill_len()) > usable {
+                        let m = self.pending_migrations.pop().unwrap();
+                        self.metrics.on_shed(m.id);
+                        self.attempts.remove(&m.id);
+                        self.faults.shed_ids.push(m.id);
+                        continue;
+                    }
+                    break;
+                }
+                Err(_) => break,
+            }
+            let m = self.pending_migrations.pop().unwrap();
+            s.prefilled = s.prefill_len();
+            s.state = RequestState::Running;
+            s.push_token(m.first_token);
+            s.first_token_at = Some(m.handoff_at);
+            self.metrics.on_token(s.id, m.handoff_at);
+            self.running.push(s);
+        }
+    }
+
+    /// Earliest `ready()` among in-flight migrations (`INFINITY` when
+    /// none) — a fast-forward / idle-jump event boundary exactly like
+    /// arrivals and fault events.
+    fn next_migration_ready(&self) -> f64 {
+        self.pending_migrations
+            .last()
+            .map_or(f64::INFINITY, |m| m.ready())
+    }
+
     fn absorb_arrivals(&mut self) {
         let vocab = self.backend.spec().vocab;
         while let Some(r) = self.pending.last() {
@@ -376,13 +531,16 @@ impl<B: Backend> Engine<B> {
         Ok(self.finish())
     }
 
+    /// Whether any submitted work remains (in any queue or in flight).
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty()
+            || !self.pending_migrations.is_empty()
             || !self.waiting.is_empty()
             || !self.running.is_empty()
             || !self.swapped.is_empty()
     }
 
+    /// Consume the engine and assemble the final [`EngineReport`].
     pub fn finish(mut self) -> EngineReport {
         self.faults.max_attempts = self.attempts.values().copied().max().unwrap_or(0);
         self.faults.shed_ids.sort_unstable();
@@ -421,6 +579,10 @@ impl<B: Backend> Engine<B> {
         // Swapped sequences have priority over fresh admissions: they
         // already hold CPU-resident KV and resume without re-prefill.
         self.try_swap_in();
+        // Landed KV migrations join the running set at step boundaries,
+        // after swap-ins (parked victims hold CPU-resident KV; a
+        // migrated stream holds none until admitted here).
+        self.absorb_migrations();
         match self.scheduler.decide(&self.waiting, &self.running, &self.kv) {
             ScheduleDecision::Prefill { queue_idx } => {
                 let batch_seqs = self.take_waiting(&queue_idx)?;
@@ -464,17 +626,38 @@ impl<B: Backend> Engine<B> {
                 if self.controller.is_some() && self.has_work() {
                     boundary = boundary.min(self.next_controller_boundary());
                 }
+                // An in-flight KV migration landing is an event exactly
+                // like an arrival: a decode engine with nothing else to
+                // do jumps to it. A migration already due but not
+                // absorbed is blocked on quarantined blocks — the
+                // unblocking event is the fault boundary, so it must
+                // not pin the jump target at the current clock.
+                let migration = match self.next_migration_ready() {
+                    m if m > self.clock => m,
+                    _ => f64::INFINITY,
+                };
                 let target = match arrival {
-                    Some(a) => a.min(boundary),
-                    None => boundary,
+                    Some(a) => a.min(boundary).min(migration),
+                    None => boundary.min(migration),
                 };
                 if target.is_finite() {
                     let gap = target - self.clock;
                     if gap > 0.0 {
                         self.clock = target;
-                        self.segments.push(Segment::Cpu { duration: gap });
+                        // An idle wait ended by a migration landing is
+                        // an *exposed* migration wait — recorded as its
+                        // own segment kind so the interconnect cost
+                        // stays visible in traces (migrations that
+                        // overlap ongoing decode never reach this path
+                        // and cost nothing).
+                        if migration == target {
+                            self.segments.push(Segment::KvMigrate { duration: gap });
+                        } else {
+                            self.segments.push(Segment::Cpu { duration: gap });
+                        }
                     }
                     self.absorb_arrivals();
+                    self.absorb_migrations();
                     return Ok(true);
                 }
                 Ok(false)
@@ -711,6 +894,16 @@ impl<B: Backend> Engine<B> {
         if self.swap_in_ready() {
             return Ok(());
         }
+        // A migrated sequence whose KV stream has already landed joins
+        // the batch at the next step boundary — the streak is over
+        // before it starts (mid-streak landings break the loop below).
+        if self
+            .pending_migrations
+            .last()
+            .is_some_and(|m| m.ready() <= self.clock)
+        {
+            return Ok(());
+        }
         // `run_decode` may also have pushed preemption victims onto the
         // waiting queue; only a pure-decode decision is a streak. A
         // blocked prompt stays blocked while the pool shrinks, so this
@@ -762,6 +955,16 @@ impl<B: Backend> Engine<B> {
             // Arrival boundary: the stepwise loop would absorb this
             // request at the top of its next iteration.
             if self.pending.last().is_some_and(|r| r.arrival <= self.clock) {
+                break;
+            }
+            // Migration boundary: a landed KV stream is absorbed at the
+            // top of the next stepwise iteration, exactly like an
+            // arrival.
+            if self
+                .pending_migrations
+                .last()
+                .is_some_and(|m| m.ready() <= self.clock)
+            {
                 break;
             }
             // Fault boundary: a due event (or window end) applies at
@@ -1312,6 +1515,24 @@ impl<B: Backend> Engine<B> {
                 output_tokens: s.target_output,
                 prefix: s.prefix,
                 predicted: s.predicted,
+            });
+        }
+        // In-flight KV migrations are lost with the crash too — their
+        // destination pool is gone. The request restarts from its
+        // prompt *on this engine* (re-prefilled locally); only the
+        // handed-off first token is written off as lost work.
+        for m in std::mem::take(&mut self.pending_migrations) {
+            self.faults.lost_tokens += 1;
+            self.faults.retries += 1;
+            *self.attempts.entry(m.id).or_insert(1) += 1;
+            self.metrics.on_requeue(m.id);
+            rebuilt.push(Request {
+                id: m.id,
+                arrival: m.arrival,
+                prompt_tokens: m.prompt_tokens,
+                output_tokens: m.target_output,
+                prefix: m.prefix,
+                predicted: m.predicted,
             });
         }
         // Deterministic re-queue order regardless of which set each

@@ -17,7 +17,10 @@
 //! - [`router`]   — request routing across engine replicas (§VI-B).
 //! - [`server`]   — online mode: JSON-lines-over-TCP client/server
 //!   (std::net + threads; tokio is outside the offline vendor set).
+//! - [`disagg`]   — disaggregated prefill/decode pools with a modeled
+//!   KV-migration handoff (NVLink within a node, PCIe across).
 
+pub mod disagg;
 pub mod engine;
 pub mod offline;
 pub mod online;
@@ -26,6 +29,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use disagg::{run_disagg, DisaggConfig, DisaggReport, MigrateLink};
 pub use engine::{Engine, EngineConfig, EngineReport};
 pub use online::{run_online, OnlineConfig, OnlineReport};
 pub use request::{RequestState, RunningSeq};

@@ -17,17 +17,24 @@ use crate::workload::{generate, PredictorConfig, SharedPrefixConfig, WorkloadCon
 /// Configuration of one offline simulated run.
 #[derive(Debug, Clone)]
 pub struct OfflineConfig {
+    /// GPU the simulated engine runs on.
     pub gpu: GpuSpec,
+    /// Model being served.
     pub model: ModelSpec,
+    /// Attention kernel cost model (xFormers or FlashAttention).
     pub attention: AttentionBackendKind,
     /// Max batch size knob (vLLM `max_num_seqs`).
     pub max_num_seqs: usize,
     /// Memory fraction this engine may use (1.0 = the whole 90% budget;
     /// BCA/replication pass smaller fractions).
     pub mem_fraction: f64,
+    /// Synthetic requests to generate.
     pub num_requests: usize,
+    /// Prompt length of every synthetic request (tokens).
     pub input_len: usize,
+    /// Output length of every synthetic request (tokens).
     pub output_len: usize,
+    /// Sarathi-style chunked prefill instead of prefill-priority.
     pub chunked_prefill: bool,
     /// Preemption style when the KV pool runs dry.
     pub preempt: PreemptMode,
@@ -35,10 +42,12 @@ pub struct OfflineConfig {
     pub prefix_cache: bool,
     /// Shared system-prompt classes layered over the workload.
     pub prefix: Option<SharedPrefixConfig>,
+    /// Record the per-step kernel timeline (disables fast-forward).
     pub record_steps: bool,
     /// Event-driven fast-forward between scheduler events (default on;
     /// `--no-fast-forward` falls back to the stepwise golden reference).
     pub fast_forward: bool,
+    /// KV-cache block size in token slots.
     pub block_size: usize,
     /// Tensor-parallel degree: the engine shards the model across `tp`
     /// GPUs (Megatron heads/FFN/vocab split + ring collectives) and its
@@ -59,6 +68,8 @@ pub struct OfflineConfig {
 }
 
 impl OfflineConfig {
+    /// Defaults for one offline run: H100-64G, ShareGPT mean lengths,
+    /// every optional subsystem off.
     pub fn new(model: ModelSpec, max_num_seqs: usize) -> Self {
         Self {
             gpu: GpuSpec::h100_64g(),

@@ -54,14 +54,19 @@ impl OnlineConfig {
 /// trace. Serializes to deterministic JSON via [`OnlineReport::to_json`].
 #[derive(Debug, Clone)]
 pub struct OnlineReport {
+    /// Model served.
     pub model: String,
+    /// Requests in the arrival trace.
     pub num_requests: usize,
+    /// Requests that ran to completion.
     pub completed: usize,
     /// Long-run offered load (req/s): the configured pattern rate, or
     /// `num_requests / last_arrival` for replayed traces (0 when all
     /// requests arrive at t=0).
     pub offered_rps: f64,
+    /// Virtual time from t=0 to the last completion (seconds).
     pub makespan: f64,
+    /// Generated tokens per second of makespan.
     pub throughput_tps: f64,
     /// Time-to-first-token summary (seconds).
     pub ttft: Percentiles,
@@ -69,6 +74,7 @@ pub struct OnlineReport {
     pub itl: Percentiles,
     /// End-to-end latency summary (seconds).
     pub e2e: Percentiles,
+    /// The SLO the run was graded against.
     pub slo: Slo,
     /// Fraction of completed requests meeting the SLO.
     pub attainment: f64,
@@ -78,12 +84,15 @@ pub struct OnlineReport {
     /// (never-admitted arrivals plus preempted sequences awaiting
     /// re-prefill or swap-in).
     pub peak_queue_depth: usize,
+    /// Peak fraction of the KV pool in use.
     pub peak_kv_usage: f64,
+    /// Total preemption events across the run.
     pub preemptions: u64,
     /// Preemptions served by swap (PCIe transfer instead of recompute).
     pub swap_outs: u64,
     /// Prefix-cache hit rate over full prompt blocks (0 when disabled).
     pub prefix_hit_rate: f64,
+    /// Engine steps executed (fast-forward jumps count as one).
     pub steps: usize,
     /// Availability accounting from injected faults (all-zero when the
     /// run was fault-free).

@@ -8,9 +8,14 @@ use crate::workload::Request;
 /// Where a request is in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestState {
+    /// Arrived but not yet admitted to a batch.
     Waiting,
+    /// Admitted: holding KV blocks, prefilling or decoding.
     Running,
+    /// Generated its full target output; awaiting collection.
     Finished,
+    /// Evicted under memory pressure; re-prefills from the prompt
+    /// (recompute policy).
     Preempted,
     /// Evicted to the CPU swap pool; resumes decoding after swap-in
     /// (no re-prefill, unlike [`RequestState::Preempted`]).
@@ -20,15 +25,20 @@ pub enum RequestState {
 /// A sequence admitted to the engine.
 #[derive(Debug, Clone)]
 pub struct RunningSeq {
+    /// Sequence id (the originating request's id).
     pub id: SeqId,
+    /// Virtual arrival time inherited from the request (seconds).
     pub arrival: f64,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
+    /// Output tokens to generate before finishing.
     pub target_output: usize,
     /// Tokens generated so far.
     pub generated: usize,
     /// Full token-id history (prompt + generated) — needed by the PJRT
     /// backend; the simulator ignores the values.
     pub token_ids: Vec<i32>,
+    /// Current lifecycle state.
     pub state: RequestState,
     /// Times the request was preempted (recompute restarts the prompt).
     pub preemptions: u32,
@@ -112,10 +122,12 @@ impl RunningSeq {
         self.prompt_tokens + self.generated
     }
 
+    /// Whether the sequence has generated its full target output.
     pub fn is_finished(&self) -> bool {
         self.generated >= self.target_output
     }
 
+    /// Append one generated token.
     pub fn push_token(&mut self, tok: i32) {
         self.token_ids.push(tok);
         self.generated += 1;

@@ -8,8 +8,10 @@
 
 use crate::workload::Request;
 
+/// How the router distributes requests among replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Cycle through replicas in index order (the paper's even split).
     RoundRobin,
     /// Route to the replica with the fewest outstanding tokens.
     LeastLoaded,
@@ -31,6 +33,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over `n` replicas (panics if `n == 0`), all healthy.
     pub fn new(policy: RoutePolicy, n: usize) -> Self {
         assert!(n >= 1);
         Self {
@@ -42,6 +45,7 @@ impl Router {
         }
     }
 
+    /// Number of replicas routed over.
     pub fn replicas(&self) -> usize {
         self.n
     }
@@ -86,6 +90,7 @@ impl Router {
         self.down[replica] = false;
     }
 
+    /// Whether a replica is currently marked healthy.
     pub fn is_up(&self, replica: usize) -> bool {
         !self.down[replica]
     }

@@ -27,7 +27,9 @@ use crate::kvcache::KvCacheV2;
 /// Scheduling policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerPolicy {
+    /// vLLM default: prefill admissible prompts first, else decode.
     PrefillPriority,
+    /// Sarathi-style: fuse decode with prompt chunks every step.
     ChunkedPrefill,
 }
 
@@ -50,6 +52,7 @@ pub struct SchedulerConfig {
     pub max_num_seqs: usize,
     /// Max tokens one step may feed (vLLM `max_num_batched_tokens` 4096).
     pub max_batched_tokens: usize,
+    /// Prefill-priority (vLLM default) or chunked prefill.
     pub policy: SchedulerPolicy,
     /// How the engine preempts when the KV pool runs dry.
     pub preempt: PreemptMode,
@@ -95,8 +98,10 @@ pub enum ScheduleDecision {
     Idle,
 }
 
+/// The per-iteration decision maker: stateless beyond its config.
 #[derive(Debug, Clone)]
 pub struct Scheduler {
+    /// The knobs the decisions run under.
     pub cfg: SchedulerConfig,
 }
 
@@ -115,6 +120,7 @@ fn expected_decode_blocks(kv: &KvCacheV2, seq: &RunningSeq) -> usize {
 }
 
 impl Scheduler {
+    /// A scheduler with the given knobs.
     pub fn new(cfg: SchedulerConfig) -> Self {
         Self { cfg }
     }

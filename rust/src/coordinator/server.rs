@@ -354,6 +354,7 @@ pub fn client_stats(addr: &str) -> Result<Json> {
     Ok(Json::parse(line.trim())?)
 }
 
+/// Minimal client: ask the server to shut down.
 pub fn client_shutdown(addr: &str) -> Result<()> {
     let mut stream = TcpStream::connect(addr)?;
     writeln!(stream, "{}", Json::obj(vec![("op", Json::str("shutdown"))]))?;

@@ -9,6 +9,7 @@ use crate::coordinator::offline::OfflineConfig;
 use crate::gpusim::GpuSpec;
 use crate::models::spec::ModelSpec;
 
+/// `max_num_seqs` grid the BCA profile measures (quick: sparse).
 pub fn profile_grid(opts: &FigOpts) -> Vec<usize> {
     if opts.quick {
         vec![1, 16, 32, 64, 96, 256, 512]

@@ -1,0 +1,200 @@
+//! `disagg` artefact: where disaggregated prefill/decode beats
+//! co-located chunked prefill as a function of prompt length and
+//! arrival rate, plus the KV-migration cost curve that prices the
+//! handoffs.
+//!
+//! Both contenders spend the same 2-GPU budget on the same Poisson
+//! trace:
+//! - **co-located** — 2 chunked-prefill replicas (each on its own GPU
+//!   via [`measure_point_cluster`]): every engine serves both phases,
+//!   so each prefill chunk stretches the co-resident decode steps;
+//! - **disaggregated** — a 1p+1d split ([`measure_point_disagg`]) over
+//!   NVLink: decode never sees a prefill chunk but pays KV migration
+//!   and half the decode capacity.
+//!
+//! Scoring both by goodput under a shared p99-ITL SLO (anchored at the
+//! co-located easy corner: shortest prompts, lowest rate) renders the
+//! crossover: short prompts barely interfere so co-location's extra
+//! decode capacity wins, while long prompts at high rates inject big
+//! chunks into every decode batch and disaggregation takes over.
+
+use anyhow::Result;
+
+use super::{FigOpts, Table};
+use crate::bca::planner::{measure_point_cluster, measure_point_disagg, score_point};
+use crate::coordinator::disagg::MigrateLink;
+use crate::coordinator::offline::OfflineConfig;
+use crate::metrics::Percentiles;
+use crate::models::spec::ModelSpec;
+use crate::util::par;
+use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
+
+/// (prompt lengths, arrival rates) swept by the frontier grid.
+fn sweep_grids(opts: &FigOpts) -> (Vec<usize>, Vec<f64>) {
+    if opts.quick {
+        (vec![64, 768], vec![4.0, 12.0])
+    } else {
+        (vec![64, 256, 768], vec![2.0, 6.0, 12.0])
+    }
+}
+
+/// The `disagg` artefact: crossover frontier + migration cost curve.
+pub fn disagg(opts: &FigOpts) -> Result<Vec<Table>> {
+    let spec = ModelSpec::opt_1_3b();
+    let mut base = OfflineConfig::new(spec.clone(), 64);
+    base.chunked_prefill = true;
+    base.fast_forward = opts.fast_forward;
+    let output_len = 48;
+    let n_req = if opts.quick { 48 } else { 192 };
+    let (prompts, rates) = sweep_grids(opts);
+
+    // One trace per (prompt, rate) cell, shared by both contenders.
+    let cells: Vec<(usize, f64)> = prompts
+        .iter()
+        .flat_map(|&p| rates.iter().map(move |&r| (p, r)))
+        .collect();
+    let traces: Vec<Vec<crate::workload::Request>> = cells
+        .iter()
+        .map(|&(prompt, rate)| {
+            generate(&WorkloadConfig {
+                arrivals: ArrivalPattern::Poisson { rate },
+                seed: opts.seed,
+                ..WorkloadConfig::offline(n_req, prompt, output_len)
+            })
+        })
+        .collect();
+    let work: Vec<usize> = (0..cells.len()).collect();
+    let colo = par::par_map(&work, |&i| {
+        measure_point_cluster(&base, base.max_num_seqs, 2, 1, 2, &traces[i])
+    });
+    let split = par::par_map(&work, |&i| {
+        measure_point_disagg(
+            &base,
+            base.max_num_seqs,
+            1,
+            1,
+            MigrateLink::NvLink,
+            &traces[i],
+        )
+    });
+    let colo: Vec<_> = colo.into_iter().collect::<Result<_>>()?;
+    let split: Vec<_> = split.into_iter().collect::<Result<_>>()?;
+
+    // Shared SLO, anchored at the co-located easy corner (shortest
+    // prompts, lowest rate) so both contenders are graded on the same
+    // user-visible bound across the whole grid.
+    let slo_itl = match opts.slo_itl_ms {
+        Some(ms) => ms / 1e3,
+        None => 3.0 * Percentiles::from_samples(&colo[0].itls).p99,
+    };
+
+    let mut t = Table::new(
+        "disagg_frontier",
+        &format!(
+            "Disaggregated 1p+1d vs co-located 2x chunked prefill (2 GPUs, {}, p99-ITL SLO {:.2} ms)",
+            spec.name,
+            slo_itl * 1e3
+        ),
+        &[
+            "prompt_len",
+            "rate_rps",
+            "colo_goodput_rps",
+            "disagg_goodput_rps",
+            "colo_p99_itl_ms",
+            "disagg_p99_itl_ms",
+            "winner",
+        ],
+    );
+    for (i, &(prompt, rate)) in cells.iter().enumerate() {
+        let c = score_point(&colo[i], slo_itl);
+        let d = score_point(&split[i], slo_itl);
+        let winner = if d.goodput_rps > c.goodput_rps {
+            "disagg"
+        } else {
+            "colo"
+        };
+        t.push_row(vec![
+            prompt.to_string(),
+            format!("{rate:.1}"),
+            format!("{:.3}", c.goodput_rps),
+            format!("{:.3}", d.goodput_rps),
+            format!("{:.3}", c.itl.p99 * 1e3),
+            format!("{:.3}", d.itl.p99 * 1e3),
+            winner.to_string(),
+        ]);
+    }
+
+    // Cost-model curve: what one handoff pays per prompt length on each
+    // link (whole blocks of OPT-1.3B KV at block size 16).
+    let mut cost = Table::new(
+        "disagg_migration_cost",
+        "KV-migration cost per handoff vs prompt length (OPT-1.3B, 16-token blocks)",
+        &["prompt_len", "kv_mb", "nvlink_ms", "pcie_ms"],
+    );
+    for &prompt in &prompts {
+        let blocks = (prompt + base.block_size - 1) / base.block_size;
+        let bytes = spec.kv_bytes_per_token() as f64 * (blocks * base.block_size) as f64;
+        cost.push_row(vec![
+            prompt.to_string(),
+            format!("{:.2}", bytes / 1e6),
+            format!(
+                "{:.4}",
+                1e3 * MigrateLink::NvLink.time(&base.gpu, &spec, prompt, base.block_size)
+            ),
+            format!(
+                "{:.4}",
+                1e3 * MigrateLink::Pcie.time(&base.gpu, &spec, prompt, base.block_size)
+            ),
+        ]);
+    }
+    Ok(vec![t, cost])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disagg_artefact_shape_and_winner_consistency() {
+        let tables = disagg(&FigOpts::quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+        let t = &tables[0];
+        assert_eq!(t.name, "disagg_frontier");
+        // 2 prompts x 2 rates in quick mode.
+        assert_eq!(t.rows.len(), 4);
+        let colo = t.col_f64("colo_goodput_rps");
+        let dis = t.col_f64("disagg_goodput_rps");
+        for (i, row) in t.rows.iter().enumerate() {
+            // The winner column restates the goodput comparison.
+            let expect = if dis[i] > colo[i] { "disagg" } else { "colo" };
+            assert_eq!(row[6], expect, "row {i}: {row:?}");
+            assert!(colo[i] >= 0.0 && dis[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn migration_cost_curve_is_monotone_and_pcie_is_slower() {
+        let tables = disagg(&FigOpts::quick()).unwrap();
+        let c = &tables[1];
+        assert_eq!(c.name, "disagg_migration_cost");
+        let nv = c.col_f64("nvlink_ms");
+        let pcie = c.col_f64("pcie_ms");
+        let mb = c.col_f64("kv_mb");
+        assert_eq!(nv.len(), 2);
+        // Longer prompts move more KV, and the host path is slower than
+        // NVLink for every payload.
+        assert!(mb[1] > mb[0]);
+        assert!(nv[1] > nv[0]);
+        for (n, p) in nv.iter().zip(&pcie) {
+            assert!(p > n, "pcie {p} <= nvlink {n}");
+        }
+    }
+
+    #[test]
+    fn artefact_is_deterministic() {
+        let a = disagg(&FigOpts::quick()).unwrap();
+        let b = disagg(&FigOpts::quick()).unwrap();
+        assert_eq!(a[0].rows, b[0].rows);
+        assert_eq!(a[1].rows, b[1].rows);
+    }
+}

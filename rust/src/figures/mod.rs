@@ -9,6 +9,7 @@
 pub mod adaptive_figs;
 pub mod bca_figs;
 pub mod cache;
+pub mod disagg_figs;
 pub mod faults_figs;
 pub mod online_figs;
 pub mod phases;
@@ -31,11 +32,14 @@ pub struct Table {
     pub name: String,
     /// Human title ("Fig. 2: throughput/ITL vs batch size — OPT-1.3B").
     pub title: String,
+    /// Column names, in CSV order.
     pub headers: Vec<String>,
+    /// Data rows; every row has one cell per header.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given identity and columns.
     pub fn new(name: &str, title: &str, headers: &[&str]) -> Self {
         Self {
             name: name.to_string(),
@@ -45,11 +49,13 @@ impl Table {
         }
     }
 
+    /// Append one data row (must match the header count).
     pub fn push_row(&mut self, cells: Vec<String>) {
         debug_assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells);
     }
 
+    /// Render as CSV (RFC-4180 quoting for commas and quotes).
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
         let esc = |c: &str| {
@@ -70,6 +76,7 @@ impl Table {
         s
     }
 
+    /// Render as a titled GitHub-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut s = format!("### {}\n\n", self.title);
         let _ = writeln!(s, "| {} |", self.headers.join(" | "));
@@ -90,6 +97,7 @@ impl Table {
         self.rows.get(row)?.get(ci)?.parse().ok()
     }
 
+    /// Fetch a whole column as f64, skipping unparsable cells.
     pub fn col_f64(&self, col: &str) -> Vec<f64> {
         let Some(ci) = self.headers.iter().position(|h| h == col) else {
             return Vec::new();
@@ -116,9 +124,9 @@ pub struct FigOpts {
     /// either way by construction, but the cache key must NOT assume
     /// that equivalence — flipping this misses the cache.
     pub fast_forward: bool,
-    /// Override the `adaptive` artefact's auto-anchored p99-ITL SLO
-    /// (milliseconds); `None` anchors it between the measured grid
-    /// extremes.
+    /// Override the `adaptive` and `disagg` artefacts' auto-anchored
+    /// p99-ITL SLO (milliseconds); `None` anchors it from the measured
+    /// grid.
     pub slo_itl_ms: Option<f64>,
     /// Relative log-error sigma of the `adaptive` artefact's
     /// output-length predictor; `None` uses the S3-style default (0.3).
@@ -139,6 +147,7 @@ impl Default for FigOpts {
 }
 
 impl FigOpts {
+    /// Reduced request counts / grids for CI and benches.
     pub fn quick() -> Self {
         Self {
             quick: true,
@@ -155,6 +164,7 @@ impl FigOpts {
         }
     }
 
+    /// `max_num_seqs` grid swept by the batch-size figures.
     pub fn batch_grid(&self) -> Vec<usize> {
         if self.quick {
             vec![1, 8, 32, 96, 256, 512]
@@ -211,7 +221,7 @@ impl FigOpts {
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp", "faults",
-    "adaptive",
+    "adaptive", "disagg",
 ];
 
 /// Generate one artefact by id.
@@ -239,6 +249,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "tp" => tp_figs::tp_sweep(opts),
         "faults" => faults_figs::faults_sweep(opts),
         "adaptive" => adaptive_figs::adaptive(opts),
+        "disagg" => disagg_figs::disagg(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

@@ -138,14 +138,28 @@ pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
             "goodput_rps",
             "throughput_tps",
             "recommended",
+            "pools",
         ],
     );
     for p in &plan.points {
         let recommended = plan
             .best
             .as_ref()
-            .map(|b| b.max_batch == p.max_batch && b.replicas == p.replicas && b.tp == p.tp)
+            .map(|b| {
+                b.max_batch == p.max_batch
+                    && b.replicas == p.replicas
+                    && b.tp == p.tp
+                    && b.prefill_engines == p.prefill_engines
+                    && b.decode_engines == p.decode_engines
+            })
             .unwrap_or(false);
+        // Disaggregated points carry their pool split; co-located rows
+        // show "-" so pre-disagg CSV consumers see an inert new column.
+        let pools = if p.prefill_engines > 0 {
+            format!("{}p+{}d", p.prefill_engines, p.decode_engines)
+        } else {
+            "-".to_string()
+        };
         t.push_row(vec![
             p.max_batch.to_string(),
             p.replicas.to_string(),
@@ -156,6 +170,7 @@ pub fn plan_table(plan: &crate::bca::JointPlan) -> Table {
             format!("{:.3}", p.goodput_rps),
             format!("{:.0}", p.throughput_tps),
             recommended.to_string(),
+            pools,
         ]);
     }
     t
@@ -216,8 +231,10 @@ mod tests {
             .collect();
         assert_eq!(rec_rows.len(), 1, "{:?}", plan.rows);
         assert_eq!(rec_rows[0][3], "true");
-        // The single-GPU artefact plans over unsharded engines only.
+        // The single-GPU artefact plans over unsharded engines only,
+        // with no disaggregated pool shapes probed.
         assert!(plan.rows.iter().all(|r| r[2] == "1"));
+        assert!(plan.rows.iter().all(|r| r[9] == "-"));
 
         let frontier = &tables[1];
         assert_eq!(frontier.name, "online_frontier");

@@ -52,6 +52,7 @@ pub fn fig13(opts: &FigOpts) -> Result<Vec<Table>> {
                     crate::gpusim::mps::PlacedKind::Gpu => "gpu",
                     crate::gpusim::mps::PlacedKind::Cpu => "cpu",
                     crate::gpusim::mps::PlacedKind::Swap => "swap",
+                    crate::gpusim::mps::PlacedKind::KvMigrate => "kv_migrate",
                 }
                 .to_string(),
                 format!("{:.3}", p.start * 1e3),

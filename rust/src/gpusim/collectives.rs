@@ -41,6 +41,25 @@ pub fn ring_all_gather_time(gpu: &GpuSpec, n: usize, bytes: f64) -> f64 {
     (nf - 1.0) / nf * bytes / gpu.nvlink_bw + (nf - 1.0) * gpu.nvlink_latency_s
 }
 
+/// Seconds to stream `bytes` of KV cache from a prefill GPU to a decode
+/// GPU during a disaggregated handoff.
+///
+/// Within a node the stream is a single point-to-point NVLink copy: one
+/// hop latency plus the payload at `nvlink_bw`. Across nodes it rides
+/// the host path at `GpuSpec::pcie_bw`; per-message latency is
+/// negligible against the multi-megabyte KV payloads that dominate
+/// there, so the cross-node path is purely bandwidth-bound.
+pub fn kv_migrate_time(gpu: &GpuSpec, bytes: f64, intra_node: bool) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    if intra_node {
+        gpu.nvlink_latency_s + bytes / gpu.nvlink_bw
+    } else {
+        bytes / gpu.pcie_bw
+    }
+}
+
 /// A fixed GPU budget: `num_gpus` identical cards with an all-to-all
 /// NVLink fabric between them. Tensor-parallel engines occupy `tp`
 /// GPUs each; the joint planner spends this budget on replicas, shards,
@@ -147,6 +166,22 @@ mod tests {
             .map(|&n| ring_all_reduce_time(&g, n, 1.0e6))
             .collect();
         assert!(t[0] < t[1] && t[1] < t[2], "{t:?}");
+    }
+
+    #[test]
+    fn kv_migrate_golden_values() {
+        // OPT-1.3B prompt of 512 tokens: 512 x 196608 B ~= 100.7 MB.
+        let g = gpu();
+        let bytes = 512.0 * 196_608.0;
+        assert_eq!(
+            kv_migrate_time(&g, bytes, true),
+            g.nvlink_latency_s + bytes / g.nvlink_bw
+        );
+        assert_eq!(kv_migrate_time(&g, bytes, false), bytes / g.pcie_bw);
+        // NVLink is the faster path for any real payload; empty is free.
+        assert!(kv_migrate_time(&g, bytes, true) < kv_migrate_time(&g, bytes, false));
+        assert_eq!(kv_migrate_time(&g, 0.0, true), 0.0);
+        assert_eq!(kv_migrate_time(&g, 0.0, false), 0.0);
     }
 
     #[test]

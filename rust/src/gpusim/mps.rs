@@ -30,14 +30,22 @@ pub enum Segment {
     /// touch is far below saturation — but is kept distinct so swap
     /// cost stays visible in traces.
     Swap { duration: f64 },
+    /// Interconnect KV-migration transfer (disaggregated prefill →
+    /// decode handoff, NVLink within a node or PCIe across): scheduled
+    /// like a CPU gap — it rides the interconnect, not the SMs — but
+    /// kept distinct so *exposed* migration waits (the part not hidden
+    /// behind ongoing decode) stay visible in traces.
+    KvMigrate { duration: f64 },
 }
 
 impl Segment {
+    /// Solo duration of the segment in seconds.
     pub fn duration(&self) -> f64 {
         match self {
             Segment::Cpu { duration }
             | Segment::Gpu { duration, .. }
-            | Segment::Swap { duration } => *duration,
+            | Segment::Swap { duration }
+            | Segment::KvMigrate { duration } => *duration,
         }
     }
 }
@@ -49,15 +57,18 @@ pub enum SharePolicy {
     Mps,
 }
 
-/// What kind of trace segment a placement came from. `Swap` rides the
-/// PCIe link (scheduled like a CPU gap — it does not contend for DRAM)
-/// but stays distinct so swap cost remains visible in traces, as the
-/// [`Segment::Swap`] contract promises.
+/// What kind of trace segment a placement came from. `Swap` and
+/// `KvMigrate` ride interconnect links (scheduled like CPU gaps — they
+/// do not contend for DRAM) but stay distinct so transfer cost remains
+/// visible in traces, as the [`Segment::Swap`] / [`Segment::KvMigrate`]
+/// contracts promise.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlacedKind {
     Cpu,
     Gpu,
     Swap,
+    /// Exposed KV-migration wait (disaggregated prefill/decode handoff).
+    KvMigrate,
 }
 
 /// A placed interval in the shared schedule (for Fig 13 timelines).
@@ -88,9 +99,10 @@ pub struct SharedRun {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum RunState {
-    /// Host-side progress; `swap: true` marks a PCIe swap transfer
-    /// (same scheduling, distinct trace kind).
-    Cpu { remaining: f64, swap: bool },
+    /// Host-side progress; `kind` distinguishes plain CPU gaps from
+    /// PCIe swap transfers and KV-migration waits (same scheduling,
+    /// distinct trace kind). Only `Cpu`/`Swap`/`KvMigrate` occur here.
+    Cpu { remaining: f64, kind: PlacedKind },
     GpuRunning { remaining_solo: f64, demand: f64 },
     GpuQueued { solo: f64, demand: f64, queued_at: f64 },
     Done,
@@ -158,8 +170,8 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
         t += dt;
         for r in 0..n {
             match &mut state[r] {
-                RunState::Cpu { remaining, swap } => {
-                    let was_swap = *swap;
+                RunState::Cpu { remaining, kind } => {
+                    let kind = *kind;
                     *remaining -= dt;
                     seg_slowdown_acc[r] += dt;
                     if *remaining <= eps {
@@ -168,11 +180,7 @@ pub fn run_shared(replicas: &[Vec<Segment>], policy: SharePolicy) -> SharedRun {
                             start: seg_start[r],
                             end: t,
                             is_gpu: false,
-                            kind: if was_swap {
-                                PlacedKind::Swap
-                            } else {
-                                PlacedKind::Cpu
-                            },
+                            kind,
                             slowdown: 1.0,
                         });
                         state[r] = next_state(&replicas[r], &mut idx[r], t);
@@ -248,17 +256,21 @@ fn next_state(trace: &[Segment], idx: &mut usize, now: f64) -> RunState {
     let seg = trace[*idx];
     *idx += 1;
     match seg {
-        // Swap transfers progress like CPU gaps: the PCIe link is not
-        // the contended resource this model shares (DRAM bandwidth).
-        // The kind tag survives into the placement, so swap cost stays
-        // visible in traces.
+        // Swap and KV-migration transfers progress like CPU gaps: the
+        // interconnect link is not the contended resource this model
+        // shares (DRAM bandwidth). The kind tag survives into the
+        // placement, so transfer cost stays visible in traces.
         Segment::Cpu { duration } => RunState::Cpu {
             remaining: duration,
-            swap: false,
+            kind: PlacedKind::Cpu,
         },
         Segment::Swap { duration } => RunState::Cpu {
             remaining: duration,
-            swap: true,
+            kind: PlacedKind::Swap,
+        },
+        Segment::KvMigrate { duration } => RunState::Cpu {
+            remaining: duration,
+            kind: PlacedKind::KvMigrate,
         },
         Segment::Gpu {
             duration,
@@ -462,6 +474,34 @@ mod tests {
             // Scheduling semantics are unchanged: swap behaves like a
             // host-side gap in the makespan.
             assert!((run.makespan - 0.009).abs() < 1e-12, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn kv_migrate_segments_stay_visible_in_placements() {
+        // Segment::KvMigrate carries the same promise as Segment::Swap:
+        // exposed migration waits must surface in the co-scheduled
+        // timeline with their own kind, not as anonymous CPU gaps.
+        let tr = vec![
+            Segment::KvMigrate { duration: 0.003 },
+            Segment::Gpu {
+                duration: 0.002,
+                dram_demand: 0.5,
+            },
+        ];
+        for policy in [SharePolicy::Fcfs, SharePolicy::Mps] {
+            let run = run_shared(&[tr.clone()], policy);
+            let kinds: Vec<PlacedKind> = run.placements.iter().map(|p| p.kind).collect();
+            assert_eq!(
+                kinds,
+                vec![PlacedKind::KvMigrate, PlacedKind::Gpu],
+                "{policy:?}"
+            );
+            let mig = &run.placements[0];
+            assert!(!mig.is_gpu, "migration rides the interconnect, not the SMs");
+            assert!((mig.end - mig.start - 0.003).abs() < 1e-12);
+            // Scheduling semantics match a host-side gap of equal length.
+            assert!((run.makespan - 0.005).abs() < 1e-12, "{policy:?}");
         }
     }
 }

@@ -30,8 +30,11 @@
 pub mod backend;
 #[warn(missing_docs)]
 pub mod bca;
+#[warn(missing_docs)]
 pub mod coordinator;
+#[warn(missing_docs)]
 pub mod faults;
+#[warn(missing_docs)]
 pub mod figures;
 pub mod gpusim;
 #[warn(missing_docs)]

@@ -39,18 +39,18 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
             [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--no-fast-forward] [--fault-* ...] [--controller-* ...]
-            [--predict-* ...]
+            [--predict-* ...] [--disagg ...]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
             [--no-fast-forward] [--fault-* ...] [--controller-* ...]
-            [--predict-* ...]
+            [--predict-* ...] [--disagg ...]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
             [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
             [--slo-itl-ms X] [--csv PATH] [--fault-* ...]
-            [--controller-* ...] [--predict-* ...]
+            [--controller-* ...] [--predict-* ...] [--disagg ...]
 
   Adaptive admission control (offline/online apply it to the engine; plan
   applies it to every probed grid point):
@@ -70,6 +70,13 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
     --fault-slow T:DUR:FACTOR    straggler: GPU time x FACTOR for DUR s
     --fault-shrink T:DUR:BLOCKS  quarantine BLOCKS KV blocks for DUR s
     --fault-swapfail T:DUR       PCIe swap path down for DUR s
+  Disaggregated prefill/decode serving (offline/online run one split
+  fleet; plan probes the cross product of the two pool lists as extra
+  grid points next to the co-located (batch, replicas, tp) grid):
+    --disagg                     split the fleet into prefill + decode pools
+    --prefill-gpus N[,N...]      prefill-pool engine count(s) (default 1)
+    --decode-gpus N[,N...]       decode-pool engine count(s) (default 1)
+    --migrate-link LINK          KV handoff link: zero|nvlink|pcie (default nvlink)
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -225,6 +232,85 @@ fn print_controller_stats(
     }
 }
 
+/// Disaggregated prefill/decode fleet shape: enabled iff `--disagg`.
+/// `--prefill-gpus` / `--decode-gpus` take one engine count for
+/// `offline`/`online` and may be comma-separated lists for `plan`
+/// (probed pool shapes = the cross product); the shaping flags error
+/// out when passed without `--disagg`.
+#[allow(clippy::type_complexity)]
+fn disagg_args(
+    args: &Args,
+) -> Result<Option<(Vec<usize>, Vec<usize>, memgap::coordinator::disagg::MigrateLink)>> {
+    use memgap::coordinator::disagg::MigrateLink;
+    let shaping = ["prefill-gpus", "decode-gpus", "migrate-link"];
+    if !args.has("disagg") {
+        if let Some(k) = shaping.iter().copied().find(|&k| args.has(k)) {
+            bail!("--{k} needs --disagg to enable disaggregated serving");
+        }
+        return Ok(None);
+    }
+    let prefill = args.usize_list("prefill-gpus", &[1]);
+    let decode = args.usize_list("decode-gpus", &[1]);
+    if prefill.is_empty() || decode.is_empty() || prefill.iter().chain(&decode).any(|&n| n == 0) {
+        bail!("--prefill-gpus / --decode-gpus entries must be >= 1");
+    }
+    let link = match args.get("migrate-link") {
+        Some(l) => MigrateLink::parse(l)?,
+        None => MigrateLink::NvLink,
+    };
+    Ok(Some((prefill, decode, link)))
+}
+
+/// `offline`/`online` run exactly one fleet, so their pool flags must be
+/// single counts (lists belong to `plan`).
+fn single_pool(counts: &[usize], flag: &str) -> Result<usize> {
+    if counts.len() != 1 {
+        bail!("--{flag} takes a single count here (comma lists are for `plan`)");
+    }
+    Ok(counts[0])
+}
+
+/// Summary lines for a disaggregated run, shared by `offline --disagg`
+/// and `online --disagg`.
+fn print_disagg_report(
+    dcfg: &memgap::coordinator::disagg::DisaggConfig,
+    rep: &memgap::coordinator::disagg::DisaggReport,
+) {
+    println!(
+        "pools            : {}p+{}d ({:?} link)",
+        dcfg.prefill_engines, dcfg.decode_engines, dcfg.link
+    );
+    println!(
+        "requests         : completed {}, shed {}",
+        rep.completed, rep.shed
+    );
+    println!("makespan         : {:.3} s", rep.makespan);
+    println!("throughput       : {:.0} tok/s", rep.throughput_tps);
+    let ms = 1e3;
+    println!(
+        "TTFT p50/p90/p99 : {:.2} / {:.2} / {:.2} ms",
+        rep.ttft.p50 * ms,
+        rep.ttft.p90 * ms,
+        rep.ttft.p99 * ms
+    );
+    println!(
+        "ITL  p50/p90/p99 : {:.2} / {:.2} / {:.2} ms",
+        rep.itl.p50 * ms,
+        rep.itl.p90 * ms,
+        rep.itl.p99 * ms
+    );
+    println!(
+        "E2E  p50/p90/p99 : {:.2} / {:.2} / {:.2} s",
+        rep.e2e.p50, rep.e2e.p90, rep.e2e.p99
+    );
+    println!(
+        "migrations       : {} ({:.2} ms of KV streamed)",
+        rep.migrations,
+        rep.migration_time * ms
+    );
+    print_fault_stats(&rep.faults);
+}
+
 /// Shared-prefix workload shaping: present iff any `--prefix-*`
 /// workload flag is given (defaults: 4 classes x 256 tokens, share 1).
 fn prefix_args(args: &Args) -> Result<Option<memgap::workload::SharedPrefixConfig>> {
@@ -348,6 +434,25 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.faults = fault_args(args)?;
     cfg.controller = controller_args(args)?;
     cfg.predictor = predictor_args(args)?;
+    if let Some((prefill, decode, link)) = disagg_args(args)? {
+        use memgap::coordinator::disagg::{run_disagg, DisaggConfig};
+        let mut dcfg = DisaggConfig::new(
+            single_pool(&prefill, "prefill-gpus")?,
+            single_pool(&decode, "decode-gpus")?,
+        );
+        dcfg.link = link;
+        dcfg.faults = cfg.faults.take();
+        let reqs = generate(&WorkloadConfig {
+            prefix: cfg.prefix,
+            predictor: cfg.predictor,
+            ..WorkloadConfig::offline(cfg.num_requests, cfg.input_len, cfg.output_len)
+        });
+        let rep = run_disagg(&cfg, &dcfg, &reqs)?;
+        println!("model            : {}", cfg.model.name);
+        println!("max batch        : {max_seqs}");
+        print_disagg_report(&dcfg, &rep);
+        return Ok(());
+    }
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
     if cfg.tp > 1 {
@@ -459,6 +564,29 @@ fn cmd_online(args: &Args) -> Result<()> {
     cfg.engine.predictor = predictor_args(args)?;
     cfg.workload.prefix = prefix_args(args)?;
     cfg.slo = slo_arg(args)?;
+    if let Some((prefill, decode, link)) = disagg_args(args)? {
+        use memgap::coordinator::disagg::{run_disagg, DisaggConfig};
+        let mut dcfg = DisaggConfig::new(
+            single_pool(&prefill, "prefill-gpus")?,
+            single_pool(&decode, "decode-gpus")?,
+        );
+        dcfg.link = link;
+        dcfg.faults = cfg.engine.faults.take();
+        // Mirror run_online: the engine's predictor flows into the
+        // workload unless the workload already carries its own.
+        let mut workload = cfg.workload.clone();
+        if workload.predictor.is_none() {
+            workload.predictor = cfg.engine.predictor;
+        }
+        let reqs = generate(&workload);
+        let rep = run_disagg(&cfg.engine, &dcfg, &reqs)?;
+        println!("model            : {}", cfg.engine.model.name);
+        println!("max batch        : {max_seqs}");
+        print_disagg_report(&dcfg, &rep);
+        println!("SLO attainment   : {:.1} %", 100.0 * rep.attainment(&cfg.slo));
+        println!("goodput          : {:.2} req/s", rep.goodput_rps(&cfg.slo));
+        return Ok(());
+    }
     let rep = run_online(&cfg)?;
     println!("model            : {}", rep.model);
     println!("max batch        : {max_seqs}");
@@ -535,6 +663,15 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if let Some(ms) = f64_flag(args, "slo-itl-ms")? {
         cfg.slo_itl = Some(ms / 1e3);
     }
+    if let Some((prefill, decode, link)) = disagg_args(args)? {
+        let mut pools = Vec::new();
+        for &p in &prefill {
+            for &d in &decode {
+                pools.push((p, d));
+            }
+        }
+        cfg = cfg.with_disagg(pools, link);
+    }
     cfg.faults = fault_args(args)?;
     // Controller/predictor ride on every probed grid point (the
     // controller's ceiling is each point's probed batch).
@@ -544,10 +681,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mut wl = WorkloadConfig::poisson(num_requests, rate, seed);
     wl.predictor = base.predictor;
     let reqs = generate(&wl);
-    eprintln!(
-        "planning {} over {:?} x {:?} x tp {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",
-        spec.name, cfg.batch_grid, cfg.replica_grid, cfg.tp_grid
-    );
+    if cfg.disagg_pools.is_empty() {
+        eprintln!(
+            "planning {} over {:?} x {:?} x tp {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",
+            spec.name, cfg.batch_grid, cfg.replica_grid, cfg.tp_grid
+        );
+    } else {
+        eprintln!(
+            "planning {} over {:?} x {:?} x tp {:?} + disagg pools {:?} on {gpus} GPU(s) at {rate:.2} req/s ...",
+            spec.name, cfg.batch_grid, cfg.replica_grid, cfg.tp_grid, cfg.disagg_pools
+        );
+    }
     let plan = plan_joint(&base, &reqs, &cfg)?;
     let table = online_figs::plan_table(&plan);
     println!("{}", table.to_markdown());
@@ -557,11 +701,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     match &plan.best {
         Some(b) => {
+            let shape = if b.prefill_engines > 0 {
+                format!(
+                    "{}p+{}d disaggregated",
+                    b.prefill_engines, b.decode_engines
+                )
+            } else {
+                format!("{} replicas x tp{}", b.replicas, b.tp)
+            };
             println!(
-                "recommendation: max_batch={} x {} replicas x tp{} (p99 ITL {:.2} ms <= SLO {:.2} ms)",
+                "recommendation: max_batch={} x {shape} (p99 ITL {:.2} ms <= SLO {:.2} ms)",
                 b.max_batch,
-                b.replicas,
-                b.tp,
                 b.itl.p99 * 1e3,
                 plan.slo_itl * 1e3
             );
@@ -587,6 +737,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 println!(
                     "  vs best sharded ({} x tp{})   : {:.2} req/s goodput",
                     sharded.replicas, sharded.tp, sharded.goodput_rps
+                );
+            }
+            if let Some(dg) = plan.best_disagg() {
+                println!(
+                    "  vs best disagg ({}p+{}d)     : {:.2} req/s goodput",
+                    dg.prefill_engines, dg.decode_engines, dg.goodput_rps
                 );
             }
         }
