@@ -31,6 +31,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::disagg::{run_disagg, DisaggConfig, MigrateLink};
 use crate::coordinator::offline::OfflineConfig;
+use crate::coordinator::router::RoutePolicy;
 use crate::faults::FaultPlan;
 use crate::gpusim::mps::SharePolicy;
 use crate::metrics::Percentiles;
@@ -74,6 +75,9 @@ pub struct JointPlannerConfig {
     pub disagg_pools: Vec<(usize, usize)>,
     /// Interconnect probed disagg points pay for KV handoffs.
     pub migrate_link: MigrateLink,
+    /// Prefill-pool routing policy for probed disagg points
+    /// (`--route-policy`; `RoundRobin` is the historical deal).
+    pub route_policy: RoutePolicy,
 }
 
 impl JointPlannerConfig {
@@ -90,6 +94,7 @@ impl JointPlannerConfig {
             faults: None,
             disagg_pools: Vec::new(),
             migrate_link: MigrateLink::NvLink,
+            route_policy: RoutePolicy::RoundRobin,
         }
     }
 
@@ -320,6 +325,7 @@ pub fn measure_point_disagg(
     prefill_engines: usize,
     decode_engines: usize,
     link: MigrateLink,
+    route_policy: RoutePolicy,
     requests: &[Request],
 ) -> Result<MeasuredPoint> {
     let mut cfg = base.clone();
@@ -327,6 +333,7 @@ pub fn measure_point_disagg(
     let mut dcfg = DisaggConfig::new(prefill_engines, decode_engines);
     dcfg.link = link;
     dcfg.faults = cfg.faults.take();
+    dcfg.route_policy = route_policy;
     let rep = run_disagg(&cfg, &dcfg, requests)?;
     Ok(MeasuredPoint {
         max_batch,
@@ -508,7 +515,7 @@ pub fn plan_joint(
     });
     let mut measured: Vec<MeasuredPoint> = measured.into_iter().collect::<Result<_>>()?;
     let dmeasured = crate::util::par::par_map(&dgrid, |&(b, p, d)| {
-        measure_point_disagg(base, b, p, d, cfg.migrate_link, requests)
+        measure_point_disagg(base, b, p, d, cfg.migrate_link, cfg.route_policy, requests)
     });
     for m in dmeasured {
         measured.push(m?);

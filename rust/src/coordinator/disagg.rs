@@ -32,10 +32,11 @@ use anyhow::{bail, Result};
 use crate::backend::SimBackend;
 use crate::coordinator::engine::{Engine, EngineReport, FinishedSeq, MigratedSeq};
 use crate::coordinator::offline::OfflineConfig;
+use crate::coordinator::router::{RoutePolicy, Router};
 use crate::faults::{FaultPlan, FaultStats};
 use crate::gpusim::collectives::kv_migrate_time;
 use crate::gpusim::GpuSpec;
-use crate::metrics::{Percentiles, RequestLatency, Slo};
+use crate::metrics::{Percentiles, RequestLatency, Slo, TenantBreakdown};
 use crate::models::spec::ModelSpec;
 use crate::workload::Request;
 
@@ -95,6 +96,10 @@ pub struct DisaggConfig {
     /// `prefill + decode` engines (prefill pool first). `None` is a
     /// fault-free fleet.
     pub faults: Option<FaultPlan>,
+    /// How prompts are distributed over the prefill pool
+    /// (`--route-policy`). The default `RoundRobin` reproduces the
+    /// original `i % prefill_engines` deal bit for bit.
+    pub route_policy: RoutePolicy,
 }
 
 impl DisaggConfig {
@@ -105,6 +110,7 @@ impl DisaggConfig {
             decode_engines,
             link: MigrateLink::NvLink,
             faults: None,
+            route_policy: RoutePolicy::RoundRobin,
         }
     }
 }
@@ -141,6 +147,9 @@ pub struct DisaggReport {
     pub leaked_blocks: usize,
     /// Availability accounting, merged over all engines.
     pub faults: FaultStats,
+    /// Per-tenant-class latency breakdown over the merged end-to-end
+    /// records (empty when the workload carried no tenants).
+    pub tenants: TenantBreakdown,
     /// Per-engine reports, prefill pool first then decode pool.
     pub engine_reports: Vec<EngineReport>,
 }
@@ -214,13 +223,16 @@ pub fn run_disagg(
 
     // --- phase 1: prefill pool ------------------------------------------
     let originals: BTreeMap<u64, Request> = requests.iter().map(|r| (r.id, r.clone())).collect();
+    let mut prefill_router = Router::new(cfg.route_policy, cfg.prefill_engines);
     let mut prefill_work: Vec<Vec<Request>> = vec![Vec::new(); cfg.prefill_engines];
-    for (i, r) in requests.iter().enumerate() {
+    for r in requests.iter() {
         // The prefill copy generates exactly the first token; requests
         // that only ever wanted one token finish here and never migrate.
+        // Routing keys off the original request (full token cost, prefix
+        // tag); RoundRobin reproduces the historical `i % pool` deal.
         let mut copy = r.clone();
         copy.output_tokens = 1;
-        prefill_work[i % cfg.prefill_engines].push(copy);
+        prefill_work[prefill_router.route(r)].push(copy);
     }
     let prefill_inputs: Vec<(Vec<Request>, Option<FaultPlan>)> = prefill_work
         .into_iter()
@@ -268,6 +280,7 @@ pub fn run_disagg(
             target_output: orig.output_tokens,
             prefix: orig.prefix,
             predicted: orig.predicted,
+            tenant: orig.tenant,
         });
     }
     // Deterministic dispatch order regardless of which prefill engine
@@ -320,15 +333,22 @@ pub fn run_disagg(
         .values()
         .map(|f| f.prompt_tokens + f.generated)
         .sum();
+    let mut tenants = TenantBreakdown::new();
     let latencies: Vec<RequestLatency> = final_fins
         .values()
-        .map(|f| RequestLatency {
-            id: f.id,
-            arrival: f.arrival,
-            ttft: f.first_token_at - f.arrival,
-            itl: f.itl(),
-            e2e: f.finished_at - f.arrival,
-            output_tokens: f.generated,
+        .map(|f| {
+            let lat = RequestLatency {
+                id: f.id,
+                arrival: f.arrival,
+                ttft: f.first_token_at - f.arrival,
+                itl: f.itl(),
+                e2e: f.finished_at - f.arrival,
+                output_tokens: f.generated,
+            };
+            if let Some(t) = f.tenant {
+                tenants.observe(t.class, t.weight, &lat);
+            }
+            lat
         })
         .collect();
     let itls: Vec<f64> = latencies.iter().filter_map(|l| l.itl).collect();
@@ -352,6 +372,7 @@ pub fn run_disagg(
         migration_time,
         leaked_blocks,
         faults,
+        tenants,
         engine_reports: reports,
     })
 }
@@ -485,6 +506,27 @@ mod tests {
         assert_eq!(rep.completed + rep.shed, 6);
         assert_eq!(rep.leaked_blocks, 0);
         assert!(rep.faults.crashes >= 1);
+    }
+
+    #[test]
+    fn tenant_identity_survives_the_prefill_to_decode_handoff() {
+        let cfg = base();
+        let reqs = generate(&WorkloadConfig {
+            tenants: Some(crate::workload::TenantsConfig::weighted(&[1, 3])),
+            ..WorkloadConfig::offline(8, 64, 12)
+        });
+        let rep = run_disagg(&cfg, &DisaggConfig::new(1, 1), &reqs).unwrap();
+        assert_eq!(rep.completed, 8);
+        // Migrated sequences finish decode-side with their tenant tag
+        // intact: the breakdown sees every request under its class.
+        let s = rep.tenants.finalize();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().map(|c| c.completed).sum::<usize>(), 8);
+        assert_eq!((s[0].class, s[1].class), (0, 1));
+        assert_eq!((s[0].weight, s[1].weight), (1, 3));
+        // Untenanted workloads keep the breakdown empty.
+        let plain = run_disagg(&cfg, &DisaggConfig::new(1, 1), &offline_reqs(&cfg)).unwrap();
+        assert!(plain.tenants.is_empty());
     }
 
     #[test]

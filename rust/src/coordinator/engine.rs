@@ -34,7 +34,7 @@ use crate::gpusim::mps::Segment;
 use crate::gpusim::plan::StepSummary;
 use crate::gpusim::step::StepSim;
 use crate::kvcache::{KvCacheV2, KvV2Config, PrefixCacheStats};
-use crate::metrics::{MetricsCollector, PredictionStats, RunMetrics};
+use crate::metrics::{MetricsCollector, PredictionStats, RunMetrics, TenantBreakdown};
 use crate::workload::Request;
 
 /// Engine configuration (one replica).
@@ -83,6 +83,11 @@ pub struct EngineConfig {
     /// engine. Decision boundaries join the fast-forward event horizon
     /// exactly like fault events.
     pub controller: Option<ControllerConfig>,
+    /// Weighted fair-share admission across tenant classes
+    /// ([`SchedulerConfig::fair_share`]). `false` (the default) keeps
+    /// strict FCFS — bit-identical to the pre-tenant engine even when
+    /// requests carry tenants.
+    pub fair_share: bool,
 }
 
 impl EngineConfig {
@@ -103,6 +108,7 @@ impl EngineConfig {
             fast_forward: true,
             faults: None,
             controller: None,
+            fair_share: false,
         }
     }
 }
@@ -151,6 +157,9 @@ pub struct EngineReport {
     /// Output-length prediction error over completed requests
     /// (all-default when the workload carries no predictions).
     pub prediction: PredictionStats,
+    /// Per-tenant-class latency breakdown over completed requests
+    /// (empty when the workload carried no tenants).
+    pub tenants: TenantBreakdown,
 }
 
 /// A completed sequence with its generated tokens (drained via
@@ -172,6 +181,10 @@ pub struct FinishedSeq {
     pub first_token_at: f64,
     /// Virtual time the final token completed.
     pub finished_at: f64,
+    /// Tenant identity carried from the originating request (`None` on
+    /// anonymous single-tenant streams). Per-tenant report breakdowns
+    /// key off it.
+    pub tenant: Option<crate::workload::Tenant>,
 }
 
 impl FinishedSeq {
@@ -214,6 +227,8 @@ pub struct MigratedSeq {
     pub prefix: Option<crate::workload::SharedPrefix>,
     /// Predicted output length carried over from the request.
     pub predicted: Option<usize>,
+    /// Tenant identity carried over from the request.
+    pub tenant: Option<crate::workload::Tenant>,
 }
 
 impl MigratedSeq {
@@ -247,6 +262,9 @@ pub struct Engine<B: Backend> {
     /// decode steps build their batch without per-step allocations.
     decode_batch: StepBatch,
     metrics: MetricsCollector,
+    /// Tenant identity (class, weight) per submitted request id —
+    /// the per-tenant report join key; empty on anonymous streams.
+    tenant_classes: std::collections::BTreeMap<u64, (u64, u64)>,
     preemptions: u64,
     swap_outs: u64,
     swap_blocks: u64,
@@ -297,6 +315,7 @@ impl<B: Backend> Engine<B> {
             max_batched_tokens: cfg.max_batched_tokens,
             policy: cfg.policy,
             preempt: cfg.preempt,
+            fair_share: cfg.fair_share,
         });
         // Without step recording the backend may take its summary-only
         // fast path (no per-kernel records to throw away).
@@ -323,6 +342,7 @@ impl<B: Backend> Engine<B> {
             swapped: VecDeque::new(),
             decode_batch: StepBatch::default(),
             metrics: MetricsCollector::new(),
+            tenant_classes: std::collections::BTreeMap::new(),
             preemptions: 0,
             swap_outs: 0,
             swap_blocks: 0,
@@ -394,6 +414,9 @@ impl<B: Backend> Engine<B> {
     pub fn submit(&mut self, reqs: &[Request]) {
         for r in reqs {
             self.metrics.on_admit(r.id, r.arrival, r.prompt_tokens);
+            if let Some(t) = r.tenant {
+                self.tenant_classes.insert(r.id, (t.class, t.weight));
+            }
             self.pending.push(r.clone());
         }
         // `pending` must end up sorted descending so pop() yields the
@@ -438,6 +461,9 @@ impl<B: Backend> Engine<B> {
     pub fn submit_migrated(&mut self, seqs: &[MigratedSeq]) {
         for m in seqs {
             self.metrics.on_admit(m.id, m.arrival, m.prompt_tokens);
+            if let Some(t) = m.tenant {
+                self.tenant_classes.insert(m.id, (t.class, t.weight));
+            }
             self.pending_migrations.push(m.clone());
         }
         // Sorted by ready() descending (ties by id descending) so pop()
@@ -471,6 +497,7 @@ impl<B: Backend> Engine<B> {
                 output_tokens: m.target_output,
                 prefix: m.prefix,
                 predicted: m.predicted,
+                tenant: m.tenant,
             };
             let mut s = RunningSeq::from_request(&req, vocab);
             match self.kv.admit(s.id, &s.token_ids) {
@@ -544,8 +571,16 @@ impl<B: Backend> Engine<B> {
     pub fn finish(mut self) -> EngineReport {
         self.faults.max_attempts = self.attempts.values().copied().max().unwrap_or(0);
         self.faults.shed_ids.sort_unstable();
+        let metrics = self.metrics.finish(self.clock);
+        let mut tenants = TenantBreakdown::new();
+        for lat in &metrics.latencies {
+            if let Some(&(class, weight)) = self.tenant_classes.get(&lat.id) {
+                tenants.observe(class, weight, lat);
+            }
+        }
         EngineReport {
-            metrics: self.metrics.finish(self.clock),
+            metrics,
+            tenants,
             peak_kv_usage: self.kv.peak_usage(),
             peak_kv_blocks: self.kv.peak_allocated_blocks(),
             preemptions: self.preemptions,
@@ -666,13 +701,18 @@ impl<B: Backend> Engine<B> {
     }
 
     fn take_waiting(&mut self, queue_idx: &[usize]) -> Result<Vec<RunningSeq>> {
-        // Indices are an FCFS prefix by scheduler construction.
-        debug_assert!(queue_idx.windows(2).all(|w| w[1] == w[0] + 1));
-        debug_assert_eq!(queue_idx.first().copied().unwrap_or(0), 0);
+        // Indices are strictly ascending by scheduler construction: an
+        // FCFS prefix under strict FCFS, or fair share's sorted
+        // selection (which may skip over blocked entries of over-served
+        // tenants). Removing back to front keeps earlier indices valid;
+        // the returned sequences stay in ascending queue order, the
+        // order the scheduler granted.
+        debug_assert!(queue_idx.windows(2).all(|w| w[1] > w[0]));
         let mut out = Vec::with_capacity(queue_idx.len());
-        for _ in queue_idx {
-            out.push(self.waiting.pop_front().expect("scheduler gave bad index"));
+        for &i in queue_idx.iter().rev() {
+            out.push(self.waiting.remove(i).expect("scheduler gave bad index"));
         }
+        out.reverse();
         Ok(out)
     }
 
@@ -1515,6 +1555,7 @@ impl<B: Backend> Engine<B> {
                 output_tokens: s.target_output,
                 prefix: s.prefix,
                 predicted: s.predicted,
+                tenant: s.tenant,
             });
         }
         // In-flight KV migrations are lost with the crash too — their
@@ -1533,6 +1574,7 @@ impl<B: Backend> Engine<B> {
                 output_tokens: m.target_output,
                 prefix: m.prefix,
                 predicted: m.predicted,
+                tenant: m.tenant,
             });
         }
         // Deterministic re-queue order regardless of which set each
@@ -1608,6 +1650,7 @@ impl<B: Backend> Engine<B> {
                     arrival: s.arrival,
                     first_token_at: s.first_token_at.unwrap_or(self.clock),
                     finished_at: self.clock,
+                    tenant: s.tenant,
                 });
             } else {
                 self.running.push(s);
@@ -1733,6 +1776,7 @@ mod tests {
                 output_tokens: 4,
                 prefix: None,
                 predicted: None,
+                tenant: None,
             })
             .collect();
         let mut e = engine(1, 1024);
@@ -1765,6 +1809,7 @@ mod tests {
                 output_tokens: 64,
                 prefix: None,
                 predicted: None,
+                tenant: None,
             })
             .collect();
         let plan = FaultPlan::new(vec![FaultEvent {
@@ -1927,6 +1972,7 @@ mod tests {
             output_tokens: 20,
             prefix: None,
             predicted: None,
+            tenant: None,
         });
         for i in 1..9u64 {
             reqs.push(crate::workload::Request {
@@ -1936,6 +1982,7 @@ mod tests {
                 output_tokens: 20,
                 prefix: None,
                 predicted: None,
+                tenant: None,
             });
         }
         e.submit(&reqs);

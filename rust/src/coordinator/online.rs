@@ -23,7 +23,10 @@ use anyhow::Result;
 use crate::bca::controller::ControllerReport;
 use crate::coordinator::offline::OfflineConfig;
 use crate::faults::FaultStats;
-use crate::metrics::{Percentiles, PredictionStats, RequestLatency, RunMetrics, Slo, StreamingSummary};
+use crate::metrics::{
+    Percentiles, PredictionStats, RequestLatency, RunMetrics, Slo, StreamingSummary,
+    TenantBreakdown,
+};
 use crate::util::json::Json;
 use crate::workload::{generate, ArrivalPattern, WorkloadConfig};
 
@@ -102,6 +105,9 @@ pub struct OnlineReport {
     pub controller: Option<ControllerReport>,
     /// Output-length prediction accuracy (all-zero without a predictor).
     pub prediction: PredictionStats,
+    /// Per-tenant-class latency breakdown (empty — and absent from the
+    /// JSON — when the workload carried no tenants).
+    pub tenants: TenantBreakdown,
     /// The underlying aggregate metrics (incl. per-request latencies).
     pub metrics: RunMetrics,
 }
@@ -129,7 +135,7 @@ impl OnlineReport {
     /// serialization is byte-stable — the determinism suite compares
     /// these strings across runs and worker counts).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("model", Json::str(self.model.clone())),
             ("num_requests", Json::num(self.num_requests as f64)),
             ("completed", Json::num(self.completed as f64)),
@@ -164,7 +170,13 @@ impl OnlineReport {
                 },
             ),
             ("prediction", self.prediction.to_json()),
-        ])
+        ];
+        // Key-absent (not null) when no tenants ran: a single-tenant
+        // report stays byte-identical to the pre-tenant format.
+        if let Some(t) = self.tenants.to_json() {
+            pairs.push(("tenants", t));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -203,6 +215,7 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
     let mut ttft = StreamingSummary::new();
     let mut itl = StreamingSummary::new();
     let mut e2e = StreamingSummary::new();
+    let mut tenants = TenantBreakdown::new();
     let mut peak_queue = 0usize;
     while engine.has_work() {
         engine.step()?;
@@ -220,6 +233,9 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
             e2e.observe(lat.e2e);
             if let Some(i) = lat.itl {
                 itl.observe(i);
+            }
+            if let Some(t) = f.tenant {
+                tenants.observe(t.class, t.weight, &lat);
             }
         }
     }
@@ -256,6 +272,7 @@ pub fn run_online(cfg: &OnlineConfig) -> Result<OnlineReport> {
         faults: report.faults.clone(),
         controller: report.controller.clone(),
         prediction: report.prediction,
+        tenants,
         metrics: report.metrics,
     })
 }
@@ -379,6 +396,31 @@ mod tests {
         let plain = run_online(&online_cfg(8, 8, 20.0)).unwrap();
         assert!(plain.controller.is_none());
         assert!(plain.to_json().to_string().contains("\"controller\":null"));
+    }
+
+    #[test]
+    fn tenant_sections_are_absent_without_tenants_and_additive_with_them() {
+        let cfg = online_cfg(8, 24, 20.0);
+        let plain = run_online(&cfg).unwrap();
+        assert!(plain.tenants.is_empty());
+        let plain_json = plain.to_json();
+        assert!(plain_json.get("tenants").is_none());
+
+        let mut tenanted_cfg = cfg.clone();
+        tenanted_cfg.workload.tenants = Some(crate::workload::TenantsConfig::weighted(&[1, 2]));
+        let rep = run_online(&tenanted_cfg).unwrap();
+        let s = rep.tenants.finalize();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().map(|c| c.completed).sum::<usize>(), rep.completed);
+        assert_eq!((s[0].class, s[1].class), (0, 1));
+        assert_eq!((s[0].weight, s[1].weight), (1, 2));
+
+        // Tenant tags alone (fair_share off) must not perturb the run:
+        // the tenanted report is the plain report plus ONLY the
+        // "tenants" key.
+        let mut tagged = rep.to_json().as_obj().unwrap().clone();
+        assert!(tagged.remove("tenants").is_some());
+        assert_eq!(Json::Obj(tagged), plain_json);
     }
 
     #[test]

@@ -59,6 +59,10 @@ pub struct RunningSeq {
     /// expected-footprint admission and overrun-targeted preemption
     /// consult it; decoding itself always runs to `target_output`.
     pub predicted: Option<usize>,
+    /// Tenant identity carried from the request: fair-share admission
+    /// and per-tenant report breakdowns consult it; `None` (the
+    /// anonymous single-tenant stream) leaves every such path inert.
+    pub tenant: Option<crate::workload::Tenant>,
 }
 
 impl RunningSeq {
@@ -102,6 +106,7 @@ impl RunningSeq {
             prefilled: 0,
             prefix: req.prefix,
             predicted: req.predicted,
+            tenant: req.tenant,
         }
     }
 
@@ -166,6 +171,7 @@ mod tests {
             output_tokens: o,
             prefix: None,
             predicted: None,
+            tenant: None,
         }
     }
 

@@ -3,8 +3,13 @@
 //! The replication study instantiates N identical engines on one GPU and
 //! distributes incoming requests among them. The paper splits requests
 //! evenly; we provide round-robin (its deterministic equivalent),
-//! least-loaded (by queued tokens), and hash routing for
-//! session-affinity-style workloads.
+//! least-loaded (by queued tokens), hash routing for
+//! session-affinity-style workloads, and prefix-affinity routing that
+//! keeps every shared-prefix class pinned to the replica holding its
+//! cached blocks. [`FairQueue`] adds deficit-weighted round-robin
+//! dispatch across tenant classes for the fleet gateway.
+
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::workload::Request;
 
@@ -17,6 +22,22 @@ pub enum RoutePolicy {
     LeastLoaded,
     /// Stable hash of the request id.
     Hash,
+    /// Requests sharing a prefix class stick to the replica that first
+    /// served the class — its prefix cache already holds the class's
+    /// leading blocks, so repeat prompts prefill from cache instead of
+    /// recomputing. New classes bind to the least-loaded replica;
+    /// requests without a prefix tag fall back to id-hash routing.
+    /// Composes with [`Router::route_healthy`]: when a class's replica
+    /// is down, the class re-sticks to the re-routed target.
+    PrefixAffinity,
+}
+
+/// The routing key prefix-affinity sticks on: the request's shared
+/// prefix class (per-tenant prefix overrides already namespace their
+/// classes disjointly in the workload generator, so tenants never
+/// collide here).
+fn affinity_class(req: &Request) -> Option<u64> {
+    req.prefix.map(|p| p.class)
 }
 
 /// Stateful router over `n` replicas.
@@ -30,6 +51,8 @@ pub struct Router {
     /// Health flags: a downed replica is skipped by
     /// [`Router::route_healthy`] until [`Router::mark_up`].
     down: Vec<bool>,
+    /// Sticky prefix-class -> replica bindings (PrefixAffinity only).
+    affinity: BTreeMap<u64, usize>,
 }
 
 impl Router {
@@ -42,6 +65,7 @@ impl Router {
             next: 0,
             load: vec![0; n],
             down: vec![false; n],
+            affinity: BTreeMap::new(),
         }
     }
 
@@ -70,6 +94,27 @@ impl Router {
             RoutePolicy::Hash => {
                 (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.n
             }
+            RoutePolicy::PrefixAffinity => match affinity_class(req) {
+                Some(class) => match self.affinity.get(&class) {
+                    Some(&r) => r,
+                    None => {
+                        // First sight of a class: bind it to the
+                        // least-loaded replica (deterministic — ties go
+                        // to the lowest index) and stick.
+                        let (r, _) = self
+                            .load
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, &l)| l)
+                            .unwrap();
+                        self.affinity.insert(class, r);
+                        r
+                    }
+                },
+                // Untagged requests have no cache locality to protect:
+                // spread them by the same stable id hash Hash uses.
+                None => (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.n,
+            },
         }
     }
 
@@ -109,7 +154,7 @@ impl Router {
             return (first, false);
         }
         let r = match self.policy {
-            RoutePolicy::LeastLoaded => (0..self.n)
+            RoutePolicy::LeastLoaded | RoutePolicy::PrefixAffinity => (0..self.n)
                 .filter(|&i| !self.down[i])
                 .min_by_key(|&i| self.load[i])
                 .unwrap(),
@@ -118,6 +163,14 @@ impl Router {
                 .find(|&i| !self.down[i])
                 .unwrap(),
         };
+        // A re-routed prefix class re-sticks to the replica that now
+        // holds (and will cache) its blocks, so the class stays on one
+        // healthy replica instead of bouncing per request.
+        if self.policy == RoutePolicy::PrefixAffinity {
+            if let Some(class) = affinity_class(req) {
+                self.affinity.insert(class, r);
+            }
+        }
         self.load[r] += req.total_tokens() as u64;
         (r, true)
     }
@@ -139,6 +192,95 @@ impl Router {
     }
 }
 
+/// Deficit-weighted round-robin dispatch queue across tenant classes
+/// (the fleet gateway's admission queue).
+///
+/// Classic DRR: each active class holds a FIFO and a deficit counter;
+/// a round visits active classes in order, tops the visited class's
+/// deficit up by `quantum × weight`, and dispatches its queued items
+/// while the deficit covers their cost (here: total tokens). Over any
+/// backlogged interval each class's dispatched cost is proportional to
+/// its weight within one `max_cost + quantum × weight` — the bounded
+/// cross-tenant unfairness the router proptests pin. A class that
+/// drains resets its deficit (no banking credit while idle), and FIFO
+/// order within a class is never reordered.
+#[derive(Debug, Clone)]
+pub struct FairQueue<T> {
+    quantum: u64,
+    /// Per class: (weight, deficit, FIFO of (cost, item)).
+    classes: BTreeMap<u64, (u64, u64, VecDeque<(u64, T)>)>,
+    /// Active classes in round-robin visit order.
+    active: VecDeque<u64>,
+    len: usize,
+}
+
+impl<T> FairQueue<T> {
+    /// A queue with the given deficit quantum (floored at 1).
+    pub fn new(quantum: u64) -> Self {
+        Self {
+            quantum: quantum.max(1),
+            classes: BTreeMap::new(),
+            active: VecDeque::new(),
+            len: 0,
+        }
+    }
+
+    /// Queued items across all classes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue `item` for `class` with the given weight and cost. The
+    /// latest weight wins for the whole class; cost is floored at 1 so
+    /// a round always makes progress.
+    pub fn push(&mut self, class: u64, weight: u64, cost: u64, item: T) {
+        let entry = self
+            .classes
+            .entry(class)
+            .or_insert_with(|| (weight.max(1), 0, VecDeque::new()));
+        entry.0 = weight.max(1);
+        if entry.2.is_empty() {
+            self.active.push_back(class);
+        }
+        entry.2.push_back((cost.max(1), item));
+        self.len += 1;
+    }
+
+    /// Dispatch the next item under DRR, or `None` when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let class = *self.active.front().expect("non-empty queue has an active class");
+            let entry = self.classes.get_mut(&class).expect("active class exists");
+            let &(cost, _) = entry.2.front().expect("active class has items");
+            if entry.1 >= cost {
+                entry.1 -= cost;
+                let (_, item) = entry.2.pop_front().unwrap();
+                self.len -= 1;
+                if entry.2.is_empty() {
+                    // Idle classes bank no credit.
+                    entry.1 = 0;
+                    self.active.pop_front();
+                }
+                return Some(item);
+            }
+            // Deficit exhausted: top up and move to the round's back.
+            // Each visit adds quantum × weight >= 1, so the head item's
+            // cost is eventually covered — no livelock.
+            entry.1 += self.quantum * entry.0;
+            let c = self.active.pop_front().unwrap();
+            self.active.push_back(c);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,7 +293,14 @@ mod tests {
             output_tokens: o,
             prefix: None,
             predicted: None,
+            tenant: None,
         }
+    }
+
+    fn preq(id: u64, class: u64) -> Request {
+        let mut r = req(id, 100, 50);
+        r.prefix = Some(crate::workload::SharedPrefix { class, tokens: 32 });
+        r
     }
 
     #[test]
@@ -220,6 +369,80 @@ mod tests {
         // Nowhere to go: the policy pick stands, unrerouted.
         assert_eq!(r.route_healthy(&req(0, 10, 10)), (0, false));
         assert_eq!(r.route_healthy(&req(1, 10, 10)), (1, false));
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_classes_to_one_replica() {
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 3);
+        // Each class binds on first sight and never moves.
+        let mut homes = BTreeMap::new();
+        for i in 0..60 {
+            let x = preq(i, i % 5);
+            let replica = r.route(&x);
+            let home = homes.entry(i % 5).or_insert(replica);
+            assert_eq!(*home, replica, "class {} bounced", i % 5);
+        }
+        // 5 classes over 3 replicas: least-loaded binding spreads them.
+        let distinct: std::collections::BTreeSet<_> = homes.values().collect();
+        assert_eq!(distinct.len(), 3, "{homes:?}");
+        // Untagged requests spread by id hash, like Hash policy.
+        let mut h = Router::new(RoutePolicy::Hash, 3);
+        for i in 0..20 {
+            assert_eq!(r.pick(&req(i, 10, 10)), h.pick(&req(i, 10, 10)));
+        }
+    }
+
+    #[test]
+    fn prefix_affinity_resticks_when_the_home_replica_goes_down() {
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 3);
+        let home = r.route(&preq(0, 7));
+        r.mark_down(home);
+        let (moved, rerouted) = r.route_healthy(&preq(1, 7));
+        assert!(rerouted);
+        assert_ne!(moved, home);
+        // The class re-stuck: subsequent requests follow without a
+        // re-route, even after the old home recovers.
+        let (again, rerouted) = r.route_healthy(&preq(2, 7));
+        assert_eq!((again, rerouted), (moved, false));
+        r.mark_up(home);
+        let (after, rerouted) = r.route_healthy(&preq(3, 7));
+        assert_eq!((after, rerouted), (moved, false));
+    }
+
+    #[test]
+    fn fair_queue_splits_service_by_weight() {
+        // Two backlogged classes, weights 1:3, unit cost: dispatch
+        // order interleaves 1 from class 0 per 3 from class 1.
+        let mut q = FairQueue::new(1);
+        for i in 0..40u64 {
+            q.push(0, 1, 1, ("a", i));
+            q.push(1, 3, 1, ("b", i));
+        }
+        let mut counts = BTreeMap::new();
+        for _ in 0..24 {
+            let (tag, _) = q.pop().unwrap();
+            *counts.entry(tag).or_insert(0usize) += 1;
+        }
+        // 24 dispatches at 1:3 => 6 vs 18, within one quantum round.
+        let a = counts["a"] as i64;
+        let b = counts["b"] as i64;
+        assert!((a - 6).abs() <= 2 && (b - 18).abs() <= 2, "{counts:?}");
+        assert_eq!(q.len(), 80 - 24);
+    }
+
+    #[test]
+    fn fair_queue_is_fifo_within_a_class_and_drains_empty() {
+        let mut q = FairQueue::new(4);
+        q.push(5, 2, 3, 10u64);
+        q.push(5, 2, 3, 11);
+        q.push(5, 2, 3, 12);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![10, 11, 12]);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        // Costly items still dispatch (deficit accumulates past them).
+        q.push(0, 1, 1_000_000, 99);
+        assert_eq!(q.pop(), Some(99));
     }
 
     #[test]

@@ -56,6 +56,15 @@ pub struct SchedulerConfig {
     pub policy: SchedulerPolicy,
     /// How the engine preempts when the KV pool runs dry.
     pub preempt: PreemptMode,
+    /// Weighted fair-share admission across tenant classes. `false`
+    /// (the default) is strict FCFS — bit-identical to the pre-tenant
+    /// scheduler. `true` orders admission candidates by lowest weighted
+    /// running share per tenant class (FCFS within a class and as the
+    /// tie-break), still admitting a *prefix* of that order, so every
+    /// liveness fallback below applies unchanged and no request starves:
+    /// a tenant's queue head only waits while tenants with *less* than
+    /// their fair share admit ahead of it.
+    pub fair_share: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -65,6 +74,7 @@ impl Default for SchedulerConfig {
             max_batched_tokens: 4096,
             policy: SchedulerPolicy::PrefillPriority,
             preempt: PreemptMode::Recompute,
+            fair_share: false,
         }
     }
 }
@@ -119,10 +129,73 @@ fn expected_decode_blocks(kv: &KvCacheV2, seq: &RunningSeq) -> usize {
     }
 }
 
+/// Tenant class of a sequence (`None` tenants share the anonymous
+/// class 0, matching the pre-tenant single-stream behavior).
+fn class_of(seq: &RunningSeq) -> u64 {
+    seq.tenant.map(|t| t.class).unwrap_or(0)
+}
+
+/// Fair-share weight of a sequence (floored at 1).
+fn weight_of(seq: &RunningSeq) -> u64 {
+    seq.tenant.map(|t| t.weight.max(1)).unwrap_or(1)
+}
+
 impl Scheduler {
     /// A scheduler with the given knobs.
     pub fn new(cfg: SchedulerConfig) -> Self {
         Self { cfg }
+    }
+
+    /// The order admission considers waiting-queue entries in.
+    ///
+    /// FCFS (`fair_share: false`): queue order, `0..len`. Fair share:
+    /// a weighted-round-robin replay — repeatedly grant the next seat
+    /// to the tenant class with the lowest `running / weight` share
+    /// (counting seats granted so far), taking that class's earliest
+    /// waiting entry; ties break FCFS (earliest queue head). The order
+    /// is a *pure function* of `(waiting, running)` — the scheduler
+    /// stays stateless, so replaying `decide` (as fast-forward's
+    /// streak-entry check does) can never double-count a deficit.
+    fn admission_order(
+        &self,
+        waiting: &VecDeque<RunningSeq>,
+        running: &[RunningSeq],
+    ) -> Vec<usize> {
+        if !self.cfg.fair_share {
+            return (0..waiting.len()).collect();
+        }
+        use std::collections::BTreeMap;
+        // Per-class (granted-or-running seats, weight).
+        let mut share: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        for s in running {
+            let e = share.entry(class_of(s)).or_insert((0, weight_of(s)));
+            e.0 += 1;
+        }
+        // Per-class FIFO of waiting-queue indices.
+        let mut queues: BTreeMap<u64, VecDeque<usize>> = BTreeMap::new();
+        for (i, s) in waiting.iter().enumerate() {
+            queues.entry(class_of(s)).or_default().push_back(i);
+            share.entry(class_of(s)).or_insert((0, weight_of(s))).1 = weight_of(s);
+        }
+        let mut order = Vec::with_capacity(waiting.len());
+        while order.len() < waiting.len() {
+            // Lowest weighted share wins the next seat; integer
+            // cross-multiplication avoids float ties. FCFS tie-break.
+            let class = queues
+                .iter()
+                .filter(|(_, q)| !q.is_empty())
+                .min_by(|(ca, qa), (cb, qb)| {
+                    let (na, wa) = share[*ca];
+                    let (nb, wb) = share[*cb];
+                    (na * wb).cmp(&(nb * wa)).then(qa.front().cmp(&qb.front()))
+                })
+                .map(|(c, _)| *c)
+                .expect("some class still has waiting entries");
+            let i = queues.get_mut(&class).unwrap().pop_front().unwrap();
+            order.push(i);
+            share.get_mut(&class).unwrap().0 += 1;
+        }
+        order
     }
 
     /// Decide the next step. `waiting` holds not-yet-prefilled
@@ -142,19 +215,20 @@ impl Scheduler {
     fn admissible_prefix(
         &self,
         waiting: &VecDeque<RunningSeq>,
-        running_len: usize,
+        running: &[RunningSeq],
         kv: &KvCacheV2,
         token_budget: usize,
     ) -> Vec<usize> {
         let mut idx = Vec::new();
-        let mut seats = self.cfg.max_num_seqs.saturating_sub(running_len);
+        let mut seats = self.cfg.max_num_seqs.saturating_sub(running.len());
         let mut tokens = token_budget;
         // Charge each prompt only the blocks its admission removes from
         // the reclaimable pool: net new blocks, plus LRU-parked cache
         // hits it would re-reference. With the cache disabled this
         // degenerates to v1's gross-blocks-vs-free check exactly.
         let mut free_blocks = kv.reclaimable_blocks();
-        for (i, seq) in waiting.iter().enumerate() {
+        for i in self.admission_order(waiting, running) {
+            let seq = &waiting[i];
             if seats == 0 {
                 break;
             }
@@ -173,7 +247,7 @@ impl Scheduler {
                 if idx.is_empty() && base_blocks <= free_blocks {
                     idx.push(i);
                 }
-                break; // strict FCFS: no skipping ahead
+                break; // admission order is strict: no skipping ahead
             }
             if need_tokens > tokens {
                 // A head-of-line prompt longer than the whole step
@@ -189,6 +263,10 @@ impl Scheduler {
             tokens -= need_tokens;
             free_blocks -= need_blocks;
         }
+        // Fair share may pick indices out of queue order; the engine's
+        // take_waiting contract is a strictly-ascending index set. FCFS
+        // already emits ascending indices, so this is a no-op there.
+        idx.sort_unstable();
         idx
     }
 
@@ -198,7 +276,7 @@ impl Scheduler {
         running: &[RunningSeq],
         kv: &KvCacheV2,
     ) -> ScheduleDecision {
-        let idx = self.admissible_prefix(waiting, running.len(), kv, self.cfg.max_batched_tokens);
+        let idx = self.admissible_prefix(waiting, running, kv, self.cfg.max_batched_tokens);
         if !idx.is_empty() {
             return ScheduleDecision::Prefill { queue_idx: idx };
         }
@@ -218,7 +296,7 @@ impl Scheduler {
         // into the remainder.
         let decode_tokens = running.len();
         let leftover = self.cfg.max_batched_tokens.saturating_sub(decode_tokens);
-        let grants = self.chunk_grants(waiting, running.len(), kv, leftover);
+        let grants = self.chunk_grants(waiting, running, kv, leftover);
         match (grants.is_empty(), running.is_empty()) {
             (false, _) => ScheduleDecision::Mixed { grants },
             (true, false) => ScheduleDecision::Decode,
@@ -235,16 +313,17 @@ impl Scheduler {
     fn chunk_grants(
         &self,
         waiting: &VecDeque<RunningSeq>,
-        running_len: usize,
+        running: &[RunningSeq],
         kv: &KvCacheV2,
         token_budget: usize,
     ) -> Vec<ChunkGrant> {
         let mut grants = Vec::new();
-        let mut seats = self.cfg.max_num_seqs.saturating_sub(running_len);
+        let mut seats = self.cfg.max_num_seqs.saturating_sub(running.len());
         let mut tokens = token_budget;
         let mut free_blocks = kv.reclaimable_blocks();
         let bs = kv.block_size();
-        for (i, seq) in waiting.iter().enumerate() {
+        for i in self.admission_order(waiting, running) {
+            let seq = &waiting[i];
             if seats == 0 || tokens == 0 {
                 break;
             }
@@ -287,7 +366,7 @@ impl Scheduler {
                         tokens: grant,
                     });
                 }
-                break; // strict FCFS: no skipping ahead
+                break; // admission order is strict: no skipping ahead
             }
             grants.push(ChunkGrant {
                 queue_idx: i,
@@ -298,10 +377,13 @@ impl Scheduler {
             free_blocks -= need_blocks;
             if grant < remaining {
                 // A truncated chunk exhausted the budget; nothing
-                // behind it may overtake (strict FCFS).
+                // behind it may overtake.
                 break;
             }
         }
+        // Same ascending-index contract as `admissible_prefix` (no-op
+        // under FCFS; fair share may reorder).
+        grants.sort_unstable_by_key(|g| g.queue_idx);
         grants
     }
 }
@@ -342,7 +424,20 @@ mod tests {
             max_batched_tokens: 4096,
             policy,
             preempt: PreemptMode::Recompute,
+            fair_share: false,
         })
+    }
+
+    fn fair(max_seqs: usize, policy: SchedulerPolicy) -> Scheduler {
+        let mut s = sched(max_seqs, policy);
+        s.cfg.fair_share = true;
+        s
+    }
+
+    fn tseq(id: u64, prompt: usize, class: u64, weight: u64) -> RunningSeq {
+        let mut s = seq(id, prompt);
+        s.tenant = Some(crate::workload::Tenant::new(class, weight));
+        s
     }
 
     #[test]
@@ -597,6 +692,117 @@ mod tests {
                 assert_eq!(grants.len(), 1);
                 assert_eq!(grants[0].queue_idx, 0);
             }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fair_share_off_is_plain_fcfs_even_with_tenants() {
+        let s = sched(8, SchedulerPolicy::PrefillPriority);
+        let waiting: VecDeque<_> =
+            vec![tseq(0, 100, 0, 1), tseq(1, 100, 0, 1), tseq(2, 100, 1, 4)].into();
+        match s.decide(&waiting, &[], &kv()) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0, 1, 2]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fair_share_interleaves_tenant_classes_under_seat_pressure() {
+        // Tenant 0 monopolizes the front of the queue; with 2 seats,
+        // FCFS admits two of tenant 0, fair share admits one of each.
+        let s = fair(2, SchedulerPolicy::PrefillPriority);
+        let waiting: VecDeque<_> = vec![
+            tseq(0, 10, 0, 1),
+            tseq(1, 10, 0, 1),
+            tseq(2, 10, 0, 1),
+            tseq(3, 10, 1, 1),
+        ]
+        .into();
+        match s.decide(&waiting, &[], &kv()) {
+            // Ascending-index contract: {0, 3}, sorted.
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0, 3]),
+            d => panic!("{d:?}"),
+        }
+        let fcfs = sched(2, SchedulerPolicy::PrefillPriority);
+        match fcfs.decide(&waiting, &[], &kv()) {
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![0, 1]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fair_share_respects_weights_and_running_share() {
+        // Tenant 1 (weight 2) is entitled to twice tenant 0's seats.
+        // With tenant 0 already holding 2 running seats and tenant 1
+        // holding 1, tenant 1's share (1/2) trails tenant 0's (2/1), so
+        // tenant 1 wins the seats until shares level.
+        let s = fair(2, SchedulerPolicy::PrefillPriority);
+        let running = vec![tseq(10, 10, 0, 1), tseq(11, 10, 0, 1), tseq(12, 10, 1, 2)];
+        let waiting: VecDeque<_> = vec![
+            tseq(0, 10, 0, 1),
+            tseq(1, 10, 1, 2),
+            tseq(2, 10, 1, 2),
+        ]
+        .into();
+        // 2 running of 3 seats... max_num_seqs=2 means no seats. Use 5.
+        let s5 = fair(5, s.cfg.policy);
+        match s5.decide(&waiting, &running, &kv()) {
+            // Seats left: 2. Shares: t0 = 2/1, t1 = 1/2 -> t1 takes the
+            // first seat (idx 1, share -> 2/2 = 1) and the second
+            // (idx 2, 1 < 2): both tenant-1 entries admit.
+            ScheduleDecision::Prefill { queue_idx } => assert_eq!(queue_idx, vec![1, 2]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fair_share_is_starvation_free_within_a_class() {
+        // Within one class the order stays FCFS: a class's second entry
+        // never overtakes its first.
+        let s = fair(8, SchedulerPolicy::PrefillPriority);
+        let waiting: VecDeque<_> = vec![
+            tseq(0, 10, 0, 1),
+            tseq(1, 10, 1, 3),
+            tseq(2, 10, 1, 3),
+            tseq(3, 10, 0, 1),
+        ]
+        .into();
+        match s.decide(&waiting, &[], &kv()) {
+            ScheduleDecision::Prefill { queue_idx } => {
+                // All four fit; fairness only changes the *order*
+                // considered, and everything admissible still admits.
+                assert_eq!(queue_idx, vec![0, 1, 2, 3]);
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fair_share_chunked_grants_follow_the_fair_order() {
+        // One seat: chunked fair share grants the under-served class.
+        let s = fair(1, SchedulerPolicy::ChunkedPrefill);
+        let waiting: VecDeque<_> = vec![
+            tseq(0, 100, 0, 1),
+            tseq(1, 100, 0, 1),
+            tseq(2, 100, 1, 1),
+        ]
+        .into();
+        // Tenant 0 holds the only running seat; class 1 is under-served.
+        let running = vec![tseq(10, 10, 0, 1)];
+        let s2 = fair(2, SchedulerPolicy::ChunkedPrefill);
+        match s2.decide(&waiting, &running, &kv()) {
+            ScheduleDecision::Mixed { grants } => {
+                assert_eq!(grants.len(), 1);
+                assert_eq!(grants[0].queue_idx, 2);
+                assert_eq!(grants[0].tokens, 100);
+            }
+            d => panic!("{d:?}"),
+        }
+        // Untenanted streams under fair share degrade to plain FCFS.
+        let plain: VecDeque<_> = vec![seq(0, 50), seq(1, 50)].into();
+        match s.decide(&plain, &[], &kv()) {
+            ScheduleDecision::Mixed { grants } => assert_eq!(grants[0].queue_idx, 0),
             d => panic!("{d:?}"),
         }
     }

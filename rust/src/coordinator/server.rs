@@ -20,15 +20,16 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::backend::Backend;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::router::{FairQueue, RoutePolicy, Router};
 use crate::util::json::Json;
-use crate::workload::Request;
+use crate::workload::{Request, Tenant};
 
 struct Submission {
     req: Request,
@@ -208,6 +209,15 @@ fn engine_worker<B: Backend>(
     shared.served.load(Ordering::SeqCst)
 }
 
+/// Optional tenant identity on a generate op: `"tenant"` is the class
+/// id, `"weight"` its fair-share weight (default 1). Absent = the
+/// anonymous single-tenant stream, leaving every tenant path inert.
+fn parse_tenant(msg: &Json) -> Option<Tenant> {
+    let class = msg.get("tenant").and_then(|v| v.as_u64())?;
+    let weight = msg.get("weight").and_then(|v| v.as_u64()).unwrap_or(1);
+    Some(Tenant::new(class, weight))
+}
+
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>, cfg: ServerConfig) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(cfg.read_timeout)?;
@@ -266,6 +276,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, cfg: ServerConfig) -> Res
                             output_tokens: max_tokens,
                             prefix: None,
                             predicted: None,
+                            tenant: parse_tenant(&msg),
                         },
                         reply: reply_tx,
                         submitted_wall: std::time::Instant::now(),
@@ -361,6 +372,503 @@ pub fn client_shutdown(addr: &str) -> Result<()> {
     Ok(())
 }
 
+// ======================== fleet gateway ================================
+//
+// The single-engine server above pins the original protocol. The fleet
+// gateway scales the same JSON-lines protocol out to N engine workers
+// behind the replication [`Router`]:
+//
+//   -> {"op":"generate", "prompt_len":32, "max_tokens":4,
+//       "tenant":1, "weight":2}            (tenant/weight optional)
+//   <- {"event":"token", "id":7, "index":0, "token":1234}   (streamed,
+//   <- {"event":"token", "id":7, "index":1, "token":977}     one line
+//      ...                                                   per token)
+//   <- {"event":"done", "id":7, "prompt_len":32, "tokens":4,
+//       "queue_s":..., "e2e_s":..., "wall_s":..., "worker":2, "tenant":1}
+//
+// Admission is bounded: when `admission_capacity` requests are already
+// admitted but unfinished, a generate is rejected *immediately* with
+//   <- {"error":"overloaded", "tenant":1, "id":9}
+// instead of queueing without bound. Admitted submissions drain through
+// a deficit-weighted round-robin [`FairQueue`] keyed by tenant class,
+// so a flooding tenant cannot starve a light one at dispatch, and a
+// dispatcher thread routes each one via the [`Router`] policy.
+//
+// Shutdown is a graceful drain: new generates are rejected with
+// {"error":"shutting_down"}, the queue drains through the workers, and
+// `serve_fleet*` returns the total served count once every in-flight
+// sequence has finished.
+
+/// Fleet gateway knobs (`--gateway-*` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// Per-connection timeout knobs, shared with the single-engine path.
+    pub server: ServerConfig,
+    /// Admitted-but-unfinished requests the gateway will hold (queued
+    /// plus dispatched) before rejecting with `overloaded`.
+    pub admission_capacity: usize,
+    /// DRR quantum in tokens for cross-tenant dispatch.
+    pub quantum: u64,
+    /// How the dispatcher spreads requests over the engine workers.
+    pub policy: RoutePolicy,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            server: ServerConfig::default(),
+            admission_capacity: 256,
+            quantum: 256,
+            policy: RoutePolicy::LeastLoaded,
+        }
+    }
+}
+
+/// Gateway state behind the admission lock.
+struct GatewayQueue {
+    /// Deficit-weighted fair dispatch queue over tenant classes.
+    queue: FairQueue<Submission>,
+    /// Admitted (queued + dispatched) and not yet finished.
+    in_flight: usize,
+}
+
+/// Shared gateway state.
+struct GatewayShared {
+    state: Mutex<GatewayQueue>,
+    /// Signals the dispatcher that the queue gained work (or shutdown).
+    cv: Condvar,
+    next_id: AtomicU64,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// Serve a fleet of engines on `addr` until a shutdown op arrives.
+/// Returns the total requests served across all workers after a
+/// graceful drain.
+pub fn serve_fleet<B: Backend + Send + 'static>(
+    engines: Vec<Engine<B>>,
+    addr: &str,
+    cfg: GatewayConfig,
+) -> Result<u64> {
+    serve_fleet_listener(engines, TcpListener::bind(addr)?, cfg)
+}
+
+/// [`serve_fleet`] on an already-bound listener (tests bind port 0).
+///
+/// Unlike [`serve_listener`], every engine runs on its *own* spawned
+/// worker thread, so the backend must be `Send` (the simulator backend
+/// is; the PJRT backend stays on the single-engine path).
+pub fn serve_fleet_listener<B: Backend + Send + 'static>(
+    engines: Vec<Engine<B>>,
+    listener: TcpListener,
+    cfg: GatewayConfig,
+) -> Result<u64> {
+    anyhow::ensure!(!engines.is_empty(), "fleet gateway needs at least one engine");
+    listener.set_nonblocking(true)?;
+    let shared = Arc::new(GatewayShared {
+        state: Mutex::new(GatewayQueue {
+            queue: FairQueue::new(cfg.quantum),
+            in_flight: 0,
+        }),
+        cv: Condvar::new(),
+        next_id: AtomicU64::new(1),
+        served: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+
+    let n = engines.len();
+    let mut worker_txs = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    for (i, engine) in engines.into_iter().enumerate() {
+        let (tx, rx) = channel::<Submission>();
+        worker_txs.push(tx);
+        let s = shared.clone();
+        workers.push(std::thread::spawn(move || fleet_worker(engine, rx, s, i)));
+    }
+    let dispatcher = {
+        let s = shared.clone();
+        let router = Router::new(cfg.policy, n);
+        std::thread::spawn(move || gateway_dispatcher(s, router, worker_txs))
+    };
+    let acceptor = {
+        let s = shared.clone();
+        std::thread::spawn(move || fleet_accept_loop(listener, s, cfg))
+    };
+
+    acceptor.join().expect("gateway acceptor panicked")?;
+    dispatcher.join().expect("gateway dispatcher panicked");
+    let mut served = 0;
+    for w in workers {
+        served += w.join().expect("gateway worker panicked");
+    }
+    Ok(served)
+}
+
+fn fleet_accept_loop(
+    listener: TcpListener,
+    shared: Arc<GatewayShared>,
+    cfg: GatewayConfig,
+) -> Result<()> {
+    let mut conns = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let s = shared.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_fleet_conn(stream, s, cfg);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+/// Pop admitted submissions in DRR order and route each to a worker.
+/// Exits — dropping the worker senders, which drains the workers — once
+/// shutdown is flagged *and* the queue is empty.
+fn gateway_dispatcher(
+    shared: Arc<GatewayShared>,
+    mut router: Router,
+    workers: Vec<Sender<Submission>>,
+) {
+    loop {
+        let sub = {
+            let mut st = shared.state.lock().expect("gateway lock poisoned");
+            loop {
+                if let Some(s) = st.queue.pop() {
+                    break Some(s);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .expect("gateway lock poisoned");
+                st = guard;
+            }
+        };
+        match sub {
+            Some(sub) => {
+                let w = router.route(&sub.req);
+                // A dead worker drops its receiver; the reply channel
+                // then times out client-side, which is the same contract
+                // as a reply timeout.
+                let _ = workers[w].send(sub);
+            }
+            None => break,
+        }
+    }
+}
+
+/// One engine worker: continuous batching over whatever the dispatcher
+/// sent it, streaming token/done event lines back per submission. Runs
+/// until the dispatcher hangs up *and* all in-flight work is finished
+/// (the graceful drain). Returns its served count.
+fn fleet_worker<B: Backend>(
+    mut engine: Engine<B>,
+    rx: Receiver<Submission>,
+    shared: Arc<GatewayShared>,
+    worker_idx: usize,
+) -> u64 {
+    use std::collections::HashMap;
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+    let mut replies: HashMap<u64, (Sender<Json>, std::time::Instant, f64)> = HashMap::new();
+    let mut served = 0u64;
+    let mut disconnected = false;
+    let submit = |engine: &mut Engine<B>,
+                      replies: &mut HashMap<u64, (Sender<Json>, std::time::Instant, f64)>,
+                      sub: Submission| {
+        let mut req = sub.req;
+        req.arrival = engine.now();
+        replies.insert(req.id, (sub.reply, sub.submitted_wall, engine.now()));
+        engine.submit(&[req]);
+    };
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(sub) => submit(&mut engine, &mut replies, sub),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if !engine.has_work() {
+            if disconnected {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(sub) => submit(&mut engine, &mut replies, sub),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    continue;
+                }
+            }
+        }
+        if engine.has_work() && engine.step().is_err() {
+            break;
+        }
+        for fin in engine.take_finished() {
+            if let Some((reply, wall0, t0)) = replies.remove(&fin.id) {
+                served += 1;
+                shared.served.fetch_add(1, Ordering::SeqCst);
+                {
+                    let mut st = shared.state.lock().expect("gateway lock poisoned");
+                    st.in_flight = st.in_flight.saturating_sub(1);
+                }
+                let gen = &fin.token_ids[fin.prompt_tokens..];
+                for (i, &tok) in gen.iter().enumerate() {
+                    let _ = reply.send(Json::obj(vec![
+                        ("event", Json::str("token")),
+                        ("id", Json::num(fin.id as f64)),
+                        ("index", Json::num(i as f64)),
+                        ("token", Json::num(tok as f64)),
+                    ]));
+                }
+                let mut done = vec![
+                    ("event", Json::str("done")),
+                    ("id", Json::num(fin.id as f64)),
+                    ("prompt_len", Json::num(fin.prompt_tokens as f64)),
+                    ("tokens", Json::num(gen.len() as f64)),
+                    ("queue_s", Json::num(fin.first_token_at - t0)),
+                    ("e2e_s", Json::num(fin.finished_at - t0)),
+                    ("wall_s", Json::num(wall0.elapsed().as_secs_f64())),
+                    ("worker", Json::num(worker_idx as f64)),
+                ];
+                if let Some(t) = fin.tenant {
+                    done.push(("tenant", Json::num(t.class as f64)));
+                }
+                let _ = reply.send(Json::obj(done));
+            }
+        }
+    }
+    served
+}
+
+fn handle_fleet_conn(stream: TcpStream, shared: Arc<GatewayShared>, cfg: GatewayConfig) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(cfg.server.read_timeout)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(format!("bad json: {e}")))])
+                )?;
+                continue;
+            }
+        };
+        match msg.get("op").and_then(|o| o.as_str()) {
+            Some("generate") => {
+                let prompt_len = msg
+                    .get("prompt_len")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16)
+                    .max(1);
+                let max_tokens = msg
+                    .get("max_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16)
+                    .max(1);
+                let tenant = parse_tenant(&msg);
+                let tenant_json = match tenant {
+                    Some(t) => Json::num(t.class as f64),
+                    None => Json::Null,
+                };
+                let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![
+                            ("error", Json::str("shutting_down")),
+                            ("id", Json::num(id as f64)),
+                            ("tenant", tenant_json),
+                        ])
+                    )?;
+                    continue;
+                }
+                let req = Request {
+                    id,
+                    arrival: 0.0,
+                    prompt_tokens: prompt_len,
+                    output_tokens: max_tokens,
+                    prefix: None,
+                    predicted: None,
+                    tenant,
+                };
+                let (reply_tx, reply_rx) = channel();
+                let admitted = {
+                    let mut st = shared.state.lock().expect("gateway lock poisoned");
+                    if st.in_flight >= cfg.admission_capacity {
+                        false
+                    } else {
+                        st.in_flight += 1;
+                        let (class, weight) =
+                            tenant.map(|t| (t.class, t.weight)).unwrap_or((0, 1));
+                        st.queue.push(
+                            class,
+                            weight,
+                            req.total_tokens() as u64,
+                            Submission {
+                                req,
+                                reply: reply_tx,
+                                submitted_wall: std::time::Instant::now(),
+                            },
+                        );
+                        true
+                    }
+                };
+                if !admitted {
+                    // Structured backpressure: the client learns *which
+                    // tenant* hit the bound and can retry with backoff.
+                    shared.rejected.fetch_add(1, Ordering::SeqCst);
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![
+                            ("error", Json::str("overloaded")),
+                            ("id", Json::num(id as f64)),
+                            ("tenant", tenant_json),
+                        ])
+                    )?;
+                    continue;
+                }
+                shared.cv.notify_one();
+                // Stream event lines until the terminal done/error line.
+                loop {
+                    match reply_rx.recv_timeout(cfg.server.reply_timeout) {
+                        Ok(ev) => {
+                            let is_done = ev.get("event").and_then(|e| e.as_str())
+                                == Some("done")
+                                || ev.get("error").is_some();
+                            writeln!(writer, "{ev}")?;
+                            if is_done {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            writeln!(
+                                writer,
+                                "{}",
+                                Json::obj(vec![
+                                    ("error", Json::str("timeout")),
+                                    ("id", Json::num(id as f64)),
+                                ])
+                            )?;
+                            break;
+                        }
+                    }
+                }
+            }
+            Some("stats") => {
+                let queued = {
+                    let st = shared.state.lock().expect("gateway lock poisoned");
+                    st.queue.len()
+                };
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        (
+                            "served",
+                            Json::num(shared.served.load(Ordering::SeqCst) as f64)
+                        ),
+                        (
+                            "rejected",
+                            Json::num(shared.rejected.load(Ordering::SeqCst) as f64)
+                        ),
+                        ("queued", Json::num(queued as f64)),
+                    ])
+                )?;
+            }
+            Some("shutdown") => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.cv.notify_all();
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
+                break;
+            }
+            _ => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str("unknown op"))])
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fleet client: send one generate op (optionally tenant-tagged) and
+/// collect the streamed event lines through the terminal one. Returns
+/// every line received, last one being `done` or an error object.
+pub fn client_generate_fleet(
+    addr: &str,
+    prompt_len: usize,
+    max_tokens: usize,
+    tenant: Option<(u64, u64)>,
+) -> Result<Vec<Json>> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut op = vec![
+        ("op", Json::str("generate")),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("max_tokens", Json::num(max_tokens as f64)),
+    ];
+    if let Some((class, weight)) = tenant {
+        op.push(("tenant", Json::num(class as f64)));
+        op.push(("weight", Json::num(weight as f64)));
+    }
+    writeln!(stream, "{}", Json::obj(op))?;
+    let mut out = Vec::new();
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line.trim())?;
+        let terminal = ev.get("event").and_then(|e| e.as_str()) == Some("done")
+            || ev.get("error").is_some();
+        out.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +911,74 @@ mod tests {
         client_shutdown(addr).unwrap();
         let served = server.join().unwrap();
         assert!(served >= 5, "served {served}");
+    }
+
+    fn sim_engine() -> Engine<SimBackend> {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        Engine::new(backend, EngineConfig::new(8, 4096, 16))
+    }
+
+    #[test]
+    fn fleet_gateway_streams_token_events_and_drains_gracefully() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            serve_fleet_listener(
+                vec![sim_engine(), sim_engine()],
+                listener,
+                GatewayConfig::default(),
+            )
+            .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+
+        let evs = client_generate_fleet(&addr, 32, 4, Some((1, 2))).unwrap();
+        assert_eq!(evs.len(), 5, "4 token lines + done: {evs:?}");
+        for (i, ev) in evs[..4].iter().enumerate() {
+            assert_eq!(ev.get("event").and_then(|e| e.as_str()), Some("token"));
+            assert_eq!(ev.get("index").and_then(|v| v.as_usize()), Some(i));
+            assert!(ev.get("token").and_then(|v| v.as_u64()).is_some());
+        }
+        let done = evs.last().unwrap();
+        assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"));
+        assert_eq!(done.get("tokens").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(done.get("tenant").and_then(|v| v.as_u64()), Some(1));
+        assert!(done.get("worker").and_then(|v| v.as_usize()).unwrap() < 2);
+
+        client_shutdown(&addr).unwrap();
+        assert_eq!(server.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn fleet_gateway_rejects_over_capacity_with_tenant_tagged_backpressure() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // Zero admission capacity: every generate bounces immediately —
+        // the deterministic way to exercise the backpressure line.
+        let cfg = GatewayConfig {
+            admission_capacity: 0,
+            ..GatewayConfig::default()
+        };
+        let server = std::thread::spawn(move || {
+            serve_fleet_listener(vec![sim_engine()], listener, cfg).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+
+        let evs = client_generate_fleet(&addr, 16, 4, Some((3, 1))).unwrap();
+        assert_eq!(evs.len(), 1);
+        let rej = &evs[0];
+        assert_eq!(rej.get("error").and_then(|e| e.as_str()), Some("overloaded"));
+        assert_eq!(rej.get("tenant").and_then(|v| v.as_u64()), Some(3));
+        // Untagged requests carry tenant:null in the rejection.
+        let evs = client_generate_fleet(&addr, 16, 4, None).unwrap();
+        assert_eq!(evs[0].get("tenant"), Some(&Json::Null));
+
+        client_shutdown(&addr).unwrap();
+        assert_eq!(server.join().unwrap(), 0, "nothing was admitted");
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub fn disagg(opts: &FigOpts) -> Result<Vec<Table>> {
             1,
             1,
             MigrateLink::NvLink,
+            crate::coordinator::router::RoutePolicy::RoundRobin,
             &traces[i],
         )
     });

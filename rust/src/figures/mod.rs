@@ -18,6 +18,7 @@ pub mod replication_figs;
 pub mod roofline_figs;
 pub mod serving;
 pub mod stalls;
+pub mod tenant_figs;
 pub mod tp_figs;
 
 use std::fmt::Write as _;
@@ -221,7 +222,7 @@ impl FigOpts {
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "table1", "table2", "table3", "table4", "online", "prefix", "tp", "faults",
-    "adaptive", "disagg",
+    "adaptive", "disagg", "tenants",
 ];
 
 /// Generate one artefact by id.
@@ -250,6 +251,7 @@ pub fn generate(id: &str, opts: &FigOpts) -> Result<Vec<Table>> {
         "faults" => faults_figs::faults_sweep(opts),
         "adaptive" => adaptive_figs::adaptive(opts),
         "disagg" => disagg_figs::disagg(opts),
+        "tenants" => tenant_figs::tenants(opts),
         other => bail!("unknown artefact id '{other}' (known: {ALL_IDS:?})"),
     }
 }

@@ -34,23 +34,25 @@ memgap — 'Mind the Memory Gap' reproduction
 USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
 
   serve     --addr 127.0.0.1:8078 [--artifacts DIR | --sim MODEL] [--max-seqs N]
-            [--reply-timeout-s S] [--read-timeout-s S]
+            [--reply-timeout-s S] [--read-timeout-s S] [--gateway-engines N]
+            [--admission-capacity N] [--quantum Q] [--route-policy P]
   offline   --model OPT-1.3B --max-seqs 96 [--requests N] [--in L] [--out L]
             [--tp K] [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--no-fast-forward] [--fault-* ...] [--controller-* ...]
-            [--predict-* ...] [--disagg ...]
+            [--predict-* ...] [--disagg ...] [--tenants ...] [--fair-share]
   online    --model OPT-1.3B [--rate R] [--requests N] [--max-seqs B] [--seed S]
             [--tp K] [--pattern poisson|bursty] [--period S] [--duty F]
             [--prefix-cache] [--preempt-mode recompute|swap]
             [--prefix-classes N] [--prefix-len L] [--prefix-share F]
             [--slo-itl-ms X] [--slo-ttft-ms X] [--slo-e2e-s X] [--json PATH]
             [--no-fast-forward] [--fault-* ...] [--controller-* ...]
-            [--predict-* ...] [--disagg ...]
+            [--predict-* ...] [--disagg ...] [--tenants ...] [--fair-share]
   plan      --model OPT-1.3B [--rate R] [--requests N] [--batches 32,96,512]
             [--replicas 1,2,4] [--tp 1,2,4] [--gpus G]
             [--slo-itl-ms X] [--csv PATH] [--fault-* ...]
             [--controller-* ...] [--predict-* ...] [--disagg ...]
+            [--tenants ...] [--fair-share]
 
   Adaptive admission control (offline/online apply it to the engine; plan
   applies it to every probed grid point):
@@ -77,6 +79,20 @@ USAGE: memgap <serve|offline|online|plan|bca|replicate|profile|figures> [flags]
     --prefill-gpus N[,N...]      prefill-pool engine count(s) (default 1)
     --decode-gpus N[,N...]       decode-pool engine count(s) (default 1)
     --migrate-link LINK          KV handoff link: zero|nvlink|pcie (default nvlink)
+  Multi-tenant serving (offline/online/plan tag the workload and report
+  per-tenant-class latency breakdowns):
+    --tenants N                  N tenant classes, dealt round-robin by request id
+    --tenant-weights W1,W2,...   one class per entry, with fair-share weights
+    --fair-share                 weighted fair-share admission inside each engine
+                                 (starvation-free weighted round-robin; needs tenants)
+  Fleet routing (serve's gateway dispatch, and the --disagg prefill-pool
+  deal in offline/online/plan):
+    --route-policy P             round-robin|least-loaded|hash|prefix-affinity
+  Fleet gateway (serve; requires --sim):
+    --gateway-engines N          N engine workers behind one listener + router
+    --admission-capacity N       bound on admitted-but-unfinished requests;
+                                 overflow is rejected with {\"error\":\"overloaded\"}
+    --quantum Q                  deficit-round-robin quantum in tokens
   bca       --model OPT-1.3B [--eps 0.1] [--slo strict|relaxed] [--quick]
   replicate --model OPT-1.3B [--replicas N] [--policy mps|fcfs] [--quick]
   profile   --model OPT-1.3B [--batch B] [--backend xformers|flash] [--ctx N]
@@ -329,6 +345,98 @@ fn prefix_args(args: &Args) -> Result<Option<memgap::workload::SharedPrefixConfi
     }))
 }
 
+/// Multi-tenant workload shaping: enabled iff `--tenants` (class count,
+/// all weight 1) and/or `--tenant-weights` (one class per comma entry)
+/// is given; with both, the list length must equal the count.
+/// `--fair-share` switches the engines to weighted fair-share admission
+/// and errors out without tenant classes to share between.
+fn tenant_args(args: &Args) -> Result<Option<memgap::workload::TenantsConfig>> {
+    use memgap::workload::TenantsConfig;
+    let weights = match args.get("tenant-weights") {
+        None => None,
+        Some(v) => {
+            let parsed: Result<Vec<u64>> = v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("--tenant-weights {v}: {e}"))
+                })
+                .collect();
+            Some(parsed?)
+        }
+    };
+    let classes = match args.get("tenants") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--tenants {v}: {e}"))?,
+        ),
+    };
+    let cfg = match (classes, weights) {
+        (None, None) => {
+            if args.has("fair-share") {
+                bail!("--fair-share needs --tenants or --tenant-weights");
+            }
+            return Ok(None);
+        }
+        (Some(0), _) => bail!("--tenants must be >= 1"),
+        (Some(n), None) => TenantsConfig::even(n),
+        (n, Some(w)) => {
+            if w.is_empty() || w.contains(&0) {
+                bail!("--tenant-weights entries must be >= 1");
+            }
+            if let Some(n) = n {
+                if w.len() != n {
+                    bail!(
+                        "--tenant-weights has {} entries but --tenants is {n}",
+                        w.len()
+                    );
+                }
+            }
+            TenantsConfig::weighted(&w)
+        }
+    };
+    Ok(Some(cfg))
+}
+
+/// Fleet routing policy (`--route-policy`): consumed by the serve
+/// gateway's dispatcher and by the `--disagg` prefill-pool deal in
+/// offline/online/plan. Absent -> `None` (callers keep their
+/// historical round-robin).
+fn route_policy_arg(args: &Args) -> Result<Option<memgap::coordinator::router::RoutePolicy>> {
+    use memgap::coordinator::router::RoutePolicy;
+    Ok(Some(match args.get("route-policy") {
+        None => return Ok(None),
+        Some("round-robin") => RoutePolicy::RoundRobin,
+        Some("least-loaded") => RoutePolicy::LeastLoaded,
+        Some("hash") => RoutePolicy::Hash,
+        Some("prefix-affinity") => RoutePolicy::PrefixAffinity,
+        Some(other) => bail!(
+            "unknown --route-policy '{other}' \
+             (known: round-robin, least-loaded, hash, prefix-affinity)"
+        ),
+    }))
+}
+
+/// Per-tenant-class breakdown lines shared by `offline`, `online`, and
+/// the `--disagg` paths (silent on anonymous single-tenant runs).
+fn print_tenant_breakdown(t: &memgap::metrics::TenantBreakdown) {
+    for c in t.finalize() {
+        println!(
+            "tenant {:>2} (w{:<2})  : {} done, {} tok, TTFT p50 {:.2} ms, \
+             ITL p50 {:.2} ms, E2E p50 {:.2} s",
+            c.class,
+            c.weight,
+            c.completed,
+            c.output_tokens,
+            c.ttft.p50 * 1e3,
+            c.itl.p50 * 1e3,
+            c.e2e.p50
+        );
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -374,6 +482,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8078");
     let max_seqs = args.usize_or("max-seqs", 8);
     let scfg = server_cfg(args)?;
+    if args.has("gateway-engines") {
+        let n = args.usize_or("gateway-engines", 0);
+        if n == 0 {
+            bail!("--gateway-engines must be >= 1");
+        }
+        let Some(model) = args.get("sim") else {
+            bail!("--gateway-engines needs --sim MODEL (the PJRT runtime loads one engine)");
+        };
+        let spec = ModelSpec::by_name(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        let engines: Vec<_> = (0..n)
+            .map(|_| {
+                let backend =
+                    SimBackend::new(GpuSpec::h100_64g(), spec.clone(), backend_arg(args));
+                Engine::new(backend, EngineConfig::new(max_seqs, 64 * 1024, 16))
+            })
+            .collect();
+        let mut gcfg = server::GatewayConfig {
+            server: scfg,
+            ..server::GatewayConfig::default()
+        };
+        gcfg.admission_capacity = args.usize_or("admission-capacity", gcfg.admission_capacity);
+        gcfg.quantum = args.u64_or("quantum", gcfg.quantum);
+        if let Some(p) = route_policy_arg(args)? {
+            gcfg.policy = p;
+        }
+        eprintln!(
+            "serving SIMULATED {model} fleet ({n} engines, {:?} routing) on {addr} \
+             (JSON lines; op=generate/stats/shutdown)",
+            gcfg.policy
+        );
+        let served = server::serve_fleet(engines, addr, gcfg)?;
+        eprintln!("served {served} requests");
+        return Ok(());
+    }
+    for k in ["admission-capacity", "quantum", "route-policy"] {
+        if args.has(k) {
+            bail!("--{k} needs --gateway-engines to start the fleet gateway");
+        }
+    }
     if let Some(model) = args.get("sim") {
         let spec = ModelSpec::by_name(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
@@ -434,6 +582,9 @@ fn cmd_offline(args: &Args) -> Result<()> {
     cfg.faults = fault_args(args)?;
     cfg.controller = controller_args(args)?;
     cfg.predictor = predictor_args(args)?;
+    cfg.tenants = tenant_args(args)?;
+    cfg.fair_share = args.bool_or("fair-share", false);
+    let route_policy = route_policy_arg(args)?;
     if let Some((prefill, decode, link)) = disagg_args(args)? {
         use memgap::coordinator::disagg::{run_disagg, DisaggConfig};
         let mut dcfg = DisaggConfig::new(
@@ -442,16 +593,24 @@ fn cmd_offline(args: &Args) -> Result<()> {
         );
         dcfg.link = link;
         dcfg.faults = cfg.faults.take();
+        if let Some(p) = route_policy {
+            dcfg.route_policy = p;
+        }
         let reqs = generate(&WorkloadConfig {
             prefix: cfg.prefix,
             predictor: cfg.predictor,
+            tenants: cfg.tenants.clone(),
             ..WorkloadConfig::offline(cfg.num_requests, cfg.input_len, cfg.output_len)
         });
         let rep = run_disagg(&cfg, &dcfg, &reqs)?;
         println!("model            : {}", cfg.model.name);
         println!("max batch        : {max_seqs}");
         print_disagg_report(&dcfg, &rep);
+        print_tenant_breakdown(&rep.tenants);
         return Ok(());
+    }
+    if route_policy.is_some() {
+        bail!("--route-policy here needs --disagg (or `serve --gateway-engines`)");
     }
     let r = cfg.run()?;
     println!("model            : {}", cfg.model.name);
@@ -497,6 +656,7 @@ fn cmd_offline(args: &Args) -> Result<()> {
     }
     print_fault_stats(&r.faults);
     print_controller_stats(r.controller.as_ref(), &r.prediction);
+    print_tenant_breakdown(&r.tenants);
     Ok(())
 }
 
@@ -563,7 +723,10 @@ fn cmd_online(args: &Args) -> Result<()> {
     cfg.engine.controller = controller_args(args)?;
     cfg.engine.predictor = predictor_args(args)?;
     cfg.workload.prefix = prefix_args(args)?;
+    cfg.workload.tenants = tenant_args(args)?;
+    cfg.engine.fair_share = args.bool_or("fair-share", false);
     cfg.slo = slo_arg(args)?;
+    let route_policy = route_policy_arg(args)?;
     if let Some((prefill, decode, link)) = disagg_args(args)? {
         use memgap::coordinator::disagg::{run_disagg, DisaggConfig};
         let mut dcfg = DisaggConfig::new(
@@ -572,6 +735,9 @@ fn cmd_online(args: &Args) -> Result<()> {
         );
         dcfg.link = link;
         dcfg.faults = cfg.engine.faults.take();
+        if let Some(p) = route_policy {
+            dcfg.route_policy = p;
+        }
         // Mirror run_online: the engine's predictor flows into the
         // workload unless the workload already carries its own.
         let mut workload = cfg.workload.clone();
@@ -583,9 +749,13 @@ fn cmd_online(args: &Args) -> Result<()> {
         println!("model            : {}", cfg.engine.model.name);
         println!("max batch        : {max_seqs}");
         print_disagg_report(&dcfg, &rep);
+        print_tenant_breakdown(&rep.tenants);
         println!("SLO attainment   : {:.1} %", 100.0 * rep.attainment(&cfg.slo));
         println!("goodput          : {:.2} req/s", rep.goodput_rps(&cfg.slo));
         return Ok(());
+    }
+    if route_policy.is_some() {
+        bail!("--route-policy here needs --disagg (or `serve --gateway-engines`)");
     }
     let rep = run_online(&cfg)?;
     println!("model            : {}", rep.model);
@@ -627,6 +797,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     }
     print_fault_stats(&rep.faults);
     print_controller_stats(rep.controller.as_ref(), &rep.prediction);
+    print_tenant_breakdown(&rep.tenants);
     if let Some(path) = args.get("json") {
         std::fs::write(path, format!("{}\n", rep.to_json()))?;
         eprintln!("wrote {path}");
@@ -672,14 +843,24 @@ fn cmd_plan(args: &Args) -> Result<()> {
         }
         cfg = cfg.with_disagg(pools, link);
     }
+    if let Some(p) = route_policy_arg(args)? {
+        if cfg.disagg_pools.is_empty() {
+            bail!("--route-policy in plan needs --disagg pool shapes to route over");
+        }
+        cfg.route_policy = p;
+    }
     cfg.faults = fault_args(args)?;
-    // Controller/predictor ride on every probed grid point (the
-    // controller's ceiling is each point's probed batch).
+    // Controller/predictor/tenants ride on every probed grid point (the
+    // controller's ceiling is each point's probed batch; fair-share
+    // admission applies inside each probed engine).
     let mut base = base;
     base.controller = controller_args(args)?;
     base.predictor = predictor_args(args)?;
+    base.tenants = tenant_args(args)?;
+    base.fair_share = args.bool_or("fair-share", false);
     let mut wl = WorkloadConfig::poisson(num_requests, rate, seed);
     wl.predictor = base.predictor;
+    wl.tenants = base.tenants.clone();
     let reqs = generate(&wl);
     if cfg.disagg_pools.is_empty() {
         eprintln!(

@@ -68,6 +68,19 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Deterministic JSON rendering (alphabetical keys, like every
+    /// report object in this crate).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p99", Json::num(self.p99)),
+        ])
+    }
+
     /// Summarize `samples` (order-independent; an empty set is all
     /// zeros). Nearest-rank: pXX = sorted[ceil(n * XX/100) - 1].
     pub fn from_samples(samples: &[f64]) -> Self {
@@ -224,6 +237,133 @@ impl PredictionStats {
             ("mean_signed_err_tokens", Json::num(self.mean_signed_err())),
             ("overruns", Json::num(self.overruns as f64)),
         ])
+    }
+}
+
+/// Finalized per-tenant-class latency summary, as rendered into the
+/// `"tenants"` section of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClassSummary {
+    pub class: u64,
+    /// Fair-share weight the class ran with (informational).
+    pub weight: u64,
+    pub completed: usize,
+    pub output_tokens: usize,
+    pub ttft: Percentiles,
+    pub itl: Percentiles,
+    pub e2e: Percentiles,
+}
+
+/// Streaming per-tenant latency breakdown: every report that serves a
+/// multi-tenant workload folds finished requests in here, keyed by
+/// tenant class. An empty breakdown renders to *no* JSON at all — the
+/// report key stays absent, keeping single-tenant runs byte-identical
+/// to the pre-tenant reports.
+#[derive(Debug, Clone, Default)]
+pub struct TenantBreakdown {
+    classes: BTreeMap<u64, TenantAccum>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TenantAccum {
+    weight: u64,
+    completed: usize,
+    output_tokens: usize,
+    ttft: StreamingSummary,
+    itl: StreamingSummary,
+    e2e: StreamingSummary,
+}
+
+impl TenantBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// No tenant ever observed (the anonymous single-tenant stream).
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    /// Fold one finished request in under tenant `class`. The weight is
+    /// recorded informationally (latest wins; classes are homogeneous
+    /// by construction in the workload generator).
+    pub fn observe(&mut self, class: u64, weight: u64, lat: &RequestLatency) {
+        let a = self.classes.entry(class).or_default();
+        a.weight = weight.max(1);
+        a.completed += 1;
+        a.output_tokens += lat.output_tokens;
+        a.ttft.observe(lat.ttft);
+        if let Some(itl) = lat.itl {
+            a.itl.observe(itl);
+        }
+        a.e2e.observe(lat.e2e);
+    }
+
+    /// Finalize to per-class summaries, ascending by class id.
+    pub fn finalize(&self) -> Vec<TenantClassSummary> {
+        self.classes
+            .iter()
+            .map(|(&class, a)| TenantClassSummary {
+                class,
+                weight: a.weight,
+                completed: a.completed,
+                output_tokens: a.output_tokens,
+                ttft: a.ttft.finalize(),
+                itl: a.itl.finalize(),
+                e2e: a.e2e.finalize(),
+            })
+            .collect()
+    }
+
+    /// Render the `"tenants"` report section: one object per class,
+    /// keyed by the decimal class id. Returns `None` when empty so the
+    /// caller leaves the key out entirely (absent != null for the
+    /// byte-identity invariant).
+    pub fn to_json(&self) -> Option<crate::util::json::Json> {
+        use crate::util::json::Json;
+        if self.is_empty() {
+            return None;
+        }
+        let obj: BTreeMap<String, Json> = self
+            .finalize()
+            .into_iter()
+            .map(|s| {
+                (
+                    s.class.to_string(),
+                    Json::obj(vec![
+                        ("completed", Json::num(s.completed as f64)),
+                        ("e2e", s.e2e.to_json()),
+                        ("itl", s.itl.to_json()),
+                        ("output_tokens", Json::num(s.output_tokens as f64)),
+                        ("ttft", s.ttft.to_json()),
+                        ("weight", Json::num(s.weight as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Some(Json::Obj(obj))
+    }
+
+    /// Max/min ratio of weight-normalized completed-request counts
+    /// across classes — the unfairness number the tenants figure plots
+    /// (1.0 = perfectly weighted-fair; large = some class starved).
+    /// Classes that completed nothing make the ratio infinite.
+    pub fn unfairness(&self) -> f64 {
+        let shares: Vec<f64> = self
+            .classes
+            .values()
+            .map(|a| a.completed as f64 / a.weight.max(1) as f64)
+            .collect();
+        if shares.len() < 2 {
+            return 1.0;
+        }
+        let max = shares.iter().cloned().fold(f64::MIN, f64::max);
+        let min = shares.iter().cloned().fold(f64::MAX, f64::min);
+        if min <= 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
     }
 }
 
@@ -641,6 +781,68 @@ mod tests {
         assert_eq!(s.overruns, 1);
         assert!((s.mean_abs_err() - 4.0).abs() < 1e-12);
         assert!((s.mean_signed_err() + 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    fn lat(id: u64, ttft: f64, itl: Option<f64>, e2e: f64, out: usize) -> RequestLatency {
+        RequestLatency {
+            id,
+            arrival: 0.0,
+            ttft,
+            itl,
+            e2e,
+            output_tokens: out,
+        }
+    }
+
+    #[test]
+    fn tenant_breakdown_empty_renders_nothing() {
+        let b = TenantBreakdown::new();
+        assert!(b.is_empty());
+        assert_eq!(b.to_json(), None);
+        assert!(b.finalize().is_empty());
+        // One class: unfairness is trivially 1 (nothing to compare).
+        let mut one = TenantBreakdown::new();
+        one.observe(0, 1, &lat(1, 0.1, None, 0.2, 1));
+        assert_eq!(one.unfairness(), 1.0);
+    }
+
+    #[test]
+    fn tenant_breakdown_accumulates_per_class() {
+        let mut b = TenantBreakdown::new();
+        b.observe(0, 1, &lat(1, 0.1, Some(0.02), 0.5, 10));
+        b.observe(1, 2, &lat(2, 0.3, Some(0.04), 0.9, 20));
+        b.observe(0, 1, &lat(3, 0.2, None, 0.6, 1));
+        let s = b.finalize();
+        assert_eq!(s.len(), 2);
+        assert_eq!((s[0].class, s[0].completed, s[0].output_tokens), (0, 2, 11));
+        assert_eq!((s[1].class, s[1].weight, s[1].completed), (1, 2, 1));
+        // Single-token request contributed no ITL sample.
+        assert_eq!(s[0].itl.count, 1);
+        assert!((s[0].ttft.mean - 0.15).abs() < 1e-12);
+        // JSON keys are decimal class ids with alphabetical fields.
+        let j = b.to_json().unwrap();
+        let t0 = j.get("0").unwrap();
+        assert_eq!(t0.get("completed").unwrap().as_usize(), Some(2));
+        assert_eq!(t0.get("ttft").unwrap().get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("1").unwrap().get("weight").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn tenant_unfairness_is_weight_normalized_maxmin_ratio() {
+        // class 0 (w=1): 4 completed; class 1 (w=2): 8 completed.
+        // Normalized shares 4/1 and 8/2 are equal -> perfectly fair.
+        let mut b = TenantBreakdown::new();
+        for i in 0..4 {
+            b.observe(0, 1, &lat(i, 0.1, None, 0.2, 1));
+        }
+        for i in 0..8 {
+            b.observe(1, 2, &lat(10 + i, 0.1, None, 0.2, 1));
+        }
+        assert!((b.unfairness() - 1.0).abs() < 1e-12);
+        // Starve class 2 entirely after it appears once with weight 4:
+        // its share 1/4 vs class 1's 8/2 -> ratio 16.
+        b.observe(2, 4, &lat(100, 0.1, None, 0.2, 1));
+        assert!((b.unfairness() - 16.0).abs() < 1e-12);
     }
 
     #[test]

@@ -318,11 +318,14 @@ pub fn run_cluster(
 /// [`run_cluster`] with an optional fleet-wide fault plan, dealt
 /// round-robin across engines like [`run_replicated_with_faults`].
 ///
-/// Limitation: the engine→group mapping stays the fixed `e % groups`
-/// round-robin, so the front end does *not* re-route around crash
-/// windows here (each engine recovers its own requeued work instead);
-/// health-aware routing is exercised on the single-GPU replication
-/// path.
+/// The front end is health-aware on both paths: a request whose
+/// arrival falls inside an engine's crash window is re-routed to a
+/// healthy engine (counted in `faults.reroutes`), so the cluster and
+/// single-GPU replication paths agree on how faults shape the
+/// partition. The engine→group mapping stays the fixed `e % groups`
+/// round-robin regardless of health — groups are hardware, not
+/// routing state. `plan = None` keeps the plain round-robin deal,
+/// byte-identical to the fault-free path.
 pub fn run_cluster_with_faults(
     base: &OfflineConfig,
     engines: usize,
@@ -351,8 +354,35 @@ pub fn run_cluster_with_faults(
     let group_size = |g: usize| (engines - g + groups - 1) / groups;
 
     let mut router = Router::new(RoutePolicy::RoundRobin, engines);
-    let parts = router.partition(requests);
     let plans = plan.map(|p| p.split(engines));
+    let mut reroutes = 0u64;
+    let parts = match &plans {
+        None => router.partition(requests),
+        Some(plans) => {
+            // Health-aware partition, same walk as
+            // run_replicated_with_faults: track which engines sit
+            // inside a crash window at each request's arrival instant.
+            let windows: Vec<Vec<(f64, f64)>> =
+                plans.iter().map(|p| p.crash_windows()).collect();
+            let mut out = vec![Vec::new(); engines];
+            for r in requests {
+                for (i, w) in windows.iter().enumerate() {
+                    let dead = w.iter().any(|&(s, e)| r.arrival >= s && r.arrival < e);
+                    if dead {
+                        router.mark_down(i);
+                    } else {
+                        router.mark_up(i);
+                    }
+                }
+                let (i, rerouted) = router.route_healthy(r);
+                if rerouted {
+                    reroutes += 1;
+                }
+                out[i].push(r.clone());
+            }
+            out
+        }
+    };
 
     // Solo traces, each engine right-sized to its group's split.
     let mut traces: Vec<Vec<Segment>> = Vec::with_capacity(engines);
@@ -435,6 +465,7 @@ pub fn run_cluster_with_faults(
     for r in &solo_reports {
         faults.merge(&r.faults);
     }
+    faults.reroutes += reroutes;
 
     Ok(ClusterReport {
         engines,

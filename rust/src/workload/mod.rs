@@ -12,6 +12,7 @@
 //! Arrivals are "all at once" as in the paper's evaluation; a Poisson
 //! process is also provided for the discussion-section online scenario.
 
+use crate::metrics::Slo;
 use crate::util::rng::{mix64, Rng};
 
 /// A shared system-prompt prefix attached to a request: all requests of
@@ -23,6 +24,112 @@ pub struct SharedPrefix {
     pub class: u64,
     /// Length of the shared prefix in tokens (clamped to the prompt).
     pub tokens: usize,
+}
+
+/// First-class tenant identity carried by a request through the whole
+/// serving path (gateway admission, router dispatch, scheduler fair
+/// share, per-tenant report breakdowns). `None` on a [`Request`] means
+/// the anonymous single-tenant workload every pre-tenant report was
+/// produced from — all tenant-aware code paths are bit-inert then.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tenant {
+    /// Tenant class id (stable across the fleet).
+    pub class: u64,
+    /// Fair-share weight (>= 1): a weight-2 tenant is entitled to twice
+    /// the weight-1 share of admission and dispatch capacity.
+    pub weight: u64,
+    /// Per-tenant SLO override (`None` = the run-level SLO applies).
+    pub slo: Option<Slo>,
+    /// Per-tenant shared-prefix shaping override (`None` = the
+    /// workload-level [`SharedPrefixConfig`] applies).
+    pub prefix: Option<SharedPrefixConfig>,
+}
+
+impl Tenant {
+    /// A tenant with the given class and weight, no per-tenant SLO or
+    /// prefix override.
+    pub fn new(class: u64, weight: u64) -> Self {
+        Self {
+            class,
+            weight: weight.max(1),
+            slo: None,
+            prefix: None,
+        }
+    }
+}
+
+impl Default for Tenant {
+    /// The default tenant: class 0, weight 1 — the identity every
+    /// bit-safety pin runs under.
+    fn default() -> Self {
+        Self::new(0, 1)
+    }
+}
+
+/// One per-tenant-class entry of a [`TenantsConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    /// Fair-share weight (>= 1).
+    pub weight: u64,
+    /// Per-tenant SLO (`None` = run-level SLO).
+    pub slo: Option<Slo>,
+    /// Per-tenant shared-prefix shaping (`None` = workload-level
+    /// config). When set, the tenant's prefix classes live in a
+    /// namespace disjoint from every other tenant's (high bits carry
+    /// the tenant class), so two tenants never alias system prompts.
+    pub prefix: Option<SharedPrefixConfig>,
+}
+
+/// Multi-tenant shaping of a workload: requests are dealt round-robin
+/// across `tenants.len()` classes by id (`class = id % n`) — a pure
+/// function of the id, so attaching or re-weighting tenants never
+/// perturbs the lengths, arrivals, prefix classes, or predictions of
+/// the same workload seed (the [`SharedPrefixConfig`] side-hash idiom,
+/// degenerated: no randomness is needed at all).
+#[derive(Debug, Clone)]
+pub struct TenantsConfig {
+    /// One spec per tenant class; class ids are the vector indices.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantsConfig {
+    /// `classes` tenants of equal weight 1.
+    pub fn even(classes: usize) -> Self {
+        Self::weighted(&vec![1; classes.max(1)])
+    }
+
+    /// One tenant class per weight entry (empty input = one tenant of
+    /// weight 1).
+    pub fn weighted(weights: &[u64]) -> Self {
+        let weights: &[u64] = if weights.is_empty() { &[1] } else { weights };
+        Self {
+            tenants: weights
+                .iter()
+                .map(|&w| TenantSpec {
+                    weight: w.max(1),
+                    slo: None,
+                    prefix: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of tenant classes.
+    pub fn classes(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The [`Tenant`] identity of request `id` (round-robin by id).
+    pub fn tenant_of(&self, id: u64) -> Tenant {
+        let class = id % self.tenants.len().max(1) as u64;
+        let spec = self.tenants[class as usize];
+        Tenant {
+            class,
+            weight: spec.weight.max(1),
+            slo: spec.slo,
+            prefix: spec.prefix,
+        }
+    }
 }
 
 /// One request to serve.
@@ -41,6 +148,10 @@ pub struct Request {
     /// as the *expected* generation length; the true `output_tokens`
     /// stays the ground truth the engine decodes.
     pub predicted: Option<usize>,
+    /// Tenant identity, when the workload models multi-tenancy
+    /// ([`TenantsConfig`]); `None` is the anonymous single-tenant
+    /// default every pre-tenant report was produced from.
+    pub tenant: Option<Tenant>,
 }
 
 impl Request {
@@ -104,6 +215,9 @@ pub struct WorkloadConfig {
     pub prefix: Option<SharedPrefixConfig>,
     /// Output-length predictor (None = no predictions attached).
     pub predictor: Option<PredictorConfig>,
+    /// Multi-tenant shaping (None = anonymous single-tenant stream;
+    /// every request carries `tenant: None`).
+    pub tenants: Option<TenantsConfig>,
 }
 
 #[derive(Debug, Clone)]
@@ -157,6 +271,7 @@ impl Default for WorkloadConfig {
             },
             prefix: None,
             predictor: None,
+            tenants: None,
         }
     }
 }
@@ -201,15 +316,28 @@ fn lognormal_with_mean(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
 /// arrivals of the same seed, and a request keeps its class identity
 /// across `share` sweeps.
 fn assign_prefix(cfg: &WorkloadConfig, id: usize, input: usize) -> Option<SharedPrefix> {
-    let p = cfg.prefix?;
+    assign_prefix_with(cfg.seed, cfg.prefix?, id, input, 0)
+}
+
+/// Core of [`assign_prefix`], parameterized so per-tenant prefix
+/// overrides can reuse the identical side hash under a disjoint class
+/// namespace `ns` (high bits). `ns = 0` is the workload-level path and
+/// reproduces the pre-tenant assignment bit for bit.
+fn assign_prefix_with(
+    seed: u64,
+    p: SharedPrefixConfig,
+    id: usize,
+    input: usize,
+    ns: u64,
+) -> Option<SharedPrefix> {
     if p.classes == 0 || p.prefix_len == 0 {
         return None;
     }
-    let h = mix64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let h = mix64(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
     if u < p.share {
         Some(SharedPrefix {
-            class: (id % p.classes) as u64,
+            class: ns | (id % p.classes) as u64,
             tokens: p.prefix_len.min(input),
         })
     } else {
@@ -315,13 +443,28 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<Request> {
             }
         };
         let output = output.max(1);
+        // Tenant identity is a pure function of the id (round-robin),
+        // so attaching tenants perturbs nothing else in the trace. A
+        // per-tenant prefix override reuses the same side hash under a
+        // class namespace disjoint from the workload-level classes
+        // (`(class + 1) << 32` keeps override classes above any
+        // plausible workload-level class id).
+        let tenant = cfg.tenants.as_ref().map(|t| t.tenant_of(id as u64));
+        let prefix = match tenant.and_then(|t| t.prefix) {
+            Some(p) => {
+                let ns = (tenant.unwrap().class + 1) << 32;
+                assign_prefix_with(cfg.seed, p, id, input, ns)
+            }
+            None => assign_prefix(cfg, id, input),
+        };
         out.push(Request {
             id: id as u64,
             arrival,
             prompt_tokens: input,
             output_tokens: output,
-            prefix: assign_prefix(cfg, id, input),
+            prefix,
             predicted: predict_output(cfg, id, output),
+            tenant,
         });
     }
     // Normalize: traces must leave the generator sorted by arrival
@@ -564,6 +707,87 @@ mod tests {
         for r in generate(&cfg) {
             assert_eq!(r.predicted, Some(r.output_tokens));
         }
+    }
+
+    #[test]
+    fn tenants_are_round_robin_and_never_perturb_the_trace() {
+        let base = WorkloadConfig {
+            prefix: Some(SharedPrefixConfig {
+                classes: 4,
+                prefix_len: 128,
+                share: 0.5,
+            }),
+            predictor: Some(PredictorConfig::default()),
+            ..WorkloadConfig::poisson(600, 20.0, 13)
+        };
+        let none = generate(&base);
+        let tenanted = generate(&WorkloadConfig {
+            tenants: Some(TenantsConfig::weighted(&[1, 2, 4])),
+            ..base.clone()
+        });
+        for (a, b) in none.iter().zip(&tenanted) {
+            // Everything else is bit-identical.
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.prefix, b.prefix);
+            assert_eq!(a.predicted, b.predicted);
+            assert!(a.tenant.is_none());
+            // Round-robin deal with the configured weights.
+            let t = b.tenant.expect("tenanted workload tags every request");
+            assert_eq!(t.class, b.id % 3);
+            assert_eq!(t.weight, [1, 2, 4][t.class as usize]);
+            assert!(t.slo.is_none() && t.prefix.is_none());
+        }
+    }
+
+    #[test]
+    fn per_tenant_prefix_override_uses_a_disjoint_class_namespace() {
+        let mut tenants = TenantsConfig::even(2);
+        tenants.tenants[1].prefix = Some(SharedPrefixConfig {
+            classes: 2,
+            prefix_len: 64,
+            share: 1.0,
+        });
+        let cfg = WorkloadConfig {
+            prefix: Some(SharedPrefixConfig {
+                classes: 4,
+                prefix_len: 128,
+                share: 1.0,
+            }),
+            tenants: Some(tenants),
+            ..WorkloadConfig::sharegpt(400, 21)
+        };
+        let reqs = generate(&cfg);
+        for r in &reqs {
+            let p = r.prefix.expect("share=1 tags everyone");
+            match r.tenant.unwrap().class {
+                // Tenant 0 has no override: workload-level classes.
+                0 => {
+                    assert_eq!(p.class, r.id % 4);
+                    assert_eq!(p.tokens, 128.min(r.prompt_tokens));
+                }
+                // Tenant 1's override classes live above the 32-bit line.
+                1 => {
+                    assert_eq!(p.class, (2u64 << 32) | (r.id % 2));
+                    assert_eq!(p.tokens, 64.min(r.prompt_tokens));
+                }
+                c => panic!("unexpected tenant class {c}"),
+            }
+        }
+    }
+
+    #[test]
+    fn default_tenant_is_class_zero_weight_one() {
+        let t = Tenant::default();
+        assert_eq!((t.class, t.weight), (0, 1));
+        assert!(t.slo.is_none() && t.prefix.is_none());
+        // Weights are floored at 1 everywhere they enter.
+        assert_eq!(Tenant::new(3, 0).weight, 1);
+        assert_eq!(TenantsConfig::weighted(&[0, 5]).tenant_of(0).weight, 1);
+        assert_eq!(TenantsConfig::weighted(&[]).classes(), 1);
+        assert_eq!(TenantsConfig::even(0).classes(), 1);
     }
 
     #[test]

@@ -34,6 +34,7 @@ fn spaced_requests(n: usize, prompt: usize, output: usize, gap: f64) -> Vec<Requ
             output_tokens: output,
             prefix: None,
             predicted: None,
+            tenant: None,
         })
         .collect()
 }
@@ -107,6 +108,7 @@ fn manual_zero_cost_handoff_reproduces_colocated_tokens() {
             target_output: output,
             prefix: None,
             predicted: None,
+            tenant: None,
         })
         .collect();
     let mut decode = cfg.build_engine();

@@ -15,7 +15,7 @@ use memgap::coordinator::scheduler::PreemptMode;
 use memgap::faults::{FaultEvent, FaultKind, FaultPlan, FaultStats};
 use memgap::gpusim::mps::SharePolicy;
 use memgap::models::spec::ModelSpec;
-use memgap::replication::run_replicated_with_faults;
+use memgap::replication::{run_cluster_with_faults, run_replicated_with_faults};
 use memgap::util::par::par_map;
 use memgap::util::prop;
 use memgap::util::rng::Rng;
@@ -363,4 +363,40 @@ fn two_replica_crash_beats_single_engine_goodput() {
     assert_eq!(again.makespan.to_bits(), rep2.makespan.to_bits());
     assert_eq!(again.throughput_tps.to_bits(), rep2.throughput_tps.to_bits());
     assert_eq!(again.faults, rep2.faults);
+}
+
+/// The cluster front end re-routes requests around crash windows
+/// exactly like the single-GPU replicated path (a gap documented when
+/// the cluster path landed, closed here): a (2 engines, tp=1, 1 GPU)
+/// cluster under a fault plan reproduces `run_replicated_with_faults`
+/// bit for bit, reroute count included.
+#[test]
+fn cluster_front_end_reroutes_around_crash_windows_like_replicated() {
+    let base = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+    let mut workload = WorkloadConfig::poisson(64, 30.0, 11);
+    workload.lengths = LengthDistribution::Fixed {
+        input: 64,
+        output: 24,
+    };
+    let reqs = generate(&workload);
+    // The plan's single event lands on engine 0 (round-robin deal) and
+    // its crash window blankets the whole arrival span, so every
+    // request round-robin would have sent there must re-route.
+    let span = reqs.iter().map(|r| r.arrival).fold(0.0, f64::max);
+    let fault_plan = plan(vec![crash(1e-6, span + 1.0)]);
+
+    let rep = run_replicated_with_faults(&base, 2, SharePolicy::Mps, &reqs, 0.5, Some(&fault_plan))
+        .unwrap();
+    let clu = run_cluster_with_faults(&base, 2, 1, 1, SharePolicy::Mps, &reqs, Some(&fault_plan))
+        .unwrap();
+    assert!(clu.faults.reroutes > 0, "no arrival hit the crash window");
+    assert_eq!(clu.faults.reroutes, rep.faults.reroutes);
+    assert_eq!(clu.makespan.to_bits(), rep.makespan.to_bits());
+    assert_eq!(clu.completed(), rep.completed());
+    assert_eq!(clu.stretched_itls(), rep.stretched_itls());
+    // Determinism: same plan, same report.
+    let again = run_cluster_with_faults(&base, 2, 1, 1, SharePolicy::Mps, &reqs, Some(&fault_plan))
+        .unwrap();
+    assert_eq!(again.makespan.to_bits(), clu.makespan.to_bits());
+    assert_eq!(again.faults, clu.faults);
 }

@@ -252,6 +252,7 @@ fn prop_router_total_and_balanced() {
                 output_tokens: rng.range(1, 500),
                 prefix: None,
                 predicted: None,
+                tenant: None,
             })
             .collect();
         for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Hash] {
@@ -286,6 +287,7 @@ fn prop_round_robin_counts_are_ceil_floor_fair() {
                 output_tokens: rng.range(1, 100),
                 prefix: None,
                 predicted: None,
+                tenant: None,
             })
             .collect();
         let mut router = Router::new(RoutePolicy::RoundRobin, k);
@@ -324,6 +326,7 @@ fn prop_least_loaded_never_picks_a_strictly_heavier_replica() {
                     output_tokens: rng.range(1, 1000),
                     prefix: None,
                     predicted: None,
+                    tenant: None,
                 };
                 let chosen = router.route(&req);
                 let min = *shadow.iter().min().unwrap();
@@ -357,6 +360,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 output_tokens: rng.range(1, 100),
                 prefix: None,
                 predicted: None,
+                tenant: None,
             };
             warmed.route(&noise);
         }
@@ -368,6 +372,7 @@ fn prop_hash_routing_is_stable_and_history_independent() {
                 output_tokens: rng.range(1, 100),
                 prefix: None,
                 predicted: None,
+                tenant: None,
             };
             let a = fresh.route(&req);
             let b = warmed.route(&req);
@@ -447,6 +452,7 @@ fn prop_engine_serves_everything() {
                 output_tokens: rng.range(1, 120),
                 prefix: None,
                 predicted: None,
+                tenant: None,
             })
             .collect();
         let expected_out: usize = reqs.iter().map(|r| r.output_tokens).sum();
@@ -500,6 +506,7 @@ fn prop_workload_respects_context() {
             },
             prefix: None,
             predictor: None,
+            tenants: None,
         };
         for r in generate(&cfg) {
             assert!(r.prompt_tokens + r.output_tokens <= cfg.max_context);
@@ -536,6 +543,7 @@ fn prop_fast_forward_bit_equivalent() {
                     output_tokens: rng.range(1, 90),
                     prefix: None,
                     predicted: None,
+                    tenant: None,
                 }
             })
             .collect();
@@ -654,6 +662,142 @@ fn prop_tp_shard_memory_halving_invariants() {
             assert_eq!(shard.heads_per_rank() * tp, spec.n_heads);
             assert_eq!(shard.vocab_per_rank() * tp, spec.vocab);
             assert_eq!(shard.d_ffn_per_rank() * tp, spec.d_ffn);
+        }
+    });
+}
+
+/// FairQueue (deficit-weighted round robin): over any window where
+/// every class stays backlogged, weight-normalized dispatched cost
+/// differs between classes by at most `2*quantum + max_cost`
+/// (each class's deficit satisfies `0 <= T*quantum*w - served <
+/// max_cost + quantum*w` and top-up counts differ by at most one), and
+/// FIFO order within a class is never reordered or lost.
+#[test]
+fn prop_fair_queue_unfairness_is_bounded_and_fifo_per_class() {
+    use memgap::coordinator::router::FairQueue;
+    check("fair-queue-drr-bound", 40, |rng| {
+        let quantum = rng.range(1, 65) as u64;
+        let n_classes = rng.range(2, 6);
+        let weights: Vec<u64> = (0..n_classes).map(|_| rng.range(1, 5) as u64).collect();
+        let per_class = 200usize;
+        let mut q = FairQueue::new(quantum);
+        let mut max_cost = 1u64;
+        let mut remaining = vec![0usize; n_classes];
+        for c in 0..n_classes {
+            for s in 0..per_class {
+                let cost = rng.range(1, 101) as u64;
+                max_cost = max_cost.max(cost);
+                q.push(c as u64, weights[c], cost, (c, s, cost));
+                remaining[c] += 1;
+            }
+        }
+        assert_eq!(q.len(), n_classes * per_class);
+        let mut served = vec![0u64; n_classes];
+        let mut next_seq = vec![0usize; n_classes];
+        // Measure while every class stays backlogged — DRR's bounded
+        // unfairness is a claim about exactly this window.
+        loop {
+            let (c, s, cost) = q.pop().expect("backlogged queue");
+            assert_eq!(s, next_seq[c], "FIFO order broken within class {c}");
+            next_seq[c] += 1;
+            served[c] += cost;
+            remaining[c] -= 1;
+            if remaining[c] == 0 {
+                break;
+            }
+        }
+        let bound = (2 * quantum + max_cost) as f64;
+        for i in 0..n_classes {
+            for j in 0..n_classes {
+                let a = served[i] as f64 / weights[i] as f64;
+                let b = served[j] as f64 / weights[j] as f64;
+                assert!(
+                    (a - b).abs() <= bound,
+                    "classes {i} (w{}) and {j} (w{}): normalized service \
+                     {a} vs {b} exceeds DRR bound {bound} (quantum {quantum})",
+                    weights[i],
+                    weights[j]
+                );
+            }
+        }
+        // Drain the rest: nothing lost, FIFO holds to the end.
+        while let Some((c, s, _)) = q.pop() {
+            assert_eq!(s, next_seq[c], "FIFO order broken within class {c}");
+            next_seq[c] += 1;
+        }
+        assert!(q.is_empty());
+        for (c, &n) in next_seq.iter().enumerate() {
+            assert_eq!(n, per_class, "class {c} lost items");
+        }
+    });
+}
+
+/// Prefix-affinity routing under crash/recovery churn: a class stays on
+/// its bound replica while that replica is healthy, re-sticks to a
+/// healthy replica when its binding crashes (so it never bounces per
+/// request), stands its ground when the whole fleet is down, and
+/// untagged traffic never disturbs a binding.
+#[test]
+fn prop_prefix_affinity_sticks_and_resticks_across_crashes() {
+    use memgap::workload::SharedPrefix;
+    check("router-affinity-sticky", 60, |rng| {
+        let n = rng.range(2, 7);
+        let classes = rng.range(1, 6);
+        let mut router = Router::new(RoutePolicy::PrefixAffinity, n);
+        let mut up = vec![true; n];
+        let mut bound: std::collections::BTreeMap<u64, usize> = Default::default();
+        for i in 0..rng.range(20, 200) {
+            if rng.f64() < 0.2 {
+                let r = rng.range(0, n);
+                if rng.f64() < 0.5 {
+                    router.mark_down(r);
+                    up[r] = false;
+                } else {
+                    router.mark_up(r);
+                    up[r] = true;
+                }
+            }
+            let mut req = Request {
+                id: i as u64,
+                arrival: 0.0,
+                prompt_tokens: rng.range(1, 300),
+                output_tokens: rng.range(1, 100),
+                prefix: None,
+                predicted: None,
+                tenant: None,
+            };
+            let tagged = rng.f64() < 0.8;
+            let class = rng.range(0, classes) as u64;
+            if tagged {
+                req.prefix = Some(SharedPrefix { class, tokens: 16 });
+            }
+            let (r, rerouted) = router.route_healthy(&req);
+            assert!(r < n);
+            if !tagged {
+                // Untagged requests hash-route; the stickiness asserts
+                // below catch any binding they might have disturbed.
+                continue;
+            }
+            let all_down = up.iter().all(|&u| !u);
+            match bound.get(&class).copied() {
+                Some(b) if up[b] => {
+                    assert_eq!(r, b, "class {class} left its healthy replica {b}");
+                    assert!(!rerouted);
+                }
+                Some(b) if all_down => {
+                    assert_eq!(r, b, "all-down fleet must leave the binding");
+                    assert!(!rerouted);
+                }
+                Some(_) => {
+                    assert!(rerouted, "downed binding of class {class} must reroute");
+                    assert!(up[r], "class {class} re-stuck to a downed replica {r}");
+                    bound.insert(class, r);
+                }
+                None => {
+                    assert!(all_down || up[r], "fresh class bound to downed replica {r}");
+                    bound.insert(class, r);
+                }
+            }
         }
     });
 }

@@ -10,7 +10,8 @@ use std::time::{Duration, Instant};
 use memgap::backend::SimBackend;
 use memgap::coordinator::engine::{Engine, EngineConfig};
 use memgap::coordinator::server::{
-    client_generate, client_shutdown, client_stats, serve_listener,
+    client_generate, client_generate_fleet, client_shutdown, client_stats, serve_fleet_listener,
+    serve_listener, GatewayConfig,
 };
 use memgap::gpusim::GpuSpec;
 use memgap::models::spec::{AttentionBackendKind, ModelSpec};
@@ -136,4 +137,80 @@ fn stats_kv_usage_gauge_is_live_mid_flight() {
 
     client_shutdown(&addr).unwrap();
     assert_eq!(server.join().unwrap(), 6);
+}
+
+/// Fleet gateway under concurrent load on a real socket: every client
+/// gets exactly one terminal line — a `done` after a full token stream,
+/// or a structured tenant-tagged `overloaded` rejection when the
+/// bounded admission queue is full — and the graceful drain returns
+/// precisely the number of admitted (= completed) requests. Whether any
+/// given client bounces is a race against its peers, so the test pins
+/// the *accounting identity* (done + rejected = clients, served = done)
+/// rather than a particular split; the deterministic backpressure path
+/// is pinned separately in the server's unit suite with capacity 0.
+#[test]
+fn fleet_gateway_serves_concurrent_clients_with_bounded_admission() {
+    let fleet_engine = || {
+        let backend = SimBackend::new(
+            GpuSpec::h100_64g(),
+            ModelSpec::opt_1_3b(),
+            AttentionBackendKind::XFormers,
+        );
+        Engine::new(backend, EngineConfig::new(8, 4096, 16))
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = GatewayConfig {
+        admission_capacity: 4,
+        ..GatewayConfig::default()
+    };
+    let engines = vec![fleet_engine(), fleet_engine(), fleet_engine()];
+    let server = std::thread::spawn(move || serve_fleet_listener(engines, listener, cfg).unwrap());
+
+    const CLIENTS: usize = 10;
+    const MAX_TOKENS: usize = 300;
+    let handles: Vec<_> = (0..CLIENTS as u64)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                client_generate_fleet(&addr, 64, MAX_TOKENS, Some((i % 2, 1 + 2 * (i % 2))))
+                    .unwrap()
+            })
+        })
+        .collect();
+
+    let mut done = 0u64;
+    let mut rejected = 0u64;
+    for h in handles {
+        let evs = h.join().unwrap();
+        let last = evs.last().expect("at least one line per request");
+        if last.get("event").and_then(|e| e.as_str()) == Some("done") {
+            // A completed stream is MAX_TOKENS token events + done.
+            assert_eq!(evs.len(), MAX_TOKENS + 1, "{last}");
+            for (i, ev) in evs[..MAX_TOKENS].iter().enumerate() {
+                assert_eq!(ev.get("event").and_then(|e| e.as_str()), Some("token"));
+                assert_eq!(ev.get("index").and_then(|v| v.as_usize()), Some(i));
+            }
+            assert_eq!(last.get("tokens").and_then(|v| v.as_usize()), Some(MAX_TOKENS));
+            assert!(last.get("worker").and_then(|v| v.as_usize()).unwrap() < 3);
+            done += 1;
+        } else {
+            // Structured backpressure: the rejection is the only line
+            // and names the tenant it bounced.
+            assert_eq!(
+                last.get("error").and_then(|e| e.as_str()),
+                Some("overloaded"),
+                "{last}"
+            );
+            assert_eq!(evs.len(), 1);
+            assert!(last.get("tenant").and_then(|v| v.as_u64()).is_some(), "{last}");
+            rejected += 1;
+        }
+    }
+    assert_eq!(done + rejected, CLIENTS as u64);
+    assert!(done >= 1, "the first arrival always fits capacity 4");
+
+    client_shutdown(&addr).unwrap();
+    let served = server.join().unwrap();
+    assert_eq!(served, done, "drain must return exactly the admitted count");
 }

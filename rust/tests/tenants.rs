@@ -1,0 +1,364 @@
+//! Multi-tenant serving acceptance suite.
+//!
+//! Four contracts pin the tenant refactor:
+//! 1. **Bit-safety** — a single-tenant, default-weight configuration
+//!    reproduces the untagged engine's reports exactly (workload bits,
+//!    per-request latencies, makespan, step count), with or without
+//!    fair-share admission; the only delta is the additive per-tenant
+//!    breakdown.
+//! 2. **Report additivity** — the online JSON report of a tagged run
+//!    differs from the untagged run by exactly the `"tenants"` key;
+//!    every other byte matches.
+//! 3. **Fair share vs FCFS** — with three classes weighted 1/2/4, the
+//!    first admission wave under FCFS skews weight-normalized
+//!    completion shares to the weight spread (6/5/5 completions =>
+//!    unfairness 4.8) while the fair-share replay bounds it at <= 1.5
+//!    (any valid tie-breaking of the lowest-share rule lands in
+//!    [1.25, 1.5] — enumerated offline over all argmin choices).
+//! 4. **Prefix affinity vs hash routing** — prefix-cache hits are
+//!    timing-neutral in this simulator (they share KV *blocks*, not
+//!    prefill compute — see `prefix_cache_cuts_peak_blocks_at_identical
+//!    _timing` in the engine suite), so affinity's win is a memory win:
+//!    on a tight pool a replica serving one prefix class keeps 32
+//!    blocks of prefix resident instead of 64, which buys ~2x the
+//!    concurrent sequences, fewer admission waves, and strictly lower
+//!    TTFT/makespan than id-hash routing at equal fleet size.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use memgap::backend::SimBackend;
+use memgap::coordinator::engine::{Engine, EngineConfig};
+use memgap::coordinator::offline::OfflineConfig;
+use memgap::coordinator::online::{run_online, OnlineConfig};
+use memgap::coordinator::router::{RoutePolicy, Router};
+use memgap::gpusim::GpuSpec;
+use memgap::models::spec::{AttentionBackendKind, ModelSpec};
+use memgap::util::json::Json;
+use memgap::workload::{generate, Request, SharedPrefix, Tenant, TenantsConfig, WorkloadConfig};
+
+/// Contract 1: tagging the whole workload as one default-weight tenant
+/// changes no bit of the engine's timing — only the additive breakdown.
+#[test]
+fn single_tenant_default_weight_runs_are_bit_identical_to_untagged() {
+    let plain_wl = WorkloadConfig {
+        seed: 11,
+        ..WorkloadConfig::offline(48, 128, 32)
+    };
+    let tagged_wl = WorkloadConfig {
+        tenants: Some(TenantsConfig::even(1)),
+        ..plain_wl.clone()
+    };
+    let plain = generate(&plain_wl);
+    let tagged = generate(&tagged_wl);
+    assert_eq!(plain.len(), tagged.len());
+    for (p, t) in plain.iter().zip(&tagged) {
+        assert_eq!(p.id, t.id);
+        assert_eq!(p.arrival.to_bits(), t.arrival.to_bits(), "id {}", p.id);
+        assert_eq!(p.prompt_tokens, t.prompt_tokens, "id {}", p.id);
+        assert_eq!(p.output_tokens, t.output_tokens, "id {}", p.id);
+        assert!(p.prefix.is_none() && t.prefix.is_none());
+        assert_eq!(p.tenant, None);
+        assert_eq!(t.tenant, Some(Tenant::new(0, 1)), "id {}", t.id);
+    }
+
+    let run = |reqs: &[Request], tenants: Option<TenantsConfig>, fair: bool| {
+        let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+        cfg.tenants = tenants;
+        cfg.fair_share = fair;
+        let mut engine = cfg.build_engine();
+        engine.submit(reqs);
+        engine.run_to_completion().unwrap()
+    };
+    let base = run(&plain, None, false);
+    let tag = run(&tagged, tagged_wl.tenants.clone(), false);
+    let fair = run(&tagged, tagged_wl.tenants.clone(), true);
+
+    for (name, rep) in [("tagged", &tag), ("tagged+fair-share", &fair)] {
+        assert_eq!(
+            base.metrics.makespan.to_bits(),
+            rep.metrics.makespan.to_bits(),
+            "{name}: makespan diverged"
+        );
+        assert_eq!(
+            base.metrics.throughput_tps.to_bits(),
+            rep.metrics.throughput_tps.to_bits(),
+            "{name}: throughput diverged"
+        );
+        assert_eq!(
+            base.metrics.latencies, rep.metrics.latencies,
+            "{name}: per-request latencies diverged"
+        );
+        assert_eq!(base.steps, rep.steps, "{name}: step count diverged");
+        assert_eq!(
+            base.peak_kv_blocks, rep.peak_kv_blocks,
+            "{name}: KV footprint diverged"
+        );
+    }
+    assert!(
+        base.tenants.is_empty(),
+        "untagged run must not grow a tenants section"
+    );
+    for (name, rep) in [("tagged", &tag), ("tagged+fair-share", &fair)] {
+        let classes = rep.tenants.finalize();
+        assert_eq!(classes.len(), 1, "{name}");
+        assert_eq!(classes[0].class, 0, "{name}");
+        assert_eq!(classes[0].weight, 1, "{name}");
+        assert_eq!(classes[0].completed, 48, "{name}");
+    }
+}
+
+/// Contract 2: the tagged online report is the untagged report plus the
+/// `"tenants"` key — byte-identical everywhere else.
+#[test]
+fn online_json_gains_only_the_tenants_key_for_a_tagged_run() {
+    let report = |tenants: Option<TenantsConfig>| {
+        let mut cfg =
+            OnlineConfig::poisson(OfflineConfig::new(ModelSpec::opt_1_3b(), 16), 40, 8.0, 3);
+        cfg.workload.tenants = tenants;
+        run_online(&cfg).unwrap().to_json()
+    };
+    let Json::Obj(plain) = report(None) else {
+        panic!("online report must be a JSON object");
+    };
+    assert!(!plain.contains_key("tenants"));
+    let Json::Obj(mut tagged) = report(Some(TenantsConfig::even(1))) else {
+        panic!("online report must be a JSON object");
+    };
+    assert!(
+        tagged.remove("tenants").is_some(),
+        "tagged run must grow a tenants section"
+    );
+    assert_eq!(
+        Json::Obj(tagged).to_string(),
+        Json::Obj(plain).to_string(),
+        "everything except the tenants key must be byte-identical"
+    );
+}
+
+/// (class, weight) of every completion, in completion order.
+fn completion_order(fair: bool, reqs: &[Request]) -> Vec<(u64, u64)> {
+    let mut cfg = OfflineConfig::new(ModelSpec::opt_1_3b(), 16);
+    cfg.fair_share = fair;
+    let mut engine = cfg.build_engine();
+    engine.submit(reqs);
+    let mut order = Vec::new();
+    let mut harvest = |engine: &mut memgap::coordinator::engine::Engine<SimBackend>,
+                       order: &mut Vec<(u64, u64)>| {
+        for f in engine.take_finished() {
+            let t = f.tenant.expect("tenant-tagged workload");
+            order.push((t.class, t.weight));
+        }
+    };
+    while engine.has_work() {
+        if !engine.step().unwrap() {
+            break;
+        }
+        harvest(&mut engine, &mut order);
+    }
+    harvest(&mut engine, &mut order);
+    order
+}
+
+/// Max/min ratio of weight-normalized completion counts over the first
+/// `k` completions (infinite while a class has completed nothing).
+fn unfairness(order: &[(u64, u64)], k: usize) -> f64 {
+    let mut counts: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for &(c, w) in &order[..k] {
+        counts.entry(c).or_insert((0, w)).0 += 1;
+    }
+    if counts.len() < 3 {
+        return f64::INFINITY;
+    }
+    let shares: Vec<f64> = counts.values().map(|&(n, w)| n as f64 / w as f64).collect();
+    let max = shares.iter().cloned().fold(f64::MIN, f64::max);
+    let min = shares.iter().cloned().fold(f64::MAX, f64::min);
+    max / min
+}
+
+/// Contract 3: the deterministic 3-tenant run. 48 all-at-once requests
+/// of fixed length on a 16-seat engine drain in three clean waves, so
+/// the first 16 completions are exactly the first admission wave. FCFS
+/// admits ids in order (class = id % 3 => 6/5/5 per class, unfairness
+/// 6 / 1.25 = 4.8); the fair-share replay grants seats by lowest
+/// weighted share (3/5/8 under the FCFS tie-break; any argmin
+/// tie-breaking lands in [1.25, 1.5]). At full drain both converge to
+/// the weight spread (equal populations must end at equal counts) —
+/// fairness is about *when*, not *whether*.
+#[test]
+fn fair_share_bounds_unfairness_vs_fcfs_with_three_weighted_tenants() {
+    const WEIGHTS: [u64; 3] = [1, 2, 4];
+    let wl = WorkloadConfig {
+        seed: 7,
+        tenants: Some(TenantsConfig::weighted(&WEIGHTS)),
+        ..WorkloadConfig::offline(48, 128, 32)
+    };
+    let reqs = generate(&wl);
+    for r in &reqs {
+        let t = r.tenant.expect("tenant-tagged workload");
+        assert_eq!(t.class, r.id % 3, "round-robin class assignment");
+        assert_eq!(t.weight, WEIGHTS[t.class as usize]);
+    }
+
+    let fcfs = completion_order(false, &reqs);
+    let fair = completion_order(true, &reqs);
+    assert_eq!(fcfs.len(), 48);
+    assert_eq!(fair.len(), 48);
+
+    let fcfs_unf = unfairness(&fcfs, 16);
+    let fair_unf = unfairness(&fair, 16);
+    assert!(
+        fcfs_unf >= 4.0,
+        "FCFS wave 1 must skew to the weight spread, got {fcfs_unf}"
+    );
+    assert!(
+        fair_unf <= 2.0,
+        "fair-share wave 1 must bound unfairness, got {fair_unf}"
+    );
+    assert!(fair_unf < fcfs_unf, "{fair_unf} !< {fcfs_unf}");
+
+    // Full drain: 16 completions per class under both policies.
+    assert_eq!(unfairness(&fcfs, 48), 4.0);
+    assert_eq!(unfairness(&fair, 48), 4.0);
+}
+
+/// One replica of the tight-pool fleet: 88 usable KV blocks, prefix
+/// cache on. A 512-token prefix is 32 blocks; each request adds 4
+/// unique blocks (48-token suffix + 16 output tokens). One resident
+/// prefix leaves room for 14 concurrent sequences (32 + 14*4 = 88,
+/// exact fit); two resident prefixes cap it near 6.
+fn fleet_engine() -> Engine<SimBackend> {
+    let backend = SimBackend::new(
+        GpuSpec::h100_64g(),
+        ModelSpec::opt_1_3b(),
+        AttentionBackendKind::XFormers,
+    );
+    let mut cfg = EngineConfig::new(14, 89, 16);
+    cfg.prefix_cache = true;
+    Engine::new(backend, cfg)
+}
+
+/// Pooled observables of one routed fleet run.
+struct FleetRun {
+    ttfts: Vec<f64>,
+    completed: usize,
+    makespan: f64,
+    hits: u64,
+    parts: Vec<Vec<Request>>,
+}
+
+fn run_fleet(policy: RoutePolicy, reqs: &[Request]) -> FleetRun {
+    let mut router = Router::new(policy, 2);
+    let parts = router.partition(reqs);
+    let mut out = FleetRun {
+        ttfts: Vec::new(),
+        completed: 0,
+        makespan: 0.0,
+        hits: 0,
+        parts: parts.clone(),
+    };
+    for part in &parts {
+        if part.is_empty() {
+            continue;
+        }
+        let mut engine = fleet_engine();
+        engine.submit(part);
+        let rep = engine.run_to_completion().unwrap();
+        out.ttfts.extend(rep.metrics.latencies.iter().map(|l| l.ttft));
+        out.completed += rep.metrics.completed;
+        out.makespan = out.makespan.max(rep.metrics.makespan);
+        out.hits += rep.prefix_cache.hits;
+    }
+    out
+}
+
+/// Which replicas each prefix class was dealt onto.
+fn class_spread(parts: &[Vec<Request>]) -> BTreeMap<u64, BTreeSet<usize>> {
+    let mut spread: BTreeMap<u64, BTreeSet<usize>> = BTreeMap::new();
+    for (i, part) in parts.iter().enumerate() {
+        for r in part {
+            spread
+                .entry(r.prefix.expect("prefix-tagged workload").class)
+                .or_default()
+                .insert(i);
+        }
+    }
+    spread
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Contract 4: at equal fleet size, prefix-affinity routing beats
+/// id-hash routing on TTFT and makespan because block residency — not
+/// compute — is the binding resource (cache hits are timing-neutral;
+/// they only cut the charged blocks).
+#[test]
+fn prefix_affinity_beats_hash_routing_on_ttft_at_equal_fleet_size() {
+    let reqs: Vec<Request> = (0..48)
+        .map(|id| Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: 560,
+            output_tokens: 16,
+            prefix: Some(SharedPrefix {
+                class: id % 2,
+                tokens: 512,
+            }),
+            predicted: None,
+            tenant: None,
+        })
+        .collect();
+
+    let hash = run_fleet(RoutePolicy::Hash, &reqs);
+    let affinity = run_fleet(RoutePolicy::PrefixAffinity, &reqs);
+
+    // Premises, from the actual deals: hash scatters both prefix
+    // classes onto both replicas (the golden-ratio id hash interleaves
+    // ids); affinity binds each class to exactly one replica, and the
+    // two classes to different replicas (first binding takes the
+    // least-loaded, which alternates).
+    let hspread = class_spread(&hash.parts);
+    for (class, replicas) in &hspread {
+        assert_eq!(
+            replicas.len(),
+            2,
+            "hash must scatter class {class}, got {replicas:?}"
+        );
+    }
+    let aspread = class_spread(&affinity.parts);
+    let mut bound: BTreeSet<usize> = BTreeSet::new();
+    for (class, replicas) in &aspread {
+        assert_eq!(
+            replicas.len(),
+            1,
+            "affinity must pin class {class}, got {replicas:?}"
+        );
+        bound.extend(replicas);
+    }
+    assert_eq!(bound.len(), 2, "both replicas must carry a class");
+
+    // Both fleets serve everything and both see real prefix sharing.
+    assert_eq!(hash.completed, 48);
+    assert_eq!(affinity.completed, 48);
+    assert!(hash.hits > 0);
+    assert!(affinity.hits > 0);
+
+    // The memory win: one resident prefix per replica instead of two
+    // doubles the concurrency the pool sustains, so affinity drains in
+    // fewer admission waves — strictly lower mean TTFT and makespan.
+    assert_eq!(hash.ttfts.len(), 48);
+    assert_eq!(affinity.ttfts.len(), 48);
+    assert!(
+        mean(&affinity.ttfts) < mean(&hash.ttfts),
+        "affinity mean TTFT {} !< hash {}",
+        mean(&affinity.ttfts),
+        mean(&hash.ttfts)
+    );
+    assert!(
+        affinity.makespan < hash.makespan,
+        "affinity makespan {} !< hash {}",
+        affinity.makespan,
+        hash.makespan
+    );
+}
